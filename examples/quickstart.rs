@@ -1,0 +1,92 @@
+//! Quickstart: the three layers in one file.
+//!
+//! 1. Build a small taskset (the paper's §4 model).
+//! 2. Run the GCAPS response-time analysis (§6.3) and its baselines.
+//! 3. Simulate the same taskset on the device model and check the
+//!    bounds hold.
+//! 4. If `artifacts/` is built (`make artifacts`), run a real AOT
+//!    kernel through the PJRT runtime — the same path the live
+//!    executive uses.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use gcaps::analysis::{analyze, Approach};
+use gcaps::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, WaitMode};
+use gcaps::runtime::{artifacts_dir, Runtime};
+use gcaps::sim::{simulate, Policy, SimConfig};
+
+fn main() {
+    // -- 1. A three-task system: camera (GPU), planner (CPU), logger (GPU).
+    let platform = Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 1000 };
+    let gpu_task = |id, name: &str, core, prio, c1: f64, gm: f64, ge: f64, c2: f64, t: f64| Task {
+        id,
+        name: name.into(),
+        period: ms(t),
+        deadline: ms(t),
+        cpu_segments: vec![ms(c1), ms(c2)],
+        gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
+        core,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let tasks = vec![
+        gpu_task(0, "camera", 0, 3, 1.0, 0.5, 8.0, 1.0, 50.0),
+        Task::cpu_only(1, 0, 2, ms(10.0), ms(100.0)),
+        gpu_task(2, "logger", 1, 1, 2.0, 1.0, 20.0, 2.0, 200.0),
+    ];
+    let ts = TaskSet::new(tasks, platform);
+    ts.validate().expect("valid taskset");
+
+    // -- 2. Analysis: GCAPS vs the default driver vs the lock baselines.
+    println!("WCRT bounds (ms):");
+    for approach in [
+        Approach::GcapsSuspend,
+        Approach::TsgRrSuspend,
+        Approach::MpcpSuspend,
+        Approach::FmlpSuspend,
+    ] {
+        let res = analyze(&ts, approach);
+        let bounds: Vec<String> = ts
+            .tasks
+            .iter()
+            .map(|t| {
+                res.response[t.id]
+                    .map(|r| format!("{}={:.1}", t.name, to_ms(r)))
+                    .unwrap_or_else(|| format!("{}=FAIL", t.name))
+            })
+            .collect();
+        println!("  {:16} {}", approach.label(), bounds.join("  "));
+    }
+
+    // -- 3. Simulation: bounds must dominate observed response times.
+    println!("\nSimulated MORT (ms), 10 s horizon:");
+    for policy in [Policy::Gcaps, Policy::TsgRr, Policy::Mpcp] {
+        let sim = simulate(&ts, &SimConfig::new(policy, ms(10_000.0)));
+        let morts: Vec<String> = ts
+            .tasks
+            .iter()
+            .map(|t| {
+                format!(
+                    "{}={:.1}",
+                    t.name,
+                    sim.per_task[t.id].mort().map(to_ms).unwrap_or(0.0)
+                )
+            })
+            .collect();
+        println!("  {:16} {}", policy.label(), morts.join("  "));
+    }
+
+    // -- 4. One real kernel launch through the AOT artifacts (L1+L2+L3).
+    match Runtime::load_dir(&artifacts_dir()) {
+        Ok(rt) => {
+            let dt = rt.exec("vecadd").expect("vecadd launch");
+            println!(
+                "\nPJRT launch of the vecadd artifact: {:.3} ms (all three layers compose)",
+                dt.as_secs_f64() * 1e3
+            );
+        }
+        Err(_) => println!("\n(artifacts/ not built — run `make artifacts` for the PJRT demo)"),
+    }
+}

@@ -1,0 +1,24 @@
+//! Schedulability sweep (a runnable miniature of Fig. 8): generates
+//! random tasksets per Table 3 and compares all eight analyses across
+//! a utilization sweep, printing the ASCII chart + CSV the full
+//! experiment harness produces.
+//!
+//! Run with: `cargo run --release --example schedulability_sweep`
+//! (optionally `-- --tasksets 500`).
+
+use gcaps::experiments::fig8::{run_and_report, Panel};
+use gcaps::experiments::ExpConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let tasksets = args
+        .iter()
+        .position(|a| a == "--tasksets")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    let cfg = ExpConfig { tasksets, seed: 2024 };
+    println!("running Fig. 8b (utilization sweep) with {tasksets} tasksets/point ...\n");
+    print!("{}", run_and_report(Panel::UtilPerCpu, &cfg));
+    println!("\nrun `gcaps exp fig8` for all six panels (a-f).");
+}

@@ -1,0 +1,75 @@
+"""AOT bridge: lower every L2 workload to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README).
+
+Also writes ``artifacts/manifest.tsv`` so the Rust runtime knows each
+workload's input signature without parsing HLO:
+
+    name<TAB>dtype:shape,dtype:shape<TAB>table4_row
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+Idempotent: unchanged workloads are skipped unless --force.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import WORKLOADS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_workload(spec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.example_args())
+    return to_hlo_text(lowered)
+
+
+def fmt_inputs(spec) -> str:
+    return ",".join(
+        f"{dtype}:{'x'.join(str(d) for d in shape)}" for dtype, shape in spec.inputs
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", nargs="*", help="subset of workload names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or sorted(WORKLOADS)
+    manifest_rows = []
+    for name in names:
+        spec = WORKLOADS[name]
+        out_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        manifest_rows.append(f"{name}\t{fmt_inputs(spec)}\t{spec.table4_row}")
+        if os.path.exists(out_path) and not args.force:
+            print(f"[aot] {name}: exists, skipping")
+            continue
+        text = lower_workload(spec)
+        with open(out_path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: wrote {len(text)} chars -> {out_path}")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"[aot] manifest -> {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the GCAPS case-study workloads (Table 4 of the
+# paper). Each kernel has a pure-jnp oracle in ref.py; pytest + hypothesis
+# assert kernel == oracle under interpret mode.
+from .dxtc import dxtc
+from .histogram import histogram
+from .matmul import matmul
+from .projection import projection
+
+__all__ = ["dxtc", "histogram", "matmul", "projection"]

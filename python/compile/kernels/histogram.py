@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: 256-bin histogram (the GCAPS ``histogram`` workload).
+
+Hardware adaptation: the CUDA histogram sample uses per-warp shared-memory
+sub-histograms merged with atomics. TPUs have no atomics and scatter is
+slow, so the kernel is re-thought for the MXU: each grid step turns its
+chunk of values into a comparison-generated one-hot matrix and reduces it
+to per-bin counts, accumulating into the output block that stays resident
+in VMEM across the grid (revisiting output semantics replaces the atomic
+merge). See DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NUM_BINS
+
+# Values processed per grid step. 2048 int32 = 8 KiB in VMEM; the one-hot
+# intermediate (2048 x 256 f32) is materialised in-register/VMEM per step.
+CHUNK = 2048
+
+
+def _histogram_kernel(v_ref, o_ref, *, num_bins):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = jnp.clip(v_ref[...].astype(jnp.int32), 0, num_bins - 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], num_bins), 1)
+    onehot = (v[:, None] == bins).astype(jnp.float32)
+    o_ref[...] += onehot.sum(axis=0)
+
+
+def _pick_chunk(n, pref):
+    c = min(pref, n)
+    while n % c != 0:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "chunk"))
+def histogram(values, num_bins=NUM_BINS, chunk=CHUNK):
+    """Histogram of int values in [0, num_bins) -> float32 (num_bins,)."""
+    (n,) = values.shape
+    chunk = _pick_chunk(n, chunk)
+    grid = (n // chunk,)
+    return pl.pallas_call(
+        functools.partial(_histogram_kernel, num_bins=num_bins),
+        grid=grid,
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((num_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_bins,), jnp.float32),
+        interpret=True,
+    )(values.astype(jnp.int32))

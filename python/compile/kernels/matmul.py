@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled matrix multiply (the GCAPS ``mmul`` workload).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA matrixMul
+sample tiles A/B into shared memory per threadblock. On the TPU-shaped
+Pallas model, the same insight — stage operand tiles in fast on-chip
+memory and stream the K dimension — is expressed with a 3-D grid
+``(M/bm, N/bn, K/bk)`` and ``BlockSpec`` index maps: each (i, j) output
+tile stays resident in VMEM while K-tiles of A and B are streamed in from
+HBM and accumulated on the MXU. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; the VMEM
+# working set per grid step is bm*bk + bk*bn + bm*bn floats
+# (128*128*3*4 B = 192 KiB), far below the ~16 MiB VMEM budget, leaving
+# room for double-buffering by the pipeline emitter.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps):
+    """One (i, j, k) grid step: accumulate x_tile @ y_tile into o_tile.
+
+    The output BlockSpec maps every k to the same (i, j) tile, so o_ref
+    acts as the VMEM accumulator across the K loop (revisiting semantics).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim, pref):
+    """Largest divisor of ``dim`` that is <= pref (keeps odd test shapes legal)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N) in float32.
+
+    Shapes need not be multiples of the preferred tile sizes; tiles are
+    shrunk to the largest divisor (correctness-first — the AOT artifact
+    shapes are chosen MXU-aligned so the fast path always uses 128x128).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

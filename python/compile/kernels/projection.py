@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: homogeneous 3D point projection (GCAPS ``projection``).
+
+Row-tiled: each grid step projects a tile of points through the shared
+4x4 matrix and performs the perspective divide. The matrix block is
+broadcast to every grid step (index map pins it to block (0, 0)).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+
+
+def _projection_kernel(p_ref, m_ref, o_ref):
+    p = p_ref[...]
+    m = m_ref[...]
+    out = jnp.dot(p, m, preferred_element_type=jnp.float32)
+    w = out[:, 3:4]
+    safe_w = jnp.where(jnp.abs(w) < 1e-12, 1.0, w)
+    xyz = out[:, :3] / safe_w
+    o_ref[...] = jnp.concatenate([xyz, out[:, 3:4]], axis=1)
+
+
+def _pick_tile(n, pref):
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def projection(points, mat, tile=TILE_N):
+    """Project (N, 4) points through a (4, 4) matrix with perspective divide."""
+    n, four = points.shape
+    assert four == 4 and mat.shape == (4, 4)
+    tile = _pick_tile(n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _projection_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4), jnp.float32),
+        interpret=True,
+    )(points.astype(jnp.float32), mat.astype(jnp.float32))

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness baseline: pytest (and hypothesis sweeps)
+assert that each Pallas kernel, run in interpret mode, matches the oracle
+to float tolerance over random shapes, dtypes and values.
+
+The four workloads mirror the CUDA-sample benchmarks used by the GCAPS
+case study (Table 4 of the paper): ``histogram``, ``mmul`` (matrixMul),
+``projection`` (a 3D point projection stand-in) and ``dxtc`` (DXT1-style
+block texture compression).
+"""
+
+import jax.numpy as jnp
+
+NUM_BINS = 256
+DXT_BLOCK = 4
+DXT_LEVELS = 4
+
+
+def matmul_ref(x, y):
+    """Plain matmul in float32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def histogram_ref(values, num_bins=NUM_BINS):
+    """Histogram of integer values in [0, num_bins).
+
+    Returns float32 counts, shape (num_bins,). Out-of-range values are
+    clipped, matching the kernel's behaviour.
+    """
+    v = jnp.clip(values.astype(jnp.int32), 0, num_bins - 1)
+    return (
+        (v[:, None] == jnp.arange(num_bins, dtype=jnp.int32)[None, :])
+        .astype(jnp.float32)
+        .sum(axis=0)
+    )
+
+
+def projection_ref(points, mat):
+    """Homogeneous 3D point projection: p' = p @ M, then perspective divide.
+
+    points: (N, 4) float32 homogeneous points.
+    mat: (4, 4) float32 projection matrix.
+    Returns (N, 4): xyz divided by w, with w kept in the last column.
+    """
+    out = jnp.matmul(points.astype(jnp.float32), mat.astype(jnp.float32))
+    w = out[:, 3:4]
+    # Guard against w == 0 the same way the kernel does.
+    safe_w = jnp.where(jnp.abs(w) < 1e-12, 1.0, w)
+    xyz = out[:, :3] / safe_w
+    return jnp.concatenate([xyz, out[:, 3:4]], axis=1)
+
+
+def dxtc_palette(lo, hi):
+    """4-level DXT1-style palette between endpoints (broadcast over blocks)."""
+    # levels: lo, 2/3 lo + 1/3 hi, 1/3 lo + 2/3 hi, hi
+    fracs = jnp.array([0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0], dtype=jnp.float32)
+    return lo[..., None] + (hi - lo)[..., None] * fracs
+
+
+def dxtc_ref(img):
+    """DXT1-style compress + decompress of a single-channel image.
+
+    img: (H, W) float32 with H, W multiples of 4. Each 4x4 block is reduced
+    to min/max endpoints and a 4-level palette; each pixel is replaced by
+    the nearest palette entry. Returns the reconstructed (H, W) image —
+    the round-trip makes correctness directly checkable.
+    """
+    h, w = img.shape
+    b = DXT_BLOCK
+    x = img.astype(jnp.float32).reshape(h // b, b, w // b, b)
+    x = x.transpose(0, 2, 1, 3)  # (H/4, W/4, 4, 4)
+    lo = x.min(axis=(2, 3))
+    hi = x.max(axis=(2, 3))
+    palette = dxtc_palette(lo, hi)  # (H/4, W/4, 4)
+    dist = jnp.abs(x[..., None] - palette[:, :, None, None, :])
+    idx = jnp.argmin(dist, axis=-1)
+    recon = jnp.take_along_axis(
+        palette[:, :, None, None, :], idx[..., None], axis=-1
+    )[..., 0]
+    recon = recon.transpose(0, 2, 1, 3).reshape(h, w)
+    return recon
+
+
+def vecadd_ref(x, y):
+    """Element-wise add (quickstart workload)."""
+    return x + y

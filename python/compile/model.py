@@ -1,0 +1,131 @@
+"""L2: the GCAPS case-study GPU workloads as jitted JAX computations.
+
+Each entry mirrors one benchmark from Table 4 of the paper (Nvidia CUDA
+samples on the Jetson testbed) and calls the L1 Pallas kernels where a
+hot-spot exists. ``aot.py`` lowers every workload once to HLO text; the
+Rust runtime (``rust/src/runtime``) loads the artifacts and executes them
+on the PJRT CPU client — one artifact execution is one "kernel launch"
+inside a GPU segment of the live executive. Python never runs at runtime.
+
+Workload registry
+-----------------
+``WORKLOADS`` maps name -> WorkloadSpec(fn, input specs). Shapes are fixed
+at AOT time (PJRT executables are shape-specialised, like CUDA kernels
+compiled for a fixed launch geometry).
+"""
+
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dxtc, histogram, matmul, projection
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """An AOT-compilable workload: the jitted fn plus its input signature."""
+
+    name: str
+    fn: Callable
+    inputs: Tuple[Tuple[str, Tuple[int, ...]], ...]  # (dtype, shape) pairs
+    # Paper Table 4 row this workload stands in for (documentation only).
+    table4_row: str
+
+    def example_args(self):
+        return tuple(
+            jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+            for dtype, shape in self.inputs
+        )
+
+
+# --- Workload bodies (all return 1-tuples: lowered with return_tuple) ----
+
+
+def histogram_wl(values):
+    """Table 4 task 1: 256-bin histogram of an int image."""
+    return (histogram(values),)
+
+
+def mmul_wl(a, b):
+    """Table 4 tasks 2/6: tiled Pallas matmul."""
+    return (matmul(a, b),)
+
+
+def projection_wl(points, mat):
+    """Table 4 task 4: homogeneous point projection."""
+    return (projection(points, mat),)
+
+
+def dxtc_wl(img):
+    """Table 4 task 5: DXT1-style block compression round-trip."""
+    return (dxtc(img),)
+
+
+def texture3d_wl(vol):
+    """Table 4 task 7 (simpleTexture3D): 3D 6-neighbour box filter.
+
+    Pure-jnp L2 workload (no Pallas hot-spot) — stands in for the graphics
+    app that stresses the GPU from a separate context.
+    """
+    acc = vol
+    for axis in range(3):
+        acc = acc + jnp.roll(vol, 1, axis=axis) + jnp.roll(vol, -1, axis=axis)
+    return (acc / 7.0,)
+
+
+def vecadd_wl(x, y):
+    """Quickstart workload: elementwise add."""
+    return (x + y,)
+
+
+# MXU-aligned shapes; sizes chosen so one launch is O(ms) on the CPU PJRT
+# backend, comparable in spirit to the paper's kernel durations.
+WORKLOADS = {
+    w.name: w
+    for w in [
+        WorkloadSpec(
+            "histogram",
+            histogram_wl,
+            (("int32", (65536,)),),
+            "task 1: histogram",
+        ),
+        WorkloadSpec(
+            "mmul_small",
+            mmul_wl,
+            (("float32", (128, 128)), ("float32", (128, 128))),
+            "task 2: mmul_gpu_1",
+        ),
+        WorkloadSpec(
+            "mmul_large",
+            mmul_wl,
+            (("float32", (256, 256)), ("float32", (256, 256))),
+            "task 6: mmul_gpu_2",
+        ),
+        WorkloadSpec(
+            "projection",
+            projection_wl,
+            (("float32", (16384, 4)), ("float32", (4, 4))),
+            "task 4: projection",
+        ),
+        WorkloadSpec(
+            "dxtc",
+            dxtc_wl,
+            (("float32", (256, 256)),),
+            "task 5: dxtc",
+        ),
+        WorkloadSpec(
+            "texture3d",
+            texture3d_wl,
+            (("float32", (32, 64, 64)),),
+            "task 7: simpleTexture3D (graphics)",
+        ),
+        WorkloadSpec(
+            "vecadd",
+            vecadd_wl,
+            (("float32", (16384,)), ("float32", (16384,))),
+            "quickstart",
+        ),
+    ]
+}

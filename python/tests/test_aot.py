@@ -1,0 +1,38 @@
+"""AOT lowering: every workload lowers to loadable-looking HLO text."""
+
+import numpy as np
+import pytest
+
+from compile.aot import fmt_inputs, lower_workload, to_hlo_text
+from compile.model import WORKLOADS
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_lowering_produces_hlo_text(name):
+    text = lower_workload(WORKLOADS[name])
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True => root of entry computation is a tuple
+    assert "tuple(" in text or "tuple (" in text
+
+
+def test_manifest_row_format():
+    spec = WORKLOADS["mmul_small"]
+    assert fmt_inputs(spec) == "float32:128x128,float32:128x128"
+
+
+def test_manifest_int_workload():
+    assert fmt_inputs(WORKLOADS["histogram"]) == "int32:65536"
+
+
+def test_no_custom_calls_in_artifacts():
+    # interpret=True must lower Pallas to plain HLO the CPU client can run;
+    # a Mosaic custom-call would break the Rust runtime.
+    for name in ["mmul_small", "histogram", "projection", "dxtc"]:
+        text = lower_workload(WORKLOADS[name])
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def test_deterministic_lowering():
+    a = lower_workload(WORKLOADS["vecadd"])
+    b = lower_workload(WORKLOADS["vecadd"])
+    assert a == b

@@ -1,0 +1,87 @@
+"""Pallas dxtc kernel vs oracle + compression-specific invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dxtc
+from compile.kernels import ref
+
+RNG = np.random.default_rng(55)
+
+
+def assert_matches_ref(img):
+    got = np.asarray(dxtc(img))
+    want = np.asarray(ref.dxtc_ref(img))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_random_image():
+    assert_matches_ref(RNG.normal(size=(64, 128)).astype(np.float32))
+
+
+def test_min_image():
+    assert_matches_ref(RNG.normal(size=(4, 4)).astype(np.float32))
+
+
+def test_constant_blocks_reconstruct_exactly():
+    img = np.full((16, 16), 3.5, np.float32)
+    np.testing.assert_array_equal(np.asarray(dxtc(img)), img)
+
+
+def test_endpoints_preserved():
+    # Block min and max are palette endpoints -> reproduced exactly.
+    img = RNG.normal(size=(32, 32)).astype(np.float32)
+    out = np.asarray(dxtc(img))
+    blocks_in = img.reshape(8, 4, 8, 4).transpose(0, 2, 1, 3)
+    blocks_out = out.reshape(8, 4, 8, 4).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        blocks_in.min(axis=(2, 3)), blocks_out.min(axis=(2, 3)), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        blocks_in.max(axis=(2, 3)), blocks_out.max(axis=(2, 3)), rtol=1e-6
+    )
+
+
+def test_output_within_block_range():
+    img = (RNG.normal(size=(64, 64)) * 10).astype(np.float32)
+    out = np.asarray(dxtc(img))
+    bi = img.reshape(16, 4, 16, 4).transpose(0, 2, 1, 3)
+    bo = out.reshape(16, 4, 16, 4).transpose(0, 2, 1, 3)
+    lo = bi.min(axis=(2, 3), keepdims=True)
+    hi = bi.max(axis=(2, 3), keepdims=True)
+    assert (bo >= lo - 1e-5).all() and (bo <= hi + 1e-5).all()
+
+
+def test_quantization_error_bounded():
+    # Error per pixel <= half a palette step = (hi - lo) / 6.
+    img = RNG.normal(size=(32, 32)).astype(np.float32)
+    out = np.asarray(dxtc(img))
+    bi = img.reshape(8, 4, 8, 4).transpose(0, 2, 1, 3)
+    rng_blk = bi.max(axis=(2, 3)) - bi.min(axis=(2, 3))
+    err = np.abs(out - img).reshape(8, 4, 8, 4).transpose(0, 2, 1, 3).max(axis=(2, 3))
+    assert (err <= rng_blk / 6.0 + 1e-5).all()
+
+
+def test_idempotent():
+    # Re-compressing a reconstructed image is a fixed point.
+    img = RNG.normal(size=(16, 32)).astype(np.float32)
+    once = np.asarray(dxtc(img))
+    twice = np.asarray(dxtc(once))
+    np.testing.assert_allclose(twice, once, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hb=st.integers(1, 16),
+    wb=st.integers(1, 32),
+    scale=st.floats(0.01, 50.0),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_shapes(hb, wb, scale, seed):
+    rng = np.random.default_rng(seed)  # hypothesis-seeded: reproducible examples
+    img = (rng.normal(size=(4 * hb, 4 * wb)) * scale).astype(np.float32)
+    got = np.asarray(dxtc(img))
+    want = np.asarray(ref.dxtc_ref(img))
+    # atol scales with the data magnitude: palette entries are computed in a
+    # different (but equally valid) fused order than the oracle's.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6 * (1 + scale))

@@ -1,0 +1,76 @@
+"""Pallas histogram kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import histogram
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def assert_matches_ref(v, num_bins=256):
+    got = np.asarray(histogram(v, num_bins=num_bins))
+    want = np.asarray(ref.histogram_ref(v, num_bins=num_bins))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_uniform_values():
+    assert_matches_ref(RNG.integers(0, 256, size=(65536,)).astype(np.int32))
+
+
+def test_all_same_bin():
+    v = np.full((4096,), 7, np.int32)
+    out = np.asarray(histogram(v))
+    assert out[7] == 4096 and out.sum() == 4096
+
+
+def test_out_of_range_clipped():
+    v = np.array([-5, -1, 0, 255, 256, 999], np.int32)
+    out = np.asarray(histogram(v))
+    # negatives clip to bin 0, overflow clips to bin 255
+    assert out[0] == 3 and out[255] == 3
+
+
+def test_counts_sum_to_n():
+    v = RNG.integers(-50, 300, size=(10000,)).astype(np.int32)
+    assert np.asarray(histogram(v)).sum() == 10000
+
+
+def test_small_input_shrinks_chunk():
+    assert_matches_ref(RNG.integers(0, 256, size=(17,)).astype(np.int32))
+
+
+def test_single_element():
+    assert_matches_ref(np.array([42], np.int32))
+
+
+def test_nondefault_bins():
+    v = RNG.integers(0, 64, size=(2048,)).astype(np.int32)
+    assert_matches_ref(v, num_bins=64)
+
+
+def test_chunk_boundary_exact_multiple():
+    assert_matches_ref(RNG.integers(0, 256, size=(2048 * 3,)).astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    lo=st.integers(-10, 200),
+    width=st.integers(1, 300),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_sizes_and_ranges(n, lo, width, seed):
+    rng = np.random.default_rng(seed)  # hypothesis-seeded: reproducible examples
+    v = rng.integers(lo, lo + width, size=(n,)).astype(np.int32)
+    assert_matches_ref(v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 2000), bins=st.sampled_from([16, 64, 128, 256]),
+       seed=st.integers(0, 2**31))
+def test_hypothesis_bin_counts(n, bins, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, bins, size=(n,)).astype(np.int32)
+    assert_matches_ref(v, num_bins=bins)

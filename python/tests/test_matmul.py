@@ -1,0 +1,114 @@
+"""Pallas matmul kernel vs pure-jnp oracle — the L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul
+from compile.kernels.matmul import _pick_block
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _mats(m, k, n, dtype=np.float32, scale=1.0):
+    x = (RNG.normal(size=(m, k)) * scale).astype(dtype)
+    y = (RNG.normal(size=(k, n)) * scale).astype(dtype)
+    return x, y
+
+
+def assert_matches_ref(x, y, rtol=1e-5, atol=1e-5):
+    got = np.asarray(matmul(x, y))
+    want = np.asarray(ref.matmul_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+def test_square_aligned():
+    assert_matches_ref(*_mats(128, 128, 128))
+
+
+def test_rect_aligned_multiblock():
+    assert_matches_ref(*_mats(256, 128, 384))
+
+
+def test_small_unaligned():
+    assert_matches_ref(*_mats(3, 5, 7))
+
+
+def test_prime_dims():
+    assert_matches_ref(*_mats(13, 17, 19))
+
+
+def test_single_row_col():
+    assert_matches_ref(*_mats(1, 64, 1))
+
+
+def test_identity():
+    x = np.eye(32, dtype=np.float32)
+    y = RNG.normal(size=(32, 32)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(matmul(x, y)), y, rtol=1e-6, atol=1e-6)
+
+
+def test_zeros():
+    x, y = _mats(16, 16, 16)
+    out = np.asarray(matmul(np.zeros_like(x), y))
+    np.testing.assert_array_equal(out, np.zeros((16, 16), np.float32))
+
+
+def test_int_inputs_upcast():
+    x = RNG.integers(-4, 4, size=(8, 8)).astype(np.int32)
+    y = RNG.integers(-4, 4, size=(8, 8)).astype(np.int32)
+    assert_matches_ref(x, y, rtol=0, atol=0)
+
+
+def test_explicit_tiny_blocks():
+    x, y = _mats(64, 64, 64)
+    got = np.asarray(matmul(x, y, bm=16, bn=16, bk=16))
+    want = np.asarray(ref.matmul_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_k_accumulation_order_large_k():
+    # Many K steps: exercises the revisiting-output accumulator.
+    assert_matches_ref(*_mats(8, 1024, 8))
+
+
+@pytest.mark.parametrize("pref", [1, 2, 3, 127, 128, 1000])
+def test_pick_block_divides(pref):
+    for dim in [1, 2, 12, 128, 250, 251]:
+        b = _pick_block(dim, pref)
+        assert 1 <= b <= dim and dim % b == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)  # hypothesis-seeded: reproducible examples
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    y = rng.normal(size=(k, n)).astype(np.float32)
+    assert_matches_ref(x, y, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    dtype=st.sampled_from([np.float32, np.float64, np.int32]),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_dtypes(m, k, n, dtype, seed):
+    # All inputs are cast to f32 by the kernel; oracle does the same.
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.integer):
+        x = rng.integers(-3, 3, size=(m, k)).astype(dtype)
+        y = rng.integers(-3, 3, size=(k, n)).astype(dtype)
+    else:
+        x = rng.normal(size=(m, k)).astype(dtype)
+        y = rng.normal(size=(k, n)).astype(dtype)
+    assert_matches_ref(x, y, rtol=1e-4, atol=1e-4)

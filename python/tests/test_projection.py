@@ -1,0 +1,87 @@
+"""Pallas projection kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import projection
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def assert_matches_ref(p, m, rtol=1e-5, atol=1e-5):
+    got = np.asarray(projection(p, m))
+    want = np.asarray(ref.projection_ref(p, m))
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+def _points(n, w_far_from_zero=True):
+    p = RNG.normal(size=(n, 4)).astype(np.float32)
+    if w_far_from_zero:
+        # keep |w| after projection reasonably away from 0 for stable tolerances
+        p[:, 3] = np.sign(p[:, 3]) * (np.abs(p[:, 3]) + 0.5)
+    return p
+
+
+def test_identity_matrix():
+    p = _points(256)
+    m = np.eye(4, dtype=np.float32)
+    out = np.asarray(projection(p, m))
+    np.testing.assert_allclose(out[:, :3], p[:, :3] / p[:, 3:4], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[:, 3], p[:, 3], rtol=1e-6)
+
+
+def test_random_aligned():
+    assert_matches_ref(_points(2048), RNG.normal(size=(4, 4)).astype(np.float32))
+
+
+def test_unaligned_tile():
+    assert_matches_ref(_points(777), RNG.normal(size=(4, 4)).astype(np.float32))
+
+
+def test_single_point():
+    assert_matches_ref(_points(1), RNG.normal(size=(4, 4)).astype(np.float32))
+
+
+def test_zero_w_guard():
+    # Points whose transformed w is exactly 0 must not produce inf/nan.
+    p = np.array([[1.0, 2.0, 3.0, 0.0]], np.float32)
+    m = np.diag([1.0, 1.0, 1.0, 0.0]).astype(np.float32)  # forces w' = 0
+    out = np.asarray(projection(p, m))
+    assert np.isfinite(out).all()
+    assert_matches_ref(p, m)
+
+
+def test_perspective_matrix():
+    # A classic perspective projection: w' = -z
+    m = np.zeros((4, 4), np.float32)
+    m[0, 0] = m[1, 1] = 1.0
+    m[2, 2] = -1.002
+    m[2, 3] = -1.0
+    m[3, 2] = -0.2
+    p = _points(512)
+    p[:, 2] = -np.abs(p[:, 2]) - 1.0  # in front of camera
+    assert_matches_ref(p, m, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31))
+def test_hypothesis_sizes(n, seed):
+    rng = np.random.default_rng(seed)  # hypothesis-seeded: reproducible examples
+    p = rng.normal(size=(n, 4)).astype(np.float32)
+    m = rng.normal(size=(4, 4)).astype(np.float32)
+    # Loose tolerance: the perspective divide amplifies dot-product rounding
+    # differences by 1/|w'| for near-zero w'.
+    assert_matches_ref(p, m, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 600), scale=st.floats(0.01, 100.0),
+       seed=st.integers(0, 2**31))
+def test_hypothesis_scales(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    p = (rng.normal(size=(n, 4)) * scale).astype(np.float32)
+    m = (rng.normal(size=(4, 4)) * scale).astype(np.float32)
+    got = np.asarray(projection(p, m))
+    want = np.asarray(ref.projection_ref(p, m))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale)

@@ -1,0 +1,51 @@
+//! Benchmarks of the response-time analyses (the Fig. 8 inner loop) and
+//! the taskset generator. One Fig. 8 data point runs `tasksets` × 8
+//! analyses, so these are the sweep's hot path.
+
+use gcaps::analysis::{analyze, analyze_with_gpu_prio, audsley, Approach};
+use gcaps::model::WaitMode;
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::bench::run;
+use gcaps::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(42);
+    let suspend_sets: Vec<_> = (0..64).map(|_| generate(&mut rng, &GenParams::default())).collect();
+    let busy_params = GenParams { mode: WaitMode::BusyWait, ..Default::default() };
+    let busy_sets: Vec<_> = (0..64).map(|_| generate(&mut rng, &busy_params)).collect();
+
+    run("taskgen/table3_default", {
+        let mut rng = Pcg32::seeded(7);
+        move || generate(&mut rng, &GenParams::default())
+    });
+
+    for approach in Approach::ALL {
+        let sets = if approach.is_busy() { &busy_sets } else { &suspend_sets };
+        let mut i = 0;
+        let name = format!("rta/{}", approach.label());
+        run(&name, move || {
+            let ts = &sets[i % sets.len()];
+            i += 1;
+            analyze(ts, approach).schedulable
+        });
+    }
+
+    // The full Fig. 8 GCAPS procedure (RM first, Audsley on failure).
+    let mut i = 0;
+    run("rta/gcaps_suspend+audsley", move || {
+        let ts = &suspend_sets[i % suspend_sets.len()];
+        i += 1;
+        analyze_with_gpu_prio(ts, false).0.schedulable
+    });
+
+    // Audsley search alone on sets that need it.
+    let mut rng2 = Pcg32::seeded(99);
+    let hard = GenParams { util_per_cpu: (0.55, 0.65), ..Default::default() };
+    let hard_sets: Vec<_> = (0..32).map(|_| generate(&mut rng2, &hard)).collect();
+    let mut j = 0;
+    run("rta/audsley_search", move || {
+        let ts = &hard_sets[j % hard_sets.len()];
+        j += 1;
+        audsley::assign_gpu_priorities(ts, false).is_some()
+    });
+}

@@ -1,0 +1,60 @@
+//! Live-arbiter hot-path benchmarks: the runlist update (ε analog) in
+//! the uncontended and contended cases, and admission waits. The paper
+//! measures ε ≈ 1 ms through the IOCTL + driver path (Fig. 12); the
+//! in-process arbiter must sit orders of magnitude below that so the
+//! live case study's ε is dominated by design, not implementation.
+
+use std::sync::Arc;
+
+use gcaps::coordinator::arbiter::{Arbiter, TaskReg};
+use gcaps::util::bench::run;
+
+fn regs(n: usize) -> Vec<TaskReg> {
+    (0..n)
+        .map(|i| TaskReg { name: format!("t{i}"), gpu_prio: i as u32 + 1, rt: true })
+        .collect()
+}
+
+fn main() {
+    // Uncontended begin/end pair (the common case in Fig. 12's low mode).
+    let a = Arbiter::new(regs(8));
+    run("arbiter/begin_end_uncontended", move || {
+        a.seg_begin(0);
+        a.seg_end(0);
+        a.take_eps_samples().len()
+    });
+
+    // Preemption path: low-priority task on the runlist, high-priority
+    // begin displaces it (the full Alg. 1 add path + promote on end).
+    let b = Arbiter::new(regs(8));
+    run("arbiter/begin_end_preempting", move || {
+        b.seg_begin(0);
+        b.seg_begin(7); // preempts 0
+        b.seg_end(7); // promotes 0
+        b.seg_end(0);
+        b.take_eps_samples().len()
+    });
+
+    // Contended: 4 threads hammering begin/wait/end concurrently.
+    let c = Arc::new(Arbiter::new(regs(4)));
+    run("arbiter/storm_4threads_x100", {
+        let c = Arc::clone(&c);
+        move || {
+            let mut handles = vec![];
+            for id in 0..4 {
+                let c = Arc::clone(&c);
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        c.seg_begin(id);
+                        c.wait_admitted(id, false);
+                        c.seg_end(id);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            c.take_eps_samples().len()
+        }
+    });
+}

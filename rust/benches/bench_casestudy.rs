@@ -1,0 +1,27 @@
+//! Case-study pipeline benchmarks: the Fig. 10 MORT collection, the
+//! Table 5 analysis column, and the Fig. 13 θ-estimation procedure.
+
+use gcaps::analysis::{gcaps as gcaps_rta, rr};
+use gcaps::experiments::casestudy::{morts, table4_taskset, Board};
+use gcaps::experiments::overhead::estimate_theta_sim;
+use gcaps::experiments::ExpConfig;
+use gcaps::model::{ms, Platform, WaitMode};
+use gcaps::util::bench::run;
+
+fn main() {
+    let cfg = ExpConfig { tasksets: 0, seed: 1 };
+    run("casestudy/fig10_morts_xavier", move || morts(Board::XavierNx, &cfg).len());
+
+    let ts_s = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
+    let ts_b = table4_taskset(Board::XavierNx.platform(), WaitMode::BusyWait);
+    run("casestudy/table5_wcrt_gcaps", {
+        let ts_s = ts_s.clone();
+        move || gcaps_rta::analyze(&ts_s, false, &gcaps_rta::Options::default()).schedulable
+    });
+    run("casestudy/table5_wcrt_tsg_rr", move || rr::analyze(&ts_b, true).schedulable);
+
+    run("casestudy/fig13_theta_estimate", move || {
+        let p = Platform { num_cpus: 6, theta: 250, ..Default::default() };
+        estimate_theta_sim(p, ms(40.0), 4)
+    });
+}

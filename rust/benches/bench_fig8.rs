@@ -1,0 +1,31 @@
+//! End-to-end Fig. 8 benchmark: one schedulability data point per
+//! approach at the Table 3 default parameters (what the paper plots,
+//! at reduced taskset count). `cargo bench` therefore regenerates a
+//! miniature of every Fig. 8 panel row and prints the ratios.
+
+use gcaps::analysis::Approach;
+use gcaps::experiments::fig8::{run_panel, schedulability, Panel};
+use gcaps::experiments::ExpConfig;
+use gcaps::util::bench::run;
+
+fn main() {
+    let cfg = ExpConfig { tasksets: 25, seed: 2024 };
+
+    for approach in Approach::ALL {
+        let name = format!("fig8/point25/{}", approach.label());
+        let m = run(&name, move || schedulability(approach, &|_| {}, &cfg));
+        let _ = m;
+    }
+
+    // A whole miniature panel (the per-figure regeneration target).
+    let small = ExpConfig { tasksets: 10, seed: 1 };
+    run("fig8/panel_b_mini", move || run_panel(Panel::UtilPerCpu, &small).1.len());
+
+    // Print the actual data point values once, so the bench log doubles
+    // as a Fig. 8 sanity row.
+    println!("\nfig8 default-point schedulability (25 tasksets):");
+    for approach in Approach::ALL {
+        let v = schedulability(approach, &|_| {}, &cfg);
+        println!("  {:16} {:.2}", approach.label(), v);
+    }
+}

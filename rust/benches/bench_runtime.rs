@@ -1,0 +1,24 @@
+//! PJRT runtime benchmarks: per-workload launch latency (the live GPU
+//! segment building block) and artifact load/compile time. Skips
+//! gracefully when artifacts/ has not been built.
+
+use gcaps::runtime::{artifacts_dir, Runtime};
+use gcaps::util::bench::run;
+
+fn main() {
+    let dir = artifacts_dir();
+    let rt = match Runtime::load_dir(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("bench runtime: skipping ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    for name in rt.workloads() {
+        let label = format!("runtime/launch/{name}");
+        let rt_ref = &rt;
+        let n = name.clone();
+        run(&label, move || rt_ref.exec(&n).unwrap());
+    }
+    run("runtime/load_compile_all", move || Runtime::load_dir(&dir).unwrap().workloads().len());
+}

@@ -1,0 +1,50 @@
+//! Benchmarks of the discrete-event simulator: per-policy throughput on
+//! a Table-3 taskset (30 s simulated horizon) and the case-study
+//! taskset. These drive Figs. 10-13; the DES must stay far faster than
+//! real time for the randomized-offset replicas to be cheap.
+
+use gcaps::experiments::casestudy::{table4_taskset, Board};
+use gcaps::model::{ms, WaitMode};
+use gcaps::sim::{simulate, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::bench::run;
+use gcaps::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(3);
+    let ts = generate(&mut rng, &GenParams::default());
+    for policy in [Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus] {
+        let ts = ts.clone();
+        let name = format!("sim/table3_30s/{}", policy.label());
+        run(&name, move || {
+            simulate(&ts, &SimConfig::new(policy, ms(30_000.0))).run.horizon
+        });
+    }
+
+    // Busy-wait variant (more CPU contention events).
+    let busy = generate(
+        &mut rng,
+        &GenParams { mode: WaitMode::BusyWait, ..Default::default() },
+    );
+    run("sim/table3_30s/gcaps_busy", move || {
+        simulate(&busy, &SimConfig::new(Policy::Gcaps, ms(30_000.0))).run.horizon
+    });
+
+    // The case-study taskset (Fig. 10 inner loop).
+    let case = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
+    run("sim/case_study_30s/gcaps", {
+        let case = case.clone();
+        move || simulate(&case, &SimConfig::new(Policy::Gcaps, ms(30_000.0))).run.horizon
+    });
+    run("sim/case_study_30s/tsg_rr", move || {
+        simulate(&case, &SimConfig::new(Policy::TsgRr, ms(30_000.0))).run.horizon
+    });
+
+    // Trace capture overhead.
+    let ts2 = generate(&mut rng, &GenParams::default());
+    run("sim/table3_5s/gcaps+trace", move || {
+        simulate(&ts2, &SimConfig::new(Policy::Gcaps, ms(5_000.0)).with_trace())
+            .trace
+            .map(|t| t.events.len())
+    });
+}

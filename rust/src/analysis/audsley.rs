@@ -1,0 +1,210 @@
+//! Separate GPU-segment priority assignment via Audsley's algorithm
+//! (paper §5.3, analysed per §6.4).
+//!
+//! When the GCAPS test fails with default priorities (π^g = π^c), we
+//! search for a GPU-priority permutation: levels are handed out from the
+//! lowest upward; a task may take the current lowest level if (a) doing
+//! so keeps the same-core relative GPU order identical to the CPU order
+//! (the paper's deadlock-avoidance constraint) and (b) the task passes
+//! its response-time test assuming all still-unassigned tasks have
+//! higher GPU priority. Audsley's optimality applies because a task's
+//! GCAPS interference depends only on *which* tasks have higher GPU
+//! priority, not on their relative order, and §6.4's D-based jitters
+//! remove the dependence on higher-priority response times.
+//!
+//! GPU priorities are a permutation of the candidates' own CPU priority
+//! values, so they stay on one scale with the (unchanged) CPU-only tasks.
+
+use crate::analysis::gcaps;
+use crate::model::{TaskSet, Time};
+
+/// Attempt the assignment. Returns the modified taskset (gpu_prio fields
+/// rewritten) plus the per-task GPU priority vector, or None if no
+/// feasible assignment exists. `busy` selects the analysis variant.
+pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u32>)> {
+    let mut work = ts.clone();
+    let candidates: Vec<usize> = work
+        .tasks
+        .iter()
+        .filter(|t| !t.best_effort && t.uses_gpu())
+        .map(|t| t.id)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    // Levels: the candidates' own CPU priority values, lowest first.
+    let mut levels: Vec<u32> = candidates.iter().map(|&i| ts.tasks[i].cpu_prio).collect();
+    levels.sort_unstable();
+
+    let mut unassigned: Vec<usize> = candidates.clone();
+    // While searching, unassigned tasks act as "higher GPU priority".
+    const UNASSIGNED: u32 = u32::MAX;
+    for &i in &unassigned {
+        work.tasks[i].gpu_prio = UNASSIGNED;
+    }
+
+    let opts = gcaps::Options { use_gpu_prio: true, ..Default::default() };
+    let no_resp: Vec<Option<Time>> = vec![None; work.tasks.len()];
+
+    for &level in &levels {
+        // Try candidates lowest-CPU-priority first (keeps the search
+        // deterministic and biases toward the RM-like order).
+        let mut order = unassigned.clone();
+        order.sort_by_key(|&i| work.tasks[i].cpu_prio);
+        let mut placed = None;
+        for &cand in &order {
+            // (a) per-core order: cand must be the lowest-CPU-priority
+            // unassigned candidate on its core.
+            let core = work.tasks[cand].core;
+            let violates = unassigned.iter().any(|&d| {
+                d != cand
+                    && work.tasks[d].core == core
+                    && work.tasks[d].cpu_prio < work.tasks[cand].cpu_prio
+            });
+            if violates {
+                continue;
+            }
+            // (b) tentative test at this level.
+            work.tasks[cand].gpu_prio = level;
+            let rta = gcaps::response_time(&work, cand, busy, &no_resp, &opts);
+            if rta.ok() {
+                placed = Some(cand);
+                break;
+            }
+            work.tasks[cand].gpu_prio = UNASSIGNED;
+        }
+        match placed {
+            Some(cand) => unassigned.retain(|&i| i != cand),
+            None => return None, // no task can take this level
+        }
+    }
+    debug_assert!(unassigned.is_empty());
+
+    // Final full verification (covers CPU-only tasks, whose indirect
+    // delay depends on the assignment).
+    let res = gcaps::analyze(&work, busy, &opts);
+    if !res.schedulable {
+        return None;
+    }
+    let prios = work.tasks.iter().map(|t| t.gpu_prio).collect();
+    Some((work, prios))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::gcaps::{analyze, Options};
+    use crate::model::{ms, GpuSegment, Platform, Task, WaitMode};
+    use crate::taskgen::{generate, GenParams};
+    use crate::util::check::forall;
+
+    fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
+        Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(t),
+            deadline: ms(t),
+            cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
+            gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    #[test]
+    fn preserves_per_core_order() {
+        forall("audsley per-core order", 50, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            if let Some((out, _)) = assign_gpu_priorities(&ts, false) {
+                out.validate().map_err(|e| format!("invalid output: {e}"))?;
+                for a in out.rt_tasks().filter(|t| t.uses_gpu()) {
+                    for b in out.rt_tasks().filter(|t| t.uses_gpu()) {
+                        if a.core == b.core
+                            && a.cpu_prio > b.cpu_prio
+                            && a.gpu_prio <= b.gpu_prio
+                        {
+                            return Err(format!("order violated: {} vs {}", a.id, b.id));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assignment_is_permutation_of_cpu_prios() {
+        forall("audsley permutation", 50, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            if let Some((out, _)) = assign_gpu_priorities(&ts, false) {
+                let mut orig: Vec<u32> = ts
+                    .tasks
+                    .iter()
+                    .filter(|t| !t.best_effort && t.uses_gpu())
+                    .map(|t| t.cpu_prio)
+                    .collect();
+                let mut got: Vec<u32> = out
+                    .tasks
+                    .iter()
+                    .filter(|t| !t.best_effort && t.uses_gpu())
+                    .map(|t| t.gpu_prio)
+                    .collect();
+                orig.sort_unstable();
+                got.sort_unstable();
+                if orig != got {
+                    return Err(format!("{orig:?} != {got:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn success_implies_schedulable() {
+        forall("audsley sound", 50, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            if let Some((out, _)) = assign_gpu_priorities(&ts, false) {
+                let opts = Options { use_gpu_prio: true, ..Default::default() };
+                if !analyze(&out, false, &opts).schedulable {
+                    return Err("assignment accepted but taskset not schedulable".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn can_rescue_example2_style_taskset() {
+        // A taskset in the spirit of Table 2/Fig. 5: a long-GPU task with
+        // higher RM priority starves a shorter, more urgent GPU segment;
+        // swapping GPU priorities rescues it. Built so the default
+        // assignment fails but an alternative passes.
+        let p = Platform { num_cpus: 2, epsilon: 100, theta: 100, tsg_slice: 1024 };
+        let tasks = vec![
+            // Long GPU segment, long-ish period, higher RM priority.
+            gpu_task(0, 0, 2, 4.0, 1.0, 80.0, 190.0),
+            // Short GPU segment but needs it promptly.
+            gpu_task(1, 1, 1, 8.0, 1.0, 10.0, 100.0),
+        ];
+        let ts = TaskSet::new(tasks, p);
+        let default = analyze(&ts, false, &Options::default());
+        if !default.schedulable {
+            // Audsley should find the swap (give τ_1's GPU segment the
+            // higher priority).
+            let got = assign_gpu_priorities(&ts, false);
+            assert!(got.is_some(), "Audsley failed to rescue the taskset");
+            let (out, _) = got.unwrap();
+            assert!(out.tasks[1].gpu_prio > out.tasks[0].gpu_prio);
+        }
+    }
+
+    #[test]
+    fn no_gpu_tasks_returns_none() {
+        let tasks = vec![Task::cpu_only(0, 0, 1, ms(5.0), ms(50.0))];
+        let ts = TaskSet::new(tasks, Platform::default());
+        assert!(assign_gpu_priorities(&ts, false).is_none());
+    }
+}

@@ -1,0 +1,189 @@
+//! FMLP+ baseline: the GPU as a single shared resource managed by
+//! Brandenburg's FMLP+ (ECRTS 2014, ref [10]) — FIFO-ordered requests
+//! with priority boosting, suspension-aware analysis.
+//!
+//! FIFO queueing gives the classic per-request blocking bound: when τ_i
+//! issues a GPU request, every *other* task can have at most one request
+//! already queued ahead of it, so
+//!
+//! ```text
+//!     W_{i,j} = Σ_{k ≠ i, η^g_k > 0} gcs_max_k
+//! ```
+//!
+//! independent of priorities — which is exactly why FMLP+ behaves well
+//! under light GPU load (Fig. 8e, low G/C) and degrades as GPU-using
+//! tasks multiply or kernels lengthen. Best-effort tasks enter the same
+//! FIFO queue, so they also contribute one gcs each (Fig. 8f).
+//!
+//! Boost blocking and CPU preemption mirror the MPCP module; the two
+//! baselines differ exactly in their queueing discipline, which is the
+//! comparison the paper draws.
+
+use crate::analysis::terms::{fixed_point, jitter_c, njobs, njobs_jitter, AnalysisResult, Rta};
+use crate::model::{TaskSet, Time};
+
+/// Per-request FIFO blocking: one longest gcs per other GPU-using task
+/// (RT or best-effort).
+fn request_blocking(ts: &TaskSet, i: usize) -> Time {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return 0;
+    }
+    ts.tasks
+        .iter()
+        .filter(|t| t.id != me.id && t.uses_gpu())
+        .map(|t| t.max_gpu_segment())
+        .sum()
+}
+
+/// Boost blocking: same structure as the MPCP module — every job of a
+/// lower-priority (or best-effort) same-core GPU task can execute its
+/// critical sections' CPU portions (G^m) at boosted priority when its
+/// FIFO grant lands, charged per lower-priority job with D-jitter.
+fn boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
+    let me = &ts.tasks[i];
+    ts.tasks
+        .iter()
+        .filter(|t| {
+            t.id != me.id
+                && t.core == me.core
+                && t.uses_gpu()
+                && (t.best_effort || t.cpu_prio < me.cpu_prio)
+        })
+        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
+        .sum()
+}
+
+/// CPU preemption from same-core higher-priority tasks (suspension-aware
+/// jitter; busy-waiting inflates hp demand by its waiting + gcs time).
+fn p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>]) -> Time {
+    ts.hpp(i)
+        .map(|h| {
+            let n = if h.uses_gpu() {
+                // Carry-in jitter, as in the MPCP module.
+                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
+            } else {
+                njobs(r, h.period) // CPU-only hp: exact count
+            };
+            if busy {
+                n * (h.c() + h.g() + request_blocking(ts, h.id) * h.eta_g() as Time)
+            } else {
+                n * (h.c() + h.gm())
+            }
+        })
+        .sum()
+}
+
+/// Response time of task i under FMLP+.
+pub fn response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
+    let me = &ts.tasks[i];
+    let remote = request_blocking(ts, i) * me.eta_g() as Time;
+    let own = me.c() + me.g() + remote;
+    fixed_point(me.deadline, own, |r| {
+        own + boost_blocking(ts, i, r) + p_c(ts, i, r, busy, resp)
+    })
+}
+
+/// Analyse all RT tasks.
+pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    let mut order: Vec<usize> =
+        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
+    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
+    for i in order {
+        resp[i] = response_time(ts, i, busy, &resp).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ms, GpuSegment, Platform, Task, WaitMode};
+
+    fn platform() -> Platform {
+        Platform { num_cpus: 2, ..Default::default() }
+    }
+
+    fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
+        Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(t),
+            deadline: ms(t),
+            cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
+            gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    #[test]
+    fn single_task_no_blocking() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        assert_eq!(analyze(&ts, false).response[0], Some(ms(8.0)));
+    }
+
+    #[test]
+    fn fifo_blocking_one_gcs_per_other_task() {
+        let t0 = gpu_task(0, 0, 3, 2.0, 1.0, 5.0, 200.0);
+        let t1 = gpu_task(1, 1, 2, 2.0, 1.0, 10.0, 200.0);
+        let t2 = gpu_task(2, 1, 1, 2.0, 1.0, 20.0, 200.0);
+        let ts = TaskSet::new(vec![t0, t1, t2], platform());
+        let res = analyze(&ts, false);
+        // τ_0: remote = (11 + 21) per request, one request.
+        assert_eq!(res.response[0], Some(ms(8.0 + 32.0)));
+    }
+
+    #[test]
+    fn fifo_independent_of_priority() {
+        // Unlike MPCP, the lowest-priority task's remote blocking is the
+        // same single-gcs-per-other-task sum.
+        let t0 = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 400.0);
+        let t1 = gpu_task(1, 1, 1, 2.0, 1.0, 10.0, 400.0);
+        let ts = TaskSet::new(vec![t0, t1], platform());
+        let res = analyze(&ts, false);
+        // R_1 = C_1 + G_1 + gcs_max_0 = 2 + 11 + 6 = 19 ms.
+        assert_eq!(res.response[1], Some(ms(19.0)));
+    }
+
+    #[test]
+    fn best_effort_joins_fifo() {
+        let rt = gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0);
+        let mut be = gpu_task(1, 1, 0, 10.0, 2.0, 80.0, 300.0);
+        be.best_effort = true;
+        let ts = TaskSet::new(vec![rt, be], platform());
+        let r0 = analyze(&ts, false).response[0].unwrap();
+        assert!(r0 >= ms(8.0 + 82.0), "r0 = {r0}");
+    }
+
+    #[test]
+    fn busy_mode_worse_or_equal() {
+        let hp = gpu_task(0, 0, 2, 2.0, 1.0, 30.0, 150.0);
+        let lp = Task::cpu_only(1, 0, 1, ms(10.0), ms(150.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let rs = analyze(&ts, false).response[1].unwrap();
+        match analyze(&ts, true).response[1] {
+            Some(rb) => assert!(rb >= rs),
+            None => {}
+        }
+    }
+
+    #[test]
+    fn more_gpu_tasks_more_blocking() {
+        let mut tasks = vec![gpu_task(0, 0, 9, 2.0, 1.0, 5.0, 400.0)];
+        let mut prev = None;
+        for n in 1..5usize {
+            tasks.push(gpu_task(n, 1, (9 - n) as u32, 2.0, 1.0, 10.0, 400.0));
+            let ts = TaskSet::new(tasks.clone(), platform());
+            let r0 = analyze(&ts, false).response[0].unwrap();
+            if let Some(p) = prev {
+                assert!(r0 > p, "blocking must grow with GPU task count");
+            }
+            prev = Some(r0);
+        }
+    }
+}

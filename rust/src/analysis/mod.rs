@@ -1,0 +1,118 @@
+//! End-to-end response time analysis (paper §6).
+//!
+//! Four first-class approaches, each with busy-waiting and
+//! self-suspension variants:
+//!
+//! - [`rr`] — the **default Tegra driver**'s time-sliced round-robin TSG
+//!   scheduling (§6.2, Lemmas 1–7): the first formal analysis of the
+//!   unmodified driver.
+//! - [`gcaps`] — the paper's **GCAPS** priority-driven preemptive GPU
+//!   context scheduling (§6.3, Lemmas 8–15), optionally with the §5.3
+//!   separate GPU-segment priority assignment ([`audsley`], §6.4).
+//! - [`mpcp`] — synchronization-based baseline: MPCP with
+//!   self-suspensions (Patel et al., RTAS 2018 — ref [20]).
+//! - [`fmlp`] — synchronization-based baseline: FMLP+ (Brandenburg,
+//!   ECRTS 2014 — ref [10]).
+//!
+//! All analyses walk tasks in decreasing CPU-priority order so that
+//! higher-priority response times are available for jitter terms
+//! (falling back to D_h when unknown, as in §6.4).
+
+pub mod audsley;
+pub mod fmlp;
+pub mod gcaps;
+pub mod mpcp;
+pub mod rr;
+pub mod terms;
+
+pub use terms::{AnalysisResult, Rta};
+
+use crate::model::TaskSet;
+
+/// The eight analysis configurations evaluated in Fig. 8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Approach {
+    GcapsBusy,
+    GcapsSuspend,
+    TsgRrBusy,
+    TsgRrSuspend,
+    MpcpBusy,
+    MpcpSuspend,
+    FmlpBusy,
+    FmlpSuspend,
+}
+
+impl Approach {
+    pub const ALL: [Approach; 8] = [
+        Approach::GcapsBusy,
+        Approach::GcapsSuspend,
+        Approach::TsgRrBusy,
+        Approach::TsgRrSuspend,
+        Approach::MpcpBusy,
+        Approach::MpcpSuspend,
+        Approach::FmlpBusy,
+        Approach::FmlpSuspend,
+    ];
+
+    /// Label used in figures and CSVs (matches the paper's legends).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Approach::GcapsBusy => "gcaps_busy",
+            Approach::GcapsSuspend => "gcaps_suspend",
+            Approach::TsgRrBusy => "tsg_rr_busy",
+            Approach::TsgRrSuspend => "tsg_rr_suspend",
+            Approach::MpcpBusy => "mpcp_busy",
+            Approach::MpcpSuspend => "mpcp_suspend",
+            Approach::FmlpBusy => "fmlp_busy",
+            Approach::FmlpSuspend => "fmlp_suspend",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Approach> {
+        Approach::ALL.iter().copied().find(|a| a.label() == s)
+    }
+
+    pub fn is_busy(&self) -> bool {
+        matches!(self, Approach::GcapsBusy | Approach::TsgRrBusy | Approach::MpcpBusy | Approach::FmlpBusy)
+    }
+}
+
+/// Run an approach's analysis on a taskset. For the GCAPS approaches,
+/// `gcaps::Options::default()` is used (paper-faithful, task priorities
+/// for GPU segments). Fig. 8's GCAPS curves additionally retry failed
+/// tasksets with the Audsley GPU-priority assignment — see
+/// [`analyze_with_gpu_prio`].
+pub fn analyze(ts: &TaskSet, approach: Approach) -> AnalysisResult {
+    match approach {
+        Approach::GcapsBusy => gcaps::analyze(ts, true, &gcaps::Options::default()),
+        Approach::GcapsSuspend => gcaps::analyze(ts, false, &gcaps::Options::default()),
+        Approach::TsgRrBusy => rr::analyze(ts, true),
+        Approach::TsgRrSuspend => rr::analyze(ts, false),
+        Approach::MpcpBusy => mpcp::analyze(ts, true),
+        Approach::MpcpSuspend => mpcp::analyze(ts, false),
+        Approach::FmlpBusy => fmlp::analyze(ts, true),
+        Approach::FmlpSuspend => fmlp::analyze(ts, false),
+    }
+}
+
+/// The full GCAPS schedulability procedure of §7.1.1: run with default
+/// (RM) priorities for GPU segments; if that fails, search for a
+/// separate GPU-priority assignment with Audsley's algorithm (§5.3).
+/// Returns the result plus the assignment used (None = default prios).
+pub fn analyze_with_gpu_prio(
+    ts: &TaskSet,
+    busy: bool,
+) -> (AnalysisResult, Option<Vec<u32>>) {
+    let base = gcaps::analyze(ts, busy, &gcaps::Options::default());
+    if base.schedulable {
+        return (base, None);
+    }
+    match audsley::assign_gpu_priorities(ts, busy) {
+        Some((assigned_ts, prios)) => {
+            let opts = gcaps::Options { use_gpu_prio: true, ..Default::default() };
+            let res = gcaps::analyze(&assigned_ts, busy, &opts);
+            (res, Some(prios))
+        }
+        None => (base, None),
+    }
+}

@@ -1,0 +1,244 @@
+//! Response-time analysis for the DEFAULT Tegra GPU driver's
+//! work-conserving time-sliced round-robin TSG scheduling (paper §6.2).
+//!
+//! This is, per the paper, the first formal WCRT analysis of the
+//! unmodified driver: each process's TSG gets equal time slices of
+//! length L on the runlist, GPU execution of concurrent processes is
+//! *interleaved* (never preempted mid-slice, never prioritised), and
+//! every TSG switch costs θ.
+//!
+//! Lemma 1: I^ie_i  = Σ_j 𝓘(ν, G^e_{i,j}),  ν = |{k ≠ i, η^g_k > 0}|
+//! Lemma 2: I^dp_i  = 0 (no preemption, only interleaving)
+//! Lemma 3: B^C_i   = 0 (no runlist-update requests)
+//! Busy-waiting (§6.2.1):
+//!   Lemma 4: I^id_i = Σ_{τ_h ∈ hpp, η^g_h>0} ceil(R/T_h) ·
+//!                       Σ_j 𝓘(|{k ∉ hpp(τ_i), η^g_k>0} ∪ {τ_h}|, G^e_{h,j})
+//!   Lemma 5: P^C_i  = Σ_{τ_h ∈ hpp} ceil(R/T_h) · (C_h + G^m_h)
+//! Self-suspension (§6.2.2):
+//!   Lemma 6: I^id_i = 0
+//!   Lemma 7: P^C_i  = Σ_{τ_h ∈ hpp} ceil((R + J^c_h)/T_h) · (C_h + G^m_h)
+//!
+//! Interpretation note (Lemma 4): the interleaving-set cardinality
+//! includes τ_h itself — the busy-wait window of τ_h covers τ_h's own
+//! time slices plus one slice + θ per other active TSG per round — which
+//! is what makes the busy-waiting bound account for the full wait.
+
+use crate::analysis::terms::{
+    fixed_point, interleave, jitter_c, jitter_g, njobs, njobs_jitter, AnalysisResult, Rta,
+};
+use crate::model::{Task, TaskSet, Time};
+
+/// Lemma 1: interference on τ_i's own GPU segments from interleaved
+/// execution with every other GPU-using process (RT and best-effort —
+/// the default driver treats all processes equally).
+fn i_ie(ts: &TaskSet, i: usize) -> Time {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return 0;
+    }
+    let nu = ts.tasks.iter().filter(|t| t.id != i && t.uses_gpu()).count();
+    me.gpu_segments
+        .iter()
+        .map(|g| interleave(nu, g.exec, ts.platform.tsg_slice, ts.platform.theta))
+        .sum()
+}
+
+/// Lemma 4 (busy-waiting): indirect delay from same-core higher-priority
+/// tasks busy-waiting on interleaved GPU execution.
+fn i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
+    let mut total = 0;
+    // Hoisted out of the τ_h loop (perf: built once per fixpoint
+    // evaluation instead of once per (τ_h, evaluation) — §Perf).
+    let hpp_ids: Vec<usize> = ts.hpp(i).map(|t| t.id).collect();
+    let nu_base = ts
+        .tasks
+        .iter()
+        .filter(|k| k.uses_gpu() && !hpp_ids.contains(&k.id))
+        .count();
+    for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
+        // ν_h = |{k | τ_k ∉ hpp(τ_i) ∧ η^g_k > 0} ∪ {τ_h}|: the busy-wait
+        // window of τ_h interleaves with all GPU-using tasks outside
+        // hpp(τ_i) (those inside are counted by the outer iteration),
+        // plus τ_h's own slices.
+        let nu = nu_base + 1; // τ_h itself (τ_h ∈ hpp, so not in the set)
+        let per_job: Time = h
+            .gpu_segments
+            .iter()
+            .map(|g| interleave(nu, g.exec, ts.platform.tsg_slice, ts.platform.theta))
+            .sum();
+        // Carry-in amendment: interleaved GPU execution defers τ_h's
+        // busy-wait window past its release; add the J^g jitter so the
+        // count covers the carry-in job (cf. Lemma 10's cross-core term).
+        total += njobs_jitter(r, jitter_g(h, resp[h.id]), h.period) * per_job;
+    }
+    total
+}
+
+/// Lemmas 5/7: CPU preemption from same-core higher-priority tasks.
+fn p_c(ts: &TaskSet, i: usize, r: Time, _busy: bool, resp: &[Option<Time>]) -> Time {
+    ts.hpp(i)
+        .map(|h: &Task| {
+            let demand = h.c() + h.gm();
+            // CPU-only hp tasks never suspend nor get GPU-deferred, so
+            // the plain ceil(R/T) count is exact for them (cf. Lemma
+            // 15's split); GPU-using hp tasks carry the J^c jitter in
+            // both modes (Lemma 7; busy mode needs it for the carry-in
+            // deferral the device model exhibits — see module docs).
+            let n = if h.uses_gpu() {
+                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
+            } else {
+                njobs(r, h.period)
+            };
+            n * demand
+        })
+        .sum()
+}
+
+/// Response time of one task under the default driver (Eq. 1 with the
+/// §6.2 terms). `resp` carries already-computed higher-priority WCRTs.
+pub fn response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
+    let me = &ts.tasks[i];
+    let own = me.c() + me.g();
+    let iie = i_ie(ts, i); // R-independent
+    fixed_point(me.deadline, own + iie, |r| {
+        let idle = if busy { i_id_busy(ts, i, r, resp) } else { 0 };
+        own + iie + idle + p_c(ts, i, r, busy, resp)
+    })
+}
+
+/// Analyse all RT tasks (decreasing CPU priority so jitters resolve).
+pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    let mut order: Vec<usize> =
+        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
+    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
+    for i in order {
+        resp[i] = response_time(ts, i, busy, &resp).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ms, GpuSegment, Platform, Task, WaitMode};
+
+    fn platform() -> Platform {
+        Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+    }
+
+    fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
+        Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(t),
+            deadline: ms(t),
+            cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
+            gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    #[test]
+    fn single_task_no_interference() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let res = analyze(&ts, false);
+        // alone on the GPU: R = C + G + own switch-in θ per round
+        // (5 rounds of the 1024 µs slice for G^e = 5 ms)
+        assert_eq!(res.response[0], Some(ms(8.0) + 5 * 200));
+        assert!(res.schedulable);
+    }
+
+    #[test]
+    fn two_gpu_tasks_interleave() {
+        let ts = TaskSet::new(
+            vec![
+                gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0),
+                gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0),
+            ],
+            platform(),
+        );
+        let res = analyze(&ts, false);
+        // Each sees ν = 1; G^e = 5 ms = 5 slices of 1024 µs (ceil = 5);
+        // I_ie = (1024+200)*1*5 + 200*5 (own switch-in) = 7120 µs.
+        let expect = ms(8.0) + 7120;
+        assert_eq!(res.response[0], Some(expect));
+        assert_eq!(res.response[1], Some(expect));
+    }
+
+    #[test]
+    fn best_effort_counts_toward_interleaving() {
+        let mut be = gpu_task(1, 1, 0, 2.0, 1.0, 5.0, 100.0);
+        be.best_effort = true;
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0), be], platform());
+        let res = analyze(&ts, false);
+        assert_eq!(res.response[0], Some(ms(8.0) + 7120));
+        // BE task itself is not analysed.
+        assert_eq!(res.response[1], None);
+        assert!(res.schedulable);
+    }
+
+    #[test]
+    fn suspend_mode_no_indirect_delay() {
+        // CPU-only task with same-core GPU-using hp task: in suspend mode
+        // only C_h + G^m_h preempts.
+        let hp = gpu_task(0, 0, 2, 2.0, 1.0, 50.0, 100.0);
+        let lp = Task::cpu_only(1, 0, 1, ms(10.0), ms(100.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let res = analyze(&ts, false);
+        // R_1 = 10 + ceil((R + J)/100) * 3 with one carry-in job: 13 or 16.
+        let r1 = res.response[1].unwrap();
+        assert!(r1 >= ms(13.0) && r1 <= ms(16.0), "r1 = {r1}");
+    }
+
+    #[test]
+    fn busy_mode_adds_indirect_delay() {
+        let hp = gpu_task(0, 0, 2, 2.0, 1.0, 50.0, 200.0);
+        let lp = Task::cpu_only(1, 0, 1, ms(10.0), ms(200.0));
+        let mut ts = TaskSet::new(vec![hp, lp], platform());
+        ts.tasks[0].mode = WaitMode::BusyWait;
+        ts.tasks[1].mode = WaitMode::BusyWait;
+        let busy = analyze(&ts, true);
+        let susp = analyze(&ts, false);
+        // Busy-waiting on a 50 ms kernel (interleaved with ν = 1, i.e.
+        // its own slices) must delay the CPU-only task far more.
+        let rb = busy.response[1].unwrap();
+        let rs = susp.response[1].unwrap();
+        assert!(rb > rs + ms(40.0), "busy {rb} vs suspend {rs}");
+    }
+
+    #[test]
+    fn overload_unschedulable() {
+        let ts = TaskSet::new(
+            vec![
+                gpu_task(0, 0, 2, 2.0, 1.0, 90.0, 100.0),
+                gpu_task(1, 1, 1, 2.0, 1.0, 90.0, 100.0),
+            ],
+            platform(),
+        );
+        let res = analyze(&ts, false);
+        // 90 ms kernels interleaving → > 100 ms response for someone.
+        assert!(!res.schedulable);
+    }
+
+    #[test]
+    fn theta_increases_interference() {
+        let mk = |theta| {
+            let p = Platform { theta, ..platform() };
+            TaskSet::new(
+                vec![
+                    gpu_task(0, 0, 2, 2.0, 1.0, 10.0, 100.0),
+                    gpu_task(1, 1, 1, 2.0, 1.0, 10.0, 100.0),
+                ],
+                p,
+            )
+        };
+        let lo = analyze(&mk(100), false).response[0].unwrap();
+        let hi = analyze(&mk(500), false).response[0].unwrap();
+        assert!(hi > lo);
+    }
+}

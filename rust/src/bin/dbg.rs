@@ -1,0 +1,56 @@
+use gcaps::analysis::gcaps::{analyze as ganalyze, Options};
+use gcaps::model::*;
+use gcaps::sim::{simulate, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::rng::Pcg32;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let seed = u64::from_str_radix(args[1].trim_start_matches("0x"), 16).unwrap();
+    let victim: usize = args[2].parse().unwrap();
+    let busy = args.get(3).map(|s| s == "busy").unwrap_or(false);
+    let policy = match args.get(4).map(|s| s.as_str()) {
+        Some("mpcp") => Policy::Mpcp,
+        Some("fmlp") => Policy::FmlpPlus,
+        Some("tsg_rr") => Policy::TsgRr,
+        _ => Policy::Gcaps,
+    };
+    let mut rng = Pcg32::seeded(seed);
+    let p = GenParams {
+        mode: if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+        util_per_cpu: (0.25, 0.45),
+        ..Default::default()
+    };
+    let ts = generate(&mut rng, &p);
+    for t in &ts.tasks {
+        println!("tau{}: core {} prio {} T {} C {:?} G {:?} be={}", t.id, t.core, t.cpu_prio,
+            to_ms(t.period), t.cpu_segments.iter().map(|&c| to_ms(c)).collect::<Vec<_>>(),
+            t.gpu_segments.iter().map(|g| (to_ms(g.misc), to_ms(g.exec))).collect::<Vec<_>>(), t.best_effort);
+    }
+    let res = match policy {
+        Policy::Mpcp => gcaps::analysis::mpcp::analyze(&ts, busy),
+        Policy::FmlpPlus => gcaps::analysis::fmlp::analyze(&ts, busy),
+        Policy::TsgRr => gcaps::analysis::rr::analyze(&ts, busy),
+        _ => ganalyze(&ts, busy, &Options::default()),
+    };
+    println!("analysis R[{victim}] = {:?}", res.response[victim].map(to_ms));
+    let horizon = ts.tasks.iter().map(|t| t.period).max().unwrap() * 6;
+    let offsets: Vec<u64> = std::env::var("OFFSETS").ok().map(|v| v.split(',').map(|x| x.parse().unwrap()).collect()).unwrap_or_default();
+    let cfg = SimConfig::new(policy, horizon).with_offsets(offsets).with_trace();
+    let sim = simulate(&ts, &cfg);
+    let m = &sim.per_task[victim];
+    println!("sim responses[{victim}] = {:?}", m.response_times.iter().map(|&t| to_ms(t)).collect::<Vec<_>>());
+    // locate worst job
+    let tr = sim.trace.unwrap();
+    let worst = m.response_times.iter().copied().enumerate().max_by_key(|&(_, r)| r).unwrap();
+    println!("worst job #{} R = {}", worst.0, to_ms(worst.1));
+    let rels: Vec<u64> = tr.releases.iter().filter(|(t, _)| *t == victim).map(|(_, r)| *r).collect();
+    let comps: Vec<u64> = tr.completions.iter().filter(|(t, _)| *t == victim).map(|(_, c)| *c).collect();
+    for (k, (r, c)) in rels.iter().zip(&comps).enumerate() {
+        println!("job {k}: rel {} comp {} R {}", to_ms(*r), to_ms(*c), to_ms(c - r));
+    }
+    let rel = rels[worst.0];
+    let end = rel + worst.1;
+    println!("{}", tr.gantt(ts.platform.num_cpus, ts.len(), rel.saturating_sub(2000), end + 1000, 150));
+    let _ = end;
+}

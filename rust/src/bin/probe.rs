@@ -1,0 +1,12 @@
+// Smoke-probe: load artifacts, run every workload once, print timings.
+use gcaps::runtime::{artifacts_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_dir(&artifacts_dir())?;
+    for name in rt.workloads() {
+        let t = rt.profile(&name, 3)?;
+        let vals = rt.exec_values(&name)?;
+        println!("{name:12} {:8.3} ms  out[0..3] = {:?}", t.as_secs_f64() * 1e3, &vals[..vals.len().min(3)]);
+    }
+    Ok(())
+}

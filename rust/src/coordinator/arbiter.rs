@@ -1,0 +1,290 @@
+//! The live GCAPS arbiter: Alg. 1 of the paper in userspace.
+//!
+//! This is the analog of the ~300-line driver patch: a mutex-protected
+//! `task_running` / `task_pending` pair updated by `seg_begin()` /
+//! `seg_end()` (the `gcapsGpuSegBegin/End` IOCTLs of Listing 1), with a
+//! condvar standing in for the runlist-swap hardware submission. Tasks
+//! may only launch kernels while *admitted* (their entry is on the
+//! runlist); a preempted task stops launching at its next kernel
+//! boundary — the userspace analog of thread-block-granularity
+//! preemption, folded into θ by Def. 1 exactly as the paper does.
+//!
+//! Every call measures its own duration (lock wait + state update +
+//! wakeups): these are the ε samples behind Fig. 12.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Static per-task registration.
+#[derive(Debug, Clone)]
+pub struct TaskReg {
+    pub name: String,
+    /// GPU segment priority (π^g); higher = more urgent.
+    pub gpu_prio: u32,
+    /// Real-time task (rt_priority set)? Best-effort tasks only hold the
+    /// runlist when no RT task wants it.
+    pub rt: bool,
+}
+
+#[derive(Debug, Default)]
+struct DrvState {
+    running: Vec<usize>,
+    pending: Vec<usize>,
+}
+
+/// The arbiter (one per "GPU").
+pub struct Arbiter {
+    tasks: Vec<TaskReg>,
+    state: Mutex<DrvState>,
+    cv: Condvar,
+    eps: Mutex<Vec<Duration>>,
+}
+
+impl Arbiter {
+    pub fn new(tasks: Vec<TaskReg>) -> Arbiter {
+        Arbiter {
+            tasks,
+            state: Mutex::new(DrvState::default()),
+            cv: Condvar::new(),
+            eps: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn highest_running(&self, st: &DrvState) -> Option<usize> {
+        st.running.iter().copied().max_by_key(|&k| (self.tasks[k].rt, self.tasks[k].gpu_prio))
+    }
+
+    /// Alg. 1, add path (`gcapsGpuSegBegin`). Returns once the runlist
+    /// update is performed (the task may still be pending — launches must
+    /// go through [`Arbiter::wait_admitted`]).
+    pub fn seg_begin(&self, id: usize) {
+        let t0 = Instant::now();
+        {
+            let mut st = self.state.lock().unwrap();
+            debug_assert!(!st.running.contains(&id) && !st.pending.contains(&id));
+            if !self.tasks[id].rt {
+                let rt_running = st.running.iter().any(|&k| self.tasks[k].rt);
+                if rt_running {
+                    st.pending.push(id);
+                } else {
+                    st.running.push(id);
+                }
+            } else {
+                let tau_h = self.highest_running(&st);
+                let preempt = match tau_h {
+                    None => true,
+                    Some(h) => {
+                        !self.tasks[h].rt
+                            || self.tasks[id].gpu_prio > self.tasks[h].gpu_prio
+                    }
+                };
+                if preempt {
+                    // §5.2: the new runlist holds only τ_i's TSGs.
+                    let displaced: Vec<usize> = st.running.drain(..).collect();
+                    st.pending.extend(displaced);
+                    st.running.push(id);
+                } else {
+                    st.pending.push(id);
+                }
+            }
+            self.cv.notify_all();
+        }
+        self.eps.lock().unwrap().push(t0.elapsed());
+    }
+
+    /// Alg. 1, remove path (`gcapsGpuSegEnd`).
+    pub fn seg_end(&self, id: usize) {
+        let t0 = Instant::now();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.running.retain(|&k| k != id);
+            st.pending.retain(|&k| k != id);
+            let tau_k = st
+                .pending
+                .iter()
+                .copied()
+                .filter(|&k| self.tasks[k].rt)
+                .max_by_key(|&k| self.tasks[k].gpu_prio);
+            if let Some(k) = tau_k {
+                st.pending.retain(|&x| x != k);
+                st.running.push(k);
+            } else {
+                // Only best-effort waiters: resume them all, time-shared.
+                let all: Vec<usize> = st.pending.drain(..).collect();
+                st.running.extend(all);
+            }
+            self.cv.notify_all();
+        }
+        self.eps.lock().unwrap().push(t0.elapsed());
+    }
+
+    /// Is `id`'s TSG currently on the runlist?
+    pub fn admitted(&self, id: usize) -> bool {
+        self.state.lock().unwrap().running.contains(&id)
+    }
+
+    /// Block (condvar; self-suspension mode) or spin (busy-wait mode)
+    /// until `id` is admitted.
+    pub fn wait_admitted(&self, id: usize, busy: bool) {
+        if busy {
+            while !self.admitted(id) {
+                std::hint::spin_loop();
+            }
+        } else {
+            let mut st = self.state.lock().unwrap();
+            while !st.running.contains(&id) {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Drain the measured runlist-update delays (Fig. 12 ε samples).
+    pub fn take_eps_samples(&self) -> Vec<Duration> {
+        std::mem::take(&mut *self.eps.lock().unwrap())
+    }
+
+    /// Invariant check (tests): running ∩ pending = ∅, ≤ 1 RT running.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let st = self.state.lock().unwrap();
+        for r in &st.running {
+            if st.pending.contains(r) {
+                return Err(format!("task {r} in both running and pending"));
+            }
+        }
+        let rt_running = st.running.iter().filter(|&&k| self.tasks[k].rt).count();
+        if rt_running > 1 {
+            return Err(format!("{rt_running} RT tasks on the runlist"));
+        }
+        // RT running excludes BE running (displacement on preemption).
+        if rt_running == 1 && st.running.len() > 1 {
+            return Err("BE task sharing the runlist with an RT task".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn regs(n: usize) -> Vec<TaskReg> {
+        (0..n)
+            .map(|i| TaskReg { name: format!("t{i}"), gpu_prio: i as u32 + 1, rt: true })
+            .collect()
+    }
+
+    #[test]
+    fn lone_task_admitted_immediately() {
+        let a = Arbiter::new(regs(1));
+        a.seg_begin(0);
+        assert!(a.admitted(0));
+        a.seg_end(0);
+        assert!(!a.admitted(0));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn higher_priority_preempts() {
+        let a = Arbiter::new(regs(2));
+        a.seg_begin(0); // prio 1
+        assert!(a.admitted(0));
+        a.seg_begin(1); // prio 2 preempts
+        assert!(a.admitted(1));
+        assert!(!a.admitted(0));
+        a.check_invariants().unwrap();
+        a.seg_end(1); // 0 must be re-admitted
+        assert!(a.admitted(0));
+        a.seg_end(0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lower_priority_queues() {
+        let a = Arbiter::new(regs(2));
+        a.seg_begin(1);
+        a.seg_begin(0);
+        assert!(a.admitted(1) && !a.admitted(0));
+        a.seg_end(1);
+        assert!(a.admitted(0));
+        a.seg_end(0);
+    }
+
+    #[test]
+    fn best_effort_yields_to_rt() {
+        let mut r = regs(3);
+        r[0].rt = false;
+        r[1].rt = false;
+        let a = Arbiter::new(r);
+        a.seg_begin(0); // BE
+        a.seg_begin(1); // BE: shares the runlist with 0
+        assert!(a.admitted(0) && a.admitted(1));
+        a.seg_begin(2); // RT: displaces both
+        assert!(a.admitted(2) && !a.admitted(0) && !a.admitted(1));
+        a.check_invariants().unwrap();
+        a.seg_end(2); // both BE tasks resume time-shared
+        assert!(a.admitted(0) && a.admitted(1));
+        a.seg_end(0);
+        a.seg_end(1);
+    }
+
+    #[test]
+    fn be_waits_while_rt_running() {
+        let mut r = regs(2);
+        r[0].rt = false;
+        let a = Arbiter::new(r);
+        a.seg_begin(1); // RT
+        a.seg_begin(0); // BE must pend
+        assert!(!a.admitted(0));
+        a.seg_end(1);
+        assert!(a.admitted(0));
+        a.seg_end(0);
+    }
+
+    #[test]
+    fn eps_samples_collected() {
+        let a = Arbiter::new(regs(1));
+        a.seg_begin(0);
+        a.seg_end(0);
+        assert_eq!(a.take_eps_samples().len(), 2);
+        assert!(a.take_eps_samples().is_empty());
+    }
+
+    #[test]
+    fn concurrent_begin_end_storm_keeps_invariants() {
+        let a = Arc::new(Arbiter::new(regs(8)));
+        let mut handles = vec![];
+        for id in 0..8 {
+            let a = Arc::clone(&a);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    a.seg_begin(id);
+                    a.wait_admitted(id, false);
+                    a.seg_end(id);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        a.check_invariants().unwrap();
+        // Everyone finished: both lists empty.
+        assert!(!a.admitted(0));
+    }
+
+    #[test]
+    fn wait_admitted_busy_spin() {
+        let a = Arc::new(Arbiter::new(regs(2)));
+        a.seg_begin(1);
+        let a2 = Arc::clone(&a);
+        let h = std::thread::spawn(move || {
+            a2.seg_begin(0);
+            a2.wait_admitted(0, true); // spins until 1 ends
+            a2.seg_end(0);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        a.seg_end(1);
+        h.join().unwrap();
+        a.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,244 @@
+//! The periodic executive: releases jobs, runs CPU segments (calibrated
+//! spin work), and drives GPU segments through the arbiter + GPU server
+//! — the live analog of the paper's case study (§7.2).
+//!
+//! Scheduling modes mirror the evaluation's four approaches:
+//! - `Gcaps`: segments bracketed by `seg_begin`/`seg_end` (Alg. 1);
+//!   launches wait for admission, so preemption lands at kernel
+//!   boundaries.
+//! - `TsgRr`: no arbitration; the GPU server round-robins across
+//!   requesters (default-driver behaviour).
+//! - `FmlpPlus`: a FIFO ticket lock held for the whole segment.
+//! - `Mpcp`: a priority-ordered lock held for the whole segment.
+//!
+//! The container exposes a single hardware core, so CPU-side
+//! partitioning fidelity comes from the DES (`sim/`); the live
+//! executive's purpose is to prove the full stack composes — real AOT
+//! kernels, real arbitration, real preemption — and to measure ε
+//! (Fig. 12) and response-time distributions on real compute.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::arbiter::{Arbiter, TaskReg};
+use crate::coordinator::gpu_server::{serve, GpuClient, ServiceMode};
+use crate::runtime::Runtime;
+
+/// One GPU segment of a live task: `launches` kernel launches of the
+/// named artifact workload.
+#[derive(Debug, Clone)]
+pub struct LiveGpuSegment {
+    pub workload: String,
+    pub launches: usize,
+}
+
+/// A live periodic task (case-study Table 4 analog).
+#[derive(Debug, Clone)]
+pub struct LiveTask {
+    pub name: String,
+    pub period: Duration,
+    /// Spin durations of the η_g + 1 CPU segments.
+    pub cpu_segments: Vec<Duration>,
+    pub gpu_segments: Vec<LiveGpuSegment>,
+    pub gpu_prio: u32,
+    pub rt: bool,
+    /// Busy-wait (spin on admission/completion) vs self-suspend.
+    pub busy: bool,
+}
+
+/// Live scheduling approach.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LiveMode {
+    Gcaps,
+    TsgRr,
+    FmlpPlus,
+    Mpcp,
+}
+
+impl LiveMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LiveMode::Gcaps => "gcaps",
+            LiveMode::TsgRr => "tsg_rr",
+            LiveMode::FmlpPlus => "fmlp+",
+            LiveMode::Mpcp => "mpcp",
+        }
+    }
+}
+
+/// Per-task outcome.
+#[derive(Debug, Clone, Default)]
+pub struct LiveMetrics {
+    pub responses: Vec<Duration>,
+    pub misses: u64,
+}
+
+impl LiveMetrics {
+    pub fn mort(&self) -> Option<Duration> {
+        self.responses.iter().copied().max()
+    }
+    pub fn response_ms(&self) -> Vec<f64> {
+        self.responses.iter().map(|d| d.as_secs_f64() * 1e3).collect()
+    }
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone, Default)]
+pub struct LiveResult {
+    pub per_task: Vec<LiveMetrics>,
+    /// Measured runlist-update delays (GCAPS mode only) — Fig. 12.
+    pub eps_samples: Vec<Duration>,
+    pub launches: u64,
+}
+
+/// A simple FIFO/priority lock for the sync-based baselines.
+struct SegmentLock {
+    state: Mutex<LockState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct LockState {
+    held: bool,
+    queue: Vec<(usize, u32, u64)>, // (task, prio, ticket)
+    next_ticket: u64,
+}
+
+impl SegmentLock {
+    fn new() -> SegmentLock {
+        SegmentLock { state: Mutex::new(LockState::default()), cv: Condvar::new() }
+    }
+
+    fn acquire(&self, task: usize, prio: u32, fifo: bool) {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push((task, prio, ticket));
+        loop {
+            if !st.held {
+                let head = if fifo {
+                    st.queue.iter().min_by_key(|&&(_, _, t)| t).copied()
+                } else {
+                    st.queue.iter().max_by_key(|&&(_, p, t)| (p, u64::MAX - t)).copied()
+                };
+                if let Some((h, _, ht)) = head {
+                    if h == task && ht == ticket {
+                        st.queue.retain(|&(_, _, t)| t != ticket);
+                        st.held = true;
+                        return;
+                    }
+                }
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.held = false;
+        self.cv.notify_all();
+    }
+}
+
+/// Calibrated spin: burn wall-clock time without syscalls.
+pub fn spin_for(d: Duration) {
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+/// Run the executive for `duration`. Tasks release synchronously at t=0.
+pub fn run(
+    tasks: &[LiveTask],
+    runtime: &Runtime,
+    mode: LiveMode,
+    duration: Duration,
+) -> LiveResult {
+    let regs: Vec<TaskReg> = tasks
+        .iter()
+        .map(|t| TaskReg { name: t.name.clone(), gpu_prio: t.gpu_prio, rt: t.rt })
+        .collect();
+    let arbiter = Arc::new(Arbiter::new(regs));
+    let lock = Arc::new(SegmentLock::new());
+    let (tx, rx) = channel();
+    let client = GpuClient { tx };
+    let service = match mode {
+        LiveMode::TsgRr => ServiceMode::RoundRobin,
+        _ => ServiceMode::Fifo,
+    };
+
+    let metrics: Vec<Mutex<LiveMetrics>> =
+        tasks.iter().map(|_| Mutex::new(LiveMetrics::default())).collect();
+
+    // The PJRT handles are !Send (Rc + raw pointers), so the GPU device
+    // runs on THIS thread — it owns the Runtime — while the periodic
+    // tasks run on spawned threads and submit launches over the channel.
+    let launches = std::thread::scope(|scope| {
+        let t0 = Instant::now() + Duration::from_millis(50); // sync release
+        for (id, task) in tasks.iter().enumerate() {
+            let arbiter = Arc::clone(&arbiter);
+            let lock = Arc::clone(&lock);
+            let client = client.clone();
+            let metrics = &metrics[id];
+            scope.spawn(move || {
+                let mut k = 0u64;
+                loop {
+                    let release = t0 + task.period.mul_f64(k as f64);
+                    let now = Instant::now();
+                    if now + Duration::from_micros(50) >= t0 + duration {
+                        break;
+                    }
+                    if release > now {
+                        std::thread::sleep(release - now);
+                    }
+                    // --- one job ---
+                    spin_for(task.cpu_segments[0]);
+                    for (s, seg) in task.gpu_segments.iter().enumerate() {
+                        match mode {
+                            LiveMode::Gcaps => {
+                                arbiter.seg_begin(id);
+                                for _ in 0..seg.launches {
+                                    arbiter.wait_admitted(id, task.busy);
+                                    client.launch(id, &seg.workload);
+                                }
+                                arbiter.seg_end(id);
+                            }
+                            LiveMode::TsgRr => {
+                                for _ in 0..seg.launches {
+                                    client.launch(id, &seg.workload);
+                                }
+                            }
+                            LiveMode::FmlpPlus | LiveMode::Mpcp => {
+                                lock.acquire(id, task.gpu_prio, mode == LiveMode::FmlpPlus);
+                                for _ in 0..seg.launches {
+                                    client.launch(id, &seg.workload);
+                                }
+                                lock.release();
+                            }
+                        }
+                        spin_for(task.cpu_segments[s + 1]);
+                    }
+                    let resp = Instant::now().duration_since(release.min(Instant::now()));
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        if resp > task.period {
+                            m.misses += 1;
+                        }
+                        m.responses.push(resp);
+                    }
+                    k += 1;
+                }
+            });
+        }
+        drop(client); // executive threads hold clones; close when they exit
+        serve(runtime, rx, service)
+    });
+
+    LiveResult {
+        per_task: metrics.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        eps_samples: arbiter.take_eps_samples(),
+        launches,
+    }
+}

@@ -1,0 +1,95 @@
+//! The GPU device thread: owns the PJRT [`Runtime`] and serialises
+//! kernel launches — the single GPU of the platform.
+//!
+//! Tasks submit launch requests over a channel; the server picks the
+//! next request according to the live scheduling mode:
+//!
+//! - `Gcaps` / lock-based modes: requests arrive pre-arbitrated (tasks
+//!   only submit while admitted / holding the lock), so FIFO service is
+//!   correct — there is at most one RT requester at a time.
+//! - `TsgRr`: all tasks submit freely; the server round-robins across
+//!   requesters at kernel granularity, the userspace analog of the
+//!   driver's time-sliced TSG scheduling.
+
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::time::Duration;
+
+use crate::runtime::Runtime;
+
+/// One kernel-launch request.
+pub struct LaunchReq {
+    pub task: usize,
+    pub workload: String,
+    /// Reply channel: launch wall time.
+    pub reply: SyncSender<Duration>,
+}
+
+/// Service discipline of the GPU thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceMode {
+    /// FIFO (arbitration happened upstream: GCAPS arbiter or a lock).
+    Fifo,
+    /// Round-robin across requesting tasks (default-driver analog).
+    RoundRobin,
+}
+
+/// Run the GPU server until the request channel closes.
+/// Returns the number of launches served.
+pub fn serve(runtime: &Runtime, rx: Receiver<LaunchReq>, mode: ServiceMode) -> u64 {
+    let mut served = 0u64;
+    let mut queue: Vec<LaunchReq> = Vec::new();
+    let mut last_task: Option<usize> = None;
+    loop {
+        // Block for at least one request (unless draining the queue).
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(r) => queue.push(r),
+                Err(_) => return served,
+            }
+        }
+        // Opportunistically drain whatever else is waiting.
+        while let Ok(r) = rx.try_recv() {
+            queue.push(r);
+        }
+        let idx = match mode {
+            ServiceMode::Fifo => 0,
+            ServiceMode::RoundRobin => {
+                // Next task id strictly after last_task, wrapping.
+                let pick = |min_excl: Option<usize>| {
+                    queue
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| min_excl.map_or(true, |m| r.task > m))
+                        .min_by_key(|(_, r)| r.task)
+                        .map(|(i, _)| i)
+                };
+                pick(last_task).or_else(|| pick(None)).unwrap_or(0)
+            }
+        };
+        let req = queue.remove(idx);
+        last_task = Some(req.task);
+        let dt = runtime
+            .exec(&req.workload)
+            .unwrap_or_else(|e| panic!("launch {} failed: {e}", req.workload));
+        served += 1;
+        // Receiver may have given up (executive shutting down).
+        let _ = req.reply.send(dt);
+    }
+}
+
+/// Convenience: a client-side handle for submitting launches.
+#[derive(Clone)]
+pub struct GpuClient {
+    pub tx: Sender<LaunchReq>,
+}
+
+impl GpuClient {
+    /// Submit one launch and wait for completion; returns the exec time.
+    pub fn launch(&self, task: usize, workload: &str) -> Option<Duration> {
+        let (reply, rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(LaunchReq { task, workload: workload.to_string(), reply })
+            .ok()?;
+        rx.recv().ok()
+    }
+}

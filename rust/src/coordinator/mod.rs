@@ -1,0 +1,18 @@
+//! L3 coordinator: the paper's system contribution, live.
+//!
+//! - [`arbiter`] — Alg. 1 (the GCAPS driver patch) in userspace, with
+//!   ε measurement (Fig. 12).
+//! - [`gpu_server`] — the single-GPU device thread executing AOT
+//!   kernels via PJRT, FIFO or round-robin service.
+//! - [`executor`] — the periodic executive driving the case-study
+//!   taskset (Table 4 analog) under gcaps / tsg_rr / fmlp+ / mpcp.
+//! - [`workload`] — the Table 4 taskset builder, calibrated against the
+//!   profiled artifact launch times.
+
+pub mod arbiter;
+pub mod executor;
+pub mod gpu_server;
+pub mod workload;
+
+pub use arbiter::{Arbiter, TaskReg};
+pub use executor::{run, LiveGpuSegment, LiveMetrics, LiveMode, LiveResult, LiveTask};

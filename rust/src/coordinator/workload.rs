@@ -1,0 +1,112 @@
+//! The live case-study taskset: the Table 4 analog, built from the AOT
+//! workloads and scaled to the host.
+//!
+//! The paper's Table 4 was profiled on a Jetson Xavier NX; our "GPU" is
+//! the PJRT CPU backend, so absolute per-launch times differ. We keep
+//! the paper's *structure* — the same workloads, the same priority
+//! order, utilization per task in the same 0.05–0.35 band — by
+//! profiling each artifact once and choosing launch counts and periods
+//! to hit the target G_i budget. `gcaps exp profile` prints the derived
+//! table (the Table 4 analog recorded in EXPERIMENTS.md).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::executor::{LiveGpuSegment, LiveTask};
+use crate::runtime::Runtime;
+
+/// Target structure of one case-study task (mirrors a Table 4 row).
+pub struct CaseRow {
+    pub name: &'static str,
+    pub workload: &'static str,
+    /// Target pure-GPU time per job (G_i), in multiples of the profiled
+    /// launch time — i.e. launch count per GPU segment.
+    pub launches: usize,
+    pub gpu_segments: usize,
+    pub cpu_ms: f64,
+    pub period_ms: f64,
+    pub rt: bool,
+    pub busy: bool,
+}
+
+/// The Table 4 task structure. Priorities descend with the row index
+/// (task 1 = histogram has the highest), tasks 6–7 are best-effort —
+/// exactly as in the paper. Periods are scaled up ~4× (the CPU PJRT
+/// launches are slower than Jetson kernels) keeping utilizations in the
+/// paper's 0.05–0.35 band.
+pub fn case_rows() -> Vec<CaseRow> {
+    vec![
+        CaseRow { name: "histogram", workload: "histogram", launches: 2, gpu_segments: 1, cpu_ms: 1.0, period_ms: 400.0, rt: true, busy: false },
+        CaseRow { name: "mmul_gpu_1", workload: "mmul_large", launches: 8, gpu_segments: 1, cpu_ms: 2.0, period_ms: 600.0, rt: true, busy: false },
+        CaseRow { name: "mmul_cpu", workload: "", launches: 0, gpu_segments: 0, cpu_ms: 40.0, period_ms: 800.0, rt: true, busy: false },
+        CaseRow { name: "projection", workload: "projection", launches: 6, gpu_segments: 2, cpu_ms: 6.0, period_ms: 1200.0, rt: true, busy: false },
+        CaseRow { name: "dxtc", workload: "dxtc", launches: 4, gpu_segments: 1, cpu_ms: 2.0, period_ms: 1600.0, rt: true, busy: false },
+        CaseRow { name: "mmul_gpu_2", workload: "mmul_large", launches: 30, gpu_segments: 1, cpu_ms: 4.0, period_ms: 800.0, rt: false, busy: false },
+        CaseRow { name: "texture3d", workload: "texture3d", launches: 8, gpu_segments: 1, cpu_ms: 4.0, period_ms: 250.0, rt: false, busy: false },
+    ]
+}
+
+/// Build the live taskset, profiling each workload to report its
+/// per-launch cost. Returns (tasks, per-task profiled launch ms).
+pub fn build_case_study(runtime: &Runtime, busy: bool) -> Result<(Vec<LiveTask>, Vec<f64>)> {
+    let rows = case_rows();
+    let n = rows.len();
+    let mut tasks = Vec::with_capacity(n);
+    let mut launch_ms = Vec::with_capacity(n);
+    for (i, row) in rows.into_iter().enumerate() {
+        let per_launch = if row.workload.is_empty() {
+            Duration::ZERO
+        } else {
+            runtime.profile(row.workload, 5)?
+        };
+        launch_ms.push(per_launch.as_secs_f64() * 1e3);
+        // Split the CPU budget evenly across the η_g + 1 segments.
+        let nseg = row.gpu_segments + 1;
+        let seg = Duration::from_secs_f64(row.cpu_ms / 1e3 / nseg as f64);
+        let gpu_segments = (0..row.gpu_segments)
+            .map(|_| LiveGpuSegment {
+                workload: row.workload.to_string(),
+                launches: row.launches,
+            })
+            .collect();
+        tasks.push(LiveTask {
+            name: row.name.to_string(),
+            period: Duration::from_secs_f64(row.period_ms / 1e3),
+            cpu_segments: vec![seg; nseg],
+            gpu_segments,
+            // Descending priority with row order; BE tasks get prio 0.
+            gpu_prio: if row.rt { (n - i) as u32 } else { 0 },
+            rt: row.rt,
+            busy: busy && row.rt,
+        });
+    }
+    Ok((tasks, launch_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_mirror_table4_structure() {
+        let rows = case_rows();
+        assert_eq!(rows.len(), 7);
+        // Task 3 is CPU-only; tasks 6 and 7 are best-effort.
+        assert_eq!(rows[2].gpu_segments, 0);
+        assert!(!rows[5].rt && !rows[6].rt);
+        assert!(rows[..5].iter().all(|r| r.rt));
+        // Workload names match Table 4's benchmarks.
+        assert_eq!(rows[0].workload, "histogram");
+        assert_eq!(rows[4].workload, "dxtc");
+    }
+
+    #[test]
+    fn utilizations_stay_in_paper_band_structurally() {
+        // CPU-side utilization alone must stay well under 1 in total so
+        // the single-core container can keep up.
+        let rows = case_rows();
+        let cpu_util: f64 = rows.iter().map(|r| r.cpu_ms / r.period_ms).sum();
+        assert!(cpu_util < 0.25, "cpu util {cpu_util}");
+    }
+}

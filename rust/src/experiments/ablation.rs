@@ -1,0 +1,150 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. **Lemma 12 as printed vs the sound amendment** — how much
+//!    schedulability the paper-exact (optimistic, unsound on the device
+//!    model) busy-waiting analysis would claim vs our amended bound.
+//! 2. **Fixed-priority GCAPS vs the EDF extension** (paper §8 future
+//!    work, "dynamic priority"): simulated deadline-miss ratios under
+//!    increasing load. EDF's optimality on a single resource shows up
+//!    as fewer misses near/over saturation.
+//! 3. **Runlist-update cost sensitivity** — gcaps schedulability as ε
+//!    grows (the design's key overhead knob, cf. Fig. 8e's discussion).
+
+use crate::analysis::gcaps::{analyze as gcaps_rta, Options};
+use crate::experiments::{results_dir, ExpConfig};
+use crate::model::{ms, Platform, WaitMode};
+use crate::sim::{simulate, Policy, SimConfig};
+use crate::taskgen::{generate, GenParams};
+use crate::util::csv::CsvTable;
+use crate::util::rng::Pcg32;
+
+/// (sound ratio, paper-exact ratio) of gcaps_busy schedulability.
+pub fn lemma12_ablation(cfg: &ExpConfig, util: f64) -> (f64, f64) {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let (mut sound_ok, mut exact_ok) = (0usize, 0usize);
+    for _ in 0..cfg.tasksets {
+        let p = GenParams {
+            util_per_cpu: (util - 0.05, util + 0.05),
+            mode: WaitMode::BusyWait,
+            ..Default::default()
+        };
+        let ts = generate(&mut rng, &p);
+        sound_ok += gcaps_rta(&ts, true, &Options::default()).schedulable as usize;
+        exact_ok += gcaps_rta(
+            &ts,
+            true,
+            &Options { paper_exact_lemma12: true, ..Default::default() },
+        )
+        .schedulable as usize;
+    }
+    (sound_ok as f64 / cfg.tasksets as f64, exact_ok as f64 / cfg.tasksets as f64)
+}
+
+/// Simulated RT deadline-miss ratio under a policy at one load level.
+pub fn miss_ratio(policy: Policy, util: f64, cfg: &ExpConfig) -> f64 {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let (mut misses, mut jobs) = (0u64, 0u64);
+    let n = cfg.tasksets.max(1).min(60);
+    for _ in 0..n {
+        let p = GenParams {
+            util_per_cpu: (util - 0.05, util + 0.05),
+            ..Default::default()
+        };
+        let ts = generate(&mut rng, &p);
+        let sim = simulate(&ts, &SimConfig::new(policy, ms(10_000.0)));
+        for t in ts.rt_tasks() {
+            misses += sim.per_task[t.id].deadline_misses;
+            jobs += sim.per_task[t.id].jobs;
+        }
+    }
+    misses as f64 / jobs.max(1) as f64
+}
+
+/// gcaps_suspend schedulability as ε varies (sensitivity).
+pub fn epsilon_sensitivity(cfg: &ExpConfig, eps_us: u64) -> f64 {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut ok = 0usize;
+    for _ in 0..cfg.tasksets {
+        let p = GenParams {
+            platform: Platform { epsilon: eps_us, ..Default::default() },
+            ..Default::default()
+        };
+        let ts = generate(&mut rng, &p);
+        ok += gcaps_rta(&ts, false, &Options::default()).schedulable as usize;
+    }
+    ok as f64 / cfg.tasksets as f64
+}
+
+pub fn run_and_report(cfg: &ExpConfig) -> String {
+    let mut out = String::from("== Ablations ==\n");
+    let mut csv = CsvTable::new(vec!["ablation", "x", "value"]);
+
+    out.push_str("\n(1) Lemma 12: sound amendment vs paper-exact (gcaps_busy schedulability)\n");
+    for util in [0.3, 0.4, 0.5] {
+        let (sound, exact) = lemma12_ablation(cfg, util);
+        out.push_str(&format!(
+            "    util {util:.1}: sound {sound:.2}  paper-exact {exact:.2}  (optimism {:+.2})\n",
+            exact - sound
+        ));
+        csv.row(vec!["lemma12_sound".into(), format!("{util}"), format!("{sound:.4}")]);
+        csv.row(vec!["lemma12_exact".into(), format!("{util}"), format!("{exact:.4}")]);
+    }
+
+    out.push_str("\n(2) Fixed-priority GCAPS vs EDF extension (simulated RT miss ratio)\n");
+    for util in [0.5, 0.6, 0.7] {
+        let fp = miss_ratio(Policy::Gcaps, util, cfg);
+        let edf = miss_ratio(Policy::GcapsEdf, util, cfg);
+        out.push_str(&format!(
+            "    util {util:.1}: gcaps_fp {fp:.4}  gcaps_edf {edf:.4}\n"
+        ));
+        csv.row(vec!["miss_fp".into(), format!("{util}"), format!("{fp:.5}")]);
+        csv.row(vec!["miss_edf".into(), format!("{util}"), format!("{edf:.5}")]);
+    }
+
+    out.push_str("\n(3) ε sensitivity (gcaps_suspend schedulability)\n");
+    for eps in [0u64, 250, 500, 1000, 2000, 4000] {
+        let v = epsilon_sensitivity(cfg, eps);
+        out.push_str(&format!("    ε = {eps:>4} µs: {v:.2}\n"));
+        csv.row(vec!["epsilon".into(), format!("{eps}"), format!("{v:.4}")]);
+    }
+
+    let path = results_dir().join("ablations.csv");
+    csv.write(&path).expect("write csv");
+    out.push_str(&format!("wrote {}\n", path.display()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig { tasksets: 15, seed: 9 }
+    }
+
+    #[test]
+    fn paper_exact_is_never_less_schedulable() {
+        // Dropping an interference term can only accept more tasksets.
+        let (sound, exact) = lemma12_ablation(&tiny(), 0.4);
+        assert!(exact >= sound);
+    }
+
+    #[test]
+    fn epsilon_sensitivity_monotone() {
+        let cfg = tiny();
+        let a = epsilon_sensitivity(&cfg, 0);
+        let b = epsilon_sensitivity(&cfg, 2000);
+        assert!(a >= b, "schedulability must not grow with ε: {a} vs {b}");
+    }
+
+    #[test]
+    fn edf_not_worse_at_high_load() {
+        // EDF is optimal on a single resource: across a small sample its
+        // aggregate miss ratio at high load must not exceed FP's by more
+        // than noise.
+        let cfg = ExpConfig { tasksets: 10, seed: 4 };
+        let fp = miss_ratio(Policy::Gcaps, 0.7, &cfg);
+        let edf = miss_ratio(Policy::GcapsEdf, 0.7, &cfg);
+        assert!(edf <= fp + 0.02, "edf {edf} much worse than fp {fp}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Fig. 8: schedulability of the eight approaches under six parameter
+//! sweeps (paper §7.1.1). Each point = fraction of random tasksets
+//! (Table 3 parameters, one knob swept) that pass the respective
+//! response-time test. The GCAPS curves use the §7.1.1 procedure:
+//! default RM priorities first, then the Audsley GPU-priority
+//! assignment on failure.
+
+use crate::analysis::{analyze, analyze_with_gpu_prio, Approach};
+use crate::experiments::{results_dir, ExpConfig};
+use crate::model::WaitMode;
+use crate::taskgen::{generate, GenParams};
+use crate::util::ascii::line_chart;
+use crate::util::csv::CsvTable;
+use crate::util::rng::Pcg32;
+
+/// One Fig. 8 panel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Panel {
+    /// (a) number of tasks per CPU ∈ {2..7}.
+    TasksPerCpu,
+    /// (b) utilization per CPU ∈ {0.3..0.8}.
+    UtilPerCpu,
+    /// (c) number of CPUs ∈ {2, 4, 6, 8}.
+    NumCpus,
+    /// (d) ratio of GPU-using tasks ∈ {20%..80%}.
+    GpuRatio,
+    /// (e) ratio of GPU exec to CPU exec (G/C) ∈ {0.1..2.5}.
+    GcRatio,
+    /// (f) ratio of best-effort tasks ∈ {0..60%}.
+    BestEffortRatio,
+}
+
+impl Panel {
+    pub const ALL: [Panel; 6] = [
+        Panel::TasksPerCpu,
+        Panel::UtilPerCpu,
+        Panel::NumCpus,
+        Panel::GpuRatio,
+        Panel::GcRatio,
+        Panel::BestEffortRatio,
+    ];
+
+    pub fn from_letter(s: &str) -> Option<Panel> {
+        match s {
+            "a" => Some(Panel::TasksPerCpu),
+            "b" => Some(Panel::UtilPerCpu),
+            "c" => Some(Panel::NumCpus),
+            "d" => Some(Panel::GpuRatio),
+            "e" => Some(Panel::GcRatio),
+            "f" => Some(Panel::BestEffortRatio),
+            _ => None,
+        }
+    }
+
+    pub fn letter(&self) -> &'static str {
+        match self {
+            Panel::TasksPerCpu => "a",
+            Panel::UtilPerCpu => "b",
+            Panel::NumCpus => "c",
+            Panel::GpuRatio => "d",
+            Panel::GcRatio => "e",
+            Panel::BestEffortRatio => "f",
+        }
+    }
+
+    pub fn xlabel(&self) -> &'static str {
+        match self {
+            Panel::TasksPerCpu => "tasks per CPU",
+            Panel::UtilPerCpu => "utilization per CPU",
+            Panel::NumCpus => "number of CPUs",
+            Panel::GpuRatio => "ratio of GPU-using tasks",
+            Panel::GcRatio => "G/C ratio",
+            Panel::BestEffortRatio => "ratio of best-effort tasks",
+        }
+    }
+
+    /// Sweep points: (tick label, GenParams patch).
+    pub fn points(&self) -> Vec<(String, Box<dyn Fn(&mut GenParams)>)> {
+        match self {
+            Panel::TasksPerCpu => (2..=7usize)
+                .map(|n| {
+                    (
+                        n.to_string(),
+                        Box::new(move |p: &mut GenParams| p.tasks_per_cpu = (n, n)) as _,
+                    )
+                })
+                .collect(),
+            Panel::UtilPerCpu => [0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+                .iter()
+                .map(|&u| {
+                    (
+                        format!("{u:.1}"),
+                        Box::new(move |p: &mut GenParams| {
+                            p.util_per_cpu = (u - 0.05, u + 0.05)
+                        }) as _,
+                    )
+                })
+                .collect(),
+            Panel::NumCpus => [2usize, 4, 6, 8]
+                .iter()
+                .map(|&n| {
+                    (
+                        n.to_string(),
+                        Box::new(move |p: &mut GenParams| {
+                            p.num_cpus = n;
+                            p.platform.num_cpus = n;
+                        }) as _,
+                    )
+                })
+                .collect(),
+            Panel::GpuRatio => [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+                .iter()
+                .map(|&r| {
+                    (
+                        format!("{:.0}%", r * 100.0),
+                        Box::new(move |p: &mut GenParams| p.gpu_task_ratio = (r, r)) as _,
+                    )
+                })
+                .collect(),
+            Panel::GcRatio => [0.1, 0.25, 0.5, 1.0, 1.5, 2.0, 2.5]
+                .iter()
+                .map(|&g| {
+                    (
+                        format!("{g:.2}"),
+                        Box::new(move |p: &mut GenParams| p.g_to_c_ratio = (g, g)) as _,
+                    )
+                })
+                .collect(),
+            Panel::BestEffortRatio => [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6]
+                .iter()
+                .map(|&r| {
+                    (
+                        format!("{:.0}%", r * 100.0),
+                        Box::new(move |p: &mut GenParams| p.best_effort_ratio = r) as _,
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Schedulability ratio for one approach at one parameter point.
+pub fn schedulability(
+    approach: Approach,
+    patch: &dyn Fn(&mut GenParams),
+    cfg: &ExpConfig,
+) -> f64 {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut ok = 0usize;
+    for _ in 0..cfg.tasksets {
+        let mut p = GenParams {
+            mode: if approach.is_busy() { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+            ..Default::default()
+        };
+        patch(&mut p);
+        let ts = generate(&mut rng, &p);
+        let schedulable = match approach {
+            Approach::GcapsBusy => analyze_with_gpu_prio(&ts, true).0.schedulable,
+            Approach::GcapsSuspend => analyze_with_gpu_prio(&ts, false).0.schedulable,
+            a => analyze(&ts, a).schedulable,
+        };
+        ok += schedulable as usize;
+    }
+    ok as f64 / cfg.tasksets as f64
+}
+
+/// Run one panel; returns (xticks, per-approach series).
+pub fn run_panel(panel: Panel, cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
+    let points = panel.points();
+    let xticks: Vec<String> = points.iter().map(|(l, _)| l.clone()).collect();
+    let mut series = Vec::new();
+    for approach in Approach::ALL {
+        let ys: Vec<f64> = points
+            .iter()
+            .map(|(_, patch)| schedulability(approach, patch.as_ref(), cfg))
+            .collect();
+        series.push((approach.label().to_string(), ys));
+    }
+    (xticks, series)
+}
+
+/// Run + persist one panel.
+pub fn run_and_report(panel: Panel, cfg: &ExpConfig) -> String {
+    let (xticks, series) = run_panel(panel, cfg);
+    let mut csv = CsvTable::new(vec!["approach".to_string(), panel.xlabel().to_string(), "schedulable_ratio".to_string()]);
+    for (label, ys) in &series {
+        for (x, y) in xticks.iter().zip(ys) {
+            csv.row(vec![label.clone(), x.clone(), format!("{y:.4}")]);
+        }
+    }
+    let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
+    csv.write(&path).expect("write csv");
+    let chart = line_chart(
+        &format!("Fig. 8{}: schedulability vs {}", panel.letter(), panel.xlabel()),
+        panel.xlabel(),
+        &xticks,
+        &series,
+        1.0,
+        16,
+    );
+    format!("{chart}\nwrote {}\n", path.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig { tasksets: 15, seed: 7 }
+    }
+
+    #[test]
+    fn panel_letters_roundtrip() {
+        for p in Panel::ALL {
+            assert_eq!(Panel::from_letter(p.letter()), Some(p));
+        }
+        assert_eq!(Panel::from_letter("z"), None);
+    }
+
+    #[test]
+    fn schedulability_in_unit_interval() {
+        for a in [Approach::GcapsSuspend, Approach::FmlpSuspend] {
+            let r = schedulability(a, &|_| {}, &tiny());
+            assert!((0.0..=1.0).contains(&r));
+        }
+    }
+
+    #[test]
+    fn gcaps_dominates_mpcp_at_default_point() {
+        // The paper's headline: GCAPS ≥ sync-based at Table 3 defaults.
+        let cfg = ExpConfig { tasksets: 40, seed: 11 };
+        let g = schedulability(Approach::GcapsSuspend, &|_| {}, &cfg);
+        let m = schedulability(Approach::MpcpSuspend, &|_| {}, &cfg);
+        assert!(g >= m, "gcaps {g} < mpcp {m}");
+    }
+
+    #[test]
+    fn utilization_sweep_is_monotone_decreasing_for_gcaps() {
+        let cfg = ExpConfig { tasksets: 30, seed: 3 };
+        let lo = schedulability(
+            Approach::GcapsSuspend,
+            &|p| p.util_per_cpu = (0.25, 0.35),
+            &cfg,
+        );
+        let hi = schedulability(
+            Approach::GcapsSuspend,
+            &|p| p.util_per_cpu = (0.65, 0.75),
+            &cfg,
+        );
+        assert!(lo >= hi, "lo {lo} < hi {hi}");
+    }
+
+    #[test]
+    fn fig8f_best_effort_hurts_sync_more_than_gcaps() {
+        // The Fig. 8f claim: with 40% best-effort tasks, GCAPS retains a
+        // large margin over the lock-based baselines.
+        let cfg = ExpConfig { tasksets: 40, seed: 5 };
+        let patch = |p: &mut GenParams| {
+            p.best_effort_ratio = 0.4;
+            p.util_per_cpu = (0.3, 0.4);
+        };
+        let g = schedulability(Approach::GcapsSuspend, &patch, &cfg);
+        let f = schedulability(Approach::FmlpSuspend, &patch, &cfg);
+        assert!(g >= f, "gcaps {g} < fmlp {f} under best-effort load");
+    }
+}

@@ -1,0 +1,35 @@
+//! Experiment harnesses: one module per paper figure/table (see
+//! DESIGN.md §4 for the index). Every harness writes a CSV under
+//! `results/` and prints an ASCII rendition; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+pub mod ablation;
+pub mod casestudy;
+pub mod examples_figs;
+pub mod fig8;
+pub mod fig9;
+pub mod overhead;
+
+use std::path::PathBuf;
+
+/// Results directory: `$GCAPS_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("GCAPS_RESULTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "results".into())
+}
+
+/// Shared experiment scale knobs (CLI-settable).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpConfig {
+    /// Tasksets per data point (paper: 1000).
+    pub tasksets: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> ExpConfig {
+        ExpConfig { tasksets: 200, seed: 2024 }
+    }
+}

@@ -1,0 +1,27 @@
+//! # GCAPS: GPU Context-Aware Preemptive Priority-based Scheduling
+//!
+//! A full reproduction of Wang et al., "GCAPS: GPU Context-Aware
+//! Preemptive Priority-based Scheduling for Real-Time Tasks" (ECRTS
+//! 2024), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's system: the GCAPS runlist
+//!   scheduler (Alg. 1), the complete response-time analysis (§6), a
+//!   discrete-event model of the Tegra GPU driver's time-sliced TSG
+//!   scheduling (§2), lock-based baselines (MPCP, FMLP+), the taskset
+//!   generator (Table 3), a live executive that schedules real GPU
+//!   segments, and the experiment harnesses for every figure/table.
+//! - **L2/L1 (build-time Python)** — the case-study GPU workloads as
+//!   JAX functions calling Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/`, executed from Rust via the PJRT CPU client.
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod experiments;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod taskgen;
+pub mod util;

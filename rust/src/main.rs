@@ -1,0 +1,295 @@
+//! `gcaps` — CLI for the GCAPS reproduction.
+//!
+//! ```text
+//! gcaps exp <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table5|fig12|fig13|all>
+//!           [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]
+//! gcaps analyze [--seed N]            one random taskset through all 8 analyses
+//! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
+//! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
+//! ```
+//!
+//! Experiment outputs land in `results/` (CSV) and on stdout (ASCII).
+
+use std::time::Duration;
+
+use gcaps::analysis::{analyze, analyze_with_gpu_prio, Approach};
+use gcaps::coordinator::executor::{run as live_run, LiveMode};
+use gcaps::coordinator::workload::build_case_study;
+use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
+use gcaps::experiments::examples_figs::{run_fig3, run_fig5, run_fig6, run_fig7};
+use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
+use gcaps::experiments::fig9::run_and_report as fig9;
+use gcaps::experiments::ablation::run_and_report as run_ablation;
+use gcaps::experiments::overhead::{fig12_histogram, run_fig12_sim, run_fig13};
+use gcaps::experiments::ExpConfig;
+use gcaps::model::{config, ms, to_ms, TaskSet, WaitMode};
+use gcaps::runtime::{artifacts_dir, Runtime};
+use gcaps::sim::{simulate, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::rng::Pcg32;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map_or(false, |v| !v.starts_with("--")) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn u64_flag(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn exp_config(args: &Args) -> ExpConfig {
+    ExpConfig {
+        tasksets: args.usize_flag("tasksets", 200),
+        seed: args.u64_flag("seed", 2024),
+    }
+}
+
+/// Load a taskset from --taskset FILE, or generate one from --seed.
+fn load_or_generate(args: &Args, busy: bool, rng: &mut Pcg32) -> TaskSet {
+    match args.flag("taskset") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("read {path}: {e}"));
+            config::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e}"))
+        }
+        None => {
+            let p = GenParams {
+                mode: if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+                ..Default::default()
+            };
+            generate(rng, &p)
+        }
+    }
+}
+
+fn cmd_export(args: &Args) {
+    let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
+    let ts = generate(&mut rng, &GenParams::default());
+    print!("{}", config::to_text(&ts));
+}
+
+fn cmd_analyze(args: &Args) {
+    let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
+    for mode_busy in [false, true] {
+        let ts = load_or_generate(args, mode_busy, &mut rng);
+        println!(
+            "-- {} taskset: {} tasks, {} GPU-using --",
+            if mode_busy { "busy-wait" } else { "self-suspend" },
+            ts.len(),
+            ts.num_gpu_tasks()
+        );
+        for a in Approach::ALL.iter().filter(|a| a.is_busy() == mode_busy) {
+            let res = match a {
+                Approach::GcapsBusy => analyze_with_gpu_prio(&ts, true).0,
+                Approach::GcapsSuspend => analyze_with_gpu_prio(&ts, false).0,
+                a => analyze(&ts, *a),
+            };
+            let worst = ts
+                .rt_tasks()
+                .map(|t| {
+                    res.response[t.id]
+                        .map(|r| format!("{:.1}", to_ms(r)))
+                        .unwrap_or_else(|| "FAIL".into())
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("  {:16} schedulable = {:5}  R(ms): {worst}", a.label(), res.schedulable);
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let policy = args
+        .flag("policy")
+        .and_then(Policy::from_label)
+        .unwrap_or(Policy::Gcaps);
+    let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
+    let ts = load_or_generate(args, false, &mut rng);
+    let horizon = ms(args.u64_flag("ms", 30_000) as f64);
+    let mut cfg = SimConfig::new(policy, horizon);
+    if args.flag("trace-out").is_some() {
+        cfg = cfg.with_trace();
+    }
+    let res = simulate(&ts, &cfg);
+    if let (Some(path), Some(trace)) = (args.flag("trace-out"), &res.trace) {
+        let names: Vec<String> = ts.tasks.iter().map(|t| t.name.clone()).collect();
+        let json = gcaps::sim::perfetto::to_chrome_json(trace, &names);
+        std::fs::write(path, json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote Perfetto/Chrome trace to {path} (open at ui.perfetto.dev)");
+    }
+    println!("policy = {}, horizon = {} ms", policy.label(), to_ms(horizon));
+    for t in &ts.tasks {
+        let m = &res.per_task[t.id];
+        println!(
+            "  tau{:<2} core {} prio {:>2}{} jobs {:>4} MORT {:>9} misses {}",
+            t.id,
+            t.core,
+            t.cpu_prio,
+            if t.best_effort { " BE" } else { "   " },
+            m.jobs,
+            m.mort().map(|v| format!("{:.2} ms", to_ms(v))).unwrap_or_else(|| "-".into()),
+            m.deadline_misses
+        );
+    }
+    println!(
+        "  GPU: busy {:.1} ms, {} context switches ({:.1} ms in θ)",
+        to_ms(res.run.gpu_busy),
+        res.run.gpu_context_switches,
+        to_ms(res.run.gpu_switch_time)
+    );
+}
+
+fn live_mode(args: &Args) -> LiveMode {
+    match args.flag("mode").unwrap_or("gcaps") {
+        "tsg_rr" => LiveMode::TsgRr,
+        "fmlp" | "fmlp+" => LiveMode::FmlpPlus,
+        "mpcp" => LiveMode::Mpcp,
+        _ => LiveMode::Gcaps,
+    }
+}
+
+fn cmd_live(args: &Args) {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("case");
+    let rt = Runtime::load_dir(&artifacts_dir()).expect("load artifacts (run `make artifacts`)");
+    let busy = args.flag("busy").is_some();
+    let (tasks, launch_ms) = build_case_study(&rt, busy).expect("build case study");
+    match sub {
+        "profile" => {
+            println!("-- live Table 4 analog (per-launch ms, profiled) --");
+            for (t, lm) in tasks.iter().zip(&launch_ms) {
+                let g: f64 =
+                    t.gpu_segments.iter().map(|s| s.launches as f64 * lm).sum();
+                println!(
+                    "  {:12} T = {:>6.0} ms  C = {:>5.1} ms  G = {:>6.1} ms  prio {}{}",
+                    t.name,
+                    t.period.as_secs_f64() * 1e3,
+                    t.cpu_segments.iter().map(|d| d.as_secs_f64() * 1e3).sum::<f64>(),
+                    g,
+                    t.gpu_prio,
+                    if t.rt { "" } else { " (best-effort)" }
+                );
+            }
+        }
+        "fig12" => {
+            let secs = args.u64_flag("seconds", 20);
+            let res = live_run(&tasks, &rt, LiveMode::Gcaps, Duration::from_secs(secs));
+            let us: Vec<f64> =
+                res.eps_samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+            println!("{}", fig12_histogram(&us, "live"));
+        }
+        _ => {
+            let secs = args.u64_flag("seconds", 10);
+            let mode = live_mode(args);
+            println!("-- live case study: mode {}, {} s --", mode.label(), secs);
+            let res = live_run(&tasks, &rt, mode, Duration::from_secs(secs));
+            for (t, m) in tasks.iter().zip(&res.per_task) {
+                println!(
+                    "  {:12} jobs {:>3}  MORT {:>8.1} ms  misses {}",
+                    t.name,
+                    m.responses.len(),
+                    m.mort().map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0),
+                    m.misses
+                );
+            }
+            println!("  {} kernel launches, {} ε samples", res.launches, res.eps_samples.len());
+        }
+    }
+}
+
+fn cmd_exp(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let cfg = exp_config(args);
+    let board = match args.flag("board") {
+        Some("orin") => Board::OrinNano,
+        _ => Board::XavierNx,
+    };
+    let run_one = |name: &str| match name {
+        "fig3" => print!("{}", run_fig3()),
+        "fig5" => print!("{}", run_fig5()),
+        "fig6" => print!("{}", run_fig6()),
+        "fig7" => print!("{}", run_fig7()),
+        "fig8" => {
+            let panels: Vec<Panel> = match args.flag("panel") {
+                Some(l) => vec![Panel::from_letter(l).expect("panel a..f")],
+                None => Panel::ALL.to_vec(),
+            };
+            for p in panels {
+                print!("{}", fig8(p, &cfg));
+            }
+        }
+        "fig9" => print!("{}", fig9(&cfg)),
+        "fig10" => print!("{}", run_fig10(board, &cfg)),
+        "fig11" => print!("{}", run_fig11(&cfg)),
+        "table5" => print!("{}", run_table5(&cfg)),
+        "fig12" => print!("{}", run_fig12_sim()),
+        "fig13" => print!("{}", run_fig13()),
+        "ablation" => print!("{}", run_ablation(&cfg)),
+        other => eprintln!("unknown experiment {other}"),
+    };
+    if which == "all" {
+        for name in [
+            "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table5",
+            "fig12", "fig13", "ablation",
+        ] {
+            println!("\n================ {name} ================");
+            run_one(name);
+        }
+        // Fig. 10b (Orin) as part of `all`.
+        println!("\n================ fig10 (orin) ================");
+        print!("{}", run_fig10(Board::OrinNano, &cfg));
+    } else {
+        run_one(which);
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("analyze") => cmd_analyze(&args),
+        Some("export") => cmd_export(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("live") => cmd_live(&args),
+        _ => {
+            eprintln!(
+                "usage: gcaps <analyze|sim|exp|live> [...]\n\
+                 \n\
+                 gcaps analyze [--seed N | --taskset FILE]\n\
+                 gcaps export [--seed N]                 # dump a generated taskset file\n\
+                 gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
+                 \x20         [--ms N] [--trace-out trace.json]\n\
+                 gcaps exp <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table5|fig12|fig13|all>\n\
+                 \x20         [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]\n\
+                 gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Plain-text taskset format: lets users analyse/simulate their own
+//! systems without writing Rust (the offline crate set has no serde, so
+//! this is a small hand-rolled `key=value` section format).
+//!
+//! ```text
+//! # comments with '#'
+//! [platform]
+//! num_cpus = 4
+//! epsilon_us = 1000
+//! theta_us = 200
+//! slice_us = 1024
+//!
+//! [task]
+//! name = camera
+//! core = 0
+//! prio = 3
+//! period_ms = 50
+//! deadline_ms = 50          # optional, defaults to period
+//! cpu_ms = 1, 1             # η_g + 1 CPU segments
+//! gpu_ms = 0.5:8            # η_g segments as G^m:G^e pairs
+//! mode = suspend            # suspend | busy
+//! best_effort = false
+//! ```
+//!
+//! Round-trips: `to_text` writes the same format `parse` reads, so
+//! generated tasksets can be exported, edited and re-analysed.
+
+use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, WaitMode};
+
+/// Parse a taskset from the text format above.
+pub fn parse(text: &str) -> Result<TaskSet, String> {
+    let mut platform = Platform::default();
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut section = String::new();
+    let mut current: Option<Task> = None;
+
+    let flush = |tasks: &mut Vec<Task>, current: &mut Option<Task>| {
+        if let Some(t) = current.take() {
+            tasks.push(t);
+        }
+    };
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("line {}: {msg}", lineno + 1);
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            if section == "task" {
+                flush(&mut tasks, &mut current);
+            }
+            section = name.trim().to_string();
+            if section == "task" {
+                let id = tasks.len();
+                current = Some(Task {
+                    id,
+                    name: format!("task{id}"),
+                    period: 0,
+                    deadline: 0,
+                    cpu_segments: vec![],
+                    gpu_segments: vec![],
+                    core: 0,
+                    cpu_prio: 0,
+                    gpu_prio: 0,
+                    best_effort: false,
+                    mode: WaitMode::SelfSuspend,
+                });
+            } else if section != "platform" {
+                return Err(err(&format!("unknown section [{section}]")));
+            }
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .map(|(k, v)| (k.trim(), v.trim()))
+            .ok_or_else(|| err("expected key = value"))?;
+        let parse_f64 =
+            |v: &str| v.parse::<f64>().map_err(|_| err(&format!("bad number {v:?}")));
+        match (section.as_str(), key) {
+            ("platform", "num_cpus") => {
+                platform.num_cpus =
+                    value.parse().map_err(|_| err("bad num_cpus"))?;
+            }
+            ("platform", "epsilon_us") => {
+                platform.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?;
+            }
+            ("platform", "theta_us") => {
+                platform.theta = value.parse().map_err(|_| err("bad theta_us"))?;
+            }
+            ("platform", "slice_us") => {
+                platform.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?;
+            }
+            ("task", k) => {
+                let t = current.as_mut().ok_or_else(|| err("task key outside [task]"))?;
+                match k {
+                    "name" => t.name = value.to_string(),
+                    "core" => t.core = value.parse().map_err(|_| err("bad core"))?,
+                    "prio" => {
+                        t.cpu_prio = value.parse().map_err(|_| err("bad prio"))?;
+                        if t.gpu_prio == 0 {
+                            t.gpu_prio = t.cpu_prio;
+                        }
+                    }
+                    "gpu_prio" => {
+                        t.gpu_prio = value.parse().map_err(|_| err("bad gpu_prio"))?
+                    }
+                    "period_ms" => t.period = ms(parse_f64(value)?),
+                    "deadline_ms" => t.deadline = ms(parse_f64(value)?),
+                    "cpu_ms" => {
+                        t.cpu_segments = value
+                            .split(',')
+                            .map(|v| parse_f64(v.trim()).map(ms))
+                            .collect::<Result<_, _>>()?;
+                    }
+                    "gpu_ms" => {
+                        t.gpu_segments = value
+                            .split(',')
+                            .map(|seg| {
+                                let (gm, ge) = seg
+                                    .trim()
+                                    .split_once(':')
+                                    .ok_or_else(|| err("gpu_ms needs G^m:G^e pairs"))?;
+                                Ok(GpuSegment::new(
+                                    ms(parse_f64(gm.trim())?),
+                                    ms(parse_f64(ge.trim())?),
+                                ))
+                            })
+                            .collect::<Result<_, String>>()?;
+                    }
+                    "mode" => {
+                        t.mode = match value {
+                            "suspend" => WaitMode::SelfSuspend,
+                            "busy" => WaitMode::BusyWait,
+                            other => return Err(err(&format!("bad mode {other:?}"))),
+                        }
+                    }
+                    "best_effort" => {
+                        t.best_effort =
+                            value.parse().map_err(|_| err("bad best_effort"))?
+                    }
+                    other => return Err(err(&format!("unknown task key {other:?}"))),
+                }
+            }
+            (_, k) => return Err(err(&format!("key {k:?} outside a section"))),
+        }
+    }
+    if section == "task" {
+        flush(&mut tasks, &mut current);
+    }
+    // Defaults: deadline = period.
+    for t in &mut tasks {
+        if t.deadline == 0 {
+            t.deadline = t.period;
+        }
+    }
+    let ts = TaskSet::new(tasks, platform);
+    ts.validate()?;
+    Ok(ts)
+}
+
+/// Render a taskset back into the text format.
+pub fn to_text(ts: &TaskSet) -> String {
+    let mut out = String::from("[platform]\n");
+    out.push_str(&format!("num_cpus = {}\n", ts.platform.num_cpus));
+    out.push_str(&format!("epsilon_us = {}\n", ts.platform.epsilon));
+    out.push_str(&format!("theta_us = {}\n", ts.platform.theta));
+    out.push_str(&format!("slice_us = {}\n", ts.platform.tsg_slice));
+    for t in &ts.tasks {
+        out.push_str("\n[task]\n");
+        out.push_str(&format!("name = {}\n", t.name));
+        out.push_str(&format!("core = {}\n", t.core));
+        out.push_str(&format!("prio = {}\n", t.cpu_prio));
+        if t.gpu_prio != t.cpu_prio {
+            out.push_str(&format!("gpu_prio = {}\n", t.gpu_prio));
+        }
+        out.push_str(&format!("period_ms = {}\n", to_ms(t.period)));
+        if t.deadline != t.period {
+            out.push_str(&format!("deadline_ms = {}\n", to_ms(t.deadline)));
+        }
+        out.push_str(&format!(
+            "cpu_ms = {}\n",
+            t.cpu_segments.iter().map(|&c| to_ms(c).to_string()).collect::<Vec<_>>().join(", ")
+        ));
+        if !t.gpu_segments.is_empty() {
+            out.push_str(&format!(
+                "gpu_ms = {}\n",
+                t.gpu_segments
+                    .iter()
+                    .map(|g| format!("{}:{}", to_ms(g.misc), to_ms(g.exec)))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+        if t.mode == WaitMode::BusyWait {
+            out.push_str("mode = busy\n");
+        }
+        if t.best_effort {
+            out.push_str("best_effort = true\n");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgen::{generate, GenParams};
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg32;
+
+    const SAMPLE: &str = r#"
+# a two-task system
+[platform]
+num_cpus = 2
+epsilon_us = 500
+theta_us = 100
+
+[task]
+name = camera
+core = 0
+prio = 2
+period_ms = 50
+cpu_ms = 1, 1
+gpu_ms = 0.5:8
+
+[task]
+name = planner
+core = 1
+prio = 1
+period_ms = 100
+cpu_ms = 20
+mode = busy
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let ts = parse(SAMPLE).unwrap();
+        assert_eq!(ts.platform.num_cpus, 2);
+        assert_eq!(ts.platform.epsilon, 500);
+        assert_eq!(ts.platform.tsg_slice, 1024); // default kept
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.tasks[0].name, "camera");
+        assert_eq!(ts.tasks[0].gpu_segments[0].exec, ms(8.0));
+        assert_eq!(ts.tasks[0].deadline, ms(50.0)); // defaulted
+        assert_eq!(ts.tasks[1].mode, WaitMode::BusyWait);
+    }
+
+    #[test]
+    fn roundtrip_sample() {
+        let ts = parse(SAMPLE).unwrap();
+        let ts2 = parse(&to_text(&ts)).unwrap();
+        assert_eq!(ts.tasks, ts2.tasks);
+        assert_eq!(ts.platform, ts2.platform);
+    }
+
+    #[test]
+    fn roundtrip_generated_tasksets() {
+        forall("config roundtrip", 50, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            let text = to_text(&ts);
+            let back = parse(&text).map_err(|e| format!("parse failed: {e}\n{text}"))?;
+            if back.tasks != ts.tasks {
+                return Err("tasks differ after roundtrip".into());
+            }
+            if back.platform != ts.platform {
+                return Err("platform differs after roundtrip".into());
+            }
+            Ok(())
+        });
+        let _ = Pcg32::seeded(0); // keep import used
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("[task]\nprio = x\n").is_err());
+        assert!(parse("[bogus]\n").is_err());
+        assert!(parse("num_cpus = 2\n").is_err()); // key outside section
+        assert!(parse("[task]\nname = a\ncpu_ms = 1\ngpu_ms = 5\n").is_err()); // no G^m:G^e
+    }
+
+    #[test]
+    fn rejects_invalid_taskset() {
+        // Duplicate priorities fail validation.
+        let text = "[platform]\nnum_cpus = 1\n\
+                    [task]\nname=a\nprio=1\nperiod_ms=10\ncpu_ms=1\n\
+                    [task]\nname=b\nprio=1\nperiod_ms=10\ncpu_ms=1\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let ts = parse("# header\n\n[platform]\nnum_cpus = 3 # inline\n").unwrap();
+        assert_eq!(ts.platform.num_cpus, 3);
+        assert!(ts.is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Task and platform model (paper §4): sporadic tasks with alternating
+//! CPU/GPU segments, partitioned fixed-priority CPUs, one shared GPU.
+
+pub mod config;
+pub mod task;
+pub mod taskset;
+
+pub use task::{ms, to_ms, GpuSegment, Task, Time, WaitMode};
+pub use taskset::{Platform, TaskSet};

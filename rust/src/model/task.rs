@@ -1,0 +1,265 @@
+//! The GCAPS task model (paper §4).
+//!
+//! A task τ_i = (C_i, G_i, T_i, D_i, η_i^c, η_i^g, π_i) is an alternating
+//! sequence of CPU segments and GPU segments; each GPU segment
+//! G_{i,j} = (G^m_{i,j}, G^e_{i,j}) splits into miscellaneous CPU work
+//! (kernel launch, driver communication) and pure GPU execution during
+//! which the task busy-waits or self-suspends.
+//!
+//! All times are integer **microseconds** (`Time`): the RTA fixed points
+//! then converge exactly and the simulator is branch-exact.
+
+/// Time in microseconds.
+pub type Time = u64;
+
+/// Convert milliseconds (f64, as used in the paper's tables) to µs.
+pub fn ms(v: f64) -> Time {
+    (v * 1000.0).round() as Time
+}
+
+/// Convert µs back to ms for reporting.
+pub fn to_ms(t: Time) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// How a task waits for pure GPU execution (paper §4, §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WaitMode {
+    /// Task spins on its CPU for the duration of G^e.
+    BusyWait,
+    /// Task yields the CPU and is resumed on GPU completion.
+    SelfSuspend,
+}
+
+/// One GPU segment: (G^m, G^e).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuSegment {
+    /// G^m: misc CPU operations (launch, driver comms) within the segment.
+    pub misc: Time,
+    /// G^e: pure GPU execution (copies + kernels), no CPU intervention.
+    pub exec: Time,
+}
+
+impl GpuSegment {
+    pub fn new(misc: Time, exec: Time) -> GpuSegment {
+        GpuSegment { misc, exec }
+    }
+
+    /// Total worst-case length of the segment (G ≤ G^m + G^e; we use the
+    /// safe upper bound, as the paper's evaluation does).
+    pub fn total(&self) -> Time {
+        self.misc + self.exec
+    }
+}
+
+/// A sporadic task with constrained deadline, preallocated to one core.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Task {
+    /// Index in the taskset (stable identifier).
+    pub id: usize,
+    /// Human-readable name (workload name in the case study).
+    pub name: String,
+    /// T_i: minimum inter-arrival time.
+    pub period: Time,
+    /// D_i ≤ T_i: relative deadline.
+    pub deadline: Time,
+    /// WCETs of the η_i^c CPU segments (alternating with GPU segments).
+    pub cpu_segments: Vec<Time>,
+    /// The η_i^g GPU segments; empty for CPU-only tasks.
+    pub gpu_segments: Vec<GpuSegment>,
+    /// Preallocated CPU core (partitioned scheduling, no migration).
+    pub core: usize,
+    /// π_i^c: CPU priority. Higher value = higher priority (rt_priority
+    /// semantics). Unique across the system for real-time tasks.
+    pub cpu_prio: u32,
+    /// π_i^g: GPU segment priority (defaults to cpu_prio; §5.3 allows a
+    /// separate assignment).
+    pub gpu_prio: u32,
+    /// Best-effort tasks have no real-time priority (rt_priority unset);
+    /// under GCAPS they run only when no RT task holds the GPU.
+    pub best_effort: bool,
+    /// Busy-wait or self-suspend during pure GPU execution.
+    pub mode: WaitMode,
+}
+
+impl Task {
+    /// C_i: cumulative CPU segment WCET.
+    pub fn c(&self) -> Time {
+        self.cpu_segments.iter().sum()
+    }
+
+    /// G_i^m: cumulative misc CPU work across GPU segments.
+    pub fn gm(&self) -> Time {
+        self.gpu_segments.iter().map(|g| g.misc).sum()
+    }
+
+    /// G_i^e: cumulative pure GPU execution.
+    pub fn ge(&self) -> Time {
+        self.gpu_segments.iter().map(|g| g.exec).sum()
+    }
+
+    /// G_i: cumulative GPU segment WCET (safe bound G^m + G^e).
+    pub fn g(&self) -> Time {
+        self.gm() + self.ge()
+    }
+
+    /// η_i^c.
+    pub fn eta_c(&self) -> usize {
+        self.cpu_segments.len()
+    }
+
+    /// η_i^g.
+    pub fn eta_g(&self) -> usize {
+        self.gpu_segments.len()
+    }
+
+    /// Whether the task uses the GPU (η_i^g > 0).
+    pub fn uses_gpu(&self) -> bool {
+        !self.gpu_segments.is_empty()
+    }
+
+    /// Longest single GPU segment (G^m + G^e), for lock-based blocking
+    /// bounds (MPCP / FMLP+).
+    pub fn max_gpu_segment(&self) -> Time {
+        self.gpu_segments.iter().map(|g| g.total()).max().unwrap_or(0)
+    }
+
+    /// Total utilization (C_i + G_i) / T_i.
+    pub fn utilization(&self) -> f64 {
+        (self.c() + self.g()) as f64 / self.period as f64
+    }
+
+    /// CPU-side utilization only (C_i + G_i^m) / T_i.
+    pub fn cpu_utilization(&self) -> f64 {
+        (self.c() + self.gm()) as f64 / self.period as f64
+    }
+
+    /// Validate internal structure (segment alternation, deadline).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.period == 0 {
+            return Err(format!("task {}: zero period", self.id));
+        }
+        if self.deadline > self.period {
+            return Err(format!(
+                "task {}: deadline {} > period {} (constrained deadlines required)",
+                self.id, self.deadline, self.period
+            ));
+        }
+        if self.cpu_segments.is_empty() {
+            return Err(format!("task {}: no CPU segments", self.id));
+        }
+        // Alternating structure: η_c = η_g + 1 for GPU tasks (a job starts
+        // and ends on the CPU), η_g = 0 for CPU-only tasks.
+        if self.uses_gpu() && self.cpu_segments.len() != self.gpu_segments.len() + 1 {
+            return Err(format!(
+                "task {}: η_c = {} but η_g = {} (need η_c = η_g + 1)",
+                self.id,
+                self.cpu_segments.len(),
+                self.gpu_segments.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Builder for tests and examples: CPU-only task.
+    pub fn cpu_only(
+        id: usize,
+        core: usize,
+        prio: u32,
+        c: Time,
+        period: Time,
+    ) -> Task {
+        Task {
+            id,
+            name: format!("tau{id}"),
+            period,
+            deadline: period,
+            cpu_segments: vec![c],
+            gpu_segments: vec![],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu_task() -> Task {
+        Task {
+            id: 0,
+            name: "t".into(),
+            period: ms(80.0),
+            deadline: ms(80.0),
+            cpu_segments: vec![ms(2.0), ms(4.0), ms(3.0)],
+            gpu_segments: vec![
+                GpuSegment::new(ms(2.0), ms(4.0)),
+                GpuSegment::new(ms(2.0), ms(2.0)),
+            ],
+            core: 0,
+            cpu_prio: 10,
+            gpu_prio: 10,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    #[test]
+    fn table2_tau1_aggregates() {
+        // τ_1 of Table 2: C = 9, G^m = 4, G^e = 6, G = 10.
+        let t = gpu_task();
+        assert_eq!(t.c(), ms(9.0));
+        assert_eq!(t.gm(), ms(4.0));
+        assert_eq!(t.ge(), ms(6.0));
+        assert_eq!(t.g(), ms(10.0));
+        assert_eq!(t.eta_c(), 3);
+        assert_eq!(t.eta_g(), 2);
+        assert!(t.uses_gpu());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn utilization() {
+        let t = gpu_task();
+        assert!((t.utilization() - 19.0 / 80.0).abs() < 1e-9);
+        assert!((t.cpu_utilization() - 13.0 / 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_gpu_segment() {
+        let t = gpu_task();
+        assert_eq!(t.max_gpu_segment(), ms(6.0));
+    }
+
+    #[test]
+    fn cpu_only_valid() {
+        let t = Task::cpu_only(1, 0, 5, ms(40.0), ms(150.0));
+        assert!(!t.uses_gpu());
+        assert_eq!(t.g(), 0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_alternation() {
+        let mut t = gpu_task();
+        t.cpu_segments.pop();
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unconstrained_deadline() {
+        let mut t = gpu_task();
+        t.deadline = t.period + 1;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn ms_roundtrip() {
+        assert_eq!(ms(1.5), 1500);
+        assert_eq!(to_ms(2500), 2.5);
+    }
+}

@@ -1,0 +1,259 @@
+//! Tasksets: collections of tasks on a multi-core + single-GPU platform,
+//! with the priority/affinity accessors the analysis needs (hp, hpp).
+
+use super::task::{Task, Time};
+
+/// Scheduling/overhead parameters of the platform (paper §2, §5, Table 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    /// ω: number of identical CPU cores.
+    pub num_cpus: usize,
+    /// L: TSG time-slice length of the default driver (µs); 1024 µs
+    /// in the Tegra driver (§7.1.1).
+    pub tsg_slice: Time,
+    /// θ: GPU context-switch overhead (µs); Table 3 uses 200 µs.
+    pub theta: Time,
+    /// ε = α + θ: runlist update delay of GCAPS (µs); Table 3 uses 1 ms.
+    pub epsilon: Time,
+}
+
+impl Default for Platform {
+    fn default() -> Platform {
+        Platform { num_cpus: 4, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+    }
+}
+
+/// A complete taskset plus platform parameters.
+#[derive(Debug, Clone)]
+pub struct TaskSet {
+    pub tasks: Vec<Task>,
+    pub platform: Platform,
+}
+
+impl TaskSet {
+    pub fn new(tasks: Vec<Task>, platform: Platform) -> TaskSet {
+        TaskSet { tasks, platform }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Number of GPU-using tasks (n^g).
+    pub fn num_gpu_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.uses_gpu()).count()
+    }
+
+    /// Real-time tasks only (analysis targets).
+    pub fn rt_tasks(&self) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter(|t| !t.best_effort)
+    }
+
+    /// Best-effort tasks (no rt_priority; GCAPS runs them time-shared
+    /// only when no RT task wants the GPU).
+    pub fn be_tasks(&self) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter(|t| t.best_effort)
+    }
+
+    /// hpp(τ_i): higher-priority RT tasks on the SAME core as τ_i
+    /// (by CPU priority).
+    pub fn hpp(&self, i: usize) -> impl Iterator<Item = &Task> {
+        let me = &self.tasks[i];
+        let (core, prio, id) = (me.core, me.cpu_prio, me.id);
+        self.tasks
+            .iter()
+            .filter(move |t| !t.best_effort && t.id != id && t.core == core && t.cpu_prio > prio)
+    }
+
+    /// hp(τ_i) \ hpp(τ_i): higher-priority RT tasks on DIFFERENT cores,
+    /// ordered by CPU priority (the default when π^g = π^c).
+    pub fn hp_other_core(&self, i: usize) -> impl Iterator<Item = &Task> {
+        let me = &self.tasks[i];
+        let (core, prio, id) = (me.core, me.cpu_prio, me.id);
+        self.tasks
+            .iter()
+            .filter(move |t| !t.best_effort && t.id != id && t.core != core && t.cpu_prio > prio)
+    }
+
+    /// Same as `hp_other_core` but ordered by GPU priority (π^g), used
+    /// when the §5.3 separate GPU priority assignment is active. For a
+    /// CPU-only τ_i, its "GPU priority" is taken as `gpu_prio` too (set
+    /// equal to its CPU priority by the generator), which preserves the
+    /// paper's per-core order constraint.
+    pub fn hp_gpu_other_core(&self, i: usize) -> impl Iterator<Item = &Task> {
+        let me = &self.tasks[i];
+        let (core, prio, id) = (me.core, me.gpu_prio, me.id);
+        self.tasks
+            .iter()
+            .filter(move |t| !t.best_effort && t.id != id && t.core != core && t.gpu_prio > prio)
+    }
+
+    /// Lower-priority RT tasks (by CPU priority) — for lock-based blocking.
+    pub fn lp(&self, i: usize) -> impl Iterator<Item = &Task> {
+        let me = &self.tasks[i];
+        let (prio, id) = (me.cpu_prio, me.id);
+        self.tasks.iter().filter(move |t| !t.best_effort && t.id != id && t.cpu_prio < prio)
+    }
+
+    /// Tasks on a given core.
+    pub fn on_core(&self, core: usize) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter(move |t| t.core == core)
+    }
+
+    /// Total utilization of a core.
+    pub fn core_utilization(&self, core: usize) -> f64 {
+        self.on_core(core).map(|t| t.utilization()).sum()
+    }
+
+    /// Validate the whole set: per-task structure, core bounds, unique
+    /// RT CPU priorities, per-core GPU/CPU priority order coherence
+    /// (§5.3 deadlock-avoidance constraint).
+    pub fn validate(&self) -> Result<(), String> {
+        for t in &self.tasks {
+            t.validate()?;
+            if t.core >= self.platform.num_cpus {
+                return Err(format!(
+                    "task {}: core {} out of range (num_cpus = {})",
+                    t.id, t.core, self.platform.num_cpus
+                ));
+            }
+        }
+        // ids must equal indices (the analysis relies on it).
+        for (idx, t) in self.tasks.iter().enumerate() {
+            if t.id != idx {
+                return Err(format!("task at index {idx} has id {}", t.id));
+            }
+        }
+        let mut prios: Vec<u32> =
+            self.rt_tasks().map(|t| t.cpu_prio).collect();
+        prios.sort_unstable();
+        prios.dedup();
+        if prios.len() != self.rt_tasks().count() {
+            return Err("duplicate RT CPU priorities".into());
+        }
+        // §5.3: same-core relative GPU priority order must match CPU order
+        // (only meaningful between GPU-using tasks — CPU-only tasks never
+        // wait for the GPU, so no deadlock channel exists through them).
+        for a in self.rt_tasks().filter(|t| t.uses_gpu()) {
+            for b in self.rt_tasks().filter(|t| t.uses_gpu()) {
+                if a.id != b.id && a.core == b.core && a.cpu_prio > b.cpu_prio {
+                    if a.gpu_prio <= b.gpu_prio {
+                        return Err(format!(
+                            "tasks {} and {} on core {}: GPU priority order \
+                             violates CPU order (deadlock risk, §5.3)",
+                            a.id, b.id, a.core
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::task::{ms, GpuSegment, WaitMode};
+
+    fn simple_set() -> TaskSet {
+        let mk_gpu = |id: usize, core: usize, prio: u32| Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(100.0),
+            deadline: ms(100.0),
+            cpu_segments: vec![ms(1.0), ms(1.0)],
+            gpu_segments: vec![GpuSegment::new(ms(1.0), ms(5.0))],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        };
+        let tasks = vec![
+            mk_gpu(0, 0, 30),
+            Task::cpu_only(1, 0, 20, ms(10.0), ms(100.0)),
+            mk_gpu(2, 1, 10),
+        ];
+        TaskSet::new(tasks, Platform::default())
+    }
+
+    #[test]
+    fn validates() {
+        simple_set().validate().unwrap();
+    }
+
+    #[test]
+    fn hpp_same_core_only() {
+        let ts = simple_set();
+        let hpp: Vec<usize> = ts.hpp(1).map(|t| t.id).collect();
+        assert_eq!(hpp, vec![0]);
+        assert_eq!(ts.hpp(0).count(), 0);
+    }
+
+    #[test]
+    fn hp_other_core() {
+        let ts = simple_set();
+        let hp: Vec<usize> = ts.hp_other_core(2).map(|t| t.id).collect();
+        assert_eq!(hp, vec![0, 1]);
+    }
+
+    #[test]
+    fn gpu_task_count() {
+        assert_eq!(simple_set().num_gpu_tasks(), 2);
+    }
+
+    #[test]
+    fn duplicate_priorities_rejected() {
+        let mut ts = simple_set();
+        ts.tasks[1].cpu_prio = 30;
+        assert!(ts.validate().is_err());
+    }
+
+    #[test]
+    fn core_out_of_range_rejected() {
+        let mut ts = simple_set();
+        ts.tasks[0].core = 9;
+        assert!(ts.validate().is_err());
+    }
+
+    #[test]
+    fn gpu_priority_order_constraint() {
+        let mut ts = simple_set();
+        // Put both GPU-using tasks (0 and 2) on core 0, then invert
+        // their GPU priority order relative to CPU order (30 > 10).
+        ts.tasks[2].core = 0;
+        ts.tasks[0].gpu_prio = 5;
+        ts.tasks[2].gpu_prio = 6;
+        assert!(ts.validate().is_err());
+    }
+
+    #[test]
+    fn gpu_priority_order_ignores_cpu_only_tasks() {
+        let mut ts = simple_set();
+        // Task 1 is CPU-only: inverting its gpu_prio vs task 0 is fine.
+        ts.tasks[0].gpu_prio = 5;
+        ts.tasks[1].gpu_prio = 6;
+        ts.validate().unwrap();
+    }
+
+    #[test]
+    fn best_effort_excluded_from_rt_queries() {
+        let mut ts = simple_set();
+        ts.tasks[0].best_effort = true;
+        assert_eq!(ts.rt_tasks().count(), 2);
+        assert_eq!(ts.hpp(1).count(), 0); // BE task no longer interferes via hpp
+    }
+
+    #[test]
+    fn core_utilization_sums() {
+        let ts = simple_set();
+        let u0 = ts.core_utilization(0);
+        // task 0: C = 2 ms, G = 1 + 5 = 6 ms, T = 100 ms; task 1: 10/100
+        assert!((u0 - (8.0 / 100.0 + 10.0 / 100.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! Artifact manifest parsing (`artifacts/manifest.tsv`, written by
+//! `python/compile/aot.py`): one row per workload —
+//! `name<TAB>dtype:shape,dtype:shape<TAB>description`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One input tensor's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    /// Parse `"float32:128x128"`.
+    pub fn parse(s: &str) -> Result<InputSpec> {
+        let (dtype, shape_s) =
+            s.split_once(':').ok_or_else(|| anyhow!("bad input spec {s:?}"))?;
+        let shape = shape_s
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        if shape.is_empty() || shape.contains(&0) {
+            return Err(anyhow!("bad shape in {s:?}"));
+        }
+        Ok(InputSpec { dtype: dtype.to_string(), shape })
+    }
+}
+
+/// One workload row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+    pub description: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub workloads: Vec<WorkloadSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut workloads = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let name = cols
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| anyhow!("line {}: missing name", lineno + 1))?;
+            let inputs_s = cols
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing inputs", lineno + 1))?;
+            let description = cols.next().unwrap_or("").to_string();
+            let inputs = inputs_s
+                .split(',')
+                .map(InputSpec::parse)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("line {}", lineno + 1))?;
+            workloads.push(WorkloadSpec { name: name.to_string(), inputs, description });
+        }
+        if workloads.is_empty() {
+            return Err(anyhow!("empty manifest"));
+        }
+        Ok(Manifest { workloads })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&WorkloadSpec> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_input_spec() {
+        let s = InputSpec::parse("float32:128x128").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.shape, vec![128, 128]);
+        let s = InputSpec::parse("int32:65536").unwrap();
+        assert_eq!(s.shape, vec![65536]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(InputSpec::parse("float32").is_err());
+        assert!(InputSpec::parse("float32:0x4").is_err());
+        assert!(InputSpec::parse("float32:axb").is_err());
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(
+            "mmul_small\tfloat32:128x128,float32:128x128\ttask 2\n\
+             histogram\tint32:65536\ttask 1\n",
+        )
+        .unwrap();
+        assert_eq!(m.workloads.len(), 2);
+        assert_eq!(m.get("histogram").unwrap().inputs[0].dtype, "int32");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn parse_manifest_skips_blank_lines() {
+        let m = Manifest::parse("a\tfloat32:4\tx\n\n").unwrap();
+        assert_eq!(m.workloads.len(), 1);
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Manifest::parse("").is_err());
+    }
+}

@@ -1,0 +1,1035 @@
+//! The discrete-event engine.
+//!
+//! Recompute-on-event design: at every event timestamp the engine
+//! (1) handles releases and phase transitions, (2) recomputes the CPU
+//! allocation per core and the GPU context per policy, (3) finds the
+//! next event horizon and advances all running work by that quantum.
+//! All arithmetic is integer µs, so runs are exactly reproducible.
+//!
+//! Task lifecycle (one job):
+//!
+//! ```text
+//! release → Cpu(0) → for k in 0..η_g:
+//!     [gcaps]      DrvBegin(k): runlist-update call, α on CPU
+//!     [mpcp/fmlp+] LockWait(k): queue per protocol
+//!     GpuActive(k): G^m on CPU ∥ G^e on GPU (async mode, §4 of the
+//!                   paper: misc launch work and kernel execution
+//!                   overlap); busy-wait keeps the CPU through G^e,
+//!                   self-suspension yields it once G^m is done
+//!     [gcaps]      DrvEnd(k)
+//!     [mpcp/fmlp+] release lock
+//!     → Cpu(k+1)
+//! → complete
+//! ```
+//!
+//! The GCAPS driver state (`task_running` / `task_pending`) follows
+//! Alg. 1 of the paper, with the §5.2 clarification that a preempting
+//! real-time task displaces *all* lower-priority TSGs from the runlist
+//! ("the new runlist only contains the TSGs of τ_h"). Driver calls are
+//! short non-preemptible kernel sections; the real rt-mutex contention
+//! is exercised and measured by the live arbiter (coordinator/), so in
+//! the DES Lemma 8's (η+1)ε blocking term is pure safety margin.
+
+use std::collections::VecDeque;
+
+use crate::model::{TaskSet, Time, WaitMode};
+use crate::sim::metrics::{RunMetrics, TaskMetrics};
+use crate::sim::trace::{Activity, Resource, Trace, TraceEvent};
+use crate::sim::Policy;
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub policy: Policy,
+    /// Simulated horizon in µs.
+    pub duration: Time,
+    /// Per-task initial release offsets (defaults to all-zero =
+    /// synchronous release, the classic critical instant).
+    pub offsets: Vec<Time>,
+    /// Capture a trace (Gantt) — costs memory, off for sweeps.
+    pub trace: bool,
+}
+
+impl SimConfig {
+    pub fn new(policy: Policy, duration: Time) -> SimConfig {
+        SimConfig { policy, duration, offsets: vec![], trace: false }
+    }
+
+    pub fn with_offsets(mut self, offsets: Vec<Time>) -> SimConfig {
+        self.offsets = offsets;
+        self
+    }
+
+    pub fn with_trace(mut self) -> SimConfig {
+        self.trace = true;
+        self
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub per_task: Vec<TaskMetrics>,
+    pub run: RunMetrics,
+    pub trace: Option<Trace>,
+}
+
+impl SimResult {
+    /// True iff no RT task missed a deadline.
+    pub fn no_rt_misses(&self, ts: &TaskSet) -> bool {
+        ts.rt_tasks().all(|t| self.per_task[t.id].deadline_misses == 0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Internal state
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// No active job.
+    Idle,
+    /// Executing cpu_segments[seg].
+    Cpu,
+    /// GCAPS: executing the driver runlist-update call (α CPU work).
+    /// Calls are non-preemptible on their core (the update polls the
+    /// runlist submission registers in a tight kernel loop, §5.2); the
+    /// rt-mutex contention of the real driver is exercised by the live
+    /// arbiter (`coordinator/`), not the DES — Lemma 8's (η+1)ε blocking
+    /// is pure safety margin here.
+    DrvCall { ending: bool },
+    /// MPCP/FMLP+: waiting in the GPU lock queue.
+    LockWait,
+    /// GPU segment active: cpu_rem = G^m left, gpu_rem = G^e left.
+    GpuActive,
+}
+
+#[derive(Debug, Clone)]
+struct TState {
+    phase: Phase,
+    /// Current segment index: CPU segment `seg`, GPU segment `seg` next.
+    seg: usize,
+    /// Remaining µs of the current CPU-side work (Cpu/DrvCall/G^m).
+    cpu_rem: Time,
+    /// Remaining µs of the current pure GPU execution.
+    gpu_rem: Time,
+    release: Time,
+    abs_deadline: Time,
+    /// Backlogged releases (job arrived while previous still running).
+    backlog: VecDeque<Time>,
+    next_release: Time,
+    /// Timestamp the current driver call (incl. mutex wait) started.
+    drv_started: Time,
+    /// Lock-policy FIFO ticket (FMLP+ ordering).
+    ticket: u64,
+}
+
+/// GCAPS driver state (Alg. 1) + the GPU device state.
+#[derive(Debug, Clone, Default)]
+struct GpuState {
+    /// Alg. 1 task_running (TSGs on the runlist).
+    running: Vec<usize>,
+    /// Alg. 1 task_pending.
+    pending: Vec<usize>,
+    /// Context currently executing on the GPU.
+    context: Option<usize>,
+    /// Remaining θ of an in-progress switch (charged to the incoming).
+    switch_rem: Time,
+    /// Remaining time slice of the current context.
+    slice_rem: Time,
+    /// FIFO ring of time-shared TSGs (all tasks under tsg_rr; the
+    /// best-effort group under gcaps). Front = next/current to run.
+    ring: VecDeque<usize>,
+    /// Lock-policy: GPU lock holder.
+    lock_holder: Option<usize>,
+    /// Lock-policy: waiting (task, ticket).
+    lock_queue: Vec<(usize, u64)>,
+    ticket_counter: u64,
+}
+
+struct Engine<'a> {
+    ts: &'a TaskSet,
+    cfg: &'a SimConfig,
+    now: Time,
+    st: Vec<TState>,
+    gpu: GpuState,
+    metrics: Vec<TaskMetrics>,
+    run: RunMetrics,
+    trace: Option<Trace>,
+    cpu_alloc: Vec<Option<usize>>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(ts: &'a TaskSet, cfg: &'a SimConfig) -> Engine<'a> {
+        let n = ts.tasks.len();
+        let st = (0..n)
+            .map(|i| TState {
+                phase: Phase::Idle,
+                seg: 0,
+                cpu_rem: 0,
+                gpu_rem: 0,
+                release: 0,
+                abs_deadline: 0,
+                backlog: Default::default(),
+                next_release: cfg.offsets.get(i).copied().unwrap_or(0),
+                drv_started: 0,
+                ticket: 0,
+            })
+            .collect();
+        Engine {
+            ts,
+            cfg,
+            now: 0,
+            st,
+            gpu: GpuState::default(),
+            metrics: vec![TaskMetrics::default(); n],
+            run: RunMetrics::default(),
+            trace: cfg.trace.then(Trace::default),
+            cpu_alloc: vec![None; ts.platform.num_cpus],
+        }
+    }
+
+    /// α = ε − θ (Def. 2): the CPU-side driver-call cost.
+    fn alpha(&self) -> Time {
+        self.ts.platform.epsilon.saturating_sub(self.ts.platform.theta)
+    }
+
+    /// GPU urgency ranking: fixed π^g under GCAPS, earliest absolute job
+    /// deadline under the EDF extension (higher rank = more urgent).
+    fn gpu_rank(&self, i: usize) -> u64 {
+        match self.cfg.policy {
+            Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
+            _ => self.ts.tasks[i].gpu_prio as u64,
+        }
+    }
+
+    // -- job lifecycle ---------------------------------------------------
+
+    fn start_job(&mut self, i: usize, release: Time) {
+        let t = &self.ts.tasks[i];
+        let s = &mut self.st[i];
+        s.release = release;
+        s.abs_deadline = release + t.deadline;
+        s.seg = 0;
+        s.phase = Phase::Cpu;
+        s.cpu_rem = t.cpu_segments[0];
+        if let Some(tr) = &mut self.trace {
+            tr.releases.push((i, release));
+        }
+    }
+
+    /// Transition after cpu_segments[seg] completes.
+    fn finish_cpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        let seg = self.st[i].seg;
+        if seg < t.eta_g() {
+            match self.cfg.policy {
+                Policy::Gcaps | Policy::GcapsEdf => {
+                    self.st[i].phase = Phase::DrvCall { ending: false };
+                    self.st[i].cpu_rem = self.alpha();
+                    self.st[i].drv_started = self.now;
+                }
+                Policy::Mpcp | Policy::FmlpPlus => {
+                    self.st[i].phase = Phase::LockWait;
+                    self.gpu.ticket_counter += 1;
+                    self.st[i].ticket = self.gpu.ticket_counter;
+                    self.gpu.lock_queue.push((i, self.st[i].ticket));
+                }
+                Policy::TsgRr => self.begin_gpu_segment(i),
+            }
+        } else {
+            self.complete_job(i);
+        }
+    }
+
+    /// Start GPU segment `seg`: G^m on the CPU in parallel with G^e on
+    /// the GPU (asynchronous launch model, paper §4).
+    fn begin_gpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        let seg = self.st[i].seg;
+        self.st[i].phase = Phase::GpuActive;
+        self.st[i].cpu_rem = t.gpu_segments[seg].misc;
+        self.st[i].gpu_rem = t.gpu_segments[seg].exec;
+    }
+
+    /// Both halves of the GPU segment are done.
+    fn finish_gpu_segment(&mut self, i: usize) {
+        match self.cfg.policy {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                self.st[i].phase = Phase::DrvCall { ending: true };
+                self.st[i].cpu_rem = self.alpha();
+                self.st[i].drv_started = self.now;
+            }
+            Policy::Mpcp | Policy::FmlpPlus => {
+                debug_assert_eq!(self.gpu.lock_holder, Some(i));
+                self.gpu.lock_holder = None;
+                self.next_cpu_segment(i);
+            }
+            Policy::TsgRr => self.next_cpu_segment(i),
+        }
+    }
+
+    fn next_cpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        self.st[i].seg += 1;
+        self.st[i].phase = Phase::Cpu;
+        self.st[i].cpu_rem = t.cpu_segments[self.st[i].seg];
+    }
+
+    fn complete_job(&mut self, i: usize) {
+        let s = &mut self.st[i];
+        let resp = self.now - s.release;
+        let missed = self.now > s.abs_deadline;
+        self.metrics[i].response_times.push(resp);
+        self.metrics[i].jobs += 1;
+        if missed {
+            self.metrics[i].deadline_misses += 1;
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.completions.push((i, self.now));
+        }
+        s.phase = Phase::Idle;
+        if let Some(next) = s.backlog.pop_front() {
+            self.start_job(i, next);
+        }
+    }
+
+    // -- GCAPS driver (Alg. 1) --------------------------------------------
+
+    /// Alg. 1 body, executed when the driver call's α completes.
+    fn finish_driver_call(&mut self, i: usize) {
+        let ending = matches!(self.st[i].phase, Phase::DrvCall { ending: true });
+        if std::env::var_os("GCAPS_SIM_DEBUG").is_some() {
+            eprintln!(
+                "[{}] drv {} tau{} | running {:?} pending {:?} ctx {:?}",
+                self.now,
+                if ending { "END" } else { "BEGIN" },
+                i,
+                self.gpu.running,
+                self.gpu.pending,
+                self.gpu.context
+            );
+        }
+        self.metrics[i]
+            .runlist_updates
+            .push(self.now - self.st[i].drv_started + self.ts.platform.theta);
+        let me = &self.ts.tasks[i];
+        if !ending {
+            // --- TSG_SCHEDULER(τ_i, add) ---
+            if me.best_effort {
+                let rt_running =
+                    self.gpu.running.iter().any(|&k| !self.ts.tasks[k].best_effort);
+                if rt_running {
+                    self.gpu.pending.push(i);
+                } else {
+                    self.gpu.running.push(i);
+                }
+            } else {
+                let tau_h = self
+                    .gpu
+                    .running
+                    .iter()
+                    .copied()
+                    .max_by_key(|&k| self.gpu_rank(k));
+                let preempt = match tau_h {
+                    None => true,
+                    Some(h) => self.gpu_rank(i) > self.gpu_rank(h),
+                };
+                if preempt {
+                    // §5.2: the new runlist contains only τ_i's TSGs.
+                    let displaced: Vec<usize> = self.gpu.running.drain(..).collect();
+                    self.gpu.pending.extend(displaced);
+                    self.gpu.running.push(i);
+                } else {
+                    self.gpu.pending.push(i);
+                }
+            }
+            self.begin_gpu_segment(i);
+        } else {
+            // --- TSG_SCHEDULER(τ_i, remove) ---
+            self.gpu.running.retain(|&k| k != i);
+            self.gpu.pending.retain(|&k| k != i);
+            let tau_k = self
+                .gpu
+                .pending
+                .iter()
+                .copied()
+                .filter(|&k| !self.ts.tasks[k].best_effort)
+                .max_by_key(|&k| self.gpu_rank(k));
+            if let Some(k) = tau_k {
+                self.gpu.pending.retain(|&x| x != k);
+                self.gpu.running.push(k);
+            } else {
+                let all: Vec<usize> = self.gpu.pending.drain(..).collect();
+                self.gpu.running.extend(all);
+            }
+            self.next_cpu_segment(i);
+        }
+    }
+
+    // -- lock-based policies -----------------------------------------------
+
+    fn try_grant_lock(&mut self) {
+        if self.gpu.lock_holder.is_some() || self.gpu.lock_queue.is_empty() {
+            return;
+        }
+        let idx = match self.cfg.policy {
+            Policy::Mpcp => self
+                .gpu
+                .lock_queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(t, tk))| {
+                    (self.ts.tasks[t].cpu_prio, std::cmp::Reverse(tk))
+                })
+                .map(|(j, _)| j)
+                .unwrap(),
+            Policy::FmlpPlus => self
+                .gpu
+                .lock_queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &(_, tk))| tk)
+                .map(|(j, _)| j)
+                .unwrap(),
+            _ => unreachable!(),
+        };
+        let (task, _) = self.gpu.lock_queue.swap_remove(idx);
+        self.gpu.lock_holder = Some(task);
+        self.begin_gpu_segment(task);
+    }
+
+    // -- allocation ----------------------------------------------------------
+
+    /// Does task `i` occupy a CPU slot in its current phase?
+    fn wants_cpu(&self, i: usize) -> bool {
+        match self.st[i].phase {
+            Phase::Cpu | Phase::DrvCall { .. } => true,
+            Phase::GpuActive => {
+                self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+            }
+            Phase::LockWait => self.ts.tasks[i].mode == WaitMode::BusyWait,
+            Phase::Idle => false,
+        }
+    }
+
+    /// Effective CPU priority: lock holders executing their critical
+    /// section's CPU work are boosted (MPCP/FMLP+ priority boosting);
+    /// the GCAPS driver call runs as a non-preemptible kernel section
+    /// (the update spins polling the runlist hardware registers, §5.2),
+    /// which also subsumes rt-mutex priority inheritance — the holder
+    /// cannot be preempted, so ε-blocking stays within Lemma 8's bound.
+    fn eff_prio(&self, i: usize) -> u64 {
+        let base = self.ts.tasks[i].cpu_prio as u64;
+        let boosted = self.gpu.lock_holder == Some(i)
+            && matches!(self.st[i].phase, Phase::GpuActive)
+            && self.st[i].cpu_rem > 0;
+        if boosted {
+            return (1 << 40) | base;
+        }
+        // Driver-call non-preemptibility applies only once the call has
+        // begun executing (the task competes at its own priority to
+        // *enter* the kernel section; cpu_rem < α ⇔ it has run).
+        if matches!(self.st[i].phase, Phase::DrvCall { .. })
+            && self.st[i].cpu_rem < self.alpha()
+        {
+            return (1 << 41) | base;
+        }
+        base
+    }
+
+    fn compute_cpu_alloc(&self) -> Vec<Option<usize>> {
+        let mut alloc = vec![None::<usize>; self.ts.platform.num_cpus];
+        for (i, t) in self.ts.tasks.iter().enumerate() {
+            if !self.wants_cpu(i) {
+                continue;
+            }
+            let p = self.eff_prio(i);
+            match alloc[t.core] {
+                None => alloc[t.core] = Some(i),
+                Some(cur) => {
+                    let pc = self.eff_prio(cur);
+                    if (p, std::cmp::Reverse(i)) > (pc, std::cmp::Reverse(cur)) {
+                        alloc[t.core] = Some(i);
+                    }
+                }
+            }
+        }
+        alloc
+    }
+
+    /// Is task i's TSG eligible for the time-shared ring?
+    fn ring_eligible(&self, i: usize) -> bool {
+        if !(matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0) {
+            return false;
+        }
+        match self.cfg.policy {
+            Policy::TsgRr => true,
+            Policy::Gcaps | Policy::GcapsEdf => {
+                self.ts.tasks[i].best_effort && self.gpu.running.contains(&i)
+            }
+            _ => false,
+        }
+    }
+
+    /// Sync ring membership with eligibility, preserving FIFO order.
+    fn refresh_ring(&mut self) {
+        let eligible: Vec<usize> =
+            (0..self.st.len()).filter(|&i| self.ring_eligible(i)).collect();
+        self.gpu.ring.retain(|i| eligible.contains(i));
+        for i in eligible {
+            if !self.gpu.ring.contains(&i) {
+                self.gpu.ring.push_back(i);
+            }
+        }
+    }
+
+    /// Which task should the GPU execute now (pre-θ)?
+    fn desired_gpu_context(&self) -> Option<usize> {
+        let execing = |i: usize| {
+            matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+        };
+        match self.cfg.policy {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                // At most one RT task occupies the runlist; it runs
+                // exclusively. Otherwise the BE ring time-shares.
+                let rt = self
+                    .gpu
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&i| !self.ts.tasks[i].best_effort && execing(i))
+                    .max_by_key(|&i| self.gpu_rank(i));
+                rt.or_else(|| self.gpu.ring.front().copied())
+            }
+            Policy::TsgRr => self.gpu.ring.front().copied(),
+            Policy::Mpcp | Policy::FmlpPlus => {
+                self.gpu.lock_holder.filter(|&i| execing(i))
+            }
+        }
+    }
+
+    /// Apply the desired context: start a θ switch if it changed.
+    fn update_gpu_context(&mut self) {
+        let want = self.desired_gpu_context();
+        if want == self.gpu.context {
+            return;
+        }
+        match want {
+            None => {
+                self.gpu.context = None;
+                self.gpu.switch_rem = 0;
+            }
+            Some(i) => {
+                // θ per context switch for the driver-level policies
+                // (GCAPS folds it into ε = α + θ; TSG RR pays it per
+                // rotation). The sync baselines are modelled
+                // overhead-free, as the paper's analysis assumes.
+                let charge = match self.cfg.policy {
+                    Policy::Mpcp | Policy::FmlpPlus => 0,
+                    Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => self.ts.platform.theta,
+                };
+                self.gpu.context = Some(i);
+                self.gpu.switch_rem = charge;
+                self.gpu.slice_rem = self.ts.platform.tsg_slice;
+                if charge > 0 {
+                    self.run.gpu_context_switches += 1;
+                }
+            }
+        }
+    }
+
+    // -- main loop -------------------------------------------------------------
+
+    fn release_due(&mut self) {
+        for i in 0..self.st.len() {
+            while self.st[i].next_release <= self.now {
+                let rel = self.st[i].next_release;
+                self.st[i].next_release += self.ts.tasks[i].period;
+                if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
+                    self.start_job(i, rel);
+                } else {
+                    self.st[i].backlog.push_back(rel);
+                }
+            }
+        }
+    }
+
+    fn next_horizon(&self) -> Time {
+        let mut h = self.cfg.duration;
+        for s in &self.st {
+            h = h.min(s.next_release);
+        }
+        for &slot in &self.cpu_alloc {
+            if let Some(i) = slot {
+                if self.st[i].cpu_rem > 0 {
+                    match self.st[i].phase {
+                        Phase::Cpu | Phase::DrvCall { .. } | Phase::GpuActive => {
+                            h = h.min(self.now + self.st[i].cpu_rem)
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        if let Some(i) = self.gpu.context {
+            if self.gpu.switch_rem > 0 {
+                h = h.min(self.now + self.gpu.switch_rem);
+            } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
+                h = h.min(self.now + self.st[i].gpu_rem);
+                if self.gpu.ring.len() > 1 && self.gpu.ring.front() == Some(&i) {
+                    h = h.min(self.now + self.gpu.slice_rem);
+                }
+            }
+        }
+        h.max(self.now)
+    }
+
+    fn advance(&mut self, dt: Time) {
+        if dt == 0 {
+            return;
+        }
+        for core in 0..self.cpu_alloc.len() {
+            if let Some(i) = self.cpu_alloc[core] {
+                let (act, progresses) = match self.st[i].phase {
+                    Phase::Cpu => (Activity::CpuSeg, true),
+                    Phase::DrvCall { .. } => (Activity::DriverCall, true),
+                    Phase::GpuActive => {
+                        if self.st[i].cpu_rem > 0 {
+                            (Activity::GpuMisc, true)
+                        } else {
+                            (Activity::BusyWait, false)
+                        }
+                    }
+                    Phase::LockWait => (Activity::BusyWait, false),
+                    Phase::Idle => (Activity::CpuSeg, false),
+                };
+                if progresses {
+                    self.st[i].cpu_rem -= dt.min(self.st[i].cpu_rem);
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Core(core),
+                        task: i,
+                        activity: act,
+                        start: self.now,
+                        end: self.now + dt,
+                    });
+                }
+            }
+        }
+        if let Some(i) = self.gpu.context {
+            if self.gpu.switch_rem > 0 {
+                let d = dt.min(self.gpu.switch_rem);
+                self.gpu.switch_rem -= d;
+                self.run.gpu_switch_time += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu,
+                        task: i,
+                        activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
+                let d = dt.min(self.st[i].gpu_rem);
+                self.st[i].gpu_rem -= d;
+                self.gpu.slice_rem = self.gpu.slice_rem.saturating_sub(dt);
+                self.run.gpu_busy += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu,
+                        task: i,
+                        activity: Activity::GpuExec,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            }
+        }
+        self.now += dt;
+    }
+
+    /// Allocation-free state fingerprint for settle()'s quiescence check
+    /// (perf: replaces two Vec clones + a VecDeque clone per round — see
+    /// EXPERIMENTS.md §Perf). FNV-1a over every field that a zero-time
+    /// transition can change; a 64-bit collision is ~2^-64 per round and
+    /// at worst delays a transition to the next event timestamp.
+    fn fingerprint(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        for s in &self.st {
+            let phase = match s.phase {
+                Phase::Idle => 0u64,
+                Phase::Cpu => 1,
+                Phase::DrvCall { ending: false } => 2,
+                Phase::DrvCall { ending: true } => 3,
+                Phase::LockWait => 4,
+                Phase::GpuActive => 5,
+            };
+            mix(phase);
+            mix(s.seg as u64);
+            mix(s.cpu_rem);
+            mix(s.gpu_rem);
+        }
+        mix(self.gpu.context.map_or(u64::MAX, |c| c as u64));
+        mix(self.gpu.switch_rem);
+        for &r in &self.gpu.ring {
+            mix(r as u64);
+        }
+        mix(self.gpu.running.len() as u64);
+        mix(self.gpu.pending.len() as u64);
+        h
+    }
+
+    /// Handle all zero-time transitions at `now` until quiescent.
+    fn settle(&mut self) {
+        // One fingerprint per round: round k's "after" is round k+1's
+        // "before" (§Perf iteration 2).
+        let mut prev = self.fingerprint();
+        for _round in 0..10_000 {
+            self.release_due();
+
+            // CPU-side completions (task must hold its CPU to finish
+            // CPU-bound work).
+            self.cpu_alloc = self.compute_cpu_alloc();
+            for core in 0..self.cpu_alloc.len() {
+                if let Some(i) = self.cpu_alloc[core] {
+                    if self.st[i].cpu_rem == 0 {
+                        match self.st[i].phase {
+                            Phase::Cpu => self.finish_cpu_segment(i),
+                            Phase::DrvCall { .. } => self.finish_driver_call(i),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+
+            // GPU-segment completions: both halves done.
+            for i in 0..self.st.len() {
+                if matches!(self.st[i].phase, Phase::GpuActive)
+                    && self.st[i].cpu_rem == 0
+                    && self.st[i].gpu_rem == 0
+                {
+                    self.finish_gpu_segment(i);
+                }
+            }
+
+            // Lock grants.
+            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
+                self.try_grant_lock();
+            }
+
+            // GCAPS completion-aware promotion (work-conserving runlist):
+            // when every TSG on the runlist has drained its queued GPU
+            // work (the holder is finishing trailing G^m or waiting to
+            // issue gcapsGpuSegEnd), the driver — which observes channel
+            // idle interrupts — promotes the highest-priority pending RT
+            // task so the GPU never idles behind a stalled holder. This
+            // is required for Lemma 10/13's G^e*-only preemption charge
+            // to hold (see DESIGN.md §1: the printed Alg. 1 would let a
+            // CPU-starved holder idle the GPU unboundedly).
+            if matches!(self.cfg.policy, Policy::Gcaps | Policy::GcapsEdf) {
+                let execing = |st: &TState| {
+                    matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
+                };
+                let any_running_exec =
+                    self.gpu.running.iter().any(|&k| execing(&self.st[k]));
+                if !any_running_exec {
+                    let promote = self
+                        .gpu
+                        .pending
+                        .iter()
+                        .copied()
+                        .filter(|&k| !self.ts.tasks[k].best_effort && execing(&self.st[k]))
+                        .max_by_key(|&k| self.gpu_rank(k));
+                    if let Some(k) = promote {
+                        self.gpu.pending.retain(|&x| x != k);
+                        self.gpu.running.push(k);
+                    }
+                }
+            }
+
+            // Ring upkeep + slice rotation.
+            self.refresh_ring();
+            if let Some(i) = self.gpu.context {
+                if self.gpu.switch_rem == 0
+                    && self.gpu.slice_rem == 0
+                    && self.gpu.ring.len() > 1
+                    && self.gpu.ring.front() == Some(&i)
+                {
+                    self.gpu.ring.rotate_left(1);
+                } else if self.gpu.ring.len() == 1 && self.gpu.slice_rem == 0 {
+                    self.gpu.slice_rem = self.ts.platform.tsg_slice;
+                }
+            }
+            self.update_gpu_context();
+            self.cpu_alloc = self.compute_cpu_alloc();
+
+            let cur = self.fingerprint();
+            if cur == prev {
+                return;
+            }
+            prev = cur;
+        }
+        panic!("settle() did not quiesce at t = {} µs", self.now);
+    }
+
+    fn run(mut self) -> SimResult {
+        while self.now < self.cfg.duration {
+            self.settle();
+            let h = self.next_horizon();
+            let dt = h.saturating_sub(self.now);
+            if dt == 0 {
+                let next = self
+                    .st
+                    .iter()
+                    .map(|s| s.next_release)
+                    .min()
+                    .unwrap_or(self.cfg.duration);
+                if next <= self.now {
+                    break; // safety: nothing can advance
+                }
+                self.advance(next.min(self.cfg.duration) - self.now);
+            } else {
+                self.advance(dt);
+            }
+        }
+        self.run.horizon = self.now;
+        SimResult { per_task: self.metrics, run: self.run, trace: self.trace }
+    }
+}
+
+/// Simulate `ts` under `cfg`.
+pub fn simulate(ts: &TaskSet, cfg: &SimConfig) -> SimResult {
+    debug_assert!(ts.validate().is_ok(), "invalid taskset: {:?}", ts.validate());
+    Engine::new(ts, cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ms, GpuSegment, Platform, Task, TaskSet};
+
+    fn platform() -> Platform {
+        Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+    }
+
+    fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
+        Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(t),
+            deadline: ms(t),
+            cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
+            gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
+            core,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    #[test]
+    fn lone_task_tsg_rr_exact_response() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let cfg = SimConfig::new(Policy::TsgRr, ms(1000.0));
+        let res = simulate(&ts, &cfg);
+        // Alone: R = C + max(G^m, θ + G^e) = 2 + 5.2 = 7.2 ms
+        assert_eq!(res.per_task[0].jobs, 10);
+        assert_eq!(res.per_task[0].mort(), Some(ms(7.2)));
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn lone_task_gcaps_charges_epsilon() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let cfg = SimConfig::new(Policy::Gcaps, ms(1000.0));
+        let res = simulate(&ts, &cfg);
+        // R = C + 2α + max(G^m, θ + G^e) = 2 + 1.6 + 5.2 = 8.8 ms
+        assert_eq!(res.per_task[0].mort(), Some(ms(8.8)));
+        assert_eq!(
+            res.per_task[0].runlist_updates.len() as u64,
+            2 * res.per_task[0].jobs
+        );
+    }
+
+    #[test]
+    fn lone_task_lock_policies_zero_overhead() {
+        for policy in [Policy::Mpcp, Policy::FmlpPlus] {
+            let ts =
+                TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+            let res = simulate(&ts, &SimConfig::new(policy, ms(500.0)));
+            // R = C + max(G^m, G^e) = 7 ms
+            assert_eq!(res.per_task[0].mort(), Some(ms(7.0)), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn gcaps_preempts_lower_priority_gpu() {
+        let hi = gpu_task(0, 0, 2, 1.0, 0.5, 4.0, 50.0);
+        let lo = gpu_task(1, 1, 1, 1.0, 0.5, 40.0, 100.0);
+        let ts = TaskSet::new(vec![hi, lo], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(1000.0)));
+        let mort0 = res.per_task[0].mort().unwrap();
+        // hp bound: C + 2α + θ + G^e + blocking ε ≈ 7.4 ms ≪ lo's 40 ms kernel
+        assert!(mort0 <= ms(8.0), "hp MORT = {mort0} µs");
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn mpcp_blocks_high_priority_for_whole_gcs() {
+        let hi = gpu_task(0, 0, 2, 1.0, 0.5, 4.0, 50.0);
+        let lo = gpu_task(1, 1, 1, 1.0, 0.5, 40.0, 100.0);
+        let ts = TaskSet::new(vec![hi, lo], platform());
+        // Offset hp so its request lands mid-gcs of the low-priority task.
+        let res = simulate(
+            &ts,
+            &SimConfig::new(Policy::Mpcp, ms(1000.0)).with_offsets(vec![ms(10.0), 0]),
+        );
+        let mort0 = res.per_task[0].mort().unwrap();
+        assert!(mort0 >= ms(30.0), "hp MORT = {mort0} µs under MPCP");
+    }
+
+    #[test]
+    fn tsg_rr_interleaves_fairly() {
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 100.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 100.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(2000.0)));
+        for i in [0, 1] {
+            let mort = res.per_task[i].mort().unwrap();
+            assert!(
+                mort >= ms(18.0) && mort <= ms(27.0),
+                "tau{i} MORT = {mort} µs"
+            );
+        }
+        assert!(res.run.gpu_context_switches > 10);
+    }
+
+    #[test]
+    fn busy_wait_blocks_lower_priority_cpu() {
+        let mut hp = gpu_task(0, 0, 2, 1.0, 0.5, 20.0, 100.0);
+        hp.mode = WaitMode::BusyWait;
+        let lp = Task::cpu_only(1, 0, 1, ms(5.0), ms(100.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let busy = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(1000.0)));
+        let mut ts2 = ts.clone();
+        ts2.tasks[0].mode = WaitMode::SelfSuspend;
+        let susp = simulate(&ts2, &SimConfig::new(Policy::Gcaps, ms(1000.0)));
+        let rb = busy.per_task[1].mort().unwrap();
+        let rs = susp.per_task[1].mort().unwrap();
+        assert!(rb >= rs + ms(15.0), "busy {rb} vs suspend {rs}");
+    }
+
+    #[test]
+    fn self_suspension_frees_cpu() {
+        let hp = gpu_task(0, 0, 2, 1.0, 0.5, 20.0, 100.0);
+        let lp = Task::cpu_only(1, 0, 1, ms(5.0), ms(100.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(500.0)));
+        let r = res.per_task[1].mort().unwrap();
+        assert!(r <= ms(12.0), "lp MORT = {r}");
+    }
+
+    #[test]
+    fn deadline_misses_counted() {
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 60.0, 100.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 60.0, 100.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
+        assert!(res.per_task[1].deadline_misses > 0);
+        assert!(!res.no_rt_misses(&ts));
+    }
+
+    #[test]
+    fn offsets_shift_releases() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let cfg = SimConfig::new(Policy::TsgRr, ms(250.0)).with_offsets(vec![ms(60.0)]);
+        let res = simulate(&ts, &cfg);
+        assert_eq!(res.per_task[0].jobs, 2);
+    }
+
+    #[test]
+    fn trace_records_gpu_intervals() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let cfg = SimConfig::new(Policy::Gcaps, ms(100.0)).with_trace();
+        let res = simulate(&ts, &cfg);
+        let tr = res.trace.unwrap();
+        let gpu_time = tr.occupancy(Resource::Gpu, 0, 0, ms(100.0));
+        assert_eq!(gpu_time, ms(5.0) + 200); // G^e + θ switch
+        assert_eq!(tr.releases.len(), 1);
+        assert_eq!(tr.completions.len(), 1);
+    }
+
+    #[test]
+    fn best_effort_runs_only_when_gpu_free_gcaps() {
+        let rt = gpu_task(0, 0, 1, 1.0, 0.5, 5.0, 50.0);
+        let mut be = gpu_task(1, 1, 0, 1.0, 0.5, 200.0, 400.0);
+        be.best_effort = true;
+        let ts = TaskSet::new(vec![rt, be], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
+        let mort_rt = res.per_task[0].mort().unwrap();
+        assert!(mort_rt <= ms(11.0), "RT MORT = {mort_rt} µs with BE hog");
+        assert!(res.per_task[1].jobs >= 1);
+    }
+
+    #[test]
+    fn tsg_rr_does_not_prioritise() {
+        let rt = gpu_task(0, 0, 1, 1.0, 0.5, 5.0, 50.0);
+        let mut be = gpu_task(1, 1, 0, 1.0, 0.5, 200.0, 400.0);
+        be.best_effort = true;
+        let ts = TaskSet::new(vec![rt, be], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(2000.0)));
+        let mort_rt = res.per_task[0].mort().unwrap();
+        assert!(mort_rt >= ms(10.0), "RT MORT = {mort_rt} µs should inflate");
+    }
+
+    #[test]
+    fn gcaps_three_way_contention_progresses() {
+        let tasks = vec![
+            gpu_task(0, 0, 3, 1.0, 0.5, 8.0, 40.0),
+            gpu_task(1, 1, 2, 1.0, 0.5, 8.0, 60.0),
+            gpu_task(2, 0, 1, 1.0, 0.5, 8.0, 80.0),
+        ];
+        let ts = TaskSet::new(tasks, platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
+        for i in 0..3 {
+            assert!(res.per_task[i].jobs > 0, "task {i} starved");
+        }
+    }
+
+    #[test]
+    fn gm_overlaps_ge_async() {
+        // G^m = 4 ms ∥ G^e = 4 ms: the segment takes ~max(4, θ+4) not 8.
+        let t = gpu_task(0, 0, 1, 2.0, 4.0, 4.0, 100.0);
+        let ts = TaskSet::new(vec![t], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(300.0)));
+        assert_eq!(res.per_task[0].mort(), Some(ms(2.0 + 4.2)));
+    }
+
+    #[test]
+    fn driver_calls_bounded_by_epsilon() {
+        // Three GPU tasks hammering the driver: every measured runlist
+        // update stays within ~2ε (own α + θ plus at most one same-core
+        // non-preemptible call stall).
+        let tasks = vec![
+            gpu_task(0, 0, 3, 1.0, 0.2, 3.0, 30.0),
+            gpu_task(1, 1, 2, 1.0, 0.2, 3.0, 40.0),
+            gpu_task(2, 0, 1, 1.0, 0.2, 3.0, 50.0),
+        ];
+        let ts = TaskSet::new(tasks, platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(3000.0)));
+        let eps = ts.platform.epsilon;
+        // Highest-priority task: blocked by at most one in-flight call.
+        for &d in &res.per_task[0].runlist_updates {
+            assert!(d <= 2 * eps, "hp runlist update took {d} µs");
+        }
+    }
+}

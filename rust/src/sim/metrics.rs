@@ -1,0 +1,75 @@
+//! Per-task simulation metrics: response times (→ MORT, Fig. 10/11 and
+//! Table 5), deadline misses, and the ε / context-switch overhead
+//! samples behind Figs. 12–13.
+
+use crate::model::Time;
+use crate::util::stats::Summary;
+
+/// Metrics collected for one task over a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct TaskMetrics {
+    /// Response time of every completed job (µs).
+    pub response_times: Vec<Time>,
+    /// Jobs that completed after their absolute deadline.
+    pub deadline_misses: u64,
+    /// Jobs completed.
+    pub jobs: u64,
+    /// Measured runlist-update delays (GCAPS driver calls: wait + α + θ),
+    /// two per GPU segment (begin/end). Empty under other policies.
+    pub runlist_updates: Vec<Time>,
+}
+
+impl TaskMetrics {
+    /// Maximum observed response time (the paper's MORT metric).
+    pub fn mort(&self) -> Option<Time> {
+        self.response_times.iter().copied().max()
+    }
+
+    pub fn summary_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> =
+            self.response_times.iter().map(|&t| t as f64 / 1000.0).collect();
+        Summary::of(&xs)
+    }
+}
+
+/// Whole-run aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// GPU context switches performed (entries × θ charged).
+    pub gpu_context_switches: u64,
+    /// Total GPU busy time (µs, excluding θ).
+    pub gpu_busy: Time,
+    /// Total θ overhead time on the GPU (µs).
+    pub gpu_switch_time: Time,
+    /// Simulated horizon (µs).
+    pub horizon: Time,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mort_is_max() {
+        let m = TaskMetrics {
+            response_times: vec![5, 9, 3],
+            ..Default::default()
+        };
+        assert_eq!(m.mort(), Some(9));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = TaskMetrics::default();
+        assert_eq!(m.mort(), None);
+        assert!(m.summary_ms().is_none());
+    }
+
+    #[test]
+    fn summary_in_ms() {
+        let m = TaskMetrics { response_times: vec![1000, 3000], ..Default::default() };
+        let s = m.summary_ms().unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

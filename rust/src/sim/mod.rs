@@ -1,0 +1,71 @@
+//! Discrete-event simulator of the multi-core CPU + Tegra-style GPU
+//! platform (the paper's testbed, rebuilt in software — see DESIGN.md §1).
+//!
+//! The simulator models, cycle-exactly at µs granularity:
+//!
+//! - partitioned preemptive fixed-priority CPU scheduling (§4);
+//! - the GPU device driver's runlist with one TSG per process (§2),
+//!   under four interchangeable policies:
+//!   - [`Policy::TsgRr`] — the default driver's work-conserving
+//!     time-sliced round-robin with slice L and context-switch cost θ;
+//!   - [`Policy::Gcaps`] — Alg. 1: priority-driven preemptive context
+//!     scheduling with runlist-update delay ε = α + θ, the rt-mutex
+//!     serialized driver calls issued by `gcapsGpuSegBegin/End`;
+//!   - [`Policy::Mpcp`] — GPU as a priority-queued mutex with priority
+//!     boosting (zero protocol overhead, as the paper's analysis assumes);
+//!   - [`Policy::FmlpPlus`] — same but FIFO-ordered.
+//! - busy-waiting and self-suspension during pure GPU execution
+//!   (per-task [`crate::model::WaitMode`]).
+//!
+//! The engine is "recompute-on-event": at each event timestamp the CPU
+//! and GPU allocations are recomputed from scratch, the next event
+//! horizon is derived, and all running work advances by that quantum.
+
+pub mod engine;
+pub mod metrics;
+pub mod perfetto;
+pub mod trace;
+
+pub use engine::{simulate, SimConfig, SimResult};
+pub use metrics::TaskMetrics;
+pub use trace::{Trace, TraceEvent};
+
+/// GPU scheduling policy under simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Default Nvidia Tegra driver: time-sliced round-robin TSGs.
+    TsgRr,
+    /// The paper's contribution: Alg. 1 preemptive priority scheduling.
+    Gcaps,
+    /// Extension (paper §8 future work): Alg. 1 with dynamic priorities —
+    /// GPU contexts are preempted by earliest absolute job deadline (EDF)
+    /// instead of fixed task priority.
+    GcapsEdf,
+    /// Synchronization baseline: MPCP (priority-ordered GPU mutex).
+    Mpcp,
+    /// Synchronization baseline: FMLP+ (FIFO-ordered GPU mutex).
+    FmlpPlus,
+}
+
+impl Policy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::TsgRr => "tsg_rr",
+            Policy::Gcaps => "gcaps",
+            Policy::GcapsEdf => "gcaps_edf",
+            Policy::Mpcp => "mpcp",
+            Policy::FmlpPlus => "fmlp+",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Policy> {
+        match s {
+            "tsg_rr" => Some(Policy::TsgRr),
+            "gcaps" => Some(Policy::Gcaps),
+            "gcaps_edf" => Some(Policy::GcapsEdf),
+            "mpcp" => Some(Policy::Mpcp),
+            "fmlp+" | "fmlp" => Some(Policy::FmlpPlus),
+            _ => None,
+        }
+    }
+}

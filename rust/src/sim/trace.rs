@@ -1,0 +1,181 @@
+//! Execution traces and ASCII Gantt rendering — used to reproduce the
+//! paper's schedule illustrations (Figs. 3, 5, 6, 7) and to debug the
+//! policies. The engine emits an interval per (resource, occupant,
+//! activity) stretch; the renderer draws one row per task per resource.
+
+use crate::model::{Time, to_ms};
+
+/// A scheduling resource in the simulated platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    Core(usize),
+    Gpu,
+}
+
+/// What the occupant was doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// Plain CPU segment execution.
+    CpuSeg,
+    /// GPU-segment misc CPU work (kernel launches, G^m).
+    GpuMisc,
+    /// Busy-waiting on the CPU during pure GPU execution.
+    BusyWait,
+    /// Driver runlist-update call (GCAPS ε, CPU side).
+    DriverCall,
+    /// Pure GPU execution (G^e).
+    GpuExec,
+    /// GPU context switch (θ) — occupant is the incoming task.
+    CtxSwitch,
+}
+
+impl Activity {
+    fn glyph(&self) -> char {
+        match self {
+            Activity::CpuSeg => '#',
+            Activity::GpuMisc => 'm',
+            Activity::BusyWait => 'w',
+            Activity::DriverCall => 'e',
+            Activity::GpuExec => 'G',
+            Activity::CtxSwitch => 's',
+        }
+    }
+}
+
+/// One contiguous interval of `task` on `resource`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub resource: Resource,
+    pub task: usize,
+    pub activity: Activity,
+    pub start: Time,
+    pub end: Time,
+}
+
+/// A full run trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub releases: Vec<(usize, Time)>,
+    pub completions: Vec<(usize, Time)>,
+}
+
+impl Trace {
+    pub fn push(&mut self, ev: TraceEvent) {
+        if ev.end > ev.start {
+            self.events.push(ev);
+        }
+    }
+
+    /// Total time `task` spent on `resource` in [t0, t1).
+    pub fn occupancy(&self, resource: Resource, task: usize, t0: Time, t1: Time) -> Time {
+        self.events
+            .iter()
+            .filter(|e| e.resource == resource && e.task == task)
+            .map(|e| e.end.min(t1).saturating_sub(e.start.max(t0)))
+            .sum()
+    }
+
+    /// Render an ASCII Gantt chart of [t0, t1) at `cols` columns.
+    /// One row per task per resource it ever occupied.
+    pub fn gantt(&self, num_cores: usize, num_tasks: usize, t0: Time, t1: Time, cols: usize) -> String {
+        let mut out = String::new();
+        let span = (t1 - t0).max(1);
+        let col_of = |t: Time| -> usize {
+            (((t.saturating_sub(t0)) as u128 * cols as u128) / span as u128) as usize
+        };
+        let mut resources: Vec<Resource> =
+            (0..num_cores).map(Resource::Core).collect();
+        resources.push(Resource::Gpu);
+        for res in resources {
+            let res_label = match res {
+                Resource::Core(k) => format!("CPU{k}"),
+                Resource::Gpu => "GPU ".to_string(),
+            };
+            for task in 0..num_tasks {
+                let evs: Vec<&TraceEvent> = self
+                    .events
+                    .iter()
+                    .filter(|e| e.resource == res && e.task == task && e.start < t1 && e.end > t0)
+                    .collect();
+                if evs.is_empty() {
+                    continue;
+                }
+                let mut row = vec![' '; cols];
+                for e in evs {
+                    let a = col_of(e.start.max(t0));
+                    let b = col_of(e.end.min(t1)).min(cols.saturating_sub(1));
+                    for c in row.iter_mut().take(b + 1).skip(a) {
+                        *c = e.activity.glyph();
+                    }
+                }
+                out.push_str(&format!(
+                    "{res_label} tau{task:<2} |{}|\n",
+                    row.iter().collect::<String>()
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "time: {:.1} .. {:.1} ms   (# cpu, m misc, w busy-wait, e driver, G gpu, s ctx-switch)\n",
+            to_ms(t0),
+            to_ms(t1)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drops_empty_intervals() {
+        let mut t = Trace::default();
+        t.push(TraceEvent {
+            resource: Resource::Gpu,
+            task: 0,
+            activity: Activity::GpuExec,
+            start: 5,
+            end: 5,
+        });
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn occupancy_clips_to_window() {
+        let mut t = Trace::default();
+        t.push(TraceEvent {
+            resource: Resource::Core(0),
+            task: 1,
+            activity: Activity::CpuSeg,
+            start: 0,
+            end: 100,
+        });
+        assert_eq!(t.occupancy(Resource::Core(0), 1, 50, 80), 30);
+        assert_eq!(t.occupancy(Resource::Core(0), 2, 0, 100), 0);
+        assert_eq!(t.occupancy(Resource::Gpu, 1, 0, 100), 0);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let mut t = Trace::default();
+        t.push(TraceEvent {
+            resource: Resource::Core(0),
+            task: 0,
+            activity: Activity::CpuSeg,
+            start: 0,
+            end: 1000,
+        });
+        t.push(TraceEvent {
+            resource: Resource::Gpu,
+            task: 0,
+            activity: Activity::GpuExec,
+            start: 1000,
+            end: 2000,
+        });
+        let s = t.gantt(1, 1, 0, 2000, 40);
+        assert!(s.contains("CPU0 tau0"));
+        assert!(s.contains("GPU  tau0"));
+        assert!(s.contains('#') && s.contains('G'));
+    }
+}

@@ -1,0 +1,310 @@
+//! Random taskset generation per Table 3 of the paper (§7.1):
+//!
+//! | Number of CPUs                         | 4            |
+//! | Number of tasks per CPU                | [3, 6]       |
+//! | Ratio of GPU-using tasks               | [40, 60] %   |
+//! | Utilization per CPU                    | [0.4, 0.6]   |
+//! | Task period                            | [30, 500] ms |
+//! | Number of GPU segments per task        | [1, 3]       |
+//! | Ratio of GPU exec. to CPU exec. (G/C)  | [0.2, 2]     |
+//! | Ratio of GPU misc. in GPU exec. (G^m/G)| [0.1, 0.3]   |
+//! | Runlist update cost (ε)                | 1 ms         |
+//!
+//! Pipeline: per-CPU UUniFast utilizations → per-task period/segment
+//! randomization → RM priority assignment → WFD re-allocation for load
+//! balance → optional best-effort designation (Fig. 8f).
+
+use crate::model::{GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
+use crate::taskgen::uunifast::uunifast;
+use crate::util::rng::Pcg32;
+
+/// Generation parameters (defaults = Table 3).
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub num_cpus: usize,
+    pub tasks_per_cpu: (usize, usize),
+    pub gpu_task_ratio: (f64, f64),
+    pub util_per_cpu: (f64, f64),
+    pub period_ms: (f64, f64),
+    pub gpu_segments: (usize, usize),
+    pub g_to_c_ratio: (f64, f64),
+    pub gm_in_g_ratio: (f64, f64),
+    /// Fraction of tasks designated best-effort (Fig. 8f); 0 by default.
+    pub best_effort_ratio: f64,
+    /// Wait mode applied to every task (each analysis mode is evaluated
+    /// on a matching taskset, as in the paper).
+    pub mode: WaitMode,
+    pub platform: Platform,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams {
+            num_cpus: 4,
+            tasks_per_cpu: (3, 6),
+            gpu_task_ratio: (0.4, 0.6),
+            util_per_cpu: (0.4, 0.6),
+            period_ms: (30.0, 500.0),
+            gpu_segments: (1, 3),
+            g_to_c_ratio: (0.2, 2.0),
+            gm_in_g_ratio: (0.1, 0.3),
+            best_effort_ratio: 0.0,
+            mode: WaitMode::SelfSuspend,
+            platform: Platform::default(),
+        }
+    }
+}
+
+/// Split `total` into `n` random positive parts (uniform stick-breaking).
+fn split_random(rng: &mut Pcg32, total: Time, n: usize) -> Vec<Time> {
+    assert!(n > 0);
+    if n == 1 {
+        return vec![total];
+    }
+    // Draw n weights, normalize; integer-round with remainder to the last.
+    let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.2, 1.0)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut parts: Vec<Time> = weights
+        .iter()
+        .take(n - 1)
+        .map(|w| ((w / wsum) * total as f64).floor() as Time)
+        .collect();
+    let used: Time = parts.iter().sum();
+    parts.push(total.saturating_sub(used));
+    parts
+}
+
+/// Generate one random taskset.
+pub fn generate(rng: &mut Pcg32, p: &GenParams) -> TaskSet {
+    let mut tasks: Vec<Task> = Vec::new();
+    let gpu_ratio = rng.range_f64(p.gpu_task_ratio.0, p.gpu_task_ratio.1);
+
+    for cpu in 0..p.num_cpus {
+        let n = rng.range_usize(p.tasks_per_cpu.0, p.tasks_per_cpu.1);
+        let u_total = rng.range_f64(p.util_per_cpu.0, p.util_per_cpu.1);
+        let utils = uunifast(rng, n, u_total);
+        // Exact GPU-task count for this CPU, rounding the ratio.
+        let n_gpu = ((n as f64 * gpu_ratio).round() as usize).min(n);
+        let mut is_gpu: Vec<bool> = (0..n).map(|i| i < n_gpu).collect();
+        rng.shuffle(&mut is_gpu);
+
+        for (k, util) in utils.into_iter().enumerate() {
+            let period_ms = rng.range_f64(p.period_ms.0, p.period_ms.1);
+            let period: Time = (period_ms * 1000.0).round() as Time;
+            // Total demand W = U * T, at least 100 µs to stay meaningful.
+            let demand = ((util * period as f64).round() as Time).max(100);
+            let id = tasks.len();
+            let task = if is_gpu[k] {
+                let rho = rng.range_f64(p.g_to_c_ratio.0, p.g_to_c_ratio.1);
+                let g_total = ((demand as f64 * rho / (1.0 + rho)).round() as Time)
+                    .clamp(1, demand - 1);
+                let c_total = demand - g_total;
+                let eta_g = rng.range_usize(p.gpu_segments.0, p.gpu_segments.1);
+                let g_parts = split_random(rng, g_total, eta_g);
+                let gpu_segments: Vec<GpuSegment> = g_parts
+                    .into_iter()
+                    .map(|g| {
+                        let gm_ratio = rng.range_f64(p.gm_in_g_ratio.0, p.gm_in_g_ratio.1);
+                        let gm = ((g as f64 * gm_ratio).round() as Time).min(g);
+                        GpuSegment::new(gm, g - gm)
+                    })
+                    .collect();
+                let cpu_segments = split_random(rng, c_total.max(eta_g as Time + 1), eta_g + 1);
+                Task {
+                    id,
+                    name: format!("tau{id}"),
+                    period,
+                    deadline: period,
+                    cpu_segments,
+                    gpu_segments,
+                    core: cpu,
+                    cpu_prio: 0, // assigned below
+                    gpu_prio: 0,
+                    best_effort: false,
+                    mode: p.mode,
+                }
+            } else {
+                let mut t = Task::cpu_only(id, cpu, 0, demand, period);
+                t.mode = p.mode;
+                t
+            };
+            tasks.push(task);
+        }
+    }
+
+    // Best-effort designation (Fig. 8f): random subset loses RT priority.
+    if p.best_effort_ratio > 0.0 {
+        let n_be = ((tasks.len() as f64 * p.best_effort_ratio).round() as usize)
+            .min(tasks.len().saturating_sub(1));
+        let mut idx: Vec<usize> = (0..tasks.len()).collect();
+        rng.shuffle(&mut idx);
+        for &i in idx.iter().take(n_be) {
+            tasks[i].best_effort = true;
+        }
+    }
+
+    assign_rm_priorities(&mut tasks);
+    wfd_reallocate(&mut tasks, p.num_cpus);
+
+    TaskSet::new(tasks, Platform { num_cpus: p.num_cpus, ..p.platform })
+}
+
+/// Rate-Monotonic priorities: shorter period = higher priority. Unique
+/// values, ties broken by id. Best-effort tasks keep priority 0.
+pub fn assign_rm_priorities(tasks: &mut [Task]) {
+    let mut order: Vec<usize> = (0..tasks.len()).filter(|&i| !tasks[i].best_effort).collect();
+    // Longest period first => lowest priority value first.
+    order.sort_by(|&a, &b| {
+        tasks[b].period.cmp(&tasks[a].period).then(tasks[b].id.cmp(&tasks[a].id))
+    });
+    for (rank, &i) in order.iter().enumerate() {
+        tasks[i].cpu_prio = rank as u32 + 1;
+        tasks[i].gpu_prio = rank as u32 + 1;
+    }
+    for t in tasks.iter_mut().filter(|t| t.best_effort) {
+        t.cpu_prio = 0;
+        t.gpu_prio = 0;
+    }
+}
+
+/// Worst-Fit-Decreasing re-allocation: sort by utilization descending,
+/// place each task on the currently least-loaded core (paper §7.1:
+/// "re-allocate the tasks to the CPUs for load balancing with WFD").
+pub fn wfd_reallocate(tasks: &mut [Task], num_cpus: usize) {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[b]
+            .utilization()
+            .partial_cmp(&tasks[a].utilization())
+            .unwrap()
+            .then(tasks[a].id.cmp(&tasks[b].id))
+    });
+    let mut load = vec![0.0f64; num_cpus];
+    for &i in &order {
+        let core = (0..num_cpus)
+            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+            .unwrap();
+        tasks[i].core = core;
+        load[core] += tasks[i].utilization();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn generates_valid_tasksets() {
+        forall("taskgen validity", 100, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            ts.validate().map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn respects_table3_structure() {
+        forall("taskgen table3 bounds", 100, |rng| {
+            let p = GenParams::default();
+            let ts = generate(rng, &p);
+            let n = ts.len();
+            if !(12..=24).contains(&n) {
+                return Err(format!("{n} tasks not in [12, 24]"));
+            }
+            for t in &ts.tasks {
+                let pms = t.period as f64 / 1000.0;
+                if !(29.9..=500.1).contains(&pms) {
+                    return Err(format!("period {pms} ms out of range"));
+                }
+                if t.uses_gpu() && !(1..=3).contains(&t.eta_g()) {
+                    return Err(format!("η_g = {}", t.eta_g()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gpu_ratio_in_band() {
+        forall("taskgen gpu ratio", 60, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            let ratio = ts.num_gpu_tasks() as f64 / ts.len() as f64;
+            // rounding per-CPU can push slightly outside [0.4, 0.6]
+            if !(0.25..=0.75).contains(&ratio) {
+                return Err(format!("gpu ratio {ratio}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rm_priorities_follow_periods() {
+        forall("RM order", 60, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            for a in ts.rt_tasks() {
+                for b in ts.rt_tasks() {
+                    if a.period < b.period && a.cpu_prio <= b.cpu_prio {
+                        return Err(format!(
+                            "task {} (T = {}) prio {} <= task {} (T = {}) prio {}",
+                            a.id, a.period, a.cpu_prio, b.id, b.period, b.cpu_prio
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wfd_balances_load() {
+        forall("WFD balance", 60, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            let loads: Vec<f64> =
+                (0..ts.platform.num_cpus).map(|c| ts.core_utilization(c)).collect();
+            let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+            let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+            // WFD keeps the spread below the largest single task's util,
+            // which Table 3 bounds well under 0.6.
+            if max - min > 0.61 {
+                return Err(format!("load spread {} too large: {loads:?}", max - min));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn best_effort_ratio_applied() {
+        let mut rng = Pcg32::seeded(42);
+        let p = GenParams { best_effort_ratio: 0.4, ..Default::default() };
+        let ts = generate(&mut rng, &p);
+        let be = ts.be_tasks().count();
+        let expect = (ts.len() as f64 * 0.4).round() as usize;
+        assert_eq!(be, expect);
+        ts.validate().unwrap();
+    }
+
+    #[test]
+    fn split_random_conserves_total() {
+        forall("split conserves", 200, |rng| {
+            let total = rng.range_u64(10, 100_000);
+            let n = rng.range_usize(1, 5);
+            let parts = split_random(rng, total, n);
+            if parts.iter().sum::<u64>() != total {
+                return Err(format!("parts {parts:?} don't sum to {total}"));
+            }
+            if parts.len() != n {
+                return Err("wrong part count".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn busy_mode_propagates() {
+        let mut rng = Pcg32::seeded(1);
+        let p = GenParams { mode: WaitMode::BusyWait, ..Default::default() };
+        let ts = generate(&mut rng, &p);
+        assert!(ts.tasks.iter().all(|t| t.mode == WaitMode::BusyWait));
+    }
+}

@@ -1,0 +1,8 @@
+//! Random taskset generation (paper §7.1, Table 3): UUniFast utilization
+//! draws, Rate-Monotonic priorities, Worst-Fit-Decreasing allocation.
+
+pub mod generator;
+pub mod uunifast;
+
+pub use generator::{assign_rm_priorities, generate, wfd_reallocate, GenParams};
+pub use uunifast::uunifast;

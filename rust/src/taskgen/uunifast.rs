@@ -1,0 +1,76 @@
+//! UUniFast (Bini & Buttazzo 2005): draw n task utilizations summing to
+//! a target total, uniformly over the simplex. Used per-CPU by the
+//! taskset generator, exactly as in the paper's §7.1 setup.
+
+use crate::util::rng::Pcg32;
+
+/// Generate `n` utilizations summing to `total` (UUniFast).
+pub fn uunifast(rng: &mut Pcg32, n: usize, total: f64) -> Vec<f64> {
+    assert!(n > 0, "uunifast needs n > 0");
+    let mut utils = Vec::with_capacity(n);
+    let mut sum = total;
+    for i in 1..n {
+        // next_sum = sum * U^(1/(n-i)) with U uniform in (0,1)
+        let next_sum = sum * rng.f64().powf(1.0 / (n - i) as f64);
+        utils.push(sum - next_sum);
+        sum = next_sum;
+    }
+    utils.push(sum);
+    utils
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn sums_to_total() {
+        let mut rng = Pcg32::seeded(5);
+        for n in 1..10 {
+            let u = uunifast(&mut rng, n, 0.5);
+            let s: f64 = u.iter().sum();
+            assert!((s - 0.5).abs() < 1e-12, "n = {n}: sum = {s}");
+            assert_eq!(u.len(), n);
+        }
+    }
+
+    #[test]
+    fn all_positive_property() {
+        forall("uunifast positive", 200, |rng| {
+            let n = rng.range_usize(1, 12);
+            let total = rng.range_f64(0.05, 0.95);
+            let u = uunifast(rng, n, total);
+            for (i, &v) in u.iter().enumerate() {
+                if !(v >= 0.0 && v <= total + 1e-12) {
+                    return Err(format!("util[{i}] = {v} out of [0, {total}]"));
+                }
+            }
+            let s: f64 = u.iter().sum();
+            if (s - total).abs() > 1e-9 {
+                return Err(format!("sum {s} != {total}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_per_task_is_total_over_n() {
+        // Statistical sanity: E[u_i] = total/n.
+        let mut rng = Pcg32::seeded(77);
+        let n = 4;
+        let total = 0.6;
+        let reps = 20_000;
+        let mut acc = vec![0.0; n];
+        for _ in 0..reps {
+            let u = uunifast(&mut rng, n, total);
+            for (a, v) in acc.iter_mut().zip(u) {
+                *a += v;
+            }
+        }
+        for a in acc {
+            let mean = a / reps as f64;
+            assert!((mean - total / n as f64).abs() < 0.01, "mean = {mean}");
+        }
+    }
+}

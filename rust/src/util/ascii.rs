@@ -1,0 +1,130 @@
+//! ASCII rendering of experiment outputs: line charts for the Fig. 8/9
+//! schedulability curves, bar charts for Fig. 10/13, histograms for
+//! Fig. 12, and Gantt charts for the schedule examples (Figs. 3-7).
+//! All experiment binaries print these next to the CSVs they write.
+
+/// Render a multi-series line chart: `series` = (label, points(x, y)).
+/// Y is assumed to be in [0, y_max]; x values are the category labels.
+pub fn line_chart(
+    title: &str,
+    xlabel: &str,
+    xticks: &[String],
+    series: &[(String, Vec<f64>)],
+    y_max: f64,
+    height: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let width = xticks.len();
+    let glyphs = ['o', '+', 'x', '*', '#', '@', '%', '&', '$', '~'];
+    // Raster: rows from top (y_max) to bottom (0).
+    let mut raster = vec![vec![' '; width * 6]; height + 1];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (xi, &y) in ys.iter().enumerate() {
+            let frac = (y / y_max).clamp(0.0, 1.0);
+            let row = height - (frac * height as f64).round() as usize;
+            let col = xi * 6 + 2;
+            if raster[row][col] == ' ' {
+                raster[row][col] = g;
+            } else {
+                // overlap marker
+                raster[row][col] = '?';
+            }
+        }
+    }
+    for (ri, row) in raster.iter().enumerate() {
+        let yv = y_max * (height - ri) as f64 / height as f64;
+        out.push_str(&format!("{yv:6.2} |"));
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:6} +{}\n", "", "-".repeat(width * 6)));
+    out.push_str(&format!("{:8}", ""));
+    for t in xticks {
+        out.push_str(&format!("{t:<6}"));
+    }
+    out.push('\n');
+    out.push_str(&format!("        ({xlabel})\n"));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {label}\n", glyphs[si % glyphs.len()]));
+    }
+    out
+}
+
+/// Horizontal bar chart (Fig. 10 MORT per task, Fig. 13 overheads).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], unit: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let max = rows.iter().map(|r| r.1).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(4);
+    for (label, v) in rows {
+        let n = ((v / max) * 50.0).round() as usize;
+        out.push_str(&format!(
+            "{label:>label_w$} | {} {v:.3} {unit}\n",
+            "#".repeat(n)
+        ));
+    }
+    out
+}
+
+/// Histogram rendering (Fig. 12).
+pub fn histogram_chart(title: &str, h: &crate::util::stats::Histogram, unit: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} (n = {}) ==\n", h.total()));
+    let max = h.bins.iter().copied().max().unwrap_or(1).max(1);
+    for (k, &c) in h.bins.iter().enumerate() {
+        let (lo, hi) = h.bin_edges(k);
+        let n = (c * 50 / max).min(50);
+        out.push_str(&format!(
+            "[{lo:9.3}, {hi:9.3}) {unit} | {:<50} {c}\n",
+            "#".repeat(n)
+        ));
+    }
+    if h.underflow > 0 {
+        out.push_str(&format!("underflow: {}\n", h.underflow));
+    }
+    if h.overflow > 0 {
+        out.push_str(&format!("overflow: {}\n", h.overflow));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Histogram;
+
+    #[test]
+    fn line_chart_contains_series_labels() {
+        let s = line_chart(
+            "t",
+            "x",
+            &["a".into(), "b".into()],
+            &[("one".into(), vec![0.5, 1.0]), ("two".into(), vec![0.1, 0.2])],
+            1.0,
+            10,
+        );
+        assert!(s.contains("one") && s.contains("two") && s.contains("== t =="));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart("b", &[("x".into(), 1.0), ("y".into(), 2.0)], "ms");
+        let lines: Vec<&str> = s.lines().collect();
+        let xhash = lines[1].matches('#').count();
+        let yhash = lines[2].matches('#').count();
+        assert_eq!(yhash, 50);
+        assert_eq!(xhash, 25);
+    }
+
+    #[test]
+    fn histogram_chart_renders_counts() {
+        let mut h = Histogram::new(0.0, 2.0, 2);
+        h.add(0.5);
+        h.add(1.5);
+        h.add(1.6);
+        let s = histogram_chart("h", &h, "ms");
+        assert!(s.contains("n = 3"));
+    }
+}

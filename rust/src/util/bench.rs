@@ -1,0 +1,103 @@
+//! Tiny benchmark harness (criterion is not in the offline crate set).
+//!
+//! Used by the `[[bench]]` targets (harness = false): warm up, run
+//! batches until a minimum measurement time, report mean/min ns per
+//! iteration plus throughput. Output format is one line per benchmark so
+//! `cargo bench` output stays diffable; EXPERIMENTS.md §Perf records the
+//! before/after numbers from these lines.
+
+use std::time::{Duration, Instant};
+
+/// Measurement result for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let mean = human_ns(self.mean_ns);
+        let min = human_ns(self.min_ns);
+        format!(
+            "bench {:<44} {:>12}/iter (min {:>12}, {} iters)",
+            self.name, mean, min, self.iters
+        )
+    }
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure: warm up briefly, then measure batches until
+/// `min_time` has elapsed. Returns per-iteration stats.
+pub fn bench<T>(name: &str, min_time: Duration, mut f: impl FnMut() -> T) -> Measurement {
+    // Warm-up: run until ~10% of min_time or 3 iterations.
+    let warm_deadline = Instant::now() + min_time / 10;
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_deadline || warm_iters < 3 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+
+    let mut total = Duration::ZERO;
+    let mut iters = 0u64;
+    let mut min_ns = f64::INFINITY;
+    // Batch size chosen from warm-up rate to keep timer overhead < 1%.
+    while total < min_time {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        let dt = start.elapsed();
+        min_ns = min_ns.min(dt.as_nanos() as f64);
+        total += dt;
+        iters += 1;
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: total.as_nanos() as f64 / iters as f64,
+        min_ns,
+    }
+}
+
+/// Run + print in one call; returns the measurement for further use.
+pub fn run<T>(name: &str, f: impl FnMut() -> T) -> Measurement {
+    let m = bench(name, Duration::from_millis(700), f);
+    println!("{}", m.report());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("noop", Duration::from_millis(10), || 1 + 1);
+        assert!(m.iters > 0);
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.min_ns <= m.mean_ns);
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert!(human_ns(12.0).contains("ns"));
+        assert!(human_ns(12_000.0).contains("µs"));
+        assert!(human_ns(12_000_000.0).contains("ms"));
+        assert!(human_ns(2_000_000_000.0).ends_with("s"));
+    }
+}

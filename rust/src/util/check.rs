@@ -1,0 +1,54 @@
+//! Lightweight property-testing harness.
+//!
+//! `proptest`/`quickcheck` are not in the offline crate set, so this
+//! module provides the 10% we need: run a property over many seeded
+//! random cases and report the failing seed. Failures reproduce exactly
+//! (`Pcg32::seeded(seed)` is fully deterministic), which is what matters
+//! for the scheduling invariants checked in `rust/tests/`.
+
+use crate::util::rng::Pcg32;
+
+/// Run `prop` over `cases` deterministic seeds. The property receives a
+/// seeded PRNG and returns `Err(msg)` to signal a violation; the panic
+/// message includes the seed for reproduction.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Pcg32) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(case + 1);
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |rng| {
+            let v = rng.range_u64(0, 10);
+            if v <= 10 { Ok(()) } else { Err(format!("v = {v}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn forall_reports_failures_with_seed() {
+        forall("must-fail", 10, |rng| {
+            let v = rng.range_u64(0, 1);
+            if v == 2 { Ok(()) } else { Err("always".into()) }
+        });
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal CSV writer for experiment outputs (`results/*.csv`).
+//! Each experiment harness records its rows here so figures can be
+//! re-plotted externally; values are quoted only when needed.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV table under construction.
+#[derive(Debug, Default, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> CsvTable {
+        CsvTable { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            &self.header.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","),
+        );
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut t = CsvTable::new(vec!["x"]);
+        t.row(vec!["he,llo"]);
+        t.row(vec!["say \"hi\""]);
+        let s = t.to_string();
+        assert!(s.contains("\"he,llo\""));
+        assert!(s.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut t = CsvTable::new(vec!["a"]);
+        t.row(vec!["1"]);
+        let p = std::env::temp_dir().join("gcaps_csv_test/out.csv");
+        t.write(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(p.parent().unwrap());
+    }
+}

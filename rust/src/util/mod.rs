@@ -1,0 +1,9 @@
+//! Shared infrastructure: PRNG, statistics, CSV output, ASCII plots and
+//! the lightweight property-testing harness (`check`).
+
+pub mod ascii;
+pub mod bench;
+pub mod check;
+pub mod csv;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,163 @@
+//! Small statistics helpers used by experiments and the executive:
+//! summary stats, histograms (Fig. 12) and response-time variability
+//! measures (Fig. 11: max-mean, mean-min, average relative range).
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary { n, min, max, mean, std: var.sqrt() })
+    }
+
+    /// Fig. 11's "Max-Mean" error bar (deviation above the mean).
+    pub fn above(&self) -> f64 {
+        self.max - self.mean
+    }
+
+    /// Fig. 11's "Mean-Min" error bar (deviation below the mean).
+    pub fn below(&self) -> f64 {
+        self.mean - self.min
+    }
+
+    /// Fig. 11's "(Max-Min)/Max" relative-range variability measure.
+    pub fn relative_range(&self) -> f64 {
+        if self.max == 0.0 {
+            0.0
+        } else {
+            (self.max - self.min) / self.max
+        }
+    }
+}
+
+/// Fixed-width histogram (used for the Fig. 12 ε distribution).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let k = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[k.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.bins.iter().sum::<usize>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_edges(&self, k: usize) -> (f64, f64) {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (self.lo + k as f64 * w, self.lo + (k + 1) as f64 * w)
+    }
+}
+
+/// Percentile (nearest-rank) of a sample; `p` in [0, 100].
+pub fn percentile(xs: &mut [f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+    Some(xs[rank.clamp(1, xs.len()) - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.mean, 2.5);
+        assert!((s.std - 1.1180339887).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn fig11_measures() {
+        let s = Summary::of(&[2.0, 4.0, 10.0]).unwrap();
+        assert!((s.above() - (10.0 - 16.0 / 3.0)).abs() < 1e-12);
+        assert!((s.below() - (16.0 / 3.0 - 2.0)).abs() < 1e-12);
+        assert!((s.relative_range() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_range_zero_max() {
+        let s = Summary::of(&[0.0, 0.0]).unwrap();
+        assert_eq!(s.relative_range(), 0.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.bins.iter().all(|&c| c == 1));
+        h.add(-1.0);
+        h.add(10.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn histogram_edges() {
+        let h = Histogram::new(0.0, 10.0, 5);
+        assert_eq!(h.bin_edges(0), (0.0, 2.0));
+        assert_eq!(h.bin_edges(4), (8.0, 10.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile(&mut xs, 30.0), Some(20.0));
+        assert_eq!(percentile(&mut xs, 100.0), Some(50.0));
+        assert_eq!(percentile(&mut xs, 0.0), Some(15.0));
+    }
+}

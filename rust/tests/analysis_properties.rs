@@ -1,0 +1,274 @@
+//! Property tests on the response-time analyses: monotonicity in every
+//! platform parameter, dominance relations between approaches, and
+//! internal consistency of the GPU-priority assignment. These are the
+//! invariants DESIGN.md §6 commits to.
+
+use gcaps::analysis::gcaps::{analyze as gcaps_rta, Options};
+use gcaps::analysis::{analyze, analyze_with_gpu_prio, Approach};
+use gcaps::model::{Platform, TaskSet, WaitMode};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::check::forall;
+
+fn gen_default(rng: &mut gcaps::util::rng::Pcg32, busy: bool) -> TaskSet {
+    let p = GenParams {
+        mode: if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+        util_per_cpu: (0.3, 0.5),
+        ..Default::default()
+    };
+    generate(rng, &p)
+}
+
+fn with_platform(ts: &TaskSet, platform: Platform) -> TaskSet {
+    let mut out = ts.clone();
+    out.platform = Platform { num_cpus: ts.platform.num_cpus, ..platform };
+    out
+}
+
+/// R_i is monotone non-decreasing in ε for every GCAPS variant.
+#[test]
+fn gcaps_wcrt_monotone_in_epsilon() {
+    forall("monotone in ε", 40, |rng| {
+        let ts = gen_default(rng, false);
+        let mut prev: Vec<Option<u64>> = vec![Some(0); ts.len()];
+        for eps in [0u64, 300, 600, 1000, 1500] {
+            let t2 = with_platform(&ts, Platform { epsilon: eps, ..ts.platform });
+            let res = gcaps_rta(&t2, false, &Options::default());
+            for t in t2.rt_tasks() {
+                match (prev[t.id], res.response[t.id]) {
+                    (Some(a), Some(b)) if b < a => {
+                        return Err(format!("task {}: R dropped {a} → {b} as ε grew", t.id))
+                    }
+                    (None, Some(_)) => {
+                        return Err(format!("task {} became schedulable as ε grew", t.id))
+                    }
+                    _ => {}
+                }
+            }
+            prev = res.response.clone();
+        }
+        Ok(())
+    });
+}
+
+/// Round-robin bounds are monotone in θ.
+#[test]
+fn tsg_rr_wcrt_monotone_in_theta() {
+    forall("monotone in θ", 40, |rng| {
+        let ts = gen_default(rng, false);
+        let mut prev: Vec<Option<u64>> = vec![Some(0); ts.len()];
+        for theta in [0u64, 100, 200, 400, 800] {
+            let t2 = with_platform(&ts, Platform { theta, ..ts.platform });
+            let res = analyze(&t2, Approach::TsgRrSuspend);
+            for t in t2.rt_tasks() {
+                match (prev[t.id], res.response[t.id]) {
+                    (Some(a), Some(b)) if b < a => {
+                        return Err(format!("task {}: R dropped {a} → {b} as θ grew", t.id))
+                    }
+                    (None, Some(_)) => {
+                        return Err(format!("task {} became schedulable as θ grew", t.id))
+                    }
+                    _ => {}
+                }
+            }
+            prev = res.response.clone();
+        }
+        Ok(())
+    });
+}
+
+/// Scaling every WCET up can never turn an unschedulable set schedulable.
+#[test]
+fn wcrt_monotone_in_demand() {
+    forall("monotone in demand", 30, |rng| {
+        let ts = gen_default(rng, false);
+        let mut scaled = ts.clone();
+        for t in &mut scaled.tasks {
+            for c in &mut t.cpu_segments {
+                *c += *c / 5; // +20 %
+            }
+            for g in &mut t.gpu_segments {
+                g.exec += g.exec / 5;
+            }
+        }
+        for approach in [Approach::GcapsSuspend, Approach::TsgRrSuspend, Approach::FmlpSuspend] {
+            let base = analyze(&ts, approach);
+            let more = analyze(&scaled, approach);
+            if !base.schedulable && more.schedulable {
+                return Err(format!("{}: +20% demand made it schedulable", approach.label()));
+            }
+            for t in ts.rt_tasks() {
+                if let (Some(a), Some(b)) = (base.response[t.id], more.response[t.id]) {
+                    if b < a {
+                        return Err(format!(
+                            "{}: task {} R dropped {a} → {b} with +20% demand",
+                            approach.label(),
+                            t.id
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// With ε = θ = 0 and a GPU-heavy high-priority task, GCAPS's bound for
+/// the highest-priority GPU task never exceeds the lock-based bounds
+/// (preemption strictly helps the top task when overheads vanish).
+#[test]
+fn gcaps_dominates_sync_for_top_task_without_overheads() {
+    forall("gcaps top-task dominance (ε=θ=0)", 40, |rng| {
+        let ts0 = gen_default(rng, false);
+        let ts = with_platform(&ts0, Platform { epsilon: 0, theta: 0, ..ts0.platform });
+        // Highest-priority GPU-using RT task.
+        let top = ts
+            .rt_tasks()
+            .filter(|t| t.uses_gpu())
+            .max_by_key(|t| t.cpu_prio)
+            .map(|t| t.id);
+        let Some(top) = top else { return Ok(()) };
+        let g = gcaps_rta(&ts, false, &Options::default()).response[top];
+        for approach in [Approach::MpcpSuspend, Approach::FmlpSuspend] {
+            let s = analyze(&ts, approach).response[top];
+            match (g, s) {
+                (Some(rg), Some(rs)) if rg > rs => {
+                    return Err(format!(
+                        "{}: top task {top} gcaps R {rg} > sync R {rs}",
+                        approach.label()
+                    ))
+                }
+                (None, Some(_)) => {
+                    return Err(format!("{}: gcaps fails top task, sync passes", approach.label()))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+/// analyze_with_gpu_prio is a strict improvement procedure: whenever the
+/// default assignment already passes, it returns that result unchanged.
+#[test]
+fn audsley_procedure_never_worse() {
+    forall("gcaps+audsley ⊇ gcaps", 60, |rng| {
+        let ts = gen_default(rng, false);
+        let base = gcaps_rta(&ts, false, &Options::default());
+        let (with, prios) = analyze_with_gpu_prio(&ts, false);
+        if base.schedulable {
+            if !with.schedulable {
+                return Err("default passes but procedure fails".into());
+            }
+            if prios.is_some() {
+                return Err("procedure reassigned priorities unnecessarily".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The paper-exact Lemma 12 ablation is never more pessimistic than the
+/// amended (sound) version.
+#[test]
+fn paper_exact_lemma12_is_optimistic() {
+    forall("lemma 12 ablation direction", 40, |rng| {
+        let ts = gen_default(rng, true);
+        let sound = gcaps_rta(&ts, true, &Options::default());
+        let exact = gcaps_rta(
+            &ts,
+            true,
+            &Options { paper_exact_lemma12: true, ..Default::default() },
+        );
+        for t in ts.rt_tasks() {
+            match (sound.response[t.id], exact.response[t.id]) {
+                (Some(a), Some(b)) if b > a => {
+                    return Err(format!("task {}: paper-exact {b} > sound {a}", t.id))
+                }
+                (Some(_), None) => {
+                    return Err(format!("task {}: paper-exact fails where sound passes", t.id))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Suspension-mode bounds never exceed busy-wait bounds for the same
+/// GCAPS taskset (busy-waiting only adds CPU contention).
+#[test]
+fn gcaps_suspend_bound_not_above_busy() {
+    forall("suspend ≤ busy (gcaps)", 40, |rng| {
+        let ts = gen_default(rng, false);
+        let s = gcaps_rta(&ts, false, &Options::default());
+        let b = gcaps_rta(&ts, true, &Options::default());
+        for t in ts.rt_tasks() {
+            if let (Some(rs), Some(rb)) = (s.response[t.id], b.response[t.id]) {
+                if rs > rb {
+                    return Err(format!("task {}: suspend R {rs} > busy R {rb}", t.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// CPU-only tasksets: every approach reduces to plain fixed-priority
+/// RTA and must agree exactly.
+#[test]
+fn cpu_only_tasksets_all_approaches_agree() {
+    forall("CPU-only agreement", 40, |rng| {
+        let p = GenParams { gpu_task_ratio: (0.0, 0.0), ..Default::default() };
+        let ts = generate(rng, &p);
+        let results: Vec<Vec<Option<u64>>> = Approach::ALL
+            .iter()
+            .map(|&a| analyze(&ts, a).response)
+            .collect();
+        for t in ts.rt_tasks() {
+            let first = results[0][t.id];
+            for (k, r) in results.iter().enumerate() {
+                if r[t.id] != first {
+                    return Err(format!(
+                        "task {}: approach {} gives {:?}, expected {:?}",
+                        t.id,
+                        Approach::ALL[k].label(),
+                        r[t.id],
+                        first
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Removing a task never increases anyone's bound (interference is
+/// additive over tasks).
+#[test]
+fn wcrt_monotone_in_taskset_inclusion() {
+    forall("monotone in inclusion", 30, |rng| {
+        let ts = gen_default(rng, false);
+        if ts.len() < 2 {
+            return Ok(());
+        }
+        // Remove the lowest-priority RT task; ids must stay contiguous.
+        let victim = ts.rt_tasks().min_by_key(|t| t.cpu_prio).unwrap().id;
+        let mut reduced = ts.clone();
+        reduced.tasks.remove(victim);
+        for (idx, t) in reduced.tasks.iter_mut().enumerate() {
+            t.id = idx;
+        }
+        let base = analyze(&ts, Approach::GcapsSuspend);
+        let less = analyze(&reduced, Approach::GcapsSuspend);
+        // Map: tasks after `victim` shifted down by one.
+        for t in ts.rt_tasks().filter(|t| t.id != victim) {
+            let new_id = if t.id > victim { t.id - 1 } else { t.id };
+            if let (Some(a), Some(b)) = (base.response[t.id], less.response[new_id]) {
+                if b > a {
+                    return Err(format!("task {}: R grew {a} → {b} after removing a task", t.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,67 @@
+//! Smoke tests: every experiment harness runs end-to-end at tiny scale
+//! and produces its CSV. Keeps `gcaps exp all` from bit-rotting.
+
+use gcaps::experiments::ablation;
+use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
+use gcaps::experiments::examples_figs::{run_fig3, run_fig5, run_fig6, run_fig7};
+use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
+use gcaps::experiments::fig9;
+use gcaps::experiments::overhead::{run_fig12_sim, run_fig13};
+use gcaps::experiments::{results_dir, ExpConfig};
+
+fn tiny() -> ExpConfig {
+    ExpConfig { tasksets: 5, seed: 123 }
+}
+
+#[test]
+fn schedule_examples_render() {
+    for out in [run_fig3(), run_fig5(), run_fig6(), run_fig7()] {
+        assert!(out.contains("Fig."), "missing header in: {out}");
+        assert!(out.contains('|'), "no gantt rows rendered");
+    }
+}
+
+#[test]
+fn fig8_all_panels_produce_csv() {
+    for panel in Panel::ALL {
+        let out = fig8(panel, &tiny());
+        assert!(out.contains("Fig. 8"));
+        let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
+        let csv = std::fs::read_to_string(&path).expect("csv written");
+        // Header + 8 approaches × #points rows.
+        assert!(csv.lines().count() > 8, "{path:?} too small");
+    }
+}
+
+#[test]
+fn fig9_produces_csv() {
+    let out = fig9::run_and_report(&tiny());
+    assert!(out.contains("Fig. 9"));
+    assert!(results_dir().join("fig9.csv").exists());
+}
+
+#[test]
+fn case_study_harnesses_run() {
+    let cfg = ExpConfig { tasksets: 0, seed: 1 };
+    let f10 = run_fig10(Board::XavierNx, &cfg);
+    assert!(f10.contains("MORT under gcaps_busy"));
+    let f11 = run_fig11(&cfg);
+    assert!(f11.contains("average relative range"));
+    let t5 = run_table5(&cfg);
+    assert!(t5.contains("Table 5"));
+    assert!(t5.contains("histogram"));
+}
+
+#[test]
+fn overhead_harnesses_run() {
+    assert!(run_fig12_sim().contains("Fig. 12"));
+    assert!(run_fig13().contains("Fig. 13"));
+}
+
+#[test]
+fn ablation_harness_runs() {
+    let out = ablation::run_and_report(&tiny());
+    assert!(out.contains("Lemma 12"));
+    assert!(out.contains("EDF"));
+    assert!(results_dir().join("ablations.csv").exists());
+}

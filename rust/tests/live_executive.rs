@@ -1,0 +1,108 @@
+//! Integration tests of the live stack: PJRT runtime + Alg. 1 arbiter +
+//! periodic executive with real AOT kernels. Skipped (with a notice)
+//! when `artifacts/` has not been built — run `make artifacts` first.
+
+use std::time::Duration;
+
+use gcaps::coordinator::executor::{run, LiveGpuSegment, LiveMode, LiveTask};
+use gcaps::runtime::{artifacts_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load_dir(&artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping live test (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+fn mk_task(id: usize, name: &str, workload: &str, period_ms: u64, prio: u32, rt: bool) -> LiveTask {
+    let _ = id;
+    LiveTask {
+        name: name.into(),
+        period: Duration::from_millis(period_ms),
+        cpu_segments: vec![Duration::from_micros(200); 2],
+        gpu_segments: vec![LiveGpuSegment { workload: workload.into(), launches: 2 }],
+        gpu_prio: prio,
+        rt,
+        busy: false,
+    }
+}
+
+// The three phases share one #[test]: they are timing-sensitive on the
+// single-core host and must not run concurrently with each other.
+#[test]
+fn live_stack_end_to_end() {
+    runtime_phase();
+    executive_phase();
+    gcaps_phase();
+}
+
+fn runtime_phase() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.workloads();
+    assert!(names.len() >= 7, "expected ≥7 workloads, got {names:?}");
+    for name in &names {
+        let a = rt.exec_values(name).expect("exec");
+        let b = rt.exec_values(name).expect("exec");
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "{name}: nondeterministic output");
+        assert!(a.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+    }
+}
+
+fn executive_phase() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let tasks = vec![
+        mk_task(0, "hp", "mmul_small", 100, 2, true),
+        mk_task(1, "lp", "projection", 200, 1, true),
+        mk_task(2, "be", "mmul_large", 250, 0, false),
+    ];
+    for mode in [LiveMode::Gcaps, LiveMode::TsgRr, LiveMode::FmlpPlus, LiveMode::Mpcp] {
+        let res = run(&tasks, &rt, mode, Duration::from_secs(2));
+        for (t, m) in tasks.iter().zip(&res.per_task) {
+            assert!(
+                !m.responses.is_empty(),
+                "{}: task {} completed no jobs",
+                mode.label(),
+                t.name
+            );
+        }
+        assert!(res.launches > 0, "{}: no kernel launches", mode.label());
+    }
+}
+
+fn gcaps_phase() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // hp small task vs a GPU-hogging lp task: under GCAPS the hp MORT
+    // must stay well under the hog's full segment length.
+    let tasks = vec![
+        mk_task(0, "hp", "mmul_small", 80, 2, true),
+        LiveTask {
+            name: "hog".into(),
+            period: Duration::from_millis(400),
+            cpu_segments: vec![Duration::from_micros(200); 2],
+            gpu_segments: vec![LiveGpuSegment { workload: "mmul_large".into(), launches: 40 }],
+            gpu_prio: 1,
+            rt: true,
+            busy: false,
+        },
+    ];
+    let res = run(&tasks, &rt, LiveMode::Gcaps, Duration::from_secs(3));
+    // Two ε samples per segment per job.
+    let jobs: usize = res.per_task.iter().map(|m| m.responses.len()).sum();
+    assert!(
+        res.eps_samples.len() >= jobs,
+        "ε samples {} < jobs {jobs}",
+        res.eps_samples.len()
+    );
+    let hp_mort = res.per_task[0].mort().unwrap();
+    // The hog's segment is ~40 × 1.3 ms ≈ 52 ms; GCAPS preempts at
+    // kernel granularity so hp should stay well below it. Generous
+    // bound: half the hog segment (the 1-core host adds CPU noise).
+    assert!(
+        hp_mort < Duration::from_millis(40),
+        "hp MORT {hp_mort:?} suggests no GPU preemption"
+    );
+}

@@ -1,0 +1,221 @@
+//! Device-model invariants (DESIGN.md §6): work conservation, GPU busy
+//! accounting, runlist exclusivity under GCAPS, round-robin fairness
+//! under the default driver, and job-accounting sanity — all checked
+//! over random tasksets and release patterns.
+
+use gcaps::model::{ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
+use gcaps::sim::trace::{Activity, Resource};
+use gcaps::sim::{simulate, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::check::forall;
+use gcaps::util::rng::Pcg32;
+
+fn random_offsets(ts: &TaskSet, rng: &mut Pcg32) -> Vec<Time> {
+    ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect()
+}
+
+/// GPU busy time equals the pure GPU demand of all completed (and
+/// in-flight) jobs — the device never invents or loses work.
+#[test]
+fn gpu_busy_matches_executed_demand() {
+    forall("gpu busy accounting", 25, |rng| {
+        let ts = generate(rng, &GenParams { util_per_cpu: (0.2, 0.35), ..Default::default() });
+        let horizon = ms(10_000.0);
+        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus] {
+            let sim = simulate(&ts, &SimConfig::new(policy, horizon));
+            let completed_ge: Time = ts
+                .tasks
+                .iter()
+                .map(|t| sim.per_task[t.id].jobs * t.ge())
+                .sum();
+            // busy ≥ completed demand; the excess is one in-flight job max
+            // per task.
+            let max_inflight: Time = ts.tasks.iter().map(|t| t.ge()).sum();
+            if sim.run.gpu_busy < completed_ge {
+                return Err(format!(
+                    "{}: busy {} < completed G^e {}",
+                    policy.label(),
+                    sim.run.gpu_busy,
+                    completed_ge
+                ));
+            }
+            if sim.run.gpu_busy > completed_ge + max_inflight {
+                return Err(format!(
+                    "{}: busy {} exceeds demand {} + inflight {}",
+                    policy.label(),
+                    sim.run.gpu_busy,
+                    completed_ge,
+                    max_inflight
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Under GCAPS no two real-time tasks' GPU-execution intervals overlap,
+/// and the runlist never interleaves RT work (Lemma 9's premise).
+#[test]
+fn gcaps_rt_gpu_execution_is_exclusive() {
+    forall("gcaps exclusive RT context", 20, |rng| {
+        let ts = generate(rng, &GenParams { util_per_cpu: (0.3, 0.5), ..Default::default() });
+        let offsets = random_offsets(&ts, rng);
+        let sim = simulate(
+            &ts,
+            &SimConfig::new(Policy::Gcaps, ms(5_000.0)).with_offsets(offsets).with_trace(),
+        );
+        let tr = sim.trace.unwrap();
+        let mut gpu_evs: Vec<_> = tr
+            .events
+            .iter()
+            .filter(|e| e.resource == Resource::Gpu && e.activity == Activity::GpuExec)
+            .collect();
+        gpu_evs.sort_by_key(|e| e.start);
+        for w in gpu_evs.windows(2) {
+            if w[1].start < w[0].end {
+                return Err(format!(
+                    "GPU intervals overlap: task {} [{}, {}) vs task {} [{}, {})",
+                    w[0].task, w[0].start, w[0].end, w[1].task, w[1].start, w[1].end
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Work conservation of the RR driver: while any TSG has queued GPU
+/// work, the GPU is never idle for longer than one context switch θ.
+#[test]
+fn tsg_rr_work_conserving() {
+    forall("tsg_rr work conservation", 15, |rng| {
+        // Two GPU-only hogs released together: the GPU must stay busy
+        // (exec or switch) until both complete.
+        let ge = rng.range_u64(5_000, 20_000);
+        let p = Platform { num_cpus: 2, ..Default::default() };
+        let mk = |id: usize| Task {
+            id,
+            name: format!("h{id}"),
+            period: ms(1_000.0),
+            deadline: ms(1_000.0),
+            cpu_segments: vec![10, 10],
+            gpu_segments: vec![GpuSegment::new(10, ge)],
+            core: id % 2,
+            cpu_prio: id as u32 + 1,
+            gpu_prio: id as u32 + 1,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        };
+        let ts = TaskSet::new(vec![mk(0), mk(1)], p);
+        let sim = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(1_000.0)).with_trace());
+        let tr = sim.trace.unwrap();
+        // Completion of the later task.
+        let done = tr.completions.iter().map(|&(_, t)| t).max().unwrap();
+        let busy: Time = (0..2).map(|i| tr.occupancy(Resource::Gpu, i, 0, done)).sum();
+        // From first launch (~20 µs in) to `done`, the GPU must be
+        // busy ≥ 95% of the window (idle only during launch setup).
+        let window = done - 20;
+        if (busy as f64) < window as f64 * 0.95 {
+            return Err(format!("GPU busy {busy} over window {window}: not work-conserving"));
+        }
+        Ok(())
+    });
+}
+
+/// RR fairness: two identical GPU hogs sharing the driver complete
+/// within one time slice + θ of each other.
+#[test]
+fn tsg_rr_fair_between_equal_hogs() {
+    forall("tsg_rr fairness", 15, |rng| {
+        let ge = rng.range_u64(10_000, 40_000);
+        let p = Platform { num_cpus: 2, ..Default::default() };
+        let mk = |id: usize| Task {
+            id,
+            name: format!("h{id}"),
+            period: ms(2_000.0),
+            deadline: ms(2_000.0),
+            cpu_segments: vec![10, 10],
+            gpu_segments: vec![GpuSegment::new(10, ge)],
+            core: id % 2,
+            cpu_prio: id as u32 + 1,
+            gpu_prio: id as u32 + 1,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        };
+        let ts = TaskSet::new(vec![mk(0), mk(1)], p);
+        let sim = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(2_000.0)));
+        let r0 = sim.per_task[0].response_times[0];
+        let r1 = sim.per_task[1].response_times[0];
+        let gap = r0.abs_diff(r1);
+        let bound = ts.platform.tsg_slice + ts.platform.theta + 50;
+        if gap > bound {
+            return Err(format!("completion gap {gap} > slice+θ {bound} (r0={r0}, r1={r1})"));
+        }
+        Ok(())
+    });
+}
+
+/// Job accounting: jobs completed ≈ floor((horizon - offset)/T) when the
+/// taskset is lightly loaded (every job finishes within its period).
+#[test]
+fn job_counts_match_releases_under_light_load() {
+    forall("job accounting", 20, |rng| {
+        let ts = generate(rng, &GenParams { util_per_cpu: (0.1, 0.2), ..Default::default() });
+        let horizon = ms(20_000.0);
+        let sim = simulate(&ts, &SimConfig::new(Policy::Gcaps, horizon));
+        for t in ts.rt_tasks() {
+            let released = horizon.div_ceil(t.period);
+            let done = sim.per_task[t.id].jobs;
+            // The final job may be cut off by the horizon.
+            if done + 2 < released {
+                return Err(format!(
+                    "task {}: completed {done} of ~{released} released jobs",
+                    t.id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: identical configs give bit-identical metrics.
+#[test]
+fn simulation_is_deterministic() {
+    forall("determinism", 10, |rng| {
+        let ts = generate(rng, &GenParams::default());
+        let offsets = random_offsets(&ts, rng);
+        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::FmlpPlus] {
+            let cfg = SimConfig::new(policy, ms(5_000.0)).with_offsets(offsets.clone());
+            let a = simulate(&ts, &cfg);
+            let b = simulate(&ts, &cfg);
+            for i in 0..ts.len() {
+                if a.per_task[i].response_times != b.per_task[i].response_times {
+                    return Err(format!("{}: task {i} responses differ", policy.label()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ε accounting: the DES charges exactly 2 runlist updates per completed
+/// GPU segment under GCAPS.
+#[test]
+fn gcaps_two_updates_per_segment() {
+    forall("2 updates per segment", 20, |rng| {
+        let ts = generate(rng, &GenParams { util_per_cpu: (0.15, 0.3), ..Default::default() });
+        let sim = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(10_000.0)));
+        for t in ts.tasks.iter().filter(|t| t.uses_gpu()) {
+            let updates = sim.per_task[t.id].runlist_updates.len() as u64;
+            let segments_done = sim.per_task[t.id].jobs * t.eta_g() as u64;
+            // In-flight segments can add up to 2·η_g extra updates.
+            let slack = 2 * t.eta_g() as u64;
+            if updates < 2 * segments_done || updates > 2 * segments_done + slack {
+                return Err(format!(
+                    "task {}: {updates} updates for {segments_done} segments",
+                    t.id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
