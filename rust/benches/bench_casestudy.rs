@@ -9,7 +9,9 @@ use gcaps::model::{ms, Platform, WaitMode};
 use gcaps::util::bench::run;
 
 fn main() {
-    let cfg = ExpConfig { tasksets: 0, seed: 1 };
+    // jobs pinned to 1 so the DES throughput numbers stay comparable
+    // across hosts (and with pre-sweep-engine baselines).
+    let cfg = ExpConfig { tasksets: 0, seed: 1, jobs: 1, progress: false };
     run("casestudy/fig10_morts_xavier", move || morts(Board::XavierNx, &cfg).len());
 
     let ts_s = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);

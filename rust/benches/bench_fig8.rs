@@ -6,20 +6,31 @@
 use gcaps::analysis::Approach;
 use gcaps::experiments::fig8::{run_panel, schedulability, Panel};
 use gcaps::experiments::ExpConfig;
+use gcaps::sweep::memo;
 use gcaps::util::bench::run;
 
 fn main() {
-    let cfg = ExpConfig { tasksets: 25, seed: 2024 };
+    // jobs pinned to 1 and the taskset memo cleared per iteration: the
+    // numbers must measure the cold generation + analysis path (what
+    // pre-sweep-engine baselines in EXPERIMENTS.md recorded), not
+    // host-dependent thread pools or Arc-clone cache hits.
+    let cfg = ExpConfig { tasksets: 25, seed: 2024, jobs: 1, progress: false };
 
     for approach in Approach::ALL {
         let name = format!("fig8/point25/{}", approach.label());
-        let m = run(&name, move || schedulability(approach, &|_| {}, &cfg));
+        let m = run(&name, move || {
+            memo::clear();
+            schedulability(approach, &|_| {}, &cfg)
+        });
         let _ = m;
     }
 
     // A whole miniature panel (the per-figure regeneration target).
-    let small = ExpConfig { tasksets: 10, seed: 1 };
-    run("fig8/panel_b_mini", move || run_panel(Panel::UtilPerCpu, &small).1.len());
+    let small = ExpConfig { tasksets: 10, seed: 1, jobs: 1, progress: false };
+    run("fig8/panel_b_mini", move || {
+        memo::clear();
+        run_panel(Panel::UtilPerCpu, &small).1.len()
+    });
 
     // Print the actual data point values once, so the bench log doubles
     // as a Fig. 8 sanity row.

@@ -1,7 +1,7 @@
 // Smoke-probe: load artifacts, run every workload once, print timings.
 use gcaps::runtime::{artifacts_dir, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gcaps::util::error::Result<()> {
     let rt = Runtime::load_dir(&artifacts_dir())?;
     for name in rt.workloads() {
         let t = rt.profile(&name, 3)?;

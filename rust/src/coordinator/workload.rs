@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::executor::{LiveGpuSegment, LiveTask};
 use crate::runtime::Runtime;

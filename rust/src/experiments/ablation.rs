@@ -14,65 +14,78 @@ use crate::analysis::gcaps::{analyze as gcaps_rta, Options};
 use crate::experiments::{results_dir, ExpConfig};
 use crate::model::{ms, Platform, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
-use crate::taskgen::{generate, GenParams};
+use crate::sweep::{self, memo};
+use crate::taskgen::GenParams;
 use crate::util::csv::CsvTable;
-use crate::util::rng::Pcg32;
 
-/// (sound ratio, paper-exact ratio) of gcaps_busy schedulability.
+/// (sound ratio, paper-exact ratio) of gcaps_busy schedulability. Both
+/// variants run on the same memoized taskset per cell, so the exact
+/// (optimistic) bound can never score below the sound one.
 pub fn lemma12_ablation(cfg: &ExpConfig, util: f64) -> (f64, f64) {
-    let mut rng = Pcg32::seeded(cfg.seed);
-    let (mut sound_ok, mut exact_ok) = (0usize, 0usize);
-    for _ in 0..cfg.tasksets {
-        let p = GenParams {
-            util_per_cpu: (util - 0.05, util + 0.05),
-            mode: WaitMode::BusyWait,
-            ..Default::default()
-        };
-        let ts = generate(&mut rng, &p);
-        sound_ok += gcaps_rta(&ts, true, &Options::default()).schedulable as usize;
-        exact_ok += gcaps_rta(
+    let p = GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        mode: WaitMode::BusyWait,
+        ..Default::default()
+    };
+    let seed = cfg.seed;
+    let cells = sweep::run_indexed(&cfg.sweep(), cfg.tasksets, |i| {
+        let ts = memo::taskset(seed, &p, i);
+        let sound = gcaps_rta(&ts, true, &Options::default()).schedulable;
+        let exact = gcaps_rta(
             &ts,
             true,
             &Options { paper_exact_lemma12: true, ..Default::default() },
         )
-        .schedulable as usize;
-    }
-    (sound_ok as f64 / cfg.tasksets as f64, exact_ok as f64 / cfg.tasksets as f64)
+        .schedulable;
+        (sound, exact)
+    });
+    let n = cfg.tasksets.max(1) as f64;
+    (
+        cells.iter().filter(|&&(s, _)| s).count() as f64 / n,
+        cells.iter().filter(|&&(_, e)| e).count() as f64 / n,
+    )
 }
 
 /// Simulated RT deadline-miss ratio under a policy at one load level.
+/// One DES run per cell — the heaviest sweep in the ablation suite and
+/// the biggest winner from sharding.
 pub fn miss_ratio(policy: Policy, util: f64, cfg: &ExpConfig) -> f64 {
-    let mut rng = Pcg32::seeded(cfg.seed);
-    let (mut misses, mut jobs) = (0u64, 0u64);
+    let p = GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        ..Default::default()
+    };
     let n = cfg.tasksets.max(1).min(60);
-    for _ in 0..n {
-        let p = GenParams {
-            util_per_cpu: (util - 0.05, util + 0.05),
-            ..Default::default()
-        };
-        let ts = generate(&mut rng, &p);
+    let seed = cfg.seed;
+    let cells = sweep::run_indexed(&cfg.sweep(), n, |i| {
+        let ts = memo::taskset(seed, &p, i);
         let sim = simulate(&ts, &SimConfig::new(policy, ms(10_000.0)));
+        let mut misses = 0u64;
+        let mut jobs = 0u64;
         for t in ts.rt_tasks() {
             misses += sim.per_task[t.id].deadline_misses;
             jobs += sim.per_task[t.id].jobs;
         }
-    }
+        (misses, jobs)
+    });
+    let misses: u64 = cells.iter().map(|&(m, _)| m).sum();
+    let jobs: u64 = cells.iter().map(|&(_, j)| j).sum();
     misses as f64 / jobs.max(1) as f64
 }
 
-/// gcaps_suspend schedulability as ε varies (sensitivity).
+/// gcaps_suspend schedulability as ε varies (sensitivity). The memo's
+/// platform-normalized key means every ε value analyses the *same*
+/// tasksets — the sweep isolates the overhead term exactly.
 pub fn epsilon_sensitivity(cfg: &ExpConfig, eps_us: u64) -> f64 {
-    let mut rng = Pcg32::seeded(cfg.seed);
-    let mut ok = 0usize;
-    for _ in 0..cfg.tasksets {
-        let p = GenParams {
-            platform: Platform { epsilon: eps_us, ..Default::default() },
-            ..Default::default()
-        };
-        let ts = generate(&mut rng, &p);
-        ok += gcaps_rta(&ts, false, &Options::default()).schedulable as usize;
-    }
-    ok as f64 / cfg.tasksets as f64
+    let p = GenParams {
+        platform: Platform { epsilon: eps_us, ..Default::default() },
+        ..Default::default()
+    };
+    let seed = cfg.seed;
+    let oks = sweep::run_indexed(&cfg.sweep(), cfg.tasksets, |i| {
+        let ts = memo::taskset(seed, &p, i);
+        gcaps_rta(&ts, false, &Options::default()).schedulable
+    });
+    oks.iter().filter(|&&ok| ok).count() as f64 / cfg.tasksets.max(1) as f64
 }
 
 pub fn run_and_report(cfg: &ExpConfig) -> String {
@@ -119,7 +132,7 @@ mod tests {
     use super::*;
 
     fn tiny() -> ExpConfig {
-        ExpConfig { tasksets: 15, seed: 9 }
+        ExpConfig { tasksets: 15, seed: 9, ..ExpConfig::default() }
     }
 
     #[test]
@@ -142,7 +155,7 @@ mod tests {
         // EDF is optimal on a single resource: across a small sample its
         // aggregate miss ratio at high load must not exceed FP's by more
         // than noise.
-        let cfg = ExpConfig { tasksets: 10, seed: 4 };
+        let cfg = ExpConfig { tasksets: 10, seed: 4, ..ExpConfig::default() };
         let fp = miss_ratio(Policy::Gcaps, 0.7, &cfg);
         let edf = miss_ratio(Policy::GcapsEdf, 0.7, &cfg);
         assert!(edf <= fp + 0.02, "edf {edf} much worse than fp {fp}");

@@ -6,9 +6,9 @@ use crate::analysis::{gcaps, rr};
 use crate::experiments::{results_dir, ExpConfig};
 use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
+use crate::sweep;
 use crate::util::ascii::bar_chart;
 use crate::util::csv::CsvTable;
-use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
 
 /// Simulated platform presets (Fig. 10a vs 10b). ε and θ follow the
@@ -98,27 +98,61 @@ pub const CASE_APPROACHES: [(&str, Policy, WaitMode); 5] = [
     ("gcaps_busy", Policy::Gcaps, WaitMode::BusyWait),
 ];
 
+/// Domain-separation tags for the case study's per-replica offset
+/// streams (folded into the cell hash so Fig. 10 and Fig. 11 replicas
+/// never alias).
+const TAG_FIG10: u64 = 0x10aa;
+const TAG_FIG11: u64 = 0x11bb;
+
+fn board_key(board: Board) -> u64 {
+    match board {
+        Board::XavierNx => 0,
+        Board::OrinNano => 1,
+    }
+}
+
+/// Release offsets for replica `rep`: synchronous for rep 0 (the classic
+/// critical instant), otherwise drawn from a per-cell split RNG so the
+/// sweep is worker-count-invariant. The tag must NOT include the
+/// approach index: every approach sees the same offsets per replica (a
+/// paired comparison — the Table 4 periods are identical across
+/// approaches), so figure deltas isolate the scheduling policy.
+fn replica_offsets(ts: &TaskSet, seed: u64, tag: &[u64], rep: usize) -> Vec<Time> {
+    if rep == 0 {
+        return vec![0; ts.len()];
+    }
+    let mut parts = tag.to_vec();
+    parts.push(rep as u64);
+    let mut rng = sweep::cell_rng(seed, sweep::cell_hash(&parts));
+    ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect()
+}
+
 /// Simulate 30 s (paper duration) + randomized-offset replicas; returns
-/// MORT (ms) per task per approach.
+/// MORT (ms) per task per approach. The (approach × replica) grid is
+/// sharded across the sweep pool — 25 independent 30 s DES runs.
 pub fn morts(board: Board, cfg: &ExpConfig) -> Vec<(String, Vec<f64>)> {
+    const REPS: usize = 5;
     let platform = board.platform();
-    let mut out = Vec::new();
-    for (label, policy, mode) in CASE_APPROACHES {
+    let seed = cfg.seed;
+    let cells = sweep::grid2(CASE_APPROACHES.len(), REPS);
+    let per_cell: Vec<Vec<Time>> = sweep::run(&cfg.sweep(), cells, |_, &(ai, rep)| {
+        let (_, policy, mode) = CASE_APPROACHES[ai];
         let ts = table4_taskset(platform, mode);
-        let mut mort = vec![0u64; ts.len()];
-        let mut rng = Pcg32::seeded(cfg.seed);
-        // Synchronous release + randomized offsets, 30 s each.
-        for rep in 0..5 {
-            let offsets = if rep == 0 {
-                vec![0; ts.len()]
-            } else {
-                ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect()
-            };
-            let sim = simulate(&ts, &SimConfig::new(policy, ms(30_000.0)).with_offsets(offsets));
-            for t in &ts.tasks {
-                if let Some(m) = sim.per_task[t.id].mort() {
-                    mort[t.id] = mort[t.id].max(m);
-                }
+        let offsets =
+            replica_offsets(&ts, seed, &[TAG_FIG10, board_key(board)], rep);
+        let sim =
+            simulate(&ts, &SimConfig::new(policy, ms(30_000.0)).with_offsets(offsets));
+        ts.tasks.iter().map(|t| sim.per_task[t.id].mort().unwrap_or(0)).collect()
+    });
+
+    // Merge in canonical order: per approach, max over replicas.
+    let mut out = Vec::new();
+    for (ai, (label, _, _)) in CASE_APPROACHES.iter().enumerate() {
+        let n_tasks = per_cell[ai * REPS].len();
+        let mut mort = vec![0u64; n_tasks];
+        for rep in 0..REPS {
+            for (t, &m) in per_cell[ai * REPS + rep].iter().enumerate() {
+                mort[t] = mort[t].max(m);
             }
         }
         out.push((label.to_string(), mort.iter().map(|&m| to_ms(m)).collect()));
@@ -159,26 +193,36 @@ pub fn run_fig10(board: Board, cfg: &ExpConfig) -> String {
 /// Fig. 11: response-time variability (max-mean / mean-min error bars,
 /// average relative range) across randomized-offset runs.
 pub fn run_fig11(cfg: &ExpConfig) -> String {
+    const REPS: usize = 8;
     let platform = Board::XavierNx.platform();
+    let seed = cfg.seed;
     let mut csv = CsvTable::new(vec![
         "approach", "task", "mean_ms", "above_ms", "below_ms", "relative_range",
     ]);
     let mut out = String::from("== Fig. 11: response-time variability (Xavier) ==\n");
-    for (label, policy, mode) in CASE_APPROACHES {
+
+    // (approach × replica) cells, each a 15 s DES run returning the
+    // per-task response samples of that replica.
+    let cells = sweep::grid2(CASE_APPROACHES.len(), REPS);
+    let per_cell: Vec<Vec<Vec<f64>>> = sweep::run(&cfg.sweep(), cells, |_, &(ai, rep)| {
+        let (_, policy, mode) = CASE_APPROACHES[ai];
         let ts = table4_taskset(platform, mode);
+        let offsets = replica_offsets(&ts, seed, &[TAG_FIG11], rep);
+        let sim =
+            simulate(&ts, &SimConfig::new(policy, ms(15_000.0)).with_offsets(offsets));
+        ts.tasks
+            .iter()
+            .map(|t| sim.per_task[t.id].response_times.iter().map(|&r| to_ms(r)).collect())
+            .collect()
+    });
+
+    for (ai, (label, _, mode)) in CASE_APPROACHES.iter().enumerate() {
+        let ts = table4_taskset(platform, *mode);
+        // Merge replica samples in canonical replica order.
         let mut samples: Vec<Vec<f64>> = vec![vec![]; ts.len()];
-        let mut rng = Pcg32::seeded(cfg.seed);
-        for rep in 0..8 {
-            let offsets = if rep == 0 {
-                vec![0; ts.len()]
-            } else {
-                ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect()
-            };
-            let sim = simulate(&ts, &SimConfig::new(policy, ms(15_000.0)).with_offsets(offsets));
-            for t in &ts.tasks {
-                samples[t.id].extend(
-                    sim.per_task[t.id].response_times.iter().map(|&r| to_ms(r)),
-                );
+        for rep in 0..REPS {
+            for (t, s) in per_cell[ai * REPS + rep].iter().enumerate() {
+                samples[t].extend_from_slice(s);
             }
         }
         let mut rel_ranges = Vec::new();
@@ -285,7 +329,7 @@ mod tests {
     #[test]
     fn gcaps_beats_tsg_rr_for_high_priority_tasks() {
         // The Fig. 10 headline: tasks 1-2 see much lower MORT under GCAPS.
-        let cfg = ExpConfig { tasksets: 0, seed: 1 };
+        let cfg = ExpConfig { tasksets: 0, seed: 1, ..ExpConfig::default() };
         let m: std::collections::HashMap<String, Vec<f64>> =
             morts(Board::XavierNx, &cfg).into_iter().collect();
         assert!(m["gcaps_suspend"][0] < m["tsg_rr_suspend"][0]);
@@ -295,7 +339,7 @@ mod tests {
     #[test]
     fn wcrt_bounds_dominate_simulated_morts() {
         // Table 5 internal consistency: WCRT ≥ MORT wherever the test passes.
-        let cfg = ExpConfig { tasksets: 0, seed: 2 };
+        let cfg = ExpConfig { tasksets: 0, seed: 2, ..ExpConfig::default() };
         let platform = Board::XavierNx.platform();
         let mort_map: std::collections::HashMap<String, Vec<f64>> =
             morts(Board::XavierNx, &cfg).into_iter().collect();

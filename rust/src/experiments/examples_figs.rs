@@ -4,8 +4,10 @@
 //! ASCII Gantt charts from real simulator traces.
 
 use crate::analysis::gcaps::{analyze, Options};
+use crate::experiments::ExpConfig;
 use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
+use crate::sweep;
 
 fn mk(
     id: usize,
@@ -174,10 +176,34 @@ pub fn run_fig7() -> String {
     out
 }
 
+/// All four schedule-example figures, rendered via the sweep engine (one
+/// cell per figure — they are independent trace simulations) and
+/// concatenated in canonical figure order.
+pub fn run_examples(cfg: &ExpConfig) -> String {
+    let figs: Vec<(&str, fn() -> String)> = vec![
+        ("fig3", run_fig3),
+        ("fig5", run_fig5),
+        ("fig6", run_fig6),
+        ("fig7", run_fig7),
+    ];
+    let rendered = sweep::run(&cfg.sweep(), figs, |_, &(_, f)| f());
+    rendered.concat()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::trace::Resource;
+
+    #[test]
+    fn run_examples_concatenates_all_figs_in_order() {
+        let out = run_examples(&ExpConfig { jobs: 4, ..ExpConfig::default() });
+        let p3 = out.find("Fig. 3").expect("fig3 missing");
+        let p5 = out.find("Fig. 5").expect("fig5 missing");
+        let p6 = out.find("Fig. 6").expect("fig6 missing");
+        let p7 = out.find("Fig. 7").expect("fig7 missing");
+        assert!(p3 < p5 && p5 < p6 && p6 < p7, "figures out of order");
+    }
 
     #[test]
     fn fig3_gcaps_beats_sync() {

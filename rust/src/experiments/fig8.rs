@@ -7,11 +7,11 @@
 
 use crate::analysis::{analyze, analyze_with_gpu_prio, Approach};
 use crate::experiments::{results_dir, ExpConfig};
-use crate::model::WaitMode;
-use crate::taskgen::{generate, GenParams};
+use crate::model::{TaskSet, WaitMode};
+use crate::sweep::{self, memo};
+use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
-use crate::util::rng::Pcg32;
 
 /// One Fig. 8 panel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -139,55 +139,114 @@ impl Panel {
     }
 }
 
-/// Schedulability ratio for one approach at one parameter point.
+/// Is `approach` schedulable on this taskset (with the §7.1.1 GCAPS
+/// Audsley retry)?
+fn approach_schedulable(ts: &TaskSet, approach: Approach) -> bool {
+    match approach {
+        Approach::GcapsBusy => analyze_with_gpu_prio(ts, true).0.schedulable,
+        Approach::GcapsSuspend => analyze_with_gpu_prio(ts, false).0.schedulable,
+        a => analyze(ts, a).schedulable,
+    }
+}
+
+/// Schedulability ratio for one approach at one parameter point. Cells
+/// (one per taskset) are sharded across the sweep worker pool; the
+/// memoized generator means the per-index tasksets are shared with every
+/// other approach evaluated at this point.
 pub fn schedulability(
     approach: Approach,
     patch: &dyn Fn(&mut GenParams),
     cfg: &ExpConfig,
 ) -> f64 {
-    let mut rng = Pcg32::seeded(cfg.seed);
-    let mut ok = 0usize;
-    for _ in 0..cfg.tasksets {
-        let mut p = GenParams {
-            mode: if approach.is_busy() { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
-            ..Default::default()
-        };
-        patch(&mut p);
-        let ts = generate(&mut rng, &p);
-        let schedulable = match approach {
-            Approach::GcapsBusy => analyze_with_gpu_prio(&ts, true).0.schedulable,
-            Approach::GcapsSuspend => analyze_with_gpu_prio(&ts, false).0.schedulable,
-            a => analyze(&ts, a).schedulable,
-        };
-        ok += schedulable as usize;
-    }
-    ok as f64 / cfg.tasksets as f64
+    let mut p = GenParams {
+        mode: if approach.is_busy() { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+        ..Default::default()
+    };
+    patch(&mut p);
+    let seed = cfg.seed;
+    let oks = sweep::run_indexed(&cfg.sweep(), cfg.tasksets, |i| {
+        let ts = memo::taskset(seed, &p, i);
+        approach_schedulable(&ts, approach)
+    });
+    oks.iter().filter(|&&ok| ok).count() as f64 / cfg.tasksets.max(1) as f64
 }
 
 /// Run one panel; returns (xticks, per-approach series).
+///
+/// The grid is (sweep point × taskset index); each cell generates its
+/// taskset once (suspend + busy variants of the same draws) and
+/// evaluates all 8 approaches on it, so a panel costs one generation —
+/// not eight — per (point, index) regardless of worker count.
 pub fn run_panel(panel: Panel, cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
     let points = panel.points();
     let xticks: Vec<String> = points.iter().map(|(l, _)| l.clone()).collect();
-    let mut series = Vec::new();
-    for approach in Approach::ALL {
-        let ys: Vec<f64> = points
-            .iter()
-            .map(|(_, patch)| schedulability(approach, patch.as_ref(), cfg))
-            .collect();
-        series.push((approach.label().to_string(), ys));
+    let params: Vec<GenParams> = points
+        .iter()
+        .map(|(_, patch)| {
+            let mut p = GenParams::default();
+            patch(&mut p);
+            p
+        })
+        .collect();
+
+    // Canonical cell order: point-major, taskset-index-minor.
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+        let suspend = memo::taskset(seed, &params[pi], ti);
+        let busy_params =
+            GenParams { mode: WaitMode::BusyWait, ..params[pi].clone() };
+        let busy = memo::taskset(seed, &busy_params, ti);
+        let mut out = [false; 8];
+        for (k, a) in Approach::ALL.iter().enumerate() {
+            let ts = if a.is_busy() { &busy } else { &suspend };
+            out[k] = approach_schedulable(ts, *a);
+        }
+        out
+    });
+
+    let mut series: Vec<(String, Vec<f64>)> = Approach::ALL
+        .iter()
+        .map(|a| (a.label().to_string(), vec![0.0; points.len()]))
+        .collect();
+    for (cell_idx, oks) in per_cell.iter().enumerate() {
+        let pi = cell_idx / cfg.tasksets.max(1);
+        for (k, &ok) in oks.iter().enumerate() {
+            series[k].1[pi] += ok as usize as f64;
+        }
+    }
+    for (_, ys) in &mut series {
+        for y in ys.iter_mut() {
+            *y /= cfg.tasksets.max(1) as f64;
+        }
     }
     (xticks, series)
+}
+
+/// Format a panel's merged results as its CSV table (pure — the
+/// determinism suite compares these bytes across worker counts).
+pub fn panel_csv(
+    panel: Panel,
+    xticks: &[String],
+    series: &[(String, Vec<f64>)],
+) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "approach".to_string(),
+        panel.xlabel().to_string(),
+        "schedulable_ratio".to_string(),
+    ]);
+    for (label, ys) in series {
+        for (x, y) in xticks.iter().zip(ys) {
+            csv.row(vec![label.clone(), x.clone(), format!("{y:.4}")]);
+        }
+    }
+    csv
 }
 
 /// Run + persist one panel.
 pub fn run_and_report(panel: Panel, cfg: &ExpConfig) -> String {
     let (xticks, series) = run_panel(panel, cfg);
-    let mut csv = CsvTable::new(vec!["approach".to_string(), panel.xlabel().to_string(), "schedulable_ratio".to_string()]);
-    for (label, ys) in &series {
-        for (x, y) in xticks.iter().zip(ys) {
-            csv.row(vec![label.clone(), x.clone(), format!("{y:.4}")]);
-        }
-    }
+    let csv = panel_csv(panel, &xticks, &series);
     let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
     csv.write(&path).expect("write csv");
     let chart = line_chart(
@@ -206,7 +265,7 @@ mod tests {
     use super::*;
 
     fn tiny() -> ExpConfig {
-        ExpConfig { tasksets: 15, seed: 7 }
+        ExpConfig { tasksets: 15, seed: 7, ..ExpConfig::default() }
     }
 
     #[test]
@@ -228,7 +287,7 @@ mod tests {
     #[test]
     fn gcaps_dominates_mpcp_at_default_point() {
         // The paper's headline: GCAPS ≥ sync-based at Table 3 defaults.
-        let cfg = ExpConfig { tasksets: 40, seed: 11 };
+        let cfg = ExpConfig { tasksets: 40, seed: 11, ..ExpConfig::default() };
         let g = schedulability(Approach::GcapsSuspend, &|_| {}, &cfg);
         let m = schedulability(Approach::MpcpSuspend, &|_| {}, &cfg);
         assert!(g >= m, "gcaps {g} < mpcp {m}");
@@ -236,7 +295,7 @@ mod tests {
 
     #[test]
     fn utilization_sweep_is_monotone_decreasing_for_gcaps() {
-        let cfg = ExpConfig { tasksets: 30, seed: 3 };
+        let cfg = ExpConfig { tasksets: 30, seed: 3, ..ExpConfig::default() };
         let lo = schedulability(
             Approach::GcapsSuspend,
             &|p| p.util_per_cpu = (0.25, 0.35),
@@ -254,7 +313,7 @@ mod tests {
     fn fig8f_best_effort_hurts_sync_more_than_gcaps() {
         // The Fig. 8f claim: with 40% best-effort tasks, GCAPS retains a
         // large margin over the lock-based baselines.
-        let cfg = ExpConfig { tasksets: 40, seed: 5 };
+        let cfg = ExpConfig { tasksets: 40, seed: 5, ..ExpConfig::default() };
         let patch = |p: &mut GenParams| {
             p.best_effort_ratio = 0.4;
             p.util_per_cpu = (0.3, 0.4);
@@ -262,5 +321,27 @@ mod tests {
         let g = schedulability(Approach::GcapsSuspend, &patch, &cfg);
         let f = schedulability(Approach::FmlpSuspend, &patch, &cfg);
         assert!(g >= f, "gcaps {g} < fmlp {f} under best-effort load");
+    }
+
+    #[test]
+    fn run_panel_agrees_with_standalone_schedulability() {
+        // The batched (all-approaches-per-cell) path and the standalone
+        // per-approach path must land on identical memoized tasksets and
+        // therefore identical ratios.
+        let cfg = ExpConfig { tasksets: 10, seed: 21, ..ExpConfig::default() };
+        let panel = Panel::GpuRatio;
+        let (_, series) = run_panel(panel, &cfg);
+        let points = panel.points();
+        for (k, a) in Approach::ALL.iter().enumerate() {
+            for (pi, (_, patch)) in points.iter().enumerate() {
+                let lone = schedulability(*a, patch.as_ref(), &cfg);
+                assert_eq!(
+                    series[k].1[pi],
+                    lone,
+                    "{} point {pi} diverged",
+                    a.label()
+                );
+            }
+        }
     }
 }

@@ -6,33 +6,34 @@
 use crate::analysis::{analyze_with_gpu_prio, gcaps};
 use crate::experiments::{results_dir, ExpConfig};
 use crate::model::WaitMode;
-use crate::taskgen::{generate, GenParams};
+use crate::sweep::{self, memo};
+use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
-use crate::util::rng::Pcg32;
 
 /// (ratio without assignment, ratio with assignment) at one point.
+/// Sharded across the sweep pool, one cell per taskset; both variants
+/// run on the same memoized taskset, so "with assignment" can never
+/// trail "without" on any sample.
 pub fn point(busy: bool, util: f64, cfg: &ExpConfig) -> (f64, f64) {
-    let mut rng = Pcg32::seeded(cfg.seed);
-    let (mut base_ok, mut auds_ok) = (0usize, 0usize);
-    for _ in 0..cfg.tasksets {
-        let p = GenParams {
-            util_per_cpu: (util - 0.05, util + 0.05),
-            mode: if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
-            ..Default::default()
-        };
-        let ts = generate(&mut rng, &p);
+    let p = GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        mode: if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend },
+        ..Default::default()
+    };
+    let seed = cfg.seed;
+    let cells = sweep::run_indexed(&cfg.sweep(), cfg.tasksets, |i| {
+        let ts = memo::taskset(seed, &p, i);
         let base = gcaps::analyze(&ts, busy, &gcaps::Options::default());
-        base_ok += base.schedulable as usize;
         // Full procedure (§7.1.1): retry with Audsley on failure.
-        let with = if base.schedulable {
-            true
-        } else {
-            analyze_with_gpu_prio(&ts, busy).0.schedulable
-        };
-        auds_ok += with as usize;
-    }
-    (base_ok as f64 / cfg.tasksets as f64, auds_ok as f64 / cfg.tasksets as f64)
+        let with =
+            base.schedulable || analyze_with_gpu_prio(&ts, busy).0.schedulable;
+        (base.schedulable, with)
+    });
+    let base_ok = cells.iter().filter(|&&(b, _)| b).count();
+    let auds_ok = cells.iter().filter(|&&(_, w)| w).count();
+    let n = cfg.tasksets.max(1) as f64;
+    (base_ok as f64 / n, auds_ok as f64 / n)
 }
 
 pub fn run_and_report(cfg: &ExpConfig) -> String {
@@ -77,7 +78,7 @@ mod tests {
 
     #[test]
     fn assignment_never_hurts() {
-        let cfg = ExpConfig { tasksets: 25, seed: 13 };
+        let cfg = ExpConfig { tasksets: 25, seed: 13, ..ExpConfig::default() };
         for busy in [false, true] {
             let (base, with) = point(busy, 0.5, &cfg);
             assert!(with >= base, "busy={busy}: {with} < {base}");

@@ -26,10 +26,27 @@ pub struct ExpConfig {
     pub tasksets: usize,
     /// Base RNG seed.
     pub seed: u64,
+    /// Sweep worker threads (`--jobs`; default: available parallelism).
+    /// Results are byte-identical for every value — see `crate::sweep`.
+    pub jobs: usize,
+    /// Print sweep progress/throughput to stderr (CLI runs only).
+    pub progress: bool,
 }
 
 impl Default for ExpConfig {
     fn default() -> ExpConfig {
-        ExpConfig { tasksets: 200, seed: 2024 }
+        ExpConfig {
+            tasksets: 200,
+            seed: 2024,
+            jobs: crate::sweep::available_jobs(),
+            progress: false,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// The sweep-engine view of these knobs.
+    pub fn sweep(&self) -> crate::sweep::SweepConfig {
+        crate::sweep::SweepConfig { jobs: self.jobs, progress: self.progress }
     }
 }

@@ -18,9 +18,10 @@
 //! configured θ. The live variant applies the same estimator to real
 //! concurrent PJRT launch streams.
 
-use crate::experiments::results_dir;
+use crate::experiments::{results_dir, ExpConfig};
 use crate::model::{ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
+use crate::sweep;
 use crate::util::ascii::{bar_chart, histogram_chart};
 use crate::util::csv::CsvTable;
 use crate::util::stats::Histogram;
@@ -67,27 +68,44 @@ pub fn estimate_theta_sim(platform: Platform, ge: Time, nu: usize) -> (f64, f64)
     (slowdown, theta_est)
 }
 
-/// Fig. 13 (DES): θ estimation across kernel lengths and ν values.
-pub fn run_fig13() -> String {
+/// Fig. 13 (DES): θ estimation across kernel lengths and ν values. Each
+/// (board, kernel, ν) cell runs two DES instances; the grid is sharded
+/// across the sweep pool and merged in canonical board-major order.
+pub fn run_fig13(cfg: &ExpConfig) -> String {
+    use crate::experiments::casestudy::Board;
+    // Board presets come from the case study so Fig. 10/13 cannot drift
+    // apart. ε is irrelevant here (the Eq. 15 runs use Policy::TsgRr,
+    // which never issues GCAPS driver calls).
+    let boards: [(&str, Platform); 2] = [
+        ("xavier", Board::XavierNx.platform()),
+        ("orin", Board::OrinNano.platform()),
+    ];
+    const KERNELS_MS: [f64; 3] = [20.0, 40.0, 80.0];
+    const NUS: [usize; 3] = [2, 4, 6];
+
+    let cells = sweep::grid3(boards.len(), KERNELS_MS.len(), NUS.len());
+    let per_cell: Vec<(f64, f64)> = sweep::run(&cfg.sweep(), cells, |_, &(bi, ki, ni)| {
+        estimate_theta_sim(boards[bi].1, ms(KERNELS_MS[ki]), NUS[ni])
+    });
+
     let mut csv = CsvTable::new(vec!["board", "kernel_ms", "nu", "slowdown", "theta_est_us"]);
     let mut rows = Vec::new();
-    for (board, platform) in [
-        ("xavier", Platform { num_cpus: 6, theta: 250, ..Default::default() }),
-        ("orin", Platform { num_cpus: 6, theta: 160, ..Default::default() }),
-    ] {
+    let per_board = KERNELS_MS.len() * NUS.len();
+    for (bi, (board, platform)) in boards.iter().enumerate() {
         let mut ests = Vec::new();
-        for ge_ms in [20.0, 40.0, 80.0] {
-            for nu in [2usize, 4, 6] {
-                let (slow, theta) = estimate_theta_sim(platform, ms(ge_ms), nu);
-                csv.row(vec![
-                    board.to_string(),
-                    format!("{ge_ms}"),
-                    nu.to_string(),
-                    format!("{slow:.3}"),
-                    format!("{theta:.1}"),
-                ]);
-                ests.push(theta);
-            }
+        for (j, &(slow, theta)) in
+            per_cell[bi * per_board..(bi + 1) * per_board].iter().enumerate()
+        {
+            let ge_ms = KERNELS_MS[j / NUS.len()];
+            let nu = NUS[j % NUS.len()];
+            csv.row(vec![
+                board.to_string(),
+                format!("{ge_ms}"),
+                nu.to_string(),
+                format!("{slow:.3}"),
+                format!("{theta:.1}"),
+            ]);
+            ests.push(theta);
         }
         let avg = ests.iter().sum::<f64>() / ests.len() as f64;
         rows.push((format!("{board} (θ_config = {} µs)", platform.theta), avg));

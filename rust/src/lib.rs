@@ -23,5 +23,6 @@ pub mod experiments;
 pub mod model;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod taskgen;
 pub mod util;

@@ -1,14 +1,21 @@
 //! `gcaps` — CLI for the GCAPS reproduction.
 //!
 //! ```text
-//! gcaps exp <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table5|fig12|fig13|all>
+//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|all>
 //!           [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]
+//!           [--jobs N]
 //! gcaps analyze [--seed N]            one random taskset through all 8 analyses
 //! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
 //! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
 //! ```
 //!
 //! Experiment outputs land in `results/` (CSV) and on stdout (ASCII).
+//!
+//! `--jobs N` shards each experiment sweep across N worker threads
+//! (default: the host's available parallelism). The sweeps derive every
+//! random stream by per-cell seed-splitting, so outputs — including CSV
+//! bytes — are identical for every `--jobs` value; see `src/sweep/` and
+//! `tests/sweep_determinism.rs` for the guarantee.
 
 use std::time::Duration;
 
@@ -16,7 +23,7 @@ use gcaps::analysis::{analyze, analyze_with_gpu_prio, Approach};
 use gcaps::coordinator::executor::{run as live_run, LiveMode};
 use gcaps::coordinator::workload::build_case_study;
 use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
-use gcaps::experiments::examples_figs::{run_fig3, run_fig5, run_fig6, run_fig7};
+use gcaps::experiments::examples_figs::{run_examples, run_fig3, run_fig5, run_fig6, run_fig7};
 use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
 use gcaps::experiments::fig9::run_and_report as fig9;
 use gcaps::experiments::ablation::run_and_report as run_ablation;
@@ -68,6 +75,8 @@ fn exp_config(args: &Args) -> ExpConfig {
     ExpConfig {
         tasksets: args.usize_flag("tasksets", 200),
         seed: args.u64_flag("seed", 2024),
+        jobs: args.usize_flag("jobs", gcaps::sweep::available_jobs()),
+        progress: true,
     }
 }
 
@@ -249,14 +258,15 @@ fn cmd_exp(args: &Args) {
         "fig11" => print!("{}", run_fig11(&cfg)),
         "table5" => print!("{}", run_table5(&cfg)),
         "fig12" => print!("{}", run_fig12_sim()),
-        "fig13" => print!("{}", run_fig13()),
+        "fig13" => print!("{}", run_fig13(&cfg)),
+        "examples" => print!("{}", run_examples(&cfg)),
         "ablation" => print!("{}", run_ablation(&cfg)),
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
-            "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table5",
-            "fig12", "fig13", "ablation",
+            "examples", "fig8", "fig9", "fig10", "fig11", "table5", "fig12", "fig13",
+            "ablation",
         ] {
             println!("\n================ {name} ================");
             run_one(name);
@@ -285,8 +295,10 @@ fn main() {
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
                  gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
                  \x20         [--ms N] [--trace-out trace.json]\n\
-                 gcaps exp <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table5|fig12|fig13|all>\n\
-                 \x20         [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]\n\
+                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|all>\n\
+                 \x20         [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N] [--jobs N]\n\
+                 \x20         (--jobs shards the sweep across N workers; results and CSV bytes\n\
+                 \x20          are byte-identical for every worker count — per-cell seed-splitting)\n\
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"
             );
             std::process::exit(2);

@@ -4,7 +4,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Result};
 
 /// One input tensor's signature.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -17,13 +18,13 @@ impl InputSpec {
     /// Parse `"float32:128x128"`.
     pub fn parse(s: &str) -> Result<InputSpec> {
         let (dtype, shape_s) =
-            s.split_once(':').ok_or_else(|| anyhow!("bad input spec {s:?}"))?;
+            s.split_once(':').ok_or_else(|| err!("bad input spec {s:?}"))?;
         let shape = shape_s
             .split('x')
             .map(|d| d.parse::<usize>().context("bad dim"))
             .collect::<Result<Vec<_>>>()?;
         if shape.is_empty() || shape.contains(&0) {
-            return Err(anyhow!("bad shape in {s:?}"));
+            return Err(err!("bad shape in {s:?}"));
         }
         Ok(InputSpec { dtype: dtype.to_string(), shape })
     }
@@ -54,10 +55,10 @@ impl Manifest {
             let name = cols
                 .next()
                 .filter(|s| !s.is_empty())
-                .ok_or_else(|| anyhow!("line {}: missing name", lineno + 1))?;
+                .ok_or_else(|| err!("line {}: missing name", lineno + 1))?;
             let inputs_s = cols
                 .next()
-                .ok_or_else(|| anyhow!("line {}: missing inputs", lineno + 1))?;
+                .ok_or_else(|| err!("line {}: missing inputs", lineno + 1))?;
             let description = cols.next().unwrap_or("").to_string();
             let inputs = inputs_s
                 .split(',')
@@ -67,7 +68,7 @@ impl Manifest {
             workloads.push(WorkloadSpec { name: name.to_string(), inputs, description });
         }
         if workloads.is_empty() {
-            return Err(anyhow!("empty manifest"));
+            return Err(err!("empty manifest"));
         }
         Ok(Manifest { workloads })
     }

@@ -1014,6 +1014,86 @@ mod tests {
         assert_eq!(res.per_task[0].mort(), Some(ms(2.0 + 4.2)));
     }
 
+    // -- edge cases: all must settle without tripping the quiescence
+    //    panic, across every policy ------------------------------------
+
+    const ALL_POLICIES: [Policy; 5] =
+        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+
+    #[test]
+    fn zero_length_cpu_segments_settle() {
+        // A GPU task whose CPU segments are all zero-length: every job is
+        // a pure chain of zero-time transitions around the GPU segment.
+        let mut t = gpu_task(0, 0, 2, 1.0, 0.5, 2.0, 20.0);
+        t.cpu_segments = vec![0, 0];
+        let rival = gpu_task(1, 1, 1, 1.0, 0.5, 2.0, 20.0);
+        let ts = TaskSet::new(vec![t, rival], platform());
+        for policy in ALL_POLICIES {
+            let res = simulate(&ts, &SimConfig::new(policy, ms(200.0)));
+            assert_eq!(res.per_task[0].jobs, 10, "{policy:?}: wrong job count");
+            assert!(res.per_task[1].jobs > 0, "{policy:?}: rival starved");
+        }
+    }
+
+    #[test]
+    fn zero_length_gpu_segments_settle() {
+        // G^m = G^e = 0: the GPU segment completes the instant it starts
+        // (begin → active → end with no time passing), including the
+        // driver-call / lock bracket around it.
+        let mut t = gpu_task(0, 0, 2, 2.0, 0.5, 2.0, 20.0);
+        t.gpu_segments = vec![GpuSegment::new(0, 0)];
+        let lp = Task::cpu_only(1, 0, 1, ms(1.0), ms(20.0));
+        let ts = TaskSet::new(vec![t, lp], platform());
+        for policy in ALL_POLICIES {
+            let res = simulate(&ts, &SimConfig::new(policy, ms(200.0)));
+            assert_eq!(res.per_task[0].jobs, 10, "{policy:?}: wrong job count");
+            assert_eq!(res.per_task[0].deadline_misses, 0, "{policy:?}");
+            assert!(res.per_task[1].jobs > 0, "{policy:?}: lp starved");
+        }
+    }
+
+    #[test]
+    fn epsilon_equals_theta_alpha_zero_settles() {
+        // ε = θ ⇒ α = 0: GCAPS driver calls are zero-length CPU work, the
+        // harshest zero-time-transition case (two per GPU segment). The
+        // response collapses to C + max(G^m, θ + G^e).
+        let p = Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 200 };
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], p);
+        for policy in [Policy::Gcaps, Policy::GcapsEdf] {
+            let res = simulate(&ts, &SimConfig::new(policy, ms(1000.0)));
+            assert_eq!(res.per_task[0].jobs, 10, "{policy:?}");
+            assert_eq!(res.per_task[0].mort(), Some(ms(7.2)), "{policy:?}");
+        }
+        // Contended variant: two tasks hammering zero-α driver calls.
+        let hi = gpu_task(0, 0, 2, 1.0, 0.5, 4.0, 50.0);
+        let lo = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 50.0);
+        let ts2 = TaskSet::new(vec![hi, lo], p);
+        let res = simulate(&ts2, &SimConfig::new(Policy::Gcaps, ms(1000.0)));
+        assert!(res.per_task[0].jobs > 0 && res.per_task[1].jobs > 0);
+    }
+
+    #[test]
+    fn tsg_slice_larger_than_every_kernel_settles() {
+        // L ≫ every G^e: no kernel ever exhausts its slice, so the RR
+        // ring must still rotate (at segment completion) rather than
+        // deadlock on a never-expiring slice.
+        let p = Platform { num_cpus: 2, tsg_slice: ms(500.0), theta: 200, epsilon: 1000 };
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 100.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 100.0);
+        let ts = TaskSet::new(vec![a, b], p);
+        for policy in ALL_POLICIES {
+            let res = simulate(&ts, &SimConfig::new(policy, ms(1000.0)));
+            for i in [0, 1] {
+                assert!(
+                    res.per_task[i].jobs >= 9,
+                    "{policy:?}: tau{i} ran {} jobs",
+                    res.per_task[i].jobs
+                );
+                assert_eq!(res.per_task[i].deadline_misses, 0, "{policy:?}: tau{i}");
+            }
+        }
+    }
+
     #[test]
     fn driver_calls_bounded_by_epsilon() {
         // Three GPU tasks hammering the driver: every measured runlist

@@ -1,0 +1,299 @@
+//! Sharded parallel sweep engine for the experiment harnesses.
+//!
+//! The paper's evaluation (§7, Figs. 8–9) runs ~1000 random tasksets per
+//! utilization point across 8 analysis approaches plus DES replicas.
+//! Every harness in `experiments/` expresses that work as a flat grid of
+//! **cells** (e.g. sweep-point × taskset-index) and hands it to
+//! [`run`], which shards the cells across a worker pool and merges the
+//! per-cell results back **in canonical cell order**.
+//!
+//! # Determinism guarantee
+//!
+//! Results are byte-identical regardless of the worker count (`--jobs`)
+//! and of OS scheduling order, because:
+//!
+//! 1. no random state is shared between cells — each cell derives its
+//!    own PRNG by seed-splitting ([`cell_rng`]): the experiment's base
+//!    seed is folded with a *stable* hash of the cell's coordinates
+//!    ([`cell_hash`], and [`memo::params_hash`] for generator
+//!    parameters), never with an execution-order-dependent value;
+//! 2. workers communicate only `(cell index, result)` pairs; [`run`]
+//!    reassembles them into the input order before returning, so
+//!    downstream CSV emission sees the same sequence a serial run
+//!    produces.
+//!
+//! `rust/tests/sweep_determinism.rs` locks this guarantee: a Fig. 8
+//! panel at `jobs = 1 / 2 / 8` must produce identical merged results
+//! and identical CSV bytes.
+//!
+//! # Sharding
+//!
+//! Workers are `std::thread`s pulling cell indices from a shared atomic
+//! cursor (a lock-free work queue — cheap dynamic load balancing, since
+//! cell costs vary wildly between schedulable and unschedulable
+//! tasksets) and sending results back over an mpsc channel. The
+//! collector thread streams them into a slot table and prints an
+//! optional progress/throughput line (cells/s).
+
+pub mod memo;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::util::rng::Pcg32;
+
+/// Worker count and progress reporting for one sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    /// Worker threads; 1 = run inline on the calling thread.
+    pub jobs: usize,
+    /// Print a progress/throughput line to stderr.
+    pub progress: bool,
+}
+
+impl SweepConfig {
+    /// Single-threaded, silent (the reference execution).
+    pub fn serial() -> SweepConfig {
+        SweepConfig { jobs: 1, progress: false }
+    }
+
+    /// Silent sweep with an explicit worker count.
+    pub fn with_jobs(jobs: usize) -> SweepConfig {
+        SweepConfig { jobs: jobs.max(1), progress: false }
+    }
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig { jobs: available_jobs(), progress: false }
+    }
+}
+
+/// Default worker count: the host's available parallelism (1 if unknown).
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// SplitMix64 finalizer — the standard 64-bit mixer used to decorrelate
+/// seed-split streams (Steele et al., OOPSLA 2014).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Stable FNV-1a fold of cell coordinates. Inputs must be derived from
+/// the cell's *identity* (indices, parameter bits), never from execution
+/// order — that is what makes sweeps worker-count-invariant.
+pub fn cell_hash(parts: &[u64]) -> u64 {
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    for &p in parts {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (p >> shift) & 0xff;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Per-cell PRNG via seed-splitting: `seed ⊕ stable cell hash`, run
+/// through SplitMix64 for state and stream so nearby cells land on
+/// uncorrelated PCG32 streams.
+pub fn cell_rng(seed: u64, hash: u64) -> Pcg32 {
+    Pcg32::new(splitmix64(seed ^ hash), splitmix64(hash ^ 0x5851f42d4c957f2d))
+}
+
+/// Run `f` over every cell, sharded across `cfg.jobs` workers, and
+/// return the results in canonical (input) cell order. `f(i, &cells[i])`
+/// must be a pure function of the cell — see the module docs for the
+/// determinism contract. Panics in `f` propagate to the caller.
+pub fn run<C, R, F>(cfg: &SweepConfig, cells: Vec<C>, f: F) -> Vec<R>
+where
+    C: Send + Sync,
+    R: Send,
+    F: Fn(usize, &C) -> R + Send + Sync,
+{
+    let n = cells.len();
+    let jobs = cfg.jobs.max(1).min(n.max(1));
+    let start = Instant::now();
+    if jobs <= 1 {
+        let out: Vec<R> = cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+        if cfg.progress {
+            report_progress(n, n, start, true);
+        }
+        return out;
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let cells_ref = &cells;
+    let f_ref = &f;
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f_ref(i, &cells_ref[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx); // collectors below hold the only receiver
+
+        let mut done = 0usize;
+        let mut last_report = Instant::now();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+            done += 1;
+            if cfg.progress
+                && (done == n || last_report.elapsed().as_millis() >= 500)
+            {
+                report_progress(done, n, start, done == n);
+                last_report = Instant::now();
+            }
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| s.expect("sweep worker dropped a cell result"))
+        .collect()
+}
+
+/// Convenience wrapper for index-only grids (`0..n`).
+pub fn run_indexed<R, F>(cfg: &SweepConfig, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Send + Sync,
+{
+    run(cfg, (0..n).collect::<Vec<usize>>(), move |i, _| f(i))
+}
+
+/// Canonical 2-D cross-product index grid: i-major, j-minor. Result
+/// index `c` of a sweep over this grid decodes as `(c / n1, c % n1)`.
+pub fn grid2(n0: usize, n1: usize) -> Vec<(usize, usize)> {
+    let mut cells = Vec::with_capacity(n0 * n1);
+    for i in 0..n0 {
+        for j in 0..n1 {
+            cells.push((i, j));
+        }
+    }
+    cells
+}
+
+/// Canonical 3-D cross-product index grid (row-major).
+pub fn grid3(n0: usize, n1: usize, n2: usize) -> Vec<(usize, usize, usize)> {
+    let mut cells = Vec::with_capacity(n0 * n1 * n2);
+    for i in 0..n0 {
+        for j in 0..n1 {
+            for k in 0..n2 {
+                cells.push((i, j, k));
+            }
+        }
+    }
+    cells
+}
+
+fn report_progress(done: usize, total: usize, start: Instant, finished: bool) {
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    eprint!("\r  sweep: {done}/{total} cells ({:.0} cells/s)", done as f64 / secs);
+    if finished {
+        eprintln!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as Counter;
+
+    #[test]
+    fn preserves_canonical_order() {
+        let cells: Vec<usize> = (0..257).collect();
+        for jobs in [1, 2, 3, 8, 64] {
+            let out = run(&SweepConfig::with_jobs(jobs), cells.clone(), |i, &c| {
+                assert_eq!(i, c);
+                c * 3 + 1
+            });
+            let expect: Vec<usize> = (0..257).map(|c| c * 3 + 1).collect();
+            assert_eq!(out, expect, "jobs = {jobs}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let f = |i: usize, _: &u8| {
+            let mut rng = cell_rng(42, cell_hash(&[7, i as u64]));
+            rng.next_u64()
+        };
+        let cells = vec![0u8; 100];
+        let serial = run(&SweepConfig::serial(), cells.clone(), f);
+        let par = run(&SweepConfig::with_jobs(8), cells, f);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once() {
+        static HITS: Counter = Counter::new(0);
+        HITS.store(0, Ordering::SeqCst);
+        let out = run_indexed(&SweepConfig::with_jobs(4), 500, |i| {
+            HITS.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(out.len(), 500);
+        assert_eq!(HITS.load(Ordering::SeqCst), 500);
+    }
+
+    #[test]
+    fn empty_and_tiny_grids() {
+        let none: Vec<u32> = run(&SweepConfig::with_jobs(8), Vec::<u8>::new(), |_, _| 1);
+        assert!(none.is_empty());
+        let one = run(&SweepConfig::with_jobs(8), vec![5u8], |_, &c| c as u32);
+        assert_eq!(one, vec![5]);
+    }
+
+    #[test]
+    fn cell_rng_is_stable_and_split() {
+        let mut a = cell_rng(1, cell_hash(&[0, 3]));
+        let mut b = cell_rng(1, cell_hash(&[0, 3]));
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        // Adjacent cells must not share a stream.
+        let mut c = cell_rng(1, cell_hash(&[0, 4]));
+        let same = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+        assert!(same < 4, "adjacent cells correlated ({same}/64)");
+    }
+
+    #[test]
+    fn cell_hash_sensitive_to_order_and_value() {
+        assert_ne!(cell_hash(&[1, 2]), cell_hash(&[2, 1]));
+        assert_ne!(cell_hash(&[0]), cell_hash(&[]));
+        assert_ne!(cell_hash(&[u64::MAX]), cell_hash(&[u64::MAX - 1]));
+    }
+
+    #[test]
+    fn grids_are_row_major_and_decode_by_divmod() {
+        let g = grid2(3, 4);
+        assert_eq!(g.len(), 12);
+        for (c, &(i, j)) in g.iter().enumerate() {
+            assert_eq!((i, j), (c / 4, c % 4));
+        }
+        let g = grid3(2, 3, 4);
+        assert_eq!(g.len(), 24);
+        assert_eq!(g[0], (0, 0, 0));
+        assert_eq!(g[23], (1, 2, 3));
+        assert!(grid2(0, 5).is_empty() && grid3(2, 0, 2).is_empty());
+    }
+}

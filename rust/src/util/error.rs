@@ -1,0 +1,114 @@
+//! Minimal error plumbing for the I/O-facing layers (`runtime/`,
+//! `coordinator/workload`). The offline crate set has no `anyhow`, so
+//! this provides the 10% of it we use: a string-backed [`Error`], the
+//! [`err!`](crate::err) constructor macro, and `.context(..)` /
+//! `.with_context(..)` adapters on `Result` and `Option`.
+
+use std::fmt;
+
+/// A string-backed error. Construct with [`Error::msg`] or the
+/// [`err!`](crate::err) macro.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-local result type (anyhow::Result analog).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style formatted error constructor.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bad value {} at line {}", 7, 3);
+        assert_eq!(e.to_string(), "bad value 7 at line 3");
+    }
+
+    #[test]
+    fn result_context_chains() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<i32>().map(|_| ());
+        let e = r.context("parsing x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(4u8).context("missing").unwrap(), 4);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let ok: Result<u8, Error> = Ok(1);
+        let v = ok.with_context(|| unreachable!("not evaluated on Ok"));
+        assert_eq!(v.unwrap(), 1);
+    }
+}

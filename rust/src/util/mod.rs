@@ -5,5 +5,6 @@ pub mod ascii;
 pub mod bench;
 pub mod check;
 pub mod csv;
+pub mod error;
 pub mod rng;
 pub mod stats;

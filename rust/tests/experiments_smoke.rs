@@ -10,7 +10,7 @@ use gcaps::experiments::overhead::{run_fig12_sim, run_fig13};
 use gcaps::experiments::{results_dir, ExpConfig};
 
 fn tiny() -> ExpConfig {
-    ExpConfig { tasksets: 5, seed: 123 }
+    ExpConfig { tasksets: 5, seed: 123, ..ExpConfig::default() }
 }
 
 #[test]
@@ -42,7 +42,7 @@ fn fig9_produces_csv() {
 
 #[test]
 fn case_study_harnesses_run() {
-    let cfg = ExpConfig { tasksets: 0, seed: 1 };
+    let cfg = ExpConfig { tasksets: 0, seed: 1, ..ExpConfig::default() };
     let f10 = run_fig10(Board::XavierNx, &cfg);
     assert!(f10.contains("MORT under gcaps_busy"));
     let f11 = run_fig11(&cfg);
@@ -55,7 +55,16 @@ fn case_study_harnesses_run() {
 #[test]
 fn overhead_harnesses_run() {
     assert!(run_fig12_sim().contains("Fig. 12"));
-    assert!(run_fig13().contains("Fig. 13"));
+    assert!(run_fig13(&tiny()).contains("Fig. 13"));
+}
+
+#[test]
+fn examples_aggregate_runs() {
+    use gcaps::experiments::examples_figs::run_examples;
+    let out = run_examples(&tiny());
+    for fig in ["Fig. 3", "Fig. 5", "Fig. 6", "Fig. 7"] {
+        assert!(out.contains(fig), "{fig} missing from examples aggregate");
+    }
 }
 
 #[test]

@@ -1,0 +1,60 @@
+//! The sweep engine's core guarantee, enforced end-to-end: experiment
+//! results — including the exact CSV bytes — are identical for every
+//! worker count. A violation here means some random stream or merge
+//! order leaked execution-order dependence into the sweeps.
+
+use gcaps::experiments::fig8::{panel_csv, run_panel, Panel};
+use gcaps::experiments::{ablation, casestudy, fig9, ExpConfig};
+
+fn cfg_with_jobs(jobs: usize) -> ExpConfig {
+    ExpConfig { tasksets: 8, seed: 2024, jobs, progress: false }
+}
+
+#[test]
+fn fig8_panel_a_identical_across_worker_counts() {
+    let (x1, s1) = run_panel(Panel::TasksPerCpu, &cfg_with_jobs(1));
+    let (x2, s2) = run_panel(Panel::TasksPerCpu, &cfg_with_jobs(2));
+    let (x8, s8) = run_panel(Panel::TasksPerCpu, &cfg_with_jobs(8));
+    assert_eq!(x1, x2, "xticks diverged at jobs = 2");
+    assert_eq!(x1, x8, "xticks diverged at jobs = 8");
+    assert_eq!(s1, s2, "merged series diverged at jobs = 2");
+    assert_eq!(s1, s8, "merged series diverged at jobs = 8");
+
+    // The emitted CSV must be byte-identical, not merely numerically
+    // equal — this is what `gcaps exp fig8 --jobs N` writes to disk.
+    let b1 = panel_csv(Panel::TasksPerCpu, &x1, &s1).to_string();
+    let b2 = panel_csv(Panel::TasksPerCpu, &x2, &s2).to_string();
+    let b8 = panel_csv(Panel::TasksPerCpu, &x8, &s8).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "CSV bytes diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "CSV bytes diverged at jobs = 8");
+    assert!(b1.lines().count() > 8, "CSV suspiciously small:\n{b1}");
+}
+
+#[test]
+fn fig9_point_identical_across_worker_counts() {
+    for busy in [false, true] {
+        let a = fig9::point(busy, 0.5, &cfg_with_jobs(1));
+        let b = fig9::point(busy, 0.5, &cfg_with_jobs(4));
+        assert_eq!(a, b, "fig9 point (busy = {busy}) diverged");
+    }
+}
+
+#[test]
+fn ablation_sweeps_identical_across_worker_counts() {
+    let a = ablation::lemma12_ablation(&cfg_with_jobs(1), 0.4);
+    let b = ablation::lemma12_ablation(&cfg_with_jobs(8), 0.4);
+    assert_eq!(a, b, "lemma12 ablation diverged");
+    let a = ablation::epsilon_sensitivity(&cfg_with_jobs(1), 2000);
+    let b = ablation::epsilon_sensitivity(&cfg_with_jobs(3), 2000);
+    assert_eq!(a, b, "epsilon sensitivity diverged");
+    let a = ablation::miss_ratio(gcaps::sim::Policy::Gcaps, 0.6, &cfg_with_jobs(1));
+    let b = ablation::miss_ratio(gcaps::sim::Policy::Gcaps, 0.6, &cfg_with_jobs(4));
+    assert_eq!(a, b, "simulated miss ratio diverged");
+}
+
+#[test]
+fn casestudy_morts_identical_across_worker_counts() {
+    let a = casestudy::morts(casestudy::Board::XavierNx, &cfg_with_jobs(1));
+    let b = casestudy::morts(casestudy::Board::XavierNx, &cfg_with_jobs(8));
+    assert_eq!(a, b, "fig10 MORTs diverged across worker counts");
+}

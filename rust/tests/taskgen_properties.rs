@@ -1,0 +1,138 @@
+//! Property tests for the Table 3 taskset generator (taskgen/):
+//! structural invariants that must hold for every seed, checked over 200
+//! deterministic seeds each (failures reproduce from the printed seed).
+
+use gcaps::model::WaitMode;
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::check::forall;
+
+/// Largest single-task utilization — the WFD balance slack: worst-fit
+/// placement can push a core away from its drawn budget by at most one
+/// task's worth of load.
+fn max_task_util(ts: &gcaps::model::TaskSet) -> f64 {
+    ts.tasks.iter().map(|t| t.utilization()).fold(0.0, f64::max)
+}
+
+#[test]
+fn validate_holds_for_200_seeds() {
+    forall("taskset validity (default params)", 200, |rng| {
+        generate(rng, &GenParams::default()).validate()
+    });
+}
+
+#[test]
+fn validate_holds_under_parameter_variations() {
+    let variants = [
+        GenParams { best_effort_ratio: 0.4, ..Default::default() },
+        GenParams { num_cpus: 8, tasks_per_cpu: (2, 3), ..Default::default() },
+        GenParams { gpu_task_ratio: (1.0, 1.0), ..Default::default() },
+        GenParams { mode: WaitMode::BusyWait, util_per_cpu: (0.2, 0.3), ..Default::default() },
+        GenParams { gpu_segments: (3, 3), g_to_c_ratio: (2.0, 2.0), ..Default::default() },
+    ];
+    for (vi, p) in variants.iter().enumerate() {
+        forall(&format!("taskset validity (variant {vi})"), 200, |rng| {
+            generate(rng, p).validate()
+        });
+    }
+}
+
+#[test]
+fn per_cpu_utilization_lands_in_band_after_wfd() {
+    forall("per-CPU utilization band", 200, |rng| {
+        let p = GenParams::default();
+        let (lo, hi) = p.util_per_cpu;
+        let ts = generate(rng, &p);
+        let n = ts.platform.num_cpus;
+
+        // The mean per-CPU load equals the mean of the drawn budgets, so
+        // it must sit inside the band (small slack: the 100 µs demand
+        // floor and µs rounding can only nudge it).
+        let total: f64 = (0..n).map(|c| ts.core_utilization(c)).sum();
+        let mean = total / n as f64;
+        if !(lo - 0.02..=hi + 0.02).contains(&mean) {
+            return Err(format!("mean per-CPU util {mean:.3} outside [{lo}, {hi}]"));
+        }
+
+        // After WFD re-allocation each core stays within the band up to
+        // one task's utilization (worst-fit places every task on the
+        // least-loaded core, so no core overshoots by more than the task
+        // that landed last, nor undershoots by more).
+        let slack = max_task_util(&ts) + 0.02;
+        for c in 0..n {
+            let u = ts.core_utilization(c);
+            if !(lo - slack..=hi + slack).contains(&u) {
+                return Err(format!(
+                    "core {c} util {u:.3} outside [{lo} - {slack:.3}, {hi} + {slack:.3}]"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gpu_task_ratio_within_band() {
+    forall("GPU-task ratio band", 200, |rng| {
+        let p = GenParams::default();
+        let (lo, hi) = p.gpu_task_ratio;
+        let ts = generate(rng, &p);
+        let ratio = ts.num_gpu_tasks() as f64 / ts.len() as f64;
+        // The drawn ratio is rounded to a task count per CPU: with ≥3
+        // tasks per CPU the rounding error is < 0.5/3 per core.
+        let slack = 0.5 / p.tasks_per_cpu.0 as f64;
+        if !(lo - slack..=hi + slack).contains(&ratio) {
+            return Err(format!(
+                "gpu ratio {ratio:.3} outside [{lo} ± {slack:.3} ± {hi}]"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gpu_segment_counts_within_band() {
+    forall("GPU segment-count band", 200, |rng| {
+        let p = GenParams::default();
+        let (lo, hi) = p.gpu_segments;
+        let ts = generate(rng, &p);
+        for t in &ts.tasks {
+            if t.uses_gpu() {
+                let k = t.eta_g();
+                if !(lo..=hi).contains(&k) {
+                    return Err(format!("task {}: η_g = {k} outside [{lo}, {hi}]", t.id));
+                }
+                // Alternation: a GPU job starts and ends on the CPU.
+                if t.eta_c() != k + 1 {
+                    return Err(format!("task {}: η_c = {} ≠ η_g + 1", t.id, t.eta_c()));
+                }
+            } else if t.eta_c() != 1 {
+                return Err(format!("CPU-only task {} has {} segments", t.id, t.eta_c()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wait_mode_and_best_effort_stamping() {
+    forall("mode/BE stamping", 100, |rng| {
+        let p = GenParams {
+            mode: WaitMode::BusyWait,
+            best_effort_ratio: 0.3,
+            ..Default::default()
+        };
+        let ts = generate(rng, &p);
+        if !ts.tasks.iter().all(|t| t.mode == WaitMode::BusyWait) {
+            return Err("wait mode not stamped on every task".into());
+        }
+        let be = ts.be_tasks().count();
+        let expect = (ts.len() as f64 * 0.3).round() as usize;
+        if be != expect.min(ts.len().saturating_sub(1)) {
+            return Err(format!("{be} best-effort tasks, expected {expect}"));
+        }
+        if ts.be_tasks().any(|t| t.cpu_prio != 0 || t.gpu_prio != 0) {
+            return Err("best-effort task kept an RT priority".into());
+        }
+        Ok(())
+    });
+}
