@@ -14,8 +14,8 @@ fn main() {
     let cfg = ExpConfig { tasksets: 0, seed: 1, jobs: 1, progress: false };
     run("casestudy/fig10_morts_xavier", move || morts(Board::XavierNx, &cfg).len());
 
-    let ts_s = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
-    let ts_b = table4_taskset(Board::XavierNx.platform(), WaitMode::BusyWait);
+    let ts_s = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);
+    let ts_b = table4_taskset(&Board::XavierNx.platform(), WaitMode::BusyWait);
     run("casestudy/table5_wcrt_gcaps", {
         let ts_s = ts_s.clone();
         move || gcaps_rta::analyze(&ts_s, false, &gcaps_rta::Options::default()).schedulable
@@ -23,7 +23,7 @@ fn main() {
     run("casestudy/table5_wcrt_tsg_rr", move || rr::analyze(&ts_b, true).schedulable);
 
     run("casestudy/fig13_theta_estimate", move || {
-        let p = Platform { num_cpus: 6, theta: 250, ..Default::default() };
-        estimate_theta_sim(p, ms(40.0), 4)
+        let p = Platform::single(6, 1024, 250, 1000);
+        estimate_theta_sim(&p, ms(40.0), 4)
     });
 }

@@ -31,7 +31,7 @@ fn main() {
     });
 
     // The case-study taskset (Fig. 10 inner loop).
-    let case = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
+    let case = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);
     run("sim/case_study_30s/gcaps", {
         let case = case.clone();
         move || simulate(&case, &SimConfig::new(Policy::Gcaps, ms(30_000.0))).run.horizon

@@ -53,12 +53,16 @@ pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u
         order.sort_by_key(|&i| work.tasks[i].cpu_prio);
         let mut placed = None;
         for &cand in &order {
-            // (a) per-core order: cand must be the lowest-CPU-priority
-            // unassigned candidate on its core.
+            // (a) per-(core, engine) order: cand must be the
+            // lowest-CPU-priority unassigned candidate among tasks on
+            // its core AND its GPU engine (the §5.3 constraint only
+            // binds tasks sharing a context queue).
             let core = work.tasks[cand].core;
+            let gpu = work.tasks[cand].gpu;
             let violates = unassigned.iter().any(|&d| {
                 d != cand
                     && work.tasks[d].core == core
+                    && work.tasks[d].gpu == gpu
                     && work.tasks[d].cpu_prio < work.tasks[cand].cpu_prio
             });
             if violates {
@@ -107,6 +111,7 @@ mod tests {
             cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
             gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
@@ -182,7 +187,7 @@ mod tests {
         // higher RM priority starves a shorter, more urgent GPU segment;
         // swapping GPU priorities rescues it. Built so the default
         // assignment fails but an alternative passes.
-        let p = Platform { num_cpus: 2, epsilon: 100, theta: 100, tsg_slice: 1024 };
+        let p = Platform::single(2, 1024, 100, 100);
         let tasks = vec![
             // Long GPU segment, long-ish period, higher RM priority.
             gpu_task(0, 0, 2, 4.0, 1.0, 80.0, 190.0),

@@ -20,20 +20,18 @@
 //! comparison the paper draws.
 
 use crate::analysis::terms::{fixed_point, jitter_c, njobs, njobs_jitter, AnalysisResult, Rta};
-use crate::model::{TaskSet, Time};
+use crate::analysis::Analysis;
+use crate::model::{TaskSet, Time, WaitMode};
 
 /// Per-request FIFO blocking: one longest gcs per other GPU-using task
-/// (RT or best-effort).
+/// sharing τ_i's engine (RT or best-effort) — each engine is its own
+/// FIFO lock, so other engines' queues never delay τ_i.
 fn request_blocking(ts: &TaskSet, i: usize) -> Time {
     let me = &ts.tasks[i];
     if !me.uses_gpu() {
         return 0;
     }
-    ts.tasks
-        .iter()
-        .filter(|t| t.id != me.id && t.uses_gpu())
-        .map(|t| t.max_gpu_segment())
-        .sum()
+    ts.sharing_gpu(i).map(|t| t.max_gpu_segment()).sum()
 }
 
 /// Boost blocking: same structure as the MPCP module — every job of a
@@ -96,6 +94,26 @@ pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
     AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
+/// [`Analysis`] implementation: the FMLP+ synchronization baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct FmlpAnalysis {
+    pub busy: bool,
+}
+
+impl Analysis for FmlpAnalysis {
+    fn label(&self) -> &'static str {
+        if self.busy { "fmlp_busy" } else { "fmlp_suspend" }
+    }
+
+    fn wait_mode(&self) -> WaitMode {
+        if self.busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend }
+    }
+
+    fn analyze(&self, ts: &TaskSet) -> AnalysisResult {
+        analyze(ts, self.busy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,11 +132,31 @@ mod tests {
             cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
             gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
             mode: WaitMode::SelfSuspend,
         }
+    }
+
+    #[test]
+    fn fifo_queue_is_per_engine() {
+        // Spreading the two contenders over a second engine removes
+        // their gcs from τ_0's FIFO bound.
+        let t0 = gpu_task(0, 0, 3, 2.0, 1.0, 5.0, 200.0);
+        let mut t1 = gpu_task(1, 1, 2, 2.0, 1.0, 10.0, 200.0);
+        let mut t2 = gpu_task(2, 1, 1, 2.0, 1.0, 20.0, 200.0);
+        t1.gpu = 1;
+        t2.gpu = 1;
+        let p = Platform { num_cpus: 2, ..Default::default() }.with_num_gpus(2);
+        let ts = TaskSet::new(vec![t0, t1, t2], p);
+        let res = analyze(&ts, false);
+        // τ_0 queues alone on engine 0: remote blocking = 0.
+        assert_eq!(res.response[0], Some(ms(8.0)));
+        // τ_2 still waits for τ_1's gcs on engine 1 (11 ms) and absorbs
+        // one same-core preemption of C_1 + G^m_1 = 3 ms.
+        assert_eq!(res.response[2], Some(ms(23.0 + 11.0 + 3.0)));
     }
 
     #[test]

@@ -25,11 +25,38 @@ pub mod mpcp;
 pub mod rr;
 pub mod terms;
 
+pub use fmlp::FmlpAnalysis;
+pub use gcaps::GcapsAnalysis;
+pub use mpcp::MpcpAnalysis;
+pub use rr::TsgRrAnalysis;
 pub use terms::{AnalysisResult, Rta};
 
-use crate::model::TaskSet;
+use crate::model::{TaskSet, WaitMode};
 
-/// The eight analysis configurations evaluated in Fig. 8.
+/// A first-class response-time analysis: one of the four families in a
+/// fixed wait mode. All harnesses (Fig. 8, the multi-GPU sweep, the
+/// ablations) dispatch through this trait, so adding an analysis means
+/// implementing it and registering the approach — no call-site edits.
+///
+/// Implementations must honor per-GPU-engine interference sets: GPU
+/// blocking / preemption / interleaving terms may only couple tasks
+/// sharing a `Task::gpu` engine (CPU-side preemption still couples
+/// same-core tasks regardless of engine).
+pub trait Analysis: Sync {
+    /// Label used in figures and CSVs (matches the paper's legends).
+    fn label(&self) -> &'static str;
+
+    /// The wait mode this analysis models during pure GPU execution.
+    fn wait_mode(&self) -> WaitMode;
+
+    /// Run the analysis over every RT task of `ts`.
+    fn analyze(&self, ts: &TaskSet) -> AnalysisResult;
+}
+
+/// The eight analysis configurations evaluated in Fig. 8 — a thin
+/// registry over the [`Analysis`] trait objects, kept as an enum so
+/// `Approach::ALL`-driven harnesses, CSV labels and match-based
+/// dispatch (e.g. the DES policy mapping) keep working.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Approach {
     GcapsBusy,
@@ -41,6 +68,15 @@ pub enum Approach {
     FmlpBusy,
     FmlpSuspend,
 }
+
+static GCAPS_BUSY: GcapsAnalysis = GcapsAnalysis { busy: true };
+static GCAPS_SUSPEND: GcapsAnalysis = GcapsAnalysis { busy: false };
+static TSG_RR_BUSY: TsgRrAnalysis = TsgRrAnalysis { busy: true };
+static TSG_RR_SUSPEND: TsgRrAnalysis = TsgRrAnalysis { busy: false };
+static MPCP_BUSY: MpcpAnalysis = MpcpAnalysis { busy: true };
+static MPCP_SUSPEND: MpcpAnalysis = MpcpAnalysis { busy: false };
+static FMLP_BUSY: FmlpAnalysis = FmlpAnalysis { busy: true };
+static FMLP_SUSPEND: FmlpAnalysis = FmlpAnalysis { busy: false };
 
 impl Approach {
     pub const ALL: [Approach; 8] = [
@@ -54,26 +90,35 @@ impl Approach {
         Approach::FmlpSuspend,
     ];
 
+    /// The trait object implementing this approach.
+    pub fn analysis(&self) -> &'static dyn Analysis {
+        match self {
+            Approach::GcapsBusy => &GCAPS_BUSY,
+            Approach::GcapsSuspend => &GCAPS_SUSPEND,
+            Approach::TsgRrBusy => &TSG_RR_BUSY,
+            Approach::TsgRrSuspend => &TSG_RR_SUSPEND,
+            Approach::MpcpBusy => &MPCP_BUSY,
+            Approach::MpcpSuspend => &MPCP_SUSPEND,
+            Approach::FmlpBusy => &FMLP_BUSY,
+            Approach::FmlpSuspend => &FMLP_SUSPEND,
+        }
+    }
+
     /// Label used in figures and CSVs (matches the paper's legends).
     pub fn label(&self) -> &'static str {
-        match self {
-            Approach::GcapsBusy => "gcaps_busy",
-            Approach::GcapsSuspend => "gcaps_suspend",
-            Approach::TsgRrBusy => "tsg_rr_busy",
-            Approach::TsgRrSuspend => "tsg_rr_suspend",
-            Approach::MpcpBusy => "mpcp_busy",
-            Approach::MpcpSuspend => "mpcp_suspend",
-            Approach::FmlpBusy => "fmlp_busy",
-            Approach::FmlpSuspend => "fmlp_suspend",
-        }
+        self.analysis().label()
     }
 
     pub fn from_label(s: &str) -> Option<Approach> {
         Approach::ALL.iter().copied().find(|a| a.label() == s)
     }
 
+    pub fn wait_mode(&self) -> WaitMode {
+        self.analysis().wait_mode()
+    }
+
     pub fn is_busy(&self) -> bool {
-        matches!(self, Approach::GcapsBusy | Approach::TsgRrBusy | Approach::MpcpBusy | Approach::FmlpBusy)
+        self.wait_mode() == WaitMode::BusyWait
     }
 }
 
@@ -83,15 +128,18 @@ impl Approach {
 /// tasksets with the Audsley GPU-priority assignment — see
 /// [`analyze_with_gpu_prio`].
 pub fn analyze(ts: &TaskSet, approach: Approach) -> AnalysisResult {
+    approach.analysis().analyze(ts)
+}
+
+/// Schedulability under the full per-approach procedure the paper's
+/// evaluation uses (§7.1.1): plain analysis for every family, plus the
+/// Audsley GPU-priority retry for the GCAPS approaches. Shared by the
+/// Fig. 8 panels and the multi-GPU sweep.
+pub fn approach_schedulable(ts: &TaskSet, approach: Approach) -> bool {
     match approach {
-        Approach::GcapsBusy => gcaps::analyze(ts, true, &gcaps::Options::default()),
-        Approach::GcapsSuspend => gcaps::analyze(ts, false, &gcaps::Options::default()),
-        Approach::TsgRrBusy => rr::analyze(ts, true),
-        Approach::TsgRrSuspend => rr::analyze(ts, false),
-        Approach::MpcpBusy => mpcp::analyze(ts, true),
-        Approach::MpcpSuspend => mpcp::analyze(ts, false),
-        Approach::FmlpBusy => fmlp::analyze(ts, true),
-        Approach::FmlpSuspend => fmlp::analyze(ts, false),
+        Approach::GcapsBusy => analyze_with_gpu_prio(ts, true).0.schedulable,
+        Approach::GcapsSuspend => analyze_with_gpu_prio(ts, false).0.schedulable,
+        a => a.analysis().analyze(ts).schedulable,
     }
 }
 

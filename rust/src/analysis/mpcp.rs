@@ -24,28 +24,30 @@
 //! lower-priority gcs CPU portions executed at boosted priority.
 
 use crate::analysis::terms::{fixed_point, jitter_c, njobs, njobs_jitter, AnalysisResult, Rta};
-use crate::model::{Task, TaskSet, Time};
+use crate::analysis::Analysis;
+use crate::model::{Task, TaskSet, Time, WaitMode};
 
 /// Per-request remote blocking W_i for task i (same bound reused for
-/// each of its η^g requests). Returns None if the iteration diverges
-/// past the deadline (treated as unschedulable upstream).
+/// each of its η^g requests). Each GPU engine is its own lock, so only
+/// requesters sharing τ_i's engine queue against it. Returns None if
+/// the iteration diverges past the deadline (treated as unschedulable
+/// upstream).
 fn request_blocking(ts: &TaskSet, i: usize) -> Option<Time> {
     let me = &ts.tasks[i];
     if !me.uses_gpu() {
         return Some(0);
     }
-    // Longest single gcs among lower-priority (or best-effort) requesters.
+    // Longest single gcs among same-engine lower-priority (or
+    // best-effort) requesters.
     let lp_max: Time = ts
-        .tasks
-        .iter()
-        .filter(|t| t.id != me.id && t.uses_gpu() && (t.best_effort || t.cpu_prio < me.cpu_prio))
+        .sharing_gpu(i)
+        .filter(|t| t.best_effort || t.cpu_prio < me.cpu_prio)
         .map(|t| t.max_gpu_segment())
         .max()
         .unwrap_or(0);
     let hp: Vec<&Task> = ts
-        .tasks
-        .iter()
-        .filter(|t| t.id != me.id && !t.best_effort && t.uses_gpu() && t.cpu_prio > me.cpu_prio)
+        .sharing_gpu(i)
+        .filter(|t| !t.best_effort && t.cpu_prio > me.cpu_prio)
         .collect();
     // Iterate W = lp_max + Σ_h (ceil(W/T_h)+1) · Σ_j gcs_{h,j}.
     let mut w = lp_max;
@@ -159,6 +161,26 @@ pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
     AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
+/// [`Analysis`] implementation: the MPCP synchronization baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct MpcpAnalysis {
+    pub busy: bool,
+}
+
+impl Analysis for MpcpAnalysis {
+    fn label(&self) -> &'static str {
+        if self.busy { "mpcp_busy" } else { "mpcp_suspend" }
+    }
+
+    fn wait_mode(&self) -> WaitMode {
+        if self.busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend }
+    }
+
+    fn analyze(&self, ts: &TaskSet) -> AnalysisResult {
+        analyze(ts, self.busy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,11 +199,26 @@ mod tests {
             cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
             gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
             mode: WaitMode::SelfSuspend,
         }
+    }
+
+    #[test]
+    fn cross_engine_gcs_does_not_block() {
+        // The MPCP structural weakness vanishes across engines: the hp
+        // task no longer waits for the lp task's 60 ms critical section
+        // when they lock different GPUs.
+        let hi = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let mut lo = gpu_task(1, 1, 1, 10.0, 2.0, 60.0, 200.0);
+        lo.gpu = 1;
+        let p = Platform { num_cpus: 2, ..Default::default() }.with_num_gpus(2);
+        let ts = TaskSet::new(vec![hi, lo], p);
+        let res = analyze(&ts, false);
+        assert_eq!(res.response[0], Some(ms(8.0))); // isolated demand
     }
 
     #[test]

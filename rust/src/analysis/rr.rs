@@ -26,45 +26,50 @@
 use crate::analysis::terms::{
     fixed_point, interleave, jitter_c, jitter_g, njobs, njobs_jitter, AnalysisResult, Rta,
 };
-use crate::model::{Task, TaskSet, Time};
+use crate::analysis::Analysis;
+use crate::model::{Task, TaskSet, Time, WaitMode};
 
 /// Lemma 1: interference on τ_i's own GPU segments from interleaved
-/// execution with every other GPU-using process (RT and best-effort —
-/// the default driver treats all processes equally).
+/// execution with every other GPU-using process on τ_i's ENGINE (RT and
+/// best-effort — the default driver treats all processes equally; each
+/// engine runs its own TSG ring, so other engines never interleave).
 fn i_ie(ts: &TaskSet, i: usize) -> Time {
     let me = &ts.tasks[i];
     if !me.uses_gpu() {
         return 0;
     }
-    let nu = ts.tasks.iter().filter(|t| t.id != i && t.uses_gpu()).count();
+    let nu = ts.sharing_gpu(i).count();
+    let ctx = ts.gpu_ctx(i);
     me.gpu_segments
         .iter()
-        .map(|g| interleave(nu, g.exec, ts.platform.tsg_slice, ts.platform.theta))
+        .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
         .sum()
 }
 
 /// Lemma 4 (busy-waiting): indirect delay from same-core higher-priority
-/// tasks busy-waiting on interleaved GPU execution.
+/// tasks busy-waiting on interleaved GPU execution. Each carrier τ_h
+/// waits on its OWN engine's ring, so its ν counts only tasks sharing
+/// τ_h's engine.
 fn i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
     let mut total = 0;
     // Hoisted out of the τ_h loop (perf: built once per fixpoint
     // evaluation instead of once per (τ_h, evaluation) — §Perf).
     let hpp_ids: Vec<usize> = ts.hpp(i).map(|t| t.id).collect();
-    let nu_base = ts
-        .tasks
-        .iter()
-        .filter(|k| k.uses_gpu() && !hpp_ids.contains(&k.id))
-        .count();
+    let mut nu_base = vec![0usize; ts.platform.num_gpus()];
+    for k in ts.tasks.iter().filter(|k| k.uses_gpu() && !hpp_ids.contains(&k.id)) {
+        nu_base[k.gpu] += 1;
+    }
     for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
-        // ν_h = |{k | τ_k ∉ hpp(τ_i) ∧ η^g_k > 0} ∪ {τ_h}|: the busy-wait
-        // window of τ_h interleaves with all GPU-using tasks outside
-        // hpp(τ_i) (those inside are counted by the outer iteration),
-        // plus τ_h's own slices.
-        let nu = nu_base + 1; // τ_h itself (τ_h ∈ hpp, so not in the set)
+        // ν_h = |{k | τ_k ∉ hpp(τ_i) ∧ η^g_k > 0 ∧ τ_k on τ_h's engine}
+        //        ∪ {τ_h}|: the busy-wait window of τ_h interleaves with
+        // all same-engine GPU-using tasks outside hpp(τ_i) (those inside
+        // are counted by the outer iteration), plus τ_h's own slices.
+        let nu = nu_base[h.gpu] + 1; // τ_h itself (τ_h ∈ hpp, so not in the set)
+        let ctx = ts.platform.gpus[h.gpu];
         let per_job: Time = h
             .gpu_segments
             .iter()
-            .map(|g| interleave(nu, g.exec, ts.platform.tsg_slice, ts.platform.theta))
+            .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
             .sum();
         // Carry-in amendment: interleaved GPU execution defers τ_h's
         // busy-wait window past its release; add the J^g jitter so the
@@ -118,13 +123,34 @@ pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
     AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
+/// [`Analysis`] implementation: the default driver's time-sliced
+/// round-robin TSG scheduling.
+#[derive(Debug, Clone, Copy)]
+pub struct TsgRrAnalysis {
+    pub busy: bool,
+}
+
+impl Analysis for TsgRrAnalysis {
+    fn label(&self) -> &'static str {
+        if self.busy { "tsg_rr_busy" } else { "tsg_rr_suspend" }
+    }
+
+    fn wait_mode(&self) -> WaitMode {
+        if self.busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend }
+    }
+
+    fn analyze(&self, ts: &TaskSet) -> AnalysisResult {
+        analyze(ts, self.busy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{ms, GpuSegment, Platform, Task, WaitMode};
 
     fn platform() -> Platform {
-        Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+        Platform::single(2, 1024, 200, 1000)
     }
 
     fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
@@ -136,6 +162,7 @@ mod tests {
             cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
             gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
@@ -226,9 +253,24 @@ mod tests {
     }
 
     #[test]
+    fn cross_engine_tasks_do_not_interleave() {
+        // Two GPU tasks on different cores and different engines each
+        // see ν = 0 — the same bound as running alone.
+        let a = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let mut b = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        b.gpu = 1;
+        let ts = TaskSet::new(vec![a, b], platform().with_num_gpus(2));
+        let res = analyze(&ts, false);
+        // Alone-on-engine bound: C + G + own switch-in θ per round.
+        let lone = ms(8.0) + 5 * 200;
+        assert_eq!(res.response[0], Some(lone));
+        assert_eq!(res.response[1], Some(lone));
+    }
+
+    #[test]
     fn theta_increases_interference() {
         let mk = |theta| {
-            let p = Platform { theta, ..platform() };
+            let p = platform().with_theta(theta);
             TaskSet::new(
                 vec![
                     gpu_task(0, 0, 2, 2.0, 1.0, 10.0, 100.0),

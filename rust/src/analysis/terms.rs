@@ -191,6 +191,7 @@ mod tests {
             cpu_segments: vec![ms(2.0), ms(2.0)],
             gpu_segments: vec![crate::model::GpuSegment::new(ms(1.0), ms(5.0))],
             core: 0,
+            gpu: 0,
             cpu_prio: 1,
             gpu_prio: 1,
             best_effort: false,

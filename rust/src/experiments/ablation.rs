@@ -77,7 +77,7 @@ pub fn miss_ratio(policy: Policy, util: f64, cfg: &ExpConfig) -> f64 {
 /// tasksets — the sweep isolates the overhead term exactly.
 pub fn epsilon_sensitivity(cfg: &ExpConfig, eps_us: u64) -> f64 {
     let p = GenParams {
-        platform: Platform { epsilon: eps_us, ..Default::default() },
+        platform: Platform::default().with_epsilon(eps_us),
         ..Default::default()
     };
     let seed = cfg.seed;

@@ -24,8 +24,8 @@ pub enum Board {
 impl Board {
     pub fn platform(&self) -> Platform {
         match self {
-            Board::XavierNx => Platform { num_cpus: 6, tsg_slice: 1024, theta: 250, epsilon: 1000 },
-            Board::OrinNano => Platform { num_cpus: 6, tsg_slice: 1024, theta: 160, epsilon: 1100 },
+            Board::XavierNx => Platform::single(6, 1024, 250, 1000),
+            Board::OrinNano => Platform::single(6, 1024, 160, 1100),
         }
     }
 
@@ -40,7 +40,7 @@ impl Board {
 /// Table 4 of the paper, as a model taskset. WCETs in ms as published;
 /// the G^m/G^e split is not given in the paper — we use G^m ≈ 0.12·G
 /// (the launch-overhead fraction we measured on the live runtime).
-pub fn table4_taskset(platform: Platform, mode: WaitMode) -> TaskSet {
+pub fn table4_taskset(platform: &Platform, mode: WaitMode) -> TaskSet {
     let gm_frac = 0.12;
     let mk = |id: usize,
               name: &str,
@@ -69,6 +69,7 @@ pub fn table4_taskset(platform: Platform, mode: WaitMode) -> TaskSet {
             cpu_segments,
             gpu_segments,
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: be,
@@ -86,7 +87,7 @@ pub fn table4_taskset(platform: Platform, mode: WaitMode) -> TaskSet {
         mk(5, "mmul_gpu_2", 4.0, 44.0, 200.0, 3, 0, true),
         mk(6, "simpleTexture3D", 4.0, 27.0, 67.0, 4, 0, true),
     ];
-    TaskSet::new(tasks, platform)
+    TaskSet::new(tasks, platform.clone())
 }
 
 /// The approaches shown in Fig. 10 / Table 5.
@@ -137,7 +138,7 @@ pub fn morts(board: Board, cfg: &ExpConfig) -> Vec<(String, Vec<f64>)> {
     let cells = sweep::grid2(CASE_APPROACHES.len(), REPS);
     let per_cell: Vec<Vec<Time>> = sweep::run(&cfg.sweep(), cells, |_, &(ai, rep)| {
         let (_, policy, mode) = CASE_APPROACHES[ai];
-        let ts = table4_taskset(platform, mode);
+        let ts = table4_taskset(&platform, mode);
         let offsets =
             replica_offsets(&ts, seed, &[TAG_FIG10, board_key(board)], rep);
         let sim =
@@ -163,7 +164,7 @@ pub fn morts(board: Board, cfg: &ExpConfig) -> Vec<(String, Vec<f64>)> {
 /// Fig. 10: MORT bars per task per approach on one board.
 pub fn run_fig10(board: Board, cfg: &ExpConfig) -> String {
     let results = morts(board, cfg);
-    let ts = table4_taskset(board.platform(), WaitMode::SelfSuspend);
+    let ts = table4_taskset(&board.platform(), WaitMode::SelfSuspend);
     let mut csv = CsvTable::new(vec!["approach", "task", "mort_ms"]);
     let mut out = String::new();
     for (label, ms_per_task) in &results {
@@ -206,7 +207,7 @@ pub fn run_fig11(cfg: &ExpConfig) -> String {
     let cells = sweep::grid2(CASE_APPROACHES.len(), REPS);
     let per_cell: Vec<Vec<Vec<f64>>> = sweep::run(&cfg.sweep(), cells, |_, &(ai, rep)| {
         let (_, policy, mode) = CASE_APPROACHES[ai];
-        let ts = table4_taskset(platform, mode);
+        let ts = table4_taskset(&platform, mode);
         let offsets = replica_offsets(&ts, seed, &[TAG_FIG11], rep);
         let sim =
             simulate(&ts, &SimConfig::new(policy, ms(15_000.0)).with_offsets(offsets));
@@ -217,7 +218,7 @@ pub fn run_fig11(cfg: &ExpConfig) -> String {
     });
 
     for (ai, (label, _, mode)) in CASE_APPROACHES.iter().enumerate() {
-        let ts = table4_taskset(platform, *mode);
+        let ts = table4_taskset(&platform, *mode);
         // Merge replica samples in canonical replica order.
         let mut samples: Vec<Vec<f64>> = vec![vec![]; ts.len()];
         for rep in 0..REPS {
@@ -265,7 +266,7 @@ pub fn run_table5(cfg: &ExpConfig) -> String {
     // WCRTs per approach.
     let wcrt = |busy: bool, is_gcaps: bool| -> Vec<Option<Time>> {
         let mode = if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend };
-        let ts = table4_taskset(platform, mode);
+        let ts = table4_taskset(&platform, mode);
         if is_gcaps {
             gcaps::analyze(&ts, busy, &gcaps::Options::default()).response
         } else {
@@ -278,7 +279,7 @@ pub fn run_table5(cfg: &ExpConfig) -> String {
         ("gcaps_suspend", wcrt(false, true)),
         ("gcaps_busy", wcrt(true, true)),
     ];
-    let ts = table4_taskset(platform, WaitMode::SelfSuspend);
+    let ts = table4_taskset(&platform, WaitMode::SelfSuspend);
     for t in ts.tasks.iter().filter(|t| !t.best_effort) {
         out.push_str(&format!("{:17} |", format!("{} ({})", t.id + 1, t.name)));
         for (label, resp) in &combos {
@@ -308,7 +309,7 @@ mod tests {
     #[test]
     fn table4_taskset_valid() {
         for board in [Board::XavierNx, Board::OrinNano] {
-            let ts = table4_taskset(board.platform(), WaitMode::SelfSuspend);
+            let ts = table4_taskset(&board.platform(), WaitMode::SelfSuspend);
             ts.validate().unwrap();
             assert_eq!(ts.len(), 7);
             assert_eq!(ts.be_tasks().count(), 2);
@@ -319,7 +320,7 @@ mod tests {
     #[test]
     fn table4_utilizations_in_band() {
         // Paper: per-task utilization between 0.05 and 0.35.
-        let ts = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
+        let ts = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);
         for t in &ts.tasks {
             let u = t.utilization();
             assert!((0.04..=0.50).contains(&u), "{}: {u}", t.name);
@@ -351,7 +352,7 @@ mod tests {
         ];
         for (label, busy, is_gcaps) in combos {
             let mode = if busy { WaitMode::BusyWait } else { WaitMode::SelfSuspend };
-            let ts = table4_taskset(platform, mode);
+            let ts = table4_taskset(&platform, mode);
             let resp = if is_gcaps {
                 gcaps::analyze(&ts, busy, &gcaps::Options::default()).response
             } else {

@@ -27,6 +27,7 @@ fn mk(
         cpu_segments: cpu.into_iter().map(ms).collect(),
         gpu_segments: gpu.into_iter().map(|(m, e)| GpuSegment::new(ms(m), ms(e))).collect(),
         core,
+        gpu: 0,
         cpu_prio: prio,
         gpu_prio: prio,
         best_effort: false,
@@ -38,7 +39,7 @@ fn mk(
 /// priority, core 0) arrives while τ3's GPU segment runs; the sync
 /// approach serves queued lower-priority segments first, GCAPS preempts.
 pub fn run_fig3() -> String {
-    let p = Platform { num_cpus: 2, epsilon: 250, theta: 50, tsg_slice: 1024 };
+    let p = Platform::single(2, 1024, 50, 250);
     let tasks = vec![
         mk(0, "tau1", 0, 3, vec![1.0, 1.0], vec![(0.25, 1.5)], 20.0, WaitMode::SelfSuspend),
         mk(1, "tau2", 1, 2, vec![0.5, 0.5], vec![(0.25, 2.0)], 20.0, WaitMode::SelfSuspend),
@@ -60,7 +61,7 @@ pub fn run_fig3() -> String {
 /// Fig. 5 (Example 2): the Table 2 taskset. With π^g = π^c, τ4 misses
 /// its deadline; swapping the GPU priorities of τ3/τ4 fixes it.
 pub fn table2_taskset() -> TaskSet {
-    let p = Platform { num_cpus: 2, epsilon: 1000, theta: 200, tsg_slice: 1024 };
+    let p = Platform::single(2, 1024, 200, 1000);
     let tasks = vec![
         mk(0, "tau1", 0, 4, vec![2.0, 4.0, 3.0],
            vec![(2.0, 4.0), (2.0, 2.0)], 80.0, WaitMode::SelfSuspend),
@@ -129,7 +130,7 @@ pub fn run_fig5() -> String {
 /// Fig. 6: interference taxonomy under busy-waiting (direct preemption,
 /// indirect delay) — three tasks, τ1 on core 0, τ2/τ3 on core 1.
 pub fn run_fig6() -> String {
-    let p = Platform { num_cpus: 2, epsilon: 250, theta: 50, tsg_slice: 1024 };
+    let p = Platform::single(2, 1024, 50, 250);
     let tasks = vec![
         mk(0, "tau1", 0, 3, vec![0.5, 0.5], vec![(0.2, 3.0)], 30.0, WaitMode::BusyWait),
         mk(1, "tau2", 1, 2, vec![0.5, 0.5], vec![(0.2, 4.0)], 30.0, WaitMode::BusyWait),
@@ -155,7 +156,7 @@ pub fn run_fig6() -> String {
 /// Fig. 7: runlist-update delays (①–③): ε-blocking at job start, driver
 /// calls serialized, and the removal update delaying the next start.
 pub fn run_fig7() -> String {
-    let p = Platform { num_cpus: 2, epsilon: 1500, theta: 300, tsg_slice: 1024 };
+    let p = Platform::single(2, 1024, 300, 1500);
     let tasks = vec![
         mk(0, "tau1", 0, 3, vec![0.5, 0.5], vec![(0.3, 4.0)], 40.0, WaitMode::SelfSuspend),
         mk(1, "tau2", 0, 2, vec![0.5, 0.5], vec![(0.3, 3.0)], 40.0, WaitMode::SelfSuspend),
@@ -235,7 +236,7 @@ mod tests {
 
     #[test]
     fn fig7_trace_contains_driver_calls() {
-        let p = Platform { num_cpus: 2, epsilon: 1500, theta: 300, tsg_slice: 1024 };
+        let p = Platform::single(2, 1024, 300, 1500);
         let tasks = vec![
             mk(0, "tau1", 0, 2, vec![0.5, 0.5], vec![(0.3, 4.0)], 40.0, WaitMode::SelfSuspend),
             mk(1, "tau3", 1, 1, vec![0.3, 0.3], vec![(0.3, 5.0)], 40.0, WaitMode::SelfSuspend),

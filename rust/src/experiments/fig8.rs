@@ -5,9 +5,9 @@
 //! default RM priorities first, then the Audsley GPU-priority
 //! assignment on failure.
 
-use crate::analysis::{analyze, analyze_with_gpu_prio, Approach};
+use crate::analysis::{approach_schedulable, Approach};
 use crate::experiments::{results_dir, ExpConfig};
-use crate::model::{TaskSet, WaitMode};
+use crate::model::WaitMode;
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
@@ -136,16 +136,6 @@ impl Panel {
                 })
                 .collect(),
         }
-    }
-}
-
-/// Is `approach` schedulable on this taskset (with the §7.1.1 GCAPS
-/// Audsley retry)?
-fn approach_schedulable(ts: &TaskSet, approach: Approach) -> bool {
-    match approach {
-        Approach::GcapsBusy => analyze_with_gpu_prio(ts, true).0.schedulable,
-        Approach::GcapsSuspend => analyze_with_gpu_prio(ts, false).0.schedulable,
-        a => analyze(ts, a).schedulable,
     }
 }
 

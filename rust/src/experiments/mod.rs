@@ -8,6 +8,7 @@ pub mod casestudy;
 pub mod examples_figs;
 pub mod fig8;
 pub mod fig9;
+pub mod multigpu;
 pub mod overhead;
 
 use std::path::PathBuf;

@@ -1,0 +1,184 @@
+//! Multi-GPU platform sweep (Fig. 8-style, beyond the paper): the
+//! schedulability of all eight approaches as the platform grows from
+//! the paper's single GPU engine to g ∈ {1, 2, 4} engines, at Table 3
+//! defaults. Tasks are spread over engines by the generator's WFD
+//! assignment; per-engine interference sets mean every approach — not
+//! just GCAPS — benefits from the extra engines, but by structurally
+//! different amounts (the FIFO/priority-queue bounds shrink with the
+//! per-engine requester count, the RR interleaving bound with the
+//! per-engine ν).
+//!
+//! Dispatch goes through the first-class [`Analysis`] trait registry
+//! (`Approach::analysis()`), with the §7.1.1 Audsley retry for the
+//! GCAPS rows — the same procedure as the Fig. 8 panels, so g = 1
+//! reproduces the fig8 default point exactly.
+
+use crate::analysis::{approach_schedulable, Approach};
+use crate::experiments::{results_dir, ExpConfig};
+use crate::model::{Platform, WaitMode};
+use crate::sweep::{self, memo};
+use crate::taskgen::GenParams;
+use crate::util::ascii::line_chart;
+use crate::util::csv::CsvTable;
+
+/// The swept GPU-engine counts.
+pub const GPU_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn params_for(num_gpus: usize, mode: WaitMode) -> GenParams {
+    GenParams {
+        mode,
+        platform: Platform::default().with_num_gpus(num_gpus),
+        ..GenParams::default()
+    }
+}
+
+/// Run the sweep; returns (xticks, per-approach schedulability series).
+///
+/// The grid is (GPU-count point × taskset index), sharded across the
+/// sweep worker pool; each cell generates its suspend/busy taskset pair
+/// once (memoized per engine count — see `memo::params_hash`) and
+/// evaluates all 8 approaches on it.
+pub fn run_sweep(cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
+    let xticks: Vec<String> = GPU_COUNTS.iter().map(|g| g.to_string()).collect();
+    let cells = sweep::grid2(GPU_COUNTS.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(gi, ti)| {
+        let suspend = memo::taskset(seed, &params_for(GPU_COUNTS[gi], WaitMode::SelfSuspend), ti);
+        let busy = memo::taskset(seed, &params_for(GPU_COUNTS[gi], WaitMode::BusyWait), ti);
+        let mut out = [false; 8];
+        for (k, a) in Approach::ALL.iter().enumerate() {
+            let ts = if a.is_busy() { &busy } else { &suspend };
+            out[k] = approach_schedulable(ts, *a);
+        }
+        out
+    });
+
+    let mut series: Vec<(String, Vec<f64>)> = Approach::ALL
+        .iter()
+        .map(|a| (a.label().to_string(), vec![0.0; GPU_COUNTS.len()]))
+        .collect();
+    for (cell_idx, oks) in per_cell.iter().enumerate() {
+        let gi = cell_idx / cfg.tasksets.max(1);
+        for (k, &ok) in oks.iter().enumerate() {
+            series[k].1[gi] += ok as usize as f64;
+        }
+    }
+    for (_, ys) in &mut series {
+        for y in ys.iter_mut() {
+            *y /= cfg.tasksets.max(1) as f64;
+        }
+    }
+    (xticks, series)
+}
+
+/// Format the merged results as the CSV table (pure — the determinism
+/// suite compares these bytes across worker counts).
+pub fn sweep_csv(xticks: &[String], series: &[(String, Vec<f64>)]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "approach".to_string(),
+        "num_gpus".to_string(),
+        "schedulable_ratio".to_string(),
+    ]);
+    for (label, ys) in series {
+        for (x, y) in xticks.iter().zip(ys) {
+            csv.row(vec![label.clone(), x.clone(), format!("{y:.4}")]);
+        }
+    }
+    csv
+}
+
+/// Run + persist the sweep.
+pub fn run_and_report(cfg: &ExpConfig) -> String {
+    let (xticks, series) = run_sweep(cfg);
+    let csv = sweep_csv(&xticks, &series);
+    let path = results_dir().join("multigpu.csv");
+    csv.write(&path).expect("write csv");
+    let chart = line_chart(
+        "Multi-GPU: schedulability vs GPU engine count (Table 3 defaults)",
+        "num_gpus",
+        &xticks,
+        &series,
+        1.0,
+        16,
+    );
+    format!("{chart}\nwrote {}\n", path.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::taskgen::generate;
+    use crate::util::rng::Pcg32;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig { tasksets: 10, seed: 17, ..ExpConfig::default() }
+    }
+
+    #[test]
+    fn sweep_shape_and_ranges() {
+        let (xticks, series) = run_sweep(&tiny());
+        assert_eq!(xticks, vec!["1", "2", "4"]);
+        assert_eq!(series.len(), 8);
+        for (label, ys) in &series {
+            assert_eq!(ys.len(), 3, "{label}");
+            for &y in ys {
+                assert!((0.0..=1.0).contains(&y), "{label}: {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn g1_point_matches_fig8_procedure() {
+        // The g = 1 column must agree with the Fig. 8 default-point
+        // schedulability (same memoized tasksets, same procedure).
+        let cfg = tiny();
+        let (_, series) = run_sweep(&cfg);
+        for (k, a) in Approach::ALL.iter().enumerate() {
+            let lone = crate::experiments::fig8::schedulability(*a, &|_| {}, &cfg);
+            assert_eq!(series[k].1[0], lone, "{} g=1 diverged", a.label());
+        }
+    }
+
+    #[test]
+    fn extra_engines_never_hurt_a_fixed_taskset_under_suspension() {
+        // Paired comparison on a fixed structure: spreading a taskset's
+        // GPU tasks over 2 engines must not increase any WCRT under the
+        // four suspension analyses, whose per-engine terms are all
+        // set-monotone. (The busy variants are not pointwise monotone:
+        // a same-core task moved off-engine migrates its busy-wait
+        // charge from Lemma 10's J^g-jittered term to Lemma 12's
+        // J^c-jittered one, which can count one extra carry-in job.)
+        let mut rng = Pcg32::seeded(42);
+        let one = generate(&mut rng, &params_for(1, WaitMode::SelfSuspend));
+        let mut two = one.clone();
+        two.platform = two.platform.clone().with_num_gpus(2);
+        crate::taskgen::wfd_assign_gpus(&mut two.tasks, 2);
+        two.validate().unwrap();
+        for a in [
+            Approach::GcapsSuspend,
+            Approach::TsgRrSuspend,
+            Approach::MpcpSuspend,
+            Approach::FmlpSuspend,
+        ] {
+            let r1 = analyze(&one, a);
+            let r2 = analyze(&two, a);
+            for t in one.rt_tasks() {
+                match (r1.response[t.id], r2.response[t.id]) {
+                    (Some(x), Some(y)) => assert!(
+                        y <= x,
+                        "{}: task {} got worse with 2 engines ({y} > {x})",
+                        a.label(),
+                        t.id
+                    ),
+                    (None, _) => {} // unschedulable on 1 GPU may pass on 2
+                    (Some(_), None) => panic!(
+                        "{}: task {} became unschedulable with 2 engines",
+                        a.label(),
+                        t.id
+                    ),
+                }
+            }
+        }
+    }
+}

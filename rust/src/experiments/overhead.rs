@@ -37,6 +37,7 @@ fn kernel_task(id: usize, core: usize, ge: Time, horizon: Time) -> Task {
         cpu_segments: vec![1, 1],
         gpu_segments: vec![GpuSegment::new(1, ge)],
         core,
+        gpu: 0,
         cpu_prio: (id + 1) as u32,
         gpu_prio: (id + 1) as u32,
         best_effort: false,
@@ -46,17 +47,17 @@ fn kernel_task(id: usize, core: usize, ge: Time, horizon: Time) -> Task {
 
 /// Eq. 15 estimation on the DES for one kernel length and ν instances.
 /// Returns (slowdown factor, estimated θ in µs).
-pub fn estimate_theta_sim(platform: Platform, ge: Time, nu: usize) -> (f64, f64) {
+pub fn estimate_theta_sim(platform: &Platform, ge: Time, nu: usize) -> (f64, f64) {
     let horizon = ge * (nu as Time + 2) * 4 + ms(100.0);
     // E_1: a single instance.
-    let ts1 = TaskSet::new(vec![kernel_task(0, 0, ge, horizon)], platform);
+    let ts1 = TaskSet::new(vec![kernel_task(0, 0, ge, horizon)], platform.clone());
     let r1 = simulate(&ts1, &SimConfig::new(Policy::TsgRr, horizon));
     let e1 = r1.per_task[0].response_times[0];
     // E_ν: ν concurrent instances (one per core, wrapping).
     let tasks: Vec<Task> = (0..nu)
         .map(|i| kernel_task(i, i % platform.num_cpus, ge, horizon))
         .collect();
-    let tsn = TaskSet::new(tasks, platform);
+    let tsn = TaskSet::new(tasks, platform.clone());
     let rn = simulate(&tsn, &SimConfig::new(Policy::TsgRr, horizon));
     let en = (0..nu)
         .map(|i| rn.per_task[i].response_times[0])
@@ -64,7 +65,7 @@ pub fn estimate_theta_sim(platform: Platform, ge: Time, nu: usize) -> (f64, f64)
         .unwrap();
     let slowdown = en as f64 / e1 as f64;
     let theta_est = (en as f64 - nu as f64 * e1 as f64) / (nu as f64 * e1 as f64)
-        * platform.tsg_slice as f64;
+        * platform.gpus[0].tsg_slice as f64;
     (slowdown, theta_est)
 }
 
@@ -85,7 +86,7 @@ pub fn run_fig13(cfg: &ExpConfig) -> String {
 
     let cells = sweep::grid3(boards.len(), KERNELS_MS.len(), NUS.len());
     let per_cell: Vec<(f64, f64)> = sweep::run(&cfg.sweep(), cells, |_, &(bi, ki, ni)| {
-        estimate_theta_sim(boards[bi].1, ms(KERNELS_MS[ki]), NUS[ni])
+        estimate_theta_sim(&boards[bi].1, ms(KERNELS_MS[ki]), NUS[ni])
     });
 
     let mut csv = CsvTable::new(vec!["board", "kernel_ms", "nu", "slowdown", "theta_est_us"]);
@@ -108,7 +109,7 @@ pub fn run_fig13(cfg: &ExpConfig) -> String {
             ests.push(theta);
         }
         let avg = ests.iter().sum::<f64>() / ests.len() as f64;
-        rows.push((format!("{board} (θ_config = {} µs)", platform.theta), avg));
+        rows.push((format!("{board} (θ_config = {} µs)", platform.gpus[0].theta), avg));
     }
     let path = results_dir().join("fig13.csv");
     csv.write(&path).expect("write csv");
@@ -146,7 +147,7 @@ pub fn fig12_histogram(samples_us: &[f64], label: &str) -> String {
 /// Fig. 12 (DES variant): ε samples from the simulated case study.
 pub fn run_fig12_sim() -> String {
     use crate::experiments::casestudy::{table4_taskset, Board};
-    let ts = table4_taskset(Board::XavierNx.platform(), WaitMode::SelfSuspend);
+    let ts = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);
     let sim = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(30_000.0)));
     let samples: Vec<f64> = sim
         .per_task
@@ -164,8 +165,8 @@ mod tests {
     fn eq15_recovers_configured_theta() {
         // The estimator applied to the device model must recover θ
         // within ~20% (quantisation from ceil(G^e/L) slices).
-        let p = Platform { num_cpus: 4, theta: 200, ..Default::default() };
-        let (slow, theta) = estimate_theta_sim(p, ms(40.0), 4);
+        let p = Platform::single(4, 1024, 200, 1000);
+        let (slow, theta) = estimate_theta_sim(&p, ms(40.0), 4);
         assert!(slow > 3.5 && slow < 5.0, "slowdown {slow}");
         assert!(
             (theta - 200.0).abs() < 60.0,
@@ -175,19 +176,19 @@ mod tests {
 
     #[test]
     fn slowdown_grows_with_nu() {
-        let p = Platform { num_cpus: 6, theta: 200, ..Default::default() };
-        let (s2, _) = estimate_theta_sim(p, ms(20.0), 2);
-        let (s4, _) = estimate_theta_sim(p, ms(20.0), 4);
+        let p = Platform::single(6, 1024, 200, 1000);
+        let (s2, _) = estimate_theta_sim(&p, ms(20.0), 2);
+        let (s4, _) = estimate_theta_sim(&p, ms(20.0), 4);
         assert!(s4 > s2, "s4 {s4} <= s2 {s2}");
     }
 
     #[test]
     fn orin_estimates_below_xavier() {
         // Fig. 13's cross-board observation.
-        let x = Platform { num_cpus: 6, theta: 250, ..Default::default() };
-        let o = Platform { num_cpus: 6, theta: 160, ..Default::default() };
-        let (_, tx) = estimate_theta_sim(x, ms(40.0), 4);
-        let (_, to_) = estimate_theta_sim(o, ms(40.0), 4);
+        let x = Platform::single(6, 1024, 250, 1000);
+        let o = Platform::single(6, 1024, 160, 1000);
+        let (_, tx) = estimate_theta_sim(&x, ms(40.0), 4);
+        let (_, to_) = estimate_theta_sim(&o, ms(40.0), 4);
         assert!(to_ < tx, "orin {to_} >= xavier {tx}");
     }
 

@@ -1,7 +1,7 @@
 //! `gcaps` — CLI for the GCAPS reproduction.
 //!
 //! ```text
-//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|all>
+//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|all>
 //!           [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]
 //!           [--jobs N]
 //! gcaps analyze [--seed N]            one random taskset through all 8 analyses
@@ -26,6 +26,7 @@ use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
 use gcaps::experiments::examples_figs::{run_examples, run_fig3, run_fig5, run_fig6, run_fig7};
 use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
 use gcaps::experiments::fig9::run_and_report as fig9;
+use gcaps::experiments::multigpu::run_and_report as run_multigpu;
 use gcaps::experiments::ablation::run_and_report as run_ablation;
 use gcaps::experiments::overhead::{fig12_histogram, run_fig12_sim, run_fig13};
 use gcaps::experiments::ExpConfig;
@@ -46,7 +47,7 @@ fn parse_args() -> Args {
     let mut it = std::env::args().skip(1).peekable();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let val = if it.peek().map_or(false, |v| !v.starts_with("--")) {
+            let val = if it.peek().is_some_and(|v| !v.starts_with("--")) {
                 it.next().unwrap()
             } else {
                 "true".to_string()
@@ -261,12 +262,13 @@ fn cmd_exp(args: &Args) {
         "fig13" => print!("{}", run_fig13(&cfg)),
         "examples" => print!("{}", run_examples(&cfg)),
         "ablation" => print!("{}", run_ablation(&cfg)),
+        "multigpu" => print!("{}", run_multigpu(&cfg)),
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "examples", "fig8", "fig9", "fig10", "fig11", "table5", "fig12", "fig13",
-            "ablation",
+            "ablation", "multigpu",
         ] {
             println!("\n================ {name} ================");
             run_one(name);
@@ -295,10 +297,11 @@ fn main() {
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
                  gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
                  \x20         [--ms N] [--trace-out trace.json]\n\
-                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|all>\n\
+                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|all>\n\
                  \x20         [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N] [--jobs N]\n\
                  \x20         (--jobs shards the sweep across N workers; results and CSV bytes\n\
-                 \x20          are byte-identical for every worker count — per-cell seed-splitting)\n\
+                 \x20          are byte-identical for every worker count — per-cell seed-splitting;\n\
+                 \x20          `exp multigpu` sweeps the platform over 1/2/4 GPU engines)\n\
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"
             );
             std::process::exit(2);

@@ -6,13 +6,20 @@
 //! # comments with '#'
 //! [platform]
 //! num_cpus = 4
-//! epsilon_us = 1000
+//! num_gpus = 2              # optional, defaults to 1 (the paper's platform)
+//! epsilon_us = 1000         # applied to every GPU engine
 //! theta_us = 200
 //! slice_us = 1024
+//!
+//! [gpu]                     # optional: one section per engine for
+//! epsilon_us = 1000         # heterogeneous platforms (overrides the
+//! theta_us = 200            # scalar keys; section count must match
+//! slice_us = 1024           # num_gpus when both are given)
 //!
 //! [task]
 //! name = camera
 //! core = 0
+//! gpu = 0                   # optional GPU engine, defaults to 0
 //! prio = 3
 //! period_ms = 50
 //! deadline_ms = 50          # optional, defaults to period
@@ -23,20 +30,33 @@
 //! ```
 //!
 //! Round-trips: `to_text` writes the same format `parse` reads, so
-//! generated tasksets can be exported, edited and re-analysed.
+//! generated tasksets can be exported, edited and re-analysed. Legacy
+//! single-GPU files (no `num_gpus`/`gpu` keys) parse unchanged, and
+//! `to_text` emits the multi-GPU keys only when they differ from the
+//! single-GPU defaults, so legacy files round-trip byte-identically.
 
-use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, WaitMode};
+use crate::model::{ms, to_ms, GpuContext, GpuSegment, Platform, Task, TaskSet, WaitMode};
 
 /// Parse a taskset from the text format above.
 pub fn parse(text: &str) -> Result<TaskSet, String> {
-    let mut platform = Platform::default();
+    let mut num_cpus = Platform::default().num_cpus;
+    let mut base = GpuContext::default();
+    let mut num_gpus: Option<usize> = None;
+    let mut gpu_sections: Vec<GpuContext> = Vec::new();
     let mut tasks: Vec<Task> = Vec::new();
     let mut section = String::new();
     let mut current: Option<Task> = None;
+    let mut current_gpu: Option<GpuContext> = None;
 
-    let flush = |tasks: &mut Vec<Task>, current: &mut Option<Task>| {
+    let flush = |tasks: &mut Vec<Task>,
+                 gpu_sections: &mut Vec<GpuContext>,
+                 current: &mut Option<Task>,
+                 current_gpu: &mut Option<GpuContext>| {
         if let Some(t) = current.take() {
             tasks.push(t);
+        }
+        if let Some(g) = current_gpu.take() {
+            gpu_sections.push(g);
         }
     };
 
@@ -47,9 +67,7 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
         }
         let err = |msg: &str| format!("line {}: {msg}", lineno + 1);
         if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
-            if section == "task" {
-                flush(&mut tasks, &mut current);
-            }
+            flush(&mut tasks, &mut gpu_sections, &mut current, &mut current_gpu);
             section = name.trim().to_string();
             if section == "task" {
                 let id = tasks.len();
@@ -61,11 +79,16 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
                     cpu_segments: vec![],
                     gpu_segments: vec![],
                     core: 0,
+                    gpu: 0,
                     cpu_prio: 0,
                     gpu_prio: 0,
                     best_effort: false,
                     mode: WaitMode::SelfSuspend,
                 });
+            } else if section == "gpu" {
+                // Each [gpu] section starts from the scalar defaults
+                // accumulated so far and overrides per-engine.
+                current_gpu = Some(base);
             } else if section != "platform" {
                 return Err(err(&format!("unknown section [{section}]")));
             }
@@ -79,23 +102,53 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
             |v: &str| v.parse::<f64>().map_err(|_| err(&format!("bad number {v:?}")));
         match (section.as_str(), key) {
             ("platform", "num_cpus") => {
-                platform.num_cpus =
-                    value.parse().map_err(|_| err("bad num_cpus"))?;
+                num_cpus = value.parse().map_err(|_| err("bad num_cpus"))?;
             }
-            ("platform", "epsilon_us") => {
-                platform.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?;
+            ("platform", "num_gpus") => {
+                let n: usize = value.parse().map_err(|_| err("bad num_gpus"))?;
+                if n == 0 {
+                    return Err(err("num_gpus must be at least 1"));
+                }
+                num_gpus = Some(n);
             }
-            ("platform", "theta_us") => {
-                platform.theta = value.parse().map_err(|_| err("bad theta_us"))?;
+            ("platform", k @ ("epsilon_us" | "theta_us" | "slice_us")) => {
+                // [gpu] sections snapshot `base` when they open, so a
+                // scalar override arriving afterwards would be silently
+                // dropped — reject it instead.
+                if !gpu_sections.is_empty() || current_gpu.is_some() {
+                    return Err(err(&format!(
+                        "platform {k} must precede the [gpu] sections it applies to"
+                    )));
+                }
+                match k {
+                    "epsilon_us" => {
+                        base.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?
+                    }
+                    "theta_us" => {
+                        base.theta = value.parse().map_err(|_| err("bad theta_us"))?
+                    }
+                    _ => base.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?,
+                }
             }
-            ("platform", "slice_us") => {
-                platform.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?;
+            ("gpu", k) => {
+                let g = current_gpu.as_mut().ok_or_else(|| err("gpu key outside [gpu]"))?;
+                match k {
+                    "epsilon_us" => {
+                        g.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?
+                    }
+                    "theta_us" => g.theta = value.parse().map_err(|_| err("bad theta_us"))?,
+                    "slice_us" => {
+                        g.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?
+                    }
+                    other => return Err(err(&format!("unknown gpu key {other:?}"))),
+                }
             }
             ("task", k) => {
                 let t = current.as_mut().ok_or_else(|| err("task key outside [task]"))?;
                 match k {
                     "name" => t.name = value.to_string(),
                     "core" => t.core = value.parse().map_err(|_| err("bad core"))?,
+                    "gpu" => t.gpu = value.parse().map_err(|_| err("bad gpu"))?,
                     "prio" => {
                         t.cpu_prio = value.parse().map_err(|_| err("bad prio"))?;
                         if t.gpu_prio == 0 {
@@ -145,31 +198,61 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
             (_, k) => return Err(err(&format!("key {k:?} outside a section"))),
         }
     }
-    if section == "task" {
-        flush(&mut tasks, &mut current);
-    }
+    flush(&mut tasks, &mut gpu_sections, &mut current, &mut current_gpu);
     // Defaults: deadline = period.
     for t in &mut tasks {
         if t.deadline == 0 {
             t.deadline = t.period;
         }
     }
-    let ts = TaskSet::new(tasks, platform);
+    let gpus: Vec<GpuContext> = if gpu_sections.is_empty() {
+        vec![base; num_gpus.unwrap_or(1)]
+    } else {
+        if let Some(n) = num_gpus {
+            if n != gpu_sections.len() {
+                return Err(format!(
+                    "num_gpus = {n} but {} [gpu] sections given",
+                    gpu_sections.len()
+                ));
+            }
+        }
+        gpu_sections
+    };
+    let ts = TaskSet::new(tasks, Platform { num_cpus, gpus });
     ts.validate()?;
     Ok(ts)
 }
 
-/// Render a taskset back into the text format.
+/// Render a taskset back into the text format. Single-GPU platforms
+/// emit exactly the legacy (pre-multi-GPU) bytes; uniform multi-GPU
+/// platforms add `num_gpus`; heterogeneous ones add `[gpu]` sections.
 pub fn to_text(ts: &TaskSet) -> String {
+    let gpus = &ts.platform.gpus;
+    let uniform = gpus.windows(2).all(|w| w[0] == w[1]);
     let mut out = String::from("[platform]\n");
     out.push_str(&format!("num_cpus = {}\n", ts.platform.num_cpus));
-    out.push_str(&format!("epsilon_us = {}\n", ts.platform.epsilon));
-    out.push_str(&format!("theta_us = {}\n", ts.platform.theta));
-    out.push_str(&format!("slice_us = {}\n", ts.platform.tsg_slice));
+    if gpus.len() != 1 {
+        out.push_str(&format!("num_gpus = {}\n", gpus.len()));
+    }
+    if uniform {
+        out.push_str(&format!("epsilon_us = {}\n", gpus[0].epsilon));
+        out.push_str(&format!("theta_us = {}\n", gpus[0].theta));
+        out.push_str(&format!("slice_us = {}\n", gpus[0].tsg_slice));
+    } else {
+        for g in gpus {
+            out.push_str("\n[gpu]\n");
+            out.push_str(&format!("epsilon_us = {}\n", g.epsilon));
+            out.push_str(&format!("theta_us = {}\n", g.theta));
+            out.push_str(&format!("slice_us = {}\n", g.tsg_slice));
+        }
+    }
     for t in &ts.tasks {
         out.push_str("\n[task]\n");
         out.push_str(&format!("name = {}\n", t.name));
         out.push_str(&format!("core = {}\n", t.core));
+        if t.gpu != 0 {
+            out.push_str(&format!("gpu = {}\n", t.gpu));
+        }
         out.push_str(&format!("prio = {}\n", t.cpu_prio));
         if t.gpu_prio != t.cpu_prio {
             out.push_str(&format!("gpu_prio = {}\n", t.gpu_prio));
@@ -237,8 +320,9 @@ mode = busy
     fn parses_sample() {
         let ts = parse(SAMPLE).unwrap();
         assert_eq!(ts.platform.num_cpus, 2);
-        assert_eq!(ts.platform.epsilon, 500);
-        assert_eq!(ts.platform.tsg_slice, 1024); // default kept
+        assert_eq!(ts.platform.num_gpus(), 1); // default kept
+        assert_eq!(ts.platform.gpus[0].epsilon, 500);
+        assert_eq!(ts.platform.gpus[0].tsg_slice, 1024); // default kept
         assert_eq!(ts.len(), 2);
         assert_eq!(ts.tasks[0].name, "camera");
         assert_eq!(ts.tasks[0].gpu_segments[0].exec, ms(8.0));
@@ -256,19 +340,87 @@ mode = busy
 
     #[test]
     fn roundtrip_generated_tasksets() {
-        forall("config roundtrip", 50, |rng| {
-            let ts = generate(rng, &GenParams::default());
+        // Satellite property (PR 2): parse ∘ to_text = id over ~100
+        // generated tasksets, cycling through 1/2/4-GPU platforms (the
+        // 1-GPU cases exercise the legacy format path).
+        forall("config roundtrip", 102, |rng| {
+            let num_gpus = [1usize, 2, 4][rng.range_usize(0, 2)];
+            let p = GenParams {
+                platform: crate::model::Platform::default().with_num_gpus(num_gpus),
+                ..GenParams::default()
+            };
+            let ts = generate(rng, &p);
             let text = to_text(&ts);
             let back = parse(&text).map_err(|e| format!("parse failed: {e}\n{text}"))?;
             if back.tasks != ts.tasks {
-                return Err("tasks differ after roundtrip".into());
+                return Err(format!("tasks differ after roundtrip (g = {num_gpus})"));
             }
             if back.platform != ts.platform {
-                return Err("platform differs after roundtrip".into());
+                return Err(format!("platform differs after roundtrip (g = {num_gpus})"));
             }
             Ok(())
         });
         let _ = Pcg32::seeded(0); // keep import used
+    }
+
+    #[test]
+    fn single_gpu_text_has_no_multigpu_keys() {
+        // Legacy byte-identity: a 1-GPU taskset's export must not grow
+        // num_gpus/gpu keys (pre-redesign files and exports match).
+        let mut rng = Pcg32::seeded(5);
+        let ts = generate(&mut rng, &GenParams::default());
+        let text = to_text(&ts);
+        assert!(!text.contains("num_gpus"), "unexpected num_gpus key:\n{text}");
+        assert!(!text.contains("[gpu]"), "unexpected [gpu] section:\n{text}");
+        assert!(!text.contains("\ngpu = "), "unexpected task gpu key:\n{text}");
+    }
+
+    #[test]
+    fn parses_num_gpus_and_task_assignment() {
+        let text = "[platform]\nnum_cpus = 2\nnum_gpus = 2\nepsilon_us = 500\n\
+                    [task]\nname=a\nprio=2\ngpu=1\nperiod_ms=10\ncpu_ms=1,1\ngpu_ms=0.5:2\n\
+                    [task]\nname=b\nprio=1\nperiod_ms=10\ncpu_ms=1\n";
+        let ts = parse(text).unwrap();
+        assert_eq!(ts.platform.num_gpus(), 2);
+        assert_eq!(ts.platform.gpus[0].epsilon, 500);
+        assert_eq!(ts.platform.gpus[1].epsilon, 500);
+        assert_eq!(ts.tasks[0].gpu, 1);
+        assert_eq!(ts.tasks[1].gpu, 0);
+    }
+
+    #[test]
+    fn heterogeneous_gpu_sections_roundtrip() {
+        let text = "[platform]\nnum_cpus = 2\n\
+                    [gpu]\nepsilon_us = 1000\ntheta_us = 200\n\
+                    [gpu]\nepsilon_us = 400\ntheta_us = 80\nslice_us = 2048\n\
+                    [task]\nname=a\nprio=1\ngpu=1\nperiod_ms=10\ncpu_ms=1,1\ngpu_ms=0.5:2\n";
+        let ts = parse(text).unwrap();
+        assert_eq!(ts.platform.num_gpus(), 2);
+        assert_eq!(ts.platform.gpus[1].epsilon, 400);
+        assert_eq!(ts.platform.gpus[1].tsg_slice, 2048);
+        assert_eq!(ts.platform.gpus[0].tsg_slice, 1024);
+        let back = parse(&to_text(&ts)).unwrap();
+        assert_eq!(back.platform, ts.platform);
+        assert_eq!(back.tasks, ts.tasks);
+    }
+
+    #[test]
+    fn rejects_bad_multigpu_configs() {
+        // gpu index out of range.
+        assert!(parse(
+            "[platform]\nnum_cpus = 1\n\
+             [task]\nname=a\nprio=1\ngpu=1\nperiod_ms=10\ncpu_ms=1,1\ngpu_ms=0.5:2\n"
+        )
+        .is_err());
+        // num_gpus = 0.
+        assert!(parse("[platform]\nnum_gpus = 0\n").is_err());
+        // num_gpus contradicting the [gpu] section count.
+        assert!(parse("[platform]\nnum_gpus = 3\n[gpu]\ntheta_us = 100\n").is_err());
+        // unknown key inside [gpu].
+        assert!(parse("[gpu]\nbogus = 1\n").is_err());
+        // scalar GPU keys after a [gpu] section would be silently
+        // dropped — rejected instead.
+        assert!(parse("[gpu]\nepsilon_us = 400\n[platform]\ntheta_us = 99\n").is_err());
     }
 
     #[test]

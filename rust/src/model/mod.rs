@@ -1,9 +1,10 @@
 //! Task and platform model (paper §4): sporadic tasks with alternating
-//! CPU/GPU segments, partitioned fixed-priority CPUs, one shared GPU.
+//! CPU/GPU segments, partitioned fixed-priority CPUs, and one or more
+//! GPU context queues (g = 1 reproduces the paper's platform).
 
 pub mod config;
 pub mod task;
 pub mod taskset;
 
 pub use task::{ms, to_ms, GpuSegment, Task, Time, WaitMode};
-pub use taskset::{Platform, TaskSet};
+pub use taskset::{GpuContext, Platform, TaskSet};

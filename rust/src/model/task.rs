@@ -69,6 +69,10 @@ pub struct Task {
     pub gpu_segments: Vec<GpuSegment>,
     /// Preallocated CPU core (partitioned scheduling, no migration).
     pub core: usize,
+    /// Assigned GPU engine (index into `Platform::gpus`). GPU segments
+    /// run only on this engine; tasks on different engines share no
+    /// context queue. Ignored (0) for CPU-only tasks.
+    pub gpu: usize,
     /// π_i^c: CPU priority. Higher value = higher priority (rt_priority
     /// semantics). Unique across the system for real-time tasks.
     pub cpu_prio: u32,
@@ -177,6 +181,7 @@ impl Task {
             cpu_segments: vec![c],
             gpu_segments: vec![],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
@@ -201,6 +206,7 @@ mod tests {
                 GpuSegment::new(ms(2.0), ms(2.0)),
             ],
             core: 0,
+            gpu: 0,
             cpu_prio: 10,
             gpu_prio: 10,
             best_effort: false,

@@ -1,13 +1,15 @@
-//! Tasksets: collections of tasks on a multi-core + single-GPU platform,
-//! with the priority/affinity accessors the analysis needs (hp, hpp).
+//! Tasksets: collections of tasks on a multi-core platform with one or
+//! more GPU context queues, with the priority/affinity accessors the
+//! analysis needs (hp, hpp, per-engine sharing sets).
 
 use super::task::{Task, Time};
 
-/// Scheduling/overhead parameters of the platform (paper §2, §5, Table 3).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Platform {
-    /// ω: number of identical CPU cores.
-    pub num_cpus: usize,
+/// Scheduling/overhead parameters of ONE GPU engine (context queue).
+/// The paper models a single engine (§2, §5, Table 3); platforms with
+/// several engines carry one `GpuContext` per engine, each with its own
+/// runlist, TSG ring and driver lock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuContext {
     /// L: TSG time-slice length of the default driver (µs); 1024 µs
     /// in the Tegra driver (§7.1.1).
     pub tsg_slice: Time,
@@ -17,9 +19,77 @@ pub struct Platform {
     pub epsilon: Time,
 }
 
+impl Default for GpuContext {
+    fn default() -> GpuContext {
+        GpuContext { tsg_slice: 1024, theta: 200, epsilon: 1000 }
+    }
+}
+
+/// Scheduling/overhead parameters of the platform (paper §2, §5,
+/// Table 3), generalized to g ≥ 1 GPU engines. Tasks are statically
+/// assigned to one engine (`Task::gpu`); engines never share work, so
+/// GPU blocking/interference only couples tasks on the same engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    /// ω: number of identical CPU cores.
+    pub num_cpus: usize,
+    /// The GPU engines; `gpus.len()` ≥ 1. Index = engine id.
+    pub gpus: Vec<GpuContext>,
+}
+
 impl Default for Platform {
     fn default() -> Platform {
-        Platform { num_cpus: 4, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+        Platform { num_cpus: 4, gpus: vec![GpuContext::default()] }
+    }
+}
+
+impl Platform {
+    /// The paper's platform: one GPU engine with the given overheads.
+    pub fn single(num_cpus: usize, tsg_slice: Time, theta: Time, epsilon: Time) -> Platform {
+        Platform { num_cpus, gpus: vec![GpuContext { tsg_slice, theta, epsilon }] }
+    }
+
+    /// A platform with `num_gpus` identical engines.
+    pub fn uniform(num_cpus: usize, num_gpus: usize, ctx: GpuContext) -> Platform {
+        assert!(num_gpus >= 1, "a platform needs at least one GPU engine");
+        Platform { num_cpus, gpus: vec![ctx; num_gpus] }
+    }
+
+    /// g: the number of GPU engines.
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Resize to `num_gpus` engines, replicating engine 0's parameters.
+    pub fn with_num_gpus(mut self, num_gpus: usize) -> Platform {
+        assert!(num_gpus >= 1, "a platform needs at least one GPU engine");
+        let proto = self.gpus[0];
+        self.gpus.resize(num_gpus, proto);
+        self
+    }
+
+    /// Set ε on every engine (builder for sweeps and tests).
+    pub fn with_epsilon(mut self, epsilon: Time) -> Platform {
+        for g in &mut self.gpus {
+            g.epsilon = epsilon;
+        }
+        self
+    }
+
+    /// Set θ on every engine.
+    pub fn with_theta(mut self, theta: Time) -> Platform {
+        for g in &mut self.gpus {
+            g.theta = theta;
+        }
+        self
+    }
+
+    /// Set the TSG slice length on every engine.
+    pub fn with_slice(mut self, tsg_slice: Time) -> Platform {
+        for g in &mut self.gpus {
+            g.tsg_slice = tsg_slice;
+        }
+        self
     }
 }
 
@@ -46,6 +116,25 @@ impl TaskSet {
     /// Number of GPU-using tasks (n^g).
     pub fn num_gpu_tasks(&self) -> usize {
         self.tasks.iter().filter(|t| t.uses_gpu()).count()
+    }
+
+    /// The GPU engine task `i` is assigned to.
+    pub fn gpu_ctx(&self, i: usize) -> &GpuContext {
+        &self.platform.gpus[self.tasks[i].gpu]
+    }
+
+    /// GPU-using tasks assigned to engine `g`.
+    pub fn on_gpu(&self, g: usize) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter(move |t| t.uses_gpu() && t.gpu == g)
+    }
+
+    /// GPU-using tasks sharing τ_i's engine, excluding τ_i itself — the
+    /// set whose contexts can interleave with / preempt τ_i's on the
+    /// device (tasks on other engines never touch τ_i's runlist).
+    pub fn sharing_gpu(&self, i: usize) -> impl Iterator<Item = &Task> {
+        let me = &self.tasks[i];
+        let (gpu, id) = (me.gpu, me.id);
+        self.tasks.iter().filter(move |t| t.id != id && t.uses_gpu() && t.gpu == gpu)
     }
 
     /// Real-time tasks only (analysis targets).
@@ -109,16 +198,27 @@ impl TaskSet {
         self.on_core(core).map(|t| t.utilization()).sum()
     }
 
-    /// Validate the whole set: per-task structure, core bounds, unique
-    /// RT CPU priorities, per-core GPU/CPU priority order coherence
-    /// (§5.3 deadlock-avoidance constraint).
+    /// Validate the whole set: per-task structure, core/GPU bounds,
+    /// unique RT CPU priorities, per-core GPU/CPU priority order
+    /// coherence (§5.3 deadlock-avoidance constraint).
     pub fn validate(&self) -> Result<(), String> {
+        if self.platform.gpus.is_empty() {
+            return Err("platform has no GPU engines".into());
+        }
         for t in &self.tasks {
             t.validate()?;
             if t.core >= self.platform.num_cpus {
                 return Err(format!(
                     "task {}: core {} out of range (num_cpus = {})",
                     t.id, t.core, self.platform.num_cpus
+                ));
+            }
+            if t.gpu >= self.platform.num_gpus() {
+                return Err(format!(
+                    "task {}: gpu {} out of range (num_gpus = {})",
+                    t.id,
+                    t.gpu,
+                    self.platform.num_gpus()
                 ));
             }
         }
@@ -136,16 +236,18 @@ impl TaskSet {
             return Err("duplicate RT CPU priorities".into());
         }
         // §5.3: same-core relative GPU priority order must match CPU order
-        // (only meaningful between GPU-using tasks — CPU-only tasks never
-        // wait for the GPU, so no deadlock channel exists through them).
+        // (only meaningful between GPU-using tasks sharing an engine —
+        // CPU-only tasks never wait for a GPU, and tasks on different
+        // engines never wait in the same context queue, so no deadlock
+        // channel exists through them).
         for a in self.rt_tasks().filter(|t| t.uses_gpu()) {
             for b in self.rt_tasks().filter(|t| t.uses_gpu()) {
-                if a.id != b.id && a.core == b.core && a.cpu_prio > b.cpu_prio {
+                if a.id != b.id && a.core == b.core && a.gpu == b.gpu && a.cpu_prio > b.cpu_prio {
                     if a.gpu_prio <= b.gpu_prio {
                         return Err(format!(
-                            "tasks {} and {} on core {}: GPU priority order \
+                            "tasks {} and {} on core {} / gpu {}: GPU priority order \
                              violates CPU order (deadlock risk, §5.3)",
-                            a.id, b.id, a.core
+                            a.id, b.id, a.core, a.gpu
                         ));
                     }
                 }
@@ -169,6 +271,7 @@ mod tests {
             cpu_segments: vec![ms(1.0), ms(1.0)],
             gpu_segments: vec![GpuSegment::new(ms(1.0), ms(5.0))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
@@ -255,5 +358,59 @@ mod tests {
         let u0 = ts.core_utilization(0);
         // task 0: C = 2 ms, G = 1 + 5 = 6 ms, T = 100 ms; task 1: 10/100
         assert!((u0 - (8.0 / 100.0 + 10.0 / 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_out_of_range_rejected() {
+        let mut ts = simple_set();
+        ts.tasks[0].gpu = 1; // platform has a single engine
+        assert!(ts.validate().is_err());
+        ts.platform = ts.platform.with_num_gpus(2);
+        ts.validate().unwrap();
+    }
+
+    #[test]
+    fn gpu_priority_order_ignores_cross_engine_pairs() {
+        // Same core, inverted GPU priorities — but different engines, so
+        // no shared context queue and no §5.3 deadlock channel.
+        let mut ts = simple_set();
+        ts.platform = ts.platform.with_num_gpus(2);
+        ts.tasks[2].core = 0;
+        ts.tasks[2].gpu = 1;
+        ts.tasks[0].gpu_prio = 5;
+        ts.tasks[2].gpu_prio = 6;
+        ts.validate().unwrap();
+        // Collapsing them onto one engine re-arms the constraint.
+        ts.tasks[2].gpu = 0;
+        assert!(ts.validate().is_err());
+    }
+
+    #[test]
+    fn sharing_gpu_filters_by_engine() {
+        let mut ts = simple_set();
+        ts.platform = ts.platform.with_num_gpus(2);
+        ts.tasks[2].gpu = 1;
+        // Tasks 0 and 2 are the GPU users; on different engines they no
+        // longer share.
+        assert_eq!(ts.sharing_gpu(0).count(), 0);
+        assert_eq!(ts.on_gpu(0).count(), 1);
+        assert_eq!(ts.on_gpu(1).count(), 1);
+        ts.tasks[2].gpu = 0;
+        let ids: Vec<usize> = ts.sharing_gpu(0).map(|t| t.id).collect();
+        assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn platform_builders() {
+        let p = Platform::single(2, 1024, 200, 1000);
+        assert_eq!(p, Platform { num_cpus: 2, ..Platform::default() });
+        let p2 = p.clone().with_num_gpus(3).with_epsilon(500).with_theta(100).with_slice(2048);
+        assert_eq!(p2.num_gpus(), 3);
+        for g in &p2.gpus {
+            assert_eq!((g.epsilon, g.theta, g.tsg_slice), (500, 100, 2048));
+        }
+        let u = Platform::uniform(4, 2, GpuContext::default());
+        assert_eq!(u.num_gpus(), 2);
+        assert_eq!(u.gpus[0], u.gpus[1]);
     }
 }

@@ -124,7 +124,10 @@ struct TState {
     ticket: u64,
 }
 
-/// GCAPS driver state (Alg. 1) + the GPU device state.
+/// GCAPS driver state (Alg. 1) + the device state of ONE GPU engine.
+/// Multi-GPU platforms hold one `GpuState` per engine: runlists, TSG
+/// rings and driver/lock queues are fully independent across engines
+/// (tasks are statically assigned via `Task::gpu`).
 #[derive(Debug, Clone, Default)]
 struct GpuState {
     /// Alg. 1 task_running (TSGs on the runlist).
@@ -152,7 +155,8 @@ struct Engine<'a> {
     cfg: &'a SimConfig,
     now: Time,
     st: Vec<TState>,
-    gpu: GpuState,
+    /// One device/driver state per GPU engine (index = `Task::gpu`).
+    gpus: Vec<GpuState>,
     metrics: Vec<TaskMetrics>,
     run: RunMetrics,
     trace: Option<Trace>,
@@ -181,7 +185,7 @@ impl<'a> Engine<'a> {
             cfg,
             now: 0,
             st,
-            gpu: GpuState::default(),
+            gpus: vec![GpuState::default(); ts.platform.num_gpus()],
             metrics: vec![TaskMetrics::default(); n],
             run: RunMetrics::default(),
             trace: cfg.trace.then(Trace::default),
@@ -189,9 +193,16 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// α = ε − θ (Def. 2): the CPU-side driver-call cost.
-    fn alpha(&self) -> Time {
-        self.ts.platform.epsilon.saturating_sub(self.ts.platform.theta)
+    /// The engine id task `i` is assigned to.
+    fn gpu_of(&self, i: usize) -> usize {
+        self.ts.tasks[i].gpu
+    }
+
+    /// α = ε − θ (Def. 2): the CPU-side driver-call cost on task `i`'s
+    /// engine.
+    fn alpha_of(&self, i: usize) -> Time {
+        let ctx = self.ts.platform.gpus[self.gpu_of(i)];
+        ctx.epsilon.saturating_sub(ctx.theta)
     }
 
     /// GPU urgency ranking: fixed π^g under GCAPS, earliest absolute job
@@ -226,14 +237,16 @@ impl<'a> Engine<'a> {
             match self.cfg.policy {
                 Policy::Gcaps | Policy::GcapsEdf => {
                     self.st[i].phase = Phase::DrvCall { ending: false };
-                    self.st[i].cpu_rem = self.alpha();
+                    self.st[i].cpu_rem = self.alpha_of(i);
                     self.st[i].drv_started = self.now;
                 }
                 Policy::Mpcp | Policy::FmlpPlus => {
+                    let g = self.gpu_of(i);
                     self.st[i].phase = Phase::LockWait;
-                    self.gpu.ticket_counter += 1;
-                    self.st[i].ticket = self.gpu.ticket_counter;
-                    self.gpu.lock_queue.push((i, self.st[i].ticket));
+                    self.gpus[g].ticket_counter += 1;
+                    self.st[i].ticket = self.gpus[g].ticket_counter;
+                    let ticket = self.st[i].ticket;
+                    self.gpus[g].lock_queue.push((i, ticket));
                 }
                 Policy::TsgRr => self.begin_gpu_segment(i),
             }
@@ -257,12 +270,13 @@ impl<'a> Engine<'a> {
         match self.cfg.policy {
             Policy::Gcaps | Policy::GcapsEdf => {
                 self.st[i].phase = Phase::DrvCall { ending: true };
-                self.st[i].cpu_rem = self.alpha();
+                self.st[i].cpu_rem = self.alpha_of(i);
                 self.st[i].drv_started = self.now;
             }
             Policy::Mpcp | Policy::FmlpPlus => {
-                debug_assert_eq!(self.gpu.lock_holder, Some(i));
-                self.gpu.lock_holder = None;
+                let g = self.gpu_of(i);
+                debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
+                self.gpus[g].lock_holder = None;
                 self.next_cpu_segment(i);
             }
             Policy::TsgRr => self.next_cpu_segment(i),
@@ -296,37 +310,40 @@ impl<'a> Engine<'a> {
 
     // -- GCAPS driver (Alg. 1) --------------------------------------------
 
-    /// Alg. 1 body, executed when the driver call's α completes.
+    /// Alg. 1 body, executed when the driver call's α completes. Acts
+    /// on the runlist of τ_i's OWN engine only.
     fn finish_driver_call(&mut self, i: usize) {
+        let g = self.gpu_of(i);
         let ending = matches!(self.st[i].phase, Phase::DrvCall { ending: true });
         if std::env::var_os("GCAPS_SIM_DEBUG").is_some() {
             eprintln!(
-                "[{}] drv {} tau{} | running {:?} pending {:?} ctx {:?}",
+                "[{}] drv {} tau{} | gpu {} running {:?} pending {:?} ctx {:?}",
                 self.now,
                 if ending { "END" } else { "BEGIN" },
                 i,
-                self.gpu.running,
-                self.gpu.pending,
-                self.gpu.context
+                g,
+                self.gpus[g].running,
+                self.gpus[g].pending,
+                self.gpus[g].context
             );
         }
+        let theta = self.ts.platform.gpus[g].theta;
         self.metrics[i]
             .runlist_updates
-            .push(self.now - self.st[i].drv_started + self.ts.platform.theta);
+            .push(self.now - self.st[i].drv_started + theta);
         let me = &self.ts.tasks[i];
         if !ending {
             // --- TSG_SCHEDULER(τ_i, add) ---
             if me.best_effort {
                 let rt_running =
-                    self.gpu.running.iter().any(|&k| !self.ts.tasks[k].best_effort);
+                    self.gpus[g].running.iter().any(|&k| !self.ts.tasks[k].best_effort);
                 if rt_running {
-                    self.gpu.pending.push(i);
+                    self.gpus[g].pending.push(i);
                 } else {
-                    self.gpu.running.push(i);
+                    self.gpus[g].running.push(i);
                 }
             } else {
-                let tau_h = self
-                    .gpu
+                let tau_h = self.gpus[g]
                     .running
                     .iter()
                     .copied()
@@ -337,31 +354,30 @@ impl<'a> Engine<'a> {
                 };
                 if preempt {
                     // §5.2: the new runlist contains only τ_i's TSGs.
-                    let displaced: Vec<usize> = self.gpu.running.drain(..).collect();
-                    self.gpu.pending.extend(displaced);
-                    self.gpu.running.push(i);
+                    let displaced: Vec<usize> = self.gpus[g].running.drain(..).collect();
+                    self.gpus[g].pending.extend(displaced);
+                    self.gpus[g].running.push(i);
                 } else {
-                    self.gpu.pending.push(i);
+                    self.gpus[g].pending.push(i);
                 }
             }
             self.begin_gpu_segment(i);
         } else {
             // --- TSG_SCHEDULER(τ_i, remove) ---
-            self.gpu.running.retain(|&k| k != i);
-            self.gpu.pending.retain(|&k| k != i);
-            let tau_k = self
-                .gpu
+            self.gpus[g].running.retain(|&k| k != i);
+            self.gpus[g].pending.retain(|&k| k != i);
+            let tau_k = self.gpus[g]
                 .pending
                 .iter()
                 .copied()
                 .filter(|&k| !self.ts.tasks[k].best_effort)
                 .max_by_key(|&k| self.gpu_rank(k));
             if let Some(k) = tau_k {
-                self.gpu.pending.retain(|&x| x != k);
-                self.gpu.running.push(k);
+                self.gpus[g].pending.retain(|&x| x != k);
+                self.gpus[g].running.push(k);
             } else {
-                let all: Vec<usize> = self.gpu.pending.drain(..).collect();
-                self.gpu.running.extend(all);
+                let all: Vec<usize> = self.gpus[g].pending.drain(..).collect();
+                self.gpus[g].running.extend(all);
             }
             self.next_cpu_segment(i);
         }
@@ -369,13 +385,12 @@ impl<'a> Engine<'a> {
 
     // -- lock-based policies -----------------------------------------------
 
-    fn try_grant_lock(&mut self) {
-        if self.gpu.lock_holder.is_some() || self.gpu.lock_queue.is_empty() {
+    fn try_grant_lock(&mut self, g: usize) {
+        if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
             return;
         }
         let idx = match self.cfg.policy {
-            Policy::Mpcp => self
-                .gpu
+            Policy::Mpcp => self.gpus[g]
                 .lock_queue
                 .iter()
                 .enumerate()
@@ -384,8 +399,7 @@ impl<'a> Engine<'a> {
                 })
                 .map(|(j, _)| j)
                 .unwrap(),
-            Policy::FmlpPlus => self
-                .gpu
+            Policy::FmlpPlus => self.gpus[g]
                 .lock_queue
                 .iter()
                 .enumerate()
@@ -394,8 +408,8 @@ impl<'a> Engine<'a> {
                 .unwrap(),
             _ => unreachable!(),
         };
-        let (task, _) = self.gpu.lock_queue.swap_remove(idx);
-        self.gpu.lock_holder = Some(task);
+        let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
+        self.gpus[g].lock_holder = Some(task);
         self.begin_gpu_segment(task);
     }
 
@@ -421,7 +435,7 @@ impl<'a> Engine<'a> {
     /// cannot be preempted, so ε-blocking stays within Lemma 8's bound.
     fn eff_prio(&self, i: usize) -> u64 {
         let base = self.ts.tasks[i].cpu_prio as u64;
-        let boosted = self.gpu.lock_holder == Some(i)
+        let boosted = self.gpus[self.gpu_of(i)].lock_holder == Some(i)
             && matches!(self.st[i].phase, Phase::GpuActive)
             && self.st[i].cpu_rem > 0;
         if boosted {
@@ -431,7 +445,7 @@ impl<'a> Engine<'a> {
         // begun executing (the task competes at its own priority to
         // *enter* the kernel section; cpu_rem < α ⇔ it has run).
         if matches!(self.st[i].phase, Phase::DrvCall { .. })
-            && self.st[i].cpu_rem < self.alpha()
+            && self.st[i].cpu_rem < self.alpha_of(i)
         {
             return (1 << 41) | base;
         }
@@ -458,7 +472,7 @@ impl<'a> Engine<'a> {
         alloc
     }
 
-    /// Is task i's TSG eligible for the time-shared ring?
+    /// Is task i's TSG eligible for its engine's time-shared ring?
     fn ring_eligible(&self, i: usize) -> bool {
         if !(matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0) {
             return false;
@@ -466,26 +480,29 @@ impl<'a> Engine<'a> {
         match self.cfg.policy {
             Policy::TsgRr => true,
             Policy::Gcaps | Policy::GcapsEdf => {
-                self.ts.tasks[i].best_effort && self.gpu.running.contains(&i)
+                self.ts.tasks[i].best_effort
+                    && self.gpus[self.gpu_of(i)].running.contains(&i)
             }
             _ => false,
         }
     }
 
-    /// Sync ring membership with eligibility, preserving FIFO order.
-    fn refresh_ring(&mut self) {
-        let eligible: Vec<usize> =
-            (0..self.st.len()).filter(|&i| self.ring_eligible(i)).collect();
-        self.gpu.ring.retain(|i| eligible.contains(i));
+    /// Sync engine `g`'s ring membership with eligibility, preserving
+    /// FIFO order.
+    fn refresh_ring(&mut self, g: usize) {
+        let eligible: Vec<usize> = (0..self.st.len())
+            .filter(|&i| self.gpu_of(i) == g && self.ring_eligible(i))
+            .collect();
+        self.gpus[g].ring.retain(|i| eligible.contains(i));
         for i in eligible {
-            if !self.gpu.ring.contains(&i) {
-                self.gpu.ring.push_back(i);
+            if !self.gpus[g].ring.contains(&i) {
+                self.gpus[g].ring.push_back(i);
             }
         }
     }
 
-    /// Which task should the GPU execute now (pre-θ)?
-    fn desired_gpu_context(&self) -> Option<usize> {
+    /// Which task should engine `g` execute now (pre-θ)?
+    fn desired_gpu_context(&self, g: usize) -> Option<usize> {
         let execing = |i: usize| {
             matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
         };
@@ -493,32 +510,32 @@ impl<'a> Engine<'a> {
             Policy::Gcaps | Policy::GcapsEdf => {
                 // At most one RT task occupies the runlist; it runs
                 // exclusively. Otherwise the BE ring time-shares.
-                let rt = self
-                    .gpu
+                let rt = self.gpus[g]
                     .running
                     .iter()
                     .copied()
                     .filter(|&i| !self.ts.tasks[i].best_effort && execing(i))
                     .max_by_key(|&i| self.gpu_rank(i));
-                rt.or_else(|| self.gpu.ring.front().copied())
+                rt.or_else(|| self.gpus[g].ring.front().copied())
             }
-            Policy::TsgRr => self.gpu.ring.front().copied(),
+            Policy::TsgRr => self.gpus[g].ring.front().copied(),
             Policy::Mpcp | Policy::FmlpPlus => {
-                self.gpu.lock_holder.filter(|&i| execing(i))
+                self.gpus[g].lock_holder.filter(|&i| execing(i))
             }
         }
     }
 
-    /// Apply the desired context: start a θ switch if it changed.
-    fn update_gpu_context(&mut self) {
-        let want = self.desired_gpu_context();
-        if want == self.gpu.context {
+    /// Apply engine `g`'s desired context: start a θ switch if it
+    /// changed.
+    fn update_gpu_context(&mut self, g: usize) {
+        let want = self.desired_gpu_context(g);
+        if want == self.gpus[g].context {
             return;
         }
         match want {
             None => {
-                self.gpu.context = None;
-                self.gpu.switch_rem = 0;
+                self.gpus[g].context = None;
+                self.gpus[g].switch_rem = 0;
             }
             Some(i) => {
                 // θ per context switch for the driver-level policies
@@ -527,11 +544,13 @@ impl<'a> Engine<'a> {
                 // overhead-free, as the paper's analysis assumes.
                 let charge = match self.cfg.policy {
                     Policy::Mpcp | Policy::FmlpPlus => 0,
-                    Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => self.ts.platform.theta,
+                    Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
+                        self.ts.platform.gpus[g].theta
+                    }
                 };
-                self.gpu.context = Some(i);
-                self.gpu.switch_rem = charge;
-                self.gpu.slice_rem = self.ts.platform.tsg_slice;
+                self.gpus[g].context = Some(i);
+                self.gpus[g].switch_rem = charge;
+                self.gpus[g].slice_rem = self.ts.platform.gpus[g].tsg_slice;
                 if charge > 0 {
                     self.run.gpu_context_switches += 1;
                 }
@@ -572,13 +591,16 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        if let Some(i) = self.gpu.context {
-            if self.gpu.switch_rem > 0 {
-                h = h.min(self.now + self.gpu.switch_rem);
-            } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
-                h = h.min(self.now + self.st[i].gpu_rem);
-                if self.gpu.ring.len() > 1 && self.gpu.ring.front() == Some(&i) {
-                    h = h.min(self.now + self.gpu.slice_rem);
+        for gs in &self.gpus {
+            if let Some(i) = gs.context {
+                if gs.switch_rem > 0 {
+                    h = h.min(self.now + gs.switch_rem);
+                } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+                {
+                    h = h.min(self.now + self.st[i].gpu_rem);
+                    if gs.ring.len() > 1 && gs.ring.front() == Some(&i) {
+                        h = h.min(self.now + gs.slice_rem);
+                    }
                 }
             }
         }
@@ -618,14 +640,15 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        if let Some(i) = self.gpu.context {
-            if self.gpu.switch_rem > 0 {
-                let d = dt.min(self.gpu.switch_rem);
-                self.gpu.switch_rem -= d;
+        for g in 0..self.gpus.len() {
+            let Some(i) = self.gpus[g].context else { continue };
+            if self.gpus[g].switch_rem > 0 {
+                let d = dt.min(self.gpus[g].switch_rem);
+                self.gpus[g].switch_rem -= d;
                 self.run.gpu_switch_time += d;
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
-                        resource: Resource::Gpu,
+                        resource: Resource::Gpu(g),
                         task: i,
                         activity: Activity::CtxSwitch,
                         start: self.now,
@@ -635,11 +658,11 @@ impl<'a> Engine<'a> {
             } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
                 let d = dt.min(self.st[i].gpu_rem);
                 self.st[i].gpu_rem -= d;
-                self.gpu.slice_rem = self.gpu.slice_rem.saturating_sub(dt);
+                self.gpus[g].slice_rem = self.gpus[g].slice_rem.saturating_sub(dt);
                 self.run.gpu_busy += d;
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
-                        resource: Resource::Gpu,
+                        resource: Resource::Gpu(g),
                         task: i,
                         activity: Activity::GpuExec,
                         start: self.now,
@@ -677,13 +700,15 @@ impl<'a> Engine<'a> {
             mix(s.cpu_rem);
             mix(s.gpu_rem);
         }
-        mix(self.gpu.context.map_or(u64::MAX, |c| c as u64));
-        mix(self.gpu.switch_rem);
-        for &r in &self.gpu.ring {
-            mix(r as u64);
+        for gs in &self.gpus {
+            mix(gs.context.map_or(u64::MAX, |c| c as u64));
+            mix(gs.switch_rem);
+            for &r in &gs.ring {
+                mix(r as u64);
+            }
+            mix(gs.running.len() as u64);
+            mix(gs.pending.len() as u64);
         }
-        mix(self.gpu.running.len() as u64);
-        mix(self.gpu.pending.len() as u64);
         h
     }
 
@@ -720,9 +745,11 @@ impl<'a> Engine<'a> {
                 }
             }
 
-            // Lock grants.
+            // Lock grants (one lock per engine).
             if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
-                self.try_grant_lock();
+                for g in 0..self.gpus.len() {
+                    self.try_grant_lock(g);
+                }
             }
 
             // GCAPS completion-aware promotion (work-conserving runlist):
@@ -738,37 +765,42 @@ impl<'a> Engine<'a> {
                 let execing = |st: &TState| {
                     matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
                 };
-                let any_running_exec =
-                    self.gpu.running.iter().any(|&k| execing(&self.st[k]));
-                if !any_running_exec {
-                    let promote = self
-                        .gpu
-                        .pending
-                        .iter()
-                        .copied()
-                        .filter(|&k| !self.ts.tasks[k].best_effort && execing(&self.st[k]))
-                        .max_by_key(|&k| self.gpu_rank(k));
-                    if let Some(k) = promote {
-                        self.gpu.pending.retain(|&x| x != k);
-                        self.gpu.running.push(k);
+                for g in 0..self.gpus.len() {
+                    let any_running_exec =
+                        self.gpus[g].running.iter().any(|&k| execing(&self.st[k]));
+                    if !any_running_exec {
+                        let promote = self.gpus[g]
+                            .pending
+                            .iter()
+                            .copied()
+                            .filter(|&k| {
+                                !self.ts.tasks[k].best_effort && execing(&self.st[k])
+                            })
+                            .max_by_key(|&k| self.gpu_rank(k));
+                        if let Some(k) = promote {
+                            self.gpus[g].pending.retain(|&x| x != k);
+                            self.gpus[g].running.push(k);
+                        }
                     }
                 }
             }
 
-            // Ring upkeep + slice rotation.
-            self.refresh_ring();
-            if let Some(i) = self.gpu.context {
-                if self.gpu.switch_rem == 0
-                    && self.gpu.slice_rem == 0
-                    && self.gpu.ring.len() > 1
-                    && self.gpu.ring.front() == Some(&i)
-                {
-                    self.gpu.ring.rotate_left(1);
-                } else if self.gpu.ring.len() == 1 && self.gpu.slice_rem == 0 {
-                    self.gpu.slice_rem = self.ts.platform.tsg_slice;
+            // Ring upkeep + slice rotation, per engine.
+            for g in 0..self.gpus.len() {
+                self.refresh_ring(g);
+                if let Some(i) = self.gpus[g].context {
+                    if self.gpus[g].switch_rem == 0
+                        && self.gpus[g].slice_rem == 0
+                        && self.gpus[g].ring.len() > 1
+                        && self.gpus[g].ring.front() == Some(&i)
+                    {
+                        self.gpus[g].ring.rotate_left(1);
+                    } else if self.gpus[g].ring.len() == 1 && self.gpus[g].slice_rem == 0 {
+                        self.gpus[g].slice_rem = self.ts.platform.gpus[g].tsg_slice;
+                    }
                 }
+                self.update_gpu_context(g);
             }
-            self.update_gpu_context();
             self.cpu_alloc = self.compute_cpu_alloc();
 
             let cur = self.fingerprint();
@@ -817,7 +849,7 @@ mod tests {
     use crate::model::{ms, GpuSegment, Platform, Task, TaskSet};
 
     fn platform() -> Platform {
-        Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 1000 }
+        Platform::single(2, 1024, 200, 1000)
     }
 
     fn gpu_task(id: usize, core: usize, prio: u32, c: f64, gm: f64, ge: f64, t: f64) -> Task {
@@ -829,6 +861,7 @@ mod tests {
             cpu_segments: vec![ms(c / 2.0), ms(c / 2.0)],
             gpu_segments: vec![GpuSegment::new(ms(gm), ms(ge))],
             core,
+            gpu: 0,
             cpu_prio: prio,
             gpu_prio: prio,
             best_effort: false,
@@ -962,7 +995,7 @@ mod tests {
         let cfg = SimConfig::new(Policy::Gcaps, ms(100.0)).with_trace();
         let res = simulate(&ts, &cfg);
         let tr = res.trace.unwrap();
-        let gpu_time = tr.occupancy(Resource::Gpu, 0, 0, ms(100.0));
+        let gpu_time = tr.occupancy(Resource::Gpu(0), 0, 0, ms(100.0));
         assert_eq!(gpu_time, ms(5.0) + 200); // G^e + θ switch
         assert_eq!(tr.releases.len(), 1);
         assert_eq!(tr.completions.len(), 1);
@@ -1057,8 +1090,8 @@ mod tests {
         // ε = θ ⇒ α = 0: GCAPS driver calls are zero-length CPU work, the
         // harshest zero-time-transition case (two per GPU segment). The
         // response collapses to C + max(G^m, θ + G^e).
-        let p = Platform { num_cpus: 2, tsg_slice: 1024, theta: 200, epsilon: 200 };
-        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], p);
+        let p = Platform::single(2, 1024, 200, 200);
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], p.clone());
         for policy in [Policy::Gcaps, Policy::GcapsEdf] {
             let res = simulate(&ts, &SimConfig::new(policy, ms(1000.0)));
             assert_eq!(res.per_task[0].jobs, 10, "{policy:?}");
@@ -1077,7 +1110,7 @@ mod tests {
         // L ≫ every G^e: no kernel ever exhausts its slice, so the RR
         // ring must still rotate (at segment completion) rather than
         // deadlock on a never-expiring slice.
-        let p = Platform { num_cpus: 2, tsg_slice: ms(500.0), theta: 200, epsilon: 1000 };
+        let p = Platform::single(2, ms(500.0), 200, 1000);
         let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 100.0);
         let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 100.0);
         let ts = TaskSet::new(vec![a, b], p);
@@ -1095,6 +1128,61 @@ mod tests {
     }
 
     #[test]
+    fn two_engines_execute_in_parallel() {
+        // Two identical GPU tasks on separate engines behave exactly as
+        // if each ran alone — no interleaving, preemption or queueing
+        // couples them — under every policy.
+        let p = platform().with_num_gpus(2);
+        let a = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let mut b = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        b.gpu = 1;
+        let ts = TaskSet::new(vec![a, b], p);
+        for policy in ALL_POLICIES {
+            let expect = match policy {
+                // Alone: R = C + max(G^m, θ + G^e).
+                Policy::TsgRr => ms(7.2),
+                // + 2α runlist updates.
+                Policy::Gcaps | Policy::GcapsEdf => ms(8.8),
+                // Lock policies are overhead-free when uncontended.
+                Policy::Mpcp | Policy::FmlpPlus => ms(7.0),
+            };
+            let res = simulate(&ts, &SimConfig::new(policy, ms(1000.0)));
+            for i in [0, 1] {
+                assert_eq!(res.per_task[i].mort(), Some(expect), "{policy:?} tau{i}");
+                assert_eq!(res.per_task[i].deadline_misses, 0, "{policy:?} tau{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_engine_interferes_where_split_engines_do_not() {
+        // The same pair forced onto one engine must interleave under
+        // the RR driver (slower than the isolated 7.2 ms).
+        let a = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let b = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        let shared = TaskSet::new(vec![a.clone(), b.clone()], platform());
+        let res = simulate(&shared, &SimConfig::new(Policy::TsgRr, ms(1000.0)));
+        let worst = res.per_task[0].mort().unwrap().max(res.per_task[1].mort().unwrap());
+        assert!(worst > ms(7.2), "shared engine must interleave: {worst}");
+    }
+
+    #[test]
+    fn multi_gpu_traces_tagged_by_engine() {
+        let p = platform().with_num_gpus(2);
+        let a = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let mut b = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        b.gpu = 1;
+        let ts = TaskSet::new(vec![a, b], p);
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(100.0)).with_trace());
+        let tr = res.trace.unwrap();
+        // Each task's G^e lands on its own engine's trace row, θ incl.
+        assert_eq!(tr.occupancy(Resource::Gpu(0), 0, 0, ms(100.0)), ms(5.0) + 200);
+        assert_eq!(tr.occupancy(Resource::Gpu(1), 1, 0, ms(100.0)), ms(5.0) + 200);
+        assert_eq!(tr.occupancy(Resource::Gpu(1), 0, 0, ms(100.0)), 0);
+        assert_eq!(tr.occupancy(Resource::Gpu(0), 1, 0, ms(100.0)), 0);
+    }
+
+    #[test]
     fn driver_calls_bounded_by_epsilon() {
         // Three GPU tasks hammering the driver: every measured runlist
         // update stays within ~2ε (own α + θ plus at most one same-core
@@ -1106,7 +1194,7 @@ mod tests {
         ];
         let ts = TaskSet::new(tasks, platform());
         let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(3000.0)));
-        let eps = ts.platform.epsilon;
+        let eps = ts.platform.gpus[0].epsilon;
         // Highest-priority task: blocked by at most one in-flight call.
         for &d in &res.per_task[0].runlist_updates {
             assert!(d <= 2 * eps, "hp runlist update took {d} µs");

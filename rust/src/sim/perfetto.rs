@@ -26,7 +26,9 @@ fn activity_name(a: Activity) -> &'static str {
 fn resource_ids(r: Resource) -> (u64, &'static str) {
     match r {
         Resource::Core(k) => (k as u64, "CPU"),
-        Resource::Gpu => (1000, "GPU"),
+        // One Chrome "process" per GPU engine, offset well past the
+        // CPU pids.
+        Resource::Gpu(g) => (1000 + g as u64, "GPU"),
     }
 }
 
@@ -42,7 +44,13 @@ pub fn to_chrome_json(trace: &Trace, task_names: &[String]) -> String {
         *first = false;
     };
 
-    // Process metadata: names for the resource rows.
+    // Process metadata: names for the resource rows. A single-GPU
+    // trace keeps the legacy bare "GPU" process name; multi-GPU traces
+    // number every engine, including engine 0.
+    let multi_gpu = trace
+        .events
+        .iter()
+        .any(|e| matches!(e.resource, Resource::Gpu(g) if g > 0));
     let mut seen: Vec<u64> = Vec::new();
     for ev in &trace.events {
         let (pid, kind) = resource_ids(ev.resource);
@@ -50,7 +58,8 @@ pub fn to_chrome_json(trace: &Trace, task_names: &[String]) -> String {
             seen.push(pid);
             let name = match ev.resource {
                 Resource::Core(k) => format!("{kind}{k}"),
-                Resource::Gpu => kind.to_string(),
+                Resource::Gpu(g) if multi_gpu => format!("{kind}{g}"),
+                Resource::Gpu(_) => kind.to_string(),
             };
             push(
                 format!(
@@ -123,6 +132,7 @@ mod tests {
             cpu_segments: vec![ms(1.0), ms(1.0)],
             gpu_segments: vec![GpuSegment::new(ms(0.5), ms(5.0))],
             core: 0,
+            gpu: 0,
             cpu_prio: 1,
             gpu_prio: 1,
             best_effort: false,

@@ -5,11 +5,13 @@
 
 use crate::model::{Time, to_ms};
 
-/// A scheduling resource in the simulated platform.
+/// A scheduling resource in the simulated platform. GPU rows carry the
+/// engine id so multi-GPU traces stay disentangled (single-GPU traces
+/// use `Gpu(0)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Resource {
     Core(usize),
-    Gpu,
+    Gpu(usize),
 }
 
 /// What the occupant was doing.
@@ -86,11 +88,33 @@ impl Trace {
         };
         let mut resources: Vec<Resource> =
             (0..num_cores).map(Resource::Core).collect();
-        resources.push(Resource::Gpu);
+        // One GPU row per engine seen in the trace (at least engine 0).
+        let mut gpu_ids: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|e| match e.resource {
+                Resource::Gpu(g) => Some(g),
+                _ => None,
+            })
+            .collect();
+        gpu_ids.sort_unstable();
+        gpu_ids.dedup();
+        if gpu_ids.is_empty() {
+            gpu_ids.push(0);
+        }
+        // Single-GPU traces keep the legacy "GPU " row label; as soon
+        // as any engine other than 0 appears, every row is numbered
+        // (incl. engine 0) so "GPU1" cannot be misread as the first
+        // engine. Keyed on the ids present — matching the Chrome
+        // export's detection — not on their count, so a trace whose
+        // only GPU work ran on engine 1 still renders "GPU1".
+        let multi_gpu = gpu_ids.iter().any(|&g| g > 0);
+        resources.extend(gpu_ids.into_iter().map(Resource::Gpu));
         for res in resources {
             let res_label = match res {
                 Resource::Core(k) => format!("CPU{k}"),
-                Resource::Gpu => "GPU ".to_string(),
+                Resource::Gpu(g) if multi_gpu => format!("GPU{g}"),
+                Resource::Gpu(_) => "GPU ".to_string(),
             };
             for task in 0..num_tasks {
                 let evs: Vec<&TraceEvent> = self
@@ -132,7 +156,7 @@ mod tests {
     fn push_drops_empty_intervals() {
         let mut t = Trace::default();
         t.push(TraceEvent {
-            resource: Resource::Gpu,
+            resource: Resource::Gpu(0),
             task: 0,
             activity: Activity::GpuExec,
             start: 5,
@@ -153,7 +177,7 @@ mod tests {
         });
         assert_eq!(t.occupancy(Resource::Core(0), 1, 50, 80), 30);
         assert_eq!(t.occupancy(Resource::Core(0), 2, 0, 100), 0);
-        assert_eq!(t.occupancy(Resource::Gpu, 1, 0, 100), 0);
+        assert_eq!(t.occupancy(Resource::Gpu(0), 1, 0, 100), 0);
     }
 
     #[test]
@@ -167,7 +191,7 @@ mod tests {
             end: 1000,
         });
         t.push(TraceEvent {
-            resource: Resource::Gpu,
+            resource: Resource::Gpu(0),
             task: 0,
             activity: Activity::GpuExec,
             start: 1000,

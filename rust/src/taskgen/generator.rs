@@ -118,6 +118,7 @@ pub fn generate(rng: &mut Pcg32, p: &GenParams) -> TaskSet {
                     cpu_segments,
                     gpu_segments,
                     core: cpu,
+                    gpu: 0, // assigned below (WFD over engines)
                     cpu_prio: 0, // assigned below
                     gpu_prio: 0,
                     best_effort: false,
@@ -145,8 +146,12 @@ pub fn generate(rng: &mut Pcg32, p: &GenParams) -> TaskSet {
 
     assign_rm_priorities(&mut tasks);
     wfd_reallocate(&mut tasks, p.num_cpus);
+    wfd_assign_gpus(&mut tasks, p.platform.num_gpus());
 
-    TaskSet::new(tasks, Platform { num_cpus: p.num_cpus, ..p.platform })
+    TaskSet::new(
+        tasks,
+        Platform { num_cpus: p.num_cpus, gpus: p.platform.gpus.clone() },
+    )
 }
 
 /// Rate-Monotonic priorities: shorter period = higher priority. Unique
@@ -164,6 +169,37 @@ pub fn assign_rm_priorities(tasks: &mut [Task]) {
     for t in tasks.iter_mut().filter(|t| t.best_effort) {
         t.cpu_prio = 0;
         t.gpu_prio = 0;
+    }
+}
+
+/// Worst-Fit-Decreasing task-to-GPU assignment: GPU-using tasks, taken
+/// in decreasing GPU utilization (G_i/T_i), land on the currently
+/// least-loaded engine. Deterministic (no RNG draws — ties break by
+/// id), so single-GPU generation is bit-identical to the pre-multi-GPU
+/// pipeline. CPU-only tasks stay on engine 0 (the field is unused for
+/// them).
+pub fn wfd_assign_gpus(tasks: &mut [Task], num_gpus: usize) {
+    if num_gpus <= 1 {
+        for t in tasks.iter_mut() {
+            t.gpu = 0;
+        }
+        return;
+    }
+    let gpu_util = |t: &Task| t.g() as f64 / t.period as f64;
+    let mut order: Vec<usize> = (0..tasks.len()).filter(|&i| tasks[i].uses_gpu()).collect();
+    order.sort_by(|&a, &b| {
+        gpu_util(&tasks[b])
+            .partial_cmp(&gpu_util(&tasks[a]))
+            .unwrap()
+            .then(tasks[a].id.cmp(&tasks[b].id))
+    });
+    let mut load = vec![0.0f64; num_gpus];
+    for &i in &order {
+        let g = (0..num_gpus)
+            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+            .unwrap();
+        tasks[i].gpu = g;
+        load[g] += gpu_util(&tasks[i]);
     }
 }
 
@@ -306,5 +342,74 @@ mod tests {
         let p = GenParams { mode: WaitMode::BusyWait, ..Default::default() };
         let ts = generate(&mut rng, &p);
         assert!(ts.tasks.iter().all(|t| t.mode == WaitMode::BusyWait));
+    }
+
+    #[test]
+    fn single_gpu_platforms_pin_everything_to_engine_zero() {
+        forall("single-GPU pins to 0", 50, |rng| {
+            let ts = generate(rng, &GenParams::default());
+            if ts.tasks.iter().any(|t| t.gpu != 0) {
+                return Err("task assigned off engine 0 on a 1-GPU platform".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wfd_gpu_assignment_balances_engines() {
+        forall("WFD GPU balance", 60, |rng| {
+            let p = GenParams {
+                platform: Platform::default().with_num_gpus(2),
+                ..Default::default()
+            };
+            let ts = generate(rng, &p);
+            ts.validate()?;
+            let gpu_load = |g: usize| -> f64 {
+                ts.on_gpu(g).map(|t| t.g() as f64 / t.period as f64).sum()
+            };
+            let (l0, l1) = (gpu_load(0), gpu_load(1));
+            // Worst-fit bounds the spread by the largest single task's
+            // GPU utilization.
+            let max_single = ts
+                .tasks
+                .iter()
+                .filter(|t| t.uses_gpu())
+                .map(|t| t.g() as f64 / t.period as f64)
+                .fold(0.0, f64::max);
+            if (l0 - l1).abs() > max_single + 1e-9 {
+                return Err(format!("engine loads {l0:.3} vs {l1:.3} (max single {max_single:.3})"));
+            }
+            // With ≥ 2 GPU tasks, both engines must be populated.
+            if ts.num_gpu_tasks() >= 2 && (ts.on_gpu(0).count() == 0 || ts.on_gpu(1).count() == 0)
+            {
+                return Err("an engine was left empty".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gpu_assignment_is_deterministic_and_draw_free() {
+        // The GPU assignment must not consume RNG draws: generation
+        // under 1 and 4 engines makes identical random decisions, so
+        // the task structure matches field-for-field except `gpu`.
+        let p1 = GenParams::default();
+        let p4 = GenParams {
+            platform: Platform::default().with_num_gpus(4),
+            ..Default::default()
+        };
+        let mut r1 = Pcg32::seeded(77);
+        let mut r4 = Pcg32::seeded(77);
+        let a = generate(&mut r1, &p1);
+        let b = generate(&mut r4, &p4);
+        assert_eq!(r1.next_u64(), r4.next_u64(), "rng streams diverged");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.period, y.period);
+            assert_eq!(x.cpu_segments, y.cpu_segments);
+            assert_eq!(x.gpu_segments, y.gpu_segments);
+            assert_eq!(x.core, y.core);
+            assert_eq!(x.cpu_prio, y.cpu_prio);
+        }
     }
 }

@@ -4,5 +4,5 @@
 pub mod generator;
 pub mod uunifast;
 
-pub use generator::{assign_rm_priorities, generate, wfd_reallocate, GenParams};
+pub use generator::{assign_rm_priorities, generate, wfd_assign_gpus, wfd_reallocate, GenParams};
 pub use uunifast::uunifast;

@@ -20,7 +20,7 @@ fn gen_default(rng: &mut gcaps::util::rng::Pcg32, busy: bool) -> TaskSet {
 
 fn with_platform(ts: &TaskSet, platform: Platform) -> TaskSet {
     let mut out = ts.clone();
-    out.platform = Platform { num_cpus: ts.platform.num_cpus, ..platform };
+    out.platform = Platform { num_cpus: ts.platform.num_cpus, gpus: platform.gpus };
     out
 }
 
@@ -31,7 +31,7 @@ fn gcaps_wcrt_monotone_in_epsilon() {
         let ts = gen_default(rng, false);
         let mut prev: Vec<Option<u64>> = vec![Some(0); ts.len()];
         for eps in [0u64, 300, 600, 1000, 1500] {
-            let t2 = with_platform(&ts, Platform { epsilon: eps, ..ts.platform });
+            let t2 = with_platform(&ts, ts.platform.clone().with_epsilon(eps));
             let res = gcaps_rta(&t2, false, &Options::default());
             for t in t2.rt_tasks() {
                 match (prev[t.id], res.response[t.id]) {
@@ -57,7 +57,7 @@ fn tsg_rr_wcrt_monotone_in_theta() {
         let ts = gen_default(rng, false);
         let mut prev: Vec<Option<u64>> = vec![Some(0); ts.len()];
         for theta in [0u64, 100, 200, 400, 800] {
-            let t2 = with_platform(&ts, Platform { theta, ..ts.platform });
+            let t2 = with_platform(&ts, ts.platform.clone().with_theta(theta));
             let res = analyze(&t2, Approach::TsgRrSuspend);
             for t in t2.rt_tasks() {
                 match (prev[t.id], res.response[t.id]) {
@@ -119,7 +119,7 @@ fn wcrt_monotone_in_demand() {
 fn gcaps_dominates_sync_for_top_task_without_overheads() {
     forall("gcaps top-task dominance (ε=θ=0)", 40, |rng| {
         let ts0 = gen_default(rng, false);
-        let ts = with_platform(&ts0, Platform { epsilon: 0, theta: 0, ..ts0.platform });
+        let ts = with_platform(&ts0, ts0.platform.clone().with_epsilon(0).with_theta(0));
         // Highest-priority GPU-using RT task.
         let top = ts
             .rt_tasks()

@@ -74,3 +74,14 @@ fn ablation_harness_runs() {
     assert!(out.contains("EDF"));
     assert!(results_dir().join("ablations.csv").exists());
 }
+
+#[test]
+fn multigpu_harness_runs() {
+    let out = gcaps::experiments::multigpu::run_and_report(&tiny());
+    assert!(out.contains("Multi-GPU"));
+    let path = results_dir().join("multigpu.csv");
+    let csv = std::fs::read_to_string(&path).expect("csv written");
+    // Header + 8 approaches × 3 GPU counts.
+    assert_eq!(csv.lines().count(), 1 + 8 * 3, "unexpected row count:\n{csv}");
+    assert!(csv.lines().next().unwrap().contains("num_gpus"));
+}

@@ -68,7 +68,7 @@ fn gcaps_rt_gpu_execution_is_exclusive() {
         let mut gpu_evs: Vec<_> = tr
             .events
             .iter()
-            .filter(|e| e.resource == Resource::Gpu && e.activity == Activity::GpuExec)
+            .filter(|e| e.resource == Resource::Gpu(0) && e.activity == Activity::GpuExec)
             .collect();
         gpu_evs.sort_by_key(|e| e.start);
         for w in gpu_evs.windows(2) {
@@ -100,6 +100,7 @@ fn tsg_rr_work_conserving() {
             cpu_segments: vec![10, 10],
             gpu_segments: vec![GpuSegment::new(10, ge)],
             core: id % 2,
+            gpu: 0,
             cpu_prio: id as u32 + 1,
             gpu_prio: id as u32 + 1,
             best_effort: false,
@@ -110,7 +111,7 @@ fn tsg_rr_work_conserving() {
         let tr = sim.trace.unwrap();
         // Completion of the later task.
         let done = tr.completions.iter().map(|&(_, t)| t).max().unwrap();
-        let busy: Time = (0..2).map(|i| tr.occupancy(Resource::Gpu, i, 0, done)).sum();
+        let busy: Time = (0..2).map(|i| tr.occupancy(Resource::Gpu(0), i, 0, done)).sum();
         // From first launch (~20 µs in) to `done`, the GPU must be
         // busy ≥ 95% of the window (idle only during launch setup).
         let window = done - 20;
@@ -136,6 +137,7 @@ fn tsg_rr_fair_between_equal_hogs() {
             cpu_segments: vec![10, 10],
             gpu_segments: vec![GpuSegment::new(10, ge)],
             core: id % 2,
+            gpu: 0,
             cpu_prio: id as u32 + 1,
             gpu_prio: id as u32 + 1,
             best_effort: false,
@@ -146,7 +148,7 @@ fn tsg_rr_fair_between_equal_hogs() {
         let r0 = sim.per_task[0].response_times[0];
         let r1 = sim.per_task[1].response_times[0];
         let gap = r0.abs_diff(r1);
-        let bound = ts.platform.tsg_slice + ts.platform.theta + 50;
+        let bound = ts.platform.gpus[0].tsg_slice + ts.platform.gpus[0].theta + 50;
         if gap > bound {
             return Err(format!("completion gap {gap} > slice+θ {bound} (r0={r0}, r1={r1})"));
         }

@@ -149,7 +149,7 @@ fn paper_fig3_shape_gcaps_beats_sync() {
     // is bounded by its own demand + 2ε; under the sync-based approach
     // it additionally eats a lower-priority GPU segment. We reproduce
     // the *shape*: R1(gcaps) + lp_gcs ≤ R1(mpcp_worst_alignment).
-    let p = gcaps::model::Platform { num_cpus: 2, epsilon: 250, theta: 50, tsg_slice: 1024 };
+    let p = gcaps::model::Platform::single(2, 1024, 50, 250);
     let mk = |id, core, prio, cpu: Vec<f64>, gm: f64, ge: f64, period: f64| gcaps::model::Task {
         id,
         name: format!("tau{}", id + 1),
@@ -158,6 +158,7 @@ fn paper_fig3_shape_gcaps_beats_sync() {
         cpu_segments: cpu.into_iter().map(ms).collect(),
         gpu_segments: vec![gcaps::model::GpuSegment::new(ms(gm), ms(ge))],
         core,
+        gpu: 0,
         cpu_prio: prio,
         gpu_prio: prio,
         best_effort: false,

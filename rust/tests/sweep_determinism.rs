@@ -4,7 +4,7 @@
 //! order leaked execution-order dependence into the sweeps.
 
 use gcaps::experiments::fig8::{panel_csv, run_panel, Panel};
-use gcaps::experiments::{ablation, casestudy, fig9, ExpConfig};
+use gcaps::experiments::{ablation, casestudy, fig9, multigpu, ExpConfig};
 
 fn cfg_with_jobs(jobs: usize) -> ExpConfig {
     ExpConfig { tasksets: 8, seed: 2024, jobs, progress: false }
@@ -57,4 +57,15 @@ fn casestudy_morts_identical_across_worker_counts() {
     let a = casestudy::morts(casestudy::Board::XavierNx, &cfg_with_jobs(1));
     let b = casestudy::morts(casestudy::Board::XavierNx, &cfg_with_jobs(8));
     assert_eq!(a, b, "fig10 MORTs diverged across worker counts");
+}
+
+#[test]
+fn multigpu_sweep_identical_across_worker_counts() {
+    let (x1, s1) = multigpu::run_sweep(&cfg_with_jobs(1));
+    let (x4, s4) = multigpu::run_sweep(&cfg_with_jobs(4));
+    assert_eq!(x1, x4, "multigpu xticks diverged");
+    assert_eq!(s1, s4, "multigpu series diverged");
+    let b1 = multigpu::sweep_csv(&x1, &s1).to_string();
+    let b4 = multigpu::sweep_csv(&x4, &s4).to_string();
+    assert_eq!(b1.as_bytes(), b4.as_bytes(), "multigpu CSV bytes diverged");
 }
