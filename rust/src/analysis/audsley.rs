@@ -16,12 +16,33 @@
 //! values, so they stay on one scale with the (unchanged) CPU-only tasks.
 
 use crate::analysis::gcaps;
+use crate::analysis::prep::{Prepared, Scratch};
+use crate::analysis::terms::AnalysisResult;
 use crate::model::{TaskSet, Time};
 
 /// Attempt the assignment. Returns the modified taskset (gpu_prio fields
 /// rewritten) plus the per-task GPU priority vector, or None if no
 /// feasible assignment exists. `busy` selects the analysis variant.
 pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u32>)> {
+    assign_gpu_priorities_analyzed(ts, busy).map(|(work, prios, _)| (work, prios))
+}
+
+/// The assignment plus the final verifying [`AnalysisResult`] — callers
+/// that need the analysis of the assigned taskset (the §7.1.1 GCAPS
+/// procedure) take it from here instead of re-running the full analysis
+/// on the returned taskset.
+///
+/// The search builds ONE [`Prepared`] kernel up front and reuses it for
+/// every candidate test at every level: the kernel caches only
+/// assignment-invariant structure (cores, CPU priorities, engines,
+/// starred constants), while π^g — the thing the search mutates — is
+/// read live from `work` by the gcaps §6.4 path. The pre-kernel code
+/// re-derived every interference set per candidate, making the search
+/// O(n²) set derivations per level.
+pub fn assign_gpu_priorities_analyzed(
+    ts: &TaskSet,
+    busy: bool,
+) -> Option<(TaskSet, Vec<u32>, AnalysisResult)> {
     let mut work = ts.clone();
     let candidates: Vec<usize> = work
         .tasks
@@ -45,6 +66,8 @@ pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u
 
     let opts = gcaps::Options { use_gpu_prio: true, ..Default::default() };
     let no_resp: Vec<Option<Time>> = vec![None; work.tasks.len()];
+    let prep = Prepared::new(&work);
+    let mut scratch = Scratch::default();
 
     for &level in &levels {
         // Try candidates lowest-CPU-priority first (keeps the search
@@ -68,9 +91,11 @@ pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u
             if violates {
                 continue;
             }
-            // (b) tentative test at this level.
+            // (b) tentative test at this level, over the shared kernel.
             work.tasks[cand].gpu_prio = level;
-            let rta = gcaps::response_time(&work, cand, busy, &no_resp, &opts);
+            let rta = gcaps::response_time_prepared(
+                &work, &prep, cand, busy, &no_resp, &opts, &mut scratch,
+            );
             if rta.ok() {
                 placed = Some(cand);
                 break;
@@ -85,13 +110,13 @@ pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u
     debug_assert!(unassigned.is_empty());
 
     // Final full verification (covers CPU-only tasks, whose indirect
-    // delay depends on the assignment).
-    let res = gcaps::analyze(&work, busy, &opts);
+    // delay depends on the assignment), over the shared kernel.
+    let res = gcaps::analyze_prepared(&work, &prep, busy, &opts);
     if !res.schedulable {
         return None;
     }
     let prios = work.tasks.iter().map(|t| t.gpu_prio).collect();
-    Some((work, prios))
+    Some((work, prios, res))
 }
 
 #[cfg(test)]

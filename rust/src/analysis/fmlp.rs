@@ -18,80 +18,105 @@
 //! Boost blocking and CPU preemption mirror the MPCP module; the two
 //! baselines differ exactly in their queueing discipline, which is the
 //! comparison the paper draws.
+//!
+//! Implementation: the per-task FIFO bound Σ gcs_max over the
+//! same-engine sharers is computed **once per analysis run** from
+//! [`Prepared`]'s sharer slices (the naive path re-derived it per
+//! fixed-point iteration for every busy hp term); the fixed point runs
+//! over a flat `Term` slice. The original iterator-chain path lives in
+//! [`crate::analysis::reference`].
 
-use crate::analysis::terms::{fixed_point, jitter_c, njobs, njobs_jitter, AnalysisResult, Rta};
+use crate::analysis::prep::{run_fixed_point, Prepared, Scratch};
+use crate::analysis::terms::{AnalysisResult, Rta};
 use crate::analysis::Analysis;
 use crate::model::{TaskSet, Time, WaitMode};
 
 /// Per-request FIFO blocking: one longest gcs per other GPU-using task
 /// sharing τ_i's engine (RT or best-effort) — each engine is its own
 /// FIFO lock, so other engines' queues never delay τ_i.
-fn request_blocking(ts: &TaskSet, i: usize) -> Time {
-    let me = &ts.tasks[i];
-    if !me.uses_gpu() {
+fn request_blocking(prep: &Prepared, i: usize) -> Time {
+    if !prep.t[i].uses_gpu {
         return 0;
     }
-    ts.sharing_gpu(i).map(|t| t.max_gpu_segment()).sum()
+    prep.sharing.get(i).iter().map(|&h| prep.t[h as usize].max_gcs).sum()
 }
 
-/// Boost blocking: same structure as the MPCP module — every job of a
-/// lower-priority (or best-effort) same-core GPU task can execute its
-/// critical sections' CPU portions (G^m) at boosted priority when its
-/// FIFO grant lands, charged per lower-priority job with D-jitter.
-fn boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
-    let me = &ts.tasks[i];
-    ts.tasks
-        .iter()
-        .filter(|t| {
-            t.id != me.id
-                && t.core == me.core
-                && t.uses_gpu()
-                && (t.best_effort || t.cpu_prio < me.cpu_prio)
-        })
-        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
-        .sum()
+/// Lower boost blocking + CPU preemption for task `i` into
+/// `scratch.terms` (same structure as the MPCP module; `req` carries
+/// the precomputed per-task FIFO bounds).
+fn build_terms(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    req: &[Time],
+    scratch: &mut Scratch,
+) {
+    scratch.clear();
+    let me = prep.t[i];
+    for (j, p) in prep.t.iter().enumerate() {
+        if j != i
+            && p.core == me.core
+            && p.uses_gpu
+            && (p.best_effort || p.cpu_prio < me.cpu_prio)
+        {
+            scratch.push(p.deadline, p.period, p.gm);
+        }
+    }
+    for &h32 in prep.hpp.get(i) {
+        let h = h32 as usize;
+        let p = &prep.t[h];
+        let jit = if p.uses_gpu { prep.jitter_c(h, resp) } else { 0 };
+        let demand = if busy {
+            p.c.saturating_add(p.g).saturating_add(req[h].saturating_mul(p.eta_g))
+        } else {
+            p.c_gm
+        };
+        scratch.push(jit, p.period, demand);
+    }
 }
 
-/// CPU preemption from same-core higher-priority tasks (suspension-aware
-/// jitter; busy-waiting inflates hp demand by its waiting + gcs time).
-fn p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>]) -> Time {
-    ts.hpp(i)
-        .map(|h| {
-            let n = if h.uses_gpu() {
-                // Carry-in jitter, as in the MPCP module.
-                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
-            } else {
-                njobs(r, h.period) // CPU-only hp: exact count
-            };
-            if busy {
-                n * (h.c() + h.g() + request_blocking(ts, h.id) * h.eta_g() as Time)
-            } else {
-                n * (h.c() + h.gm())
-            }
-        })
-        .sum()
+/// Response time of task i under FMLP+, over a prebuilt kernel. `req`
+/// holds the per-task FIFO bounds (from [`request_blocking`]).
+pub fn response_time_prepared(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    req: &[Time],
+    scratch: &mut Scratch,
+) -> Rta {
+    let me = prep.t[i];
+    let own = me.c.saturating_add(me.g).saturating_add(req[i].saturating_mul(me.eta_g));
+    build_terms(prep, i, busy, resp, req, scratch);
+    run_fixed_point(me.deadline, own, &scratch.terms)
 }
 
-/// Response time of task i under FMLP+.
+/// Response time of task i under FMLP+ (compatibility entry point:
+/// builds a throwaway kernel — use [`response_time_prepared`] in loops).
 pub fn response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
-    let me = &ts.tasks[i];
-    let remote = request_blocking(ts, i) * me.eta_g() as Time;
-    let own = me.c() + me.g() + remote;
-    fixed_point(me.deadline, own, |r| {
-        own + boost_blocking(ts, i, r) + p_c(ts, i, r, busy, resp)
-    })
+    let prep = Prepared::new(ts);
+    let req: Vec<Time> = (0..ts.tasks.len()).map(|j| request_blocking(&prep, j)).collect();
+    let mut scratch = Scratch::default();
+    response_time_prepared(&prep, i, busy, resp, &req, &mut scratch)
+}
+
+/// Analyse all RT tasks over an existing kernel.
+pub fn analyze_prepared(ts: &TaskSet, prep: &Prepared, busy: bool) -> AnalysisResult {
+    let req: Vec<Time> = (0..ts.tasks.len()).map(|j| request_blocking(prep, j)).collect();
+    let mut scratch = Scratch::default();
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for &i in &prep.order {
+        let r = response_time_prepared(prep, i, busy, &resp, &req, &mut scratch);
+        resp[i] = r.time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
 /// Analyse all RT tasks.
 pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
-    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
-    let mut order: Vec<usize> =
-        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
-    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
-    for i in order {
-        resp[i] = response_time(ts, i, busy, &resp).time();
-    }
-    AnalysisResult::from_responses(&ts.tasks, resp)
+    let prep = Prepared::new(ts);
+    analyze_prepared(ts, &prep, busy)
 }
 
 /// [`Analysis`] implementation: the FMLP+ synchronization baseline.

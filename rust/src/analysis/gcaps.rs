@@ -37,12 +37,20 @@
 //! cross-core hp set is taken by GPU-segment priority and jitters use
 //! D_h (response times of GPU-priority predecessors are unknown during
 //! Audsley's search).
+//!
+//! Implementation: every lemma sum is lowered, once per analysed task,
+//! onto the precomputed [`Prepared`] kernel — the fixed-point closure is
+//! a single pass over a flat `Term` slice with zero allocation and zero
+//! set derivation per iteration. π^g is read live from the `TaskSet`
+//! (never cached in `Prepared`), so Audsley's mutating search reuses one
+//! kernel across all levels. The original iterator-chain implementation
+//! is retained in [`crate::analysis::reference`] and pinned bit-equal by
+//! `rust/tests/kernel_equivalence.rs`.
 
-use crate::analysis::terms::{
-    fixed_point, jitter_c, jitter_g, njobs, njobs_jitter, AnalysisResult, Rta,
-};
+use crate::analysis::prep::{run_fixed_point, PrepTask, Prepared, Scratch};
+use crate::analysis::terms::{AnalysisResult, Rta};
 use crate::analysis::Analysis;
-use crate::model::{Task, TaskSet, Time, WaitMode};
+use crate::model::{TaskSet, Time, WaitMode};
 
 /// Analysis options.
 #[derive(Debug, Clone, Copy, Default)]
@@ -55,146 +63,181 @@ pub struct Options {
     pub paper_exact_lemma12: bool,
 }
 
-/// ε of the engine a task is assigned to (per-GPU overheads: a task's
-/// runlist updates go to its own engine's driver lock).
-fn eps_of(ts: &TaskSet, t: &Task) -> Time {
-    ts.platform.gpus[t.gpu].epsilon
+/// J^g_h (Lemma 10), D_h-based under §6.4 (responses unknown during
+/// Audsley's search). The formula itself lives on [`Prepared`].
+#[inline]
+fn jg(prep: &Prepared, h: usize, resp: &[Option<Time>], opts: &Options) -> Time {
+    prep.jitter_g_of(h, if opts.use_gpu_prio { None } else { resp[h] })
 }
 
-/// G^e*_h = G^e_h + 2ε·η^g_h (runlist updates around each segment).
-fn ge_star(t: &Task, eps: Time) -> Time {
-    t.ge() + 2 * eps * t.eta_g() as Time
+/// J^c_h (Lemma 7), D_h-based under §6.4.
+#[inline]
+fn jc(prep: &Prepared, h: usize, resp: &[Option<Time>], opts: &Options) -> Time {
+    prep.jitter_c_of(h, if opts.use_gpu_prio { None } else { resp[h] })
 }
 
-/// G^m*_h = G^m_h + 2ε·η^g_h.
-fn gm_star(t: &Task, eps: Time) -> Time {
-    t.gm() + 2 * eps * t.eta_g() as Time
-}
-
-/// J^g_h, with D_h replacing R_h under the GPU-priority assignment (§6.4).
-fn jg(t: &Task, resp: &[Option<Time>], opts: &Options) -> Time {
+/// Is cross-core task `h` higher-priority than `i` under the active
+/// priority scale? π^g is read live from `ts` (not from `Prepared`) so
+/// the Audsley search's mutations are always honored.
+#[inline]
+fn cross_higher(ts: &TaskSet, prep: &Prepared, i: usize, h: usize, opts: &Options) -> bool {
     if opts.use_gpu_prio {
-        jitter_g(t, None)
+        ts.tasks[h].gpu_prio > ts.tasks[i].gpu_prio
     } else {
-        jitter_g(t, resp[t.id])
+        prep.t[h].cpu_prio > prep.t[i].cpu_prio
     }
 }
 
-fn jc(t: &Task, resp: &[Option<Time>], opts: &Options) -> Time {
-    if opts.use_gpu_prio {
-        jitter_c(t, None)
-    } else {
-        jitter_c(t, resp[t.id])
-    }
-}
-
-/// Cross-core higher-priority GPU-using tasks: by π^g when the separate
-/// assignment is active, else by π^c.
-fn hp_gpu_cross<'a>(
-    ts: &'a TaskSet,
+/// Lower Lemmas 10–15 for task `i` into `scratch.terms` (the
+/// R-dependent interference terms; one `Term` per charged hp job
+/// source). Runs once per analysed task, not per fixed-point iteration.
+fn build_terms(
+    ts: &TaskSet,
+    prep: &Prepared,
     i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
     opts: &Options,
-) -> Box<dyn Iterator<Item = &'a Task> + 'a> {
-    if opts.use_gpu_prio {
-        Box::new(ts.hp_gpu_other_core(i).filter(|h| h.uses_gpu()))
-    } else {
-        Box::new(ts.hp_other_core(i).filter(|h| h.uses_gpu()))
-    }
-}
+    scratch: &mut Scratch,
+) {
+    scratch.clear();
+    let me = prep.t[i];
 
-/// Lemma 10 / 13: direct GPU preemption. Only tasks sharing τ_i's GPU
-/// engine can preempt its context — other engines have disjoint
-/// runlists (per-GPU interference sets).
-fn i_dp(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>], opts: &Options) -> Time {
-    let me = &ts.tasks[i];
-    if !me.uses_gpu() {
-        return 0;
-    }
-    let mut total = 0;
-    // Same-core term.
-    for h in ts.hpp(i).filter(|h| h.uses_gpu() && h.gpu == me.gpu) {
-        total += if busy {
-            // Lemma 10 (+ carry-in amendment): the printed lemma uses
-            // plain ceil(R/T_h), but cross-core GPU preemption can defer
-            // τ_h's GPU execution past its release; the device model
-            // exhibits the carry-in, so we add the J^g jitter as in
-            // Lemma 13.
-            njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h))
-        } else {
-            // Lemma 13: runlist update overlaps with the CPU-side terms,
-            // so plain G^e_h suffices; self-suspension adds the jitter.
-            njobs_jitter(r, jg(h, resp, opts), h.period) * h.ge()
-        };
-    }
-    // Cross-core term (identical in both lemmas).
-    for h in hp_gpu_cross(ts, i, opts).filter(|h| h.gpu == me.gpu) {
-        total += njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h));
-    }
-    total
-}
-
-/// Lemma 11 (busy only): indirect delay for CPU-only tasks. Per §6.1 it
-/// cannot exist stand-alone: it requires a same-core higher-priority
-/// GPU-using (busy-waiting) task — the carrier. Cross-core GPU
-/// execution reaches τ_i only through a carrier busy-waiting on the
-/// SAME engine, so the charged set is restricted to the carriers'
-/// engines (with one engine this is exactly the printed lemma).
-fn i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>], opts: &Options) -> Time {
-    let me = &ts.tasks[i];
-    if me.uses_gpu() {
-        return 0; // covered by Lemma 10's cross-core term
-    }
-    // Carrier-engine set as a bitmask — no allocation in the fixpoint
-    // hot path. Engines ≥ 64 alias (mod 64), which can only ADD
-    // interference terms, never drop them — conservative, and far
-    // beyond any real engine count.
-    let mut carrier_mask: u64 = 0;
-    for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
-        carrier_mask |= 1 << (h.gpu & 63);
-    }
-    if carrier_mask == 0 {
-        return 0; // no same-core busy-waiting carrier (§6.1)
-    }
-    hp_gpu_cross(ts, i, opts)
-        .filter(|h| carrier_mask & (1 << (h.gpu & 63)) != 0)
-        .map(|h| njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h)))
-        .sum()
-}
-
-/// Lemma 12 / 15 (+ soundness amendment): CPU preemption. CPU-side
-/// demand couples same-core tasks regardless of engine; only the ε
-/// constants are per-engine (τ_h's updates hit τ_h's engine).
-fn p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>], opts: &Options) -> Time {
-    let me = &ts.tasks[i];
-    let mut total = 0;
-    for h in ts.hpp(i) {
-        total += if busy {
+    // Lemma 12 / 15 (+ soundness amendment): CPU preemption. CPU-side
+    // demand couples same-core tasks regardless of engine; only the ε
+    // constants are per-engine.
+    for &h32 in prep.hpp.get(i) {
+        let h = h32 as usize;
+        let p = &prep.t[h];
+        if busy {
             // Lemma 12 (+ amendments: same-core busy-wait G^e* for a
             // τ_i that Lemma 10 does not already charge — CPU-only, or
-            // on a different engine — and carry-in jitter; see module
-            // docs).
-            let mut demand = h.c() + h.gm();
-            let charged_by_lemma10 = me.uses_gpu() && h.gpu == me.gpu;
-            if h.uses_gpu() && !charged_by_lemma10 && !opts.paper_exact_lemma12 {
-                demand += ge_star(h, eps_of(ts, h));
+            // on a different engine — and carry-in jitter).
+            let mut demand = p.c_gm;
+            let charged_by_lemma10 = me.uses_gpu && p.gpu == me.gpu;
+            if p.uses_gpu && !charged_by_lemma10 && !opts.paper_exact_lemma12 {
+                demand = demand.saturating_add(p.ge_star);
             }
-            if h.uses_gpu() {
-                njobs_jitter(r, jc(h, resp, opts), h.period) * demand
+            if p.uses_gpu {
+                scratch.push(jc(prep, h, resp, opts), p.period, demand);
             } else {
-                njobs(r, h.period) * demand
+                scratch.push(0, p.period, demand);
             }
-        } else if h.uses_gpu() {
+        } else if p.uses_gpu {
             // Lemma 15, GPU-using τ_h: jittered, starred misc demand.
-            njobs_jitter(r, jc(h, resp, opts), h.period) * (h.c() + gm_star(h, eps_of(ts, h)))
+            scratch.push(jc(prep, h, resp, opts), p.period, p.c + p.gm_star);
         } else {
             // Lemma 15, CPU-only τ_h.
-            njobs(r, h.period) * h.c()
-        };
+            scratch.push(0, p.period, p.c);
+        }
     }
-    total
+
+    if me.uses_gpu {
+        // Lemma 10 / 13: direct GPU preemption — same-engine only.
+        for &h32 in prep.hpp.get(i) {
+            let h = h32 as usize;
+            let p = &prep.t[h];
+            if p.uses_gpu && p.gpu == me.gpu {
+                // Busy: Lemma 10 + carry-in amendment (J^g jitter);
+                // suspend: Lemma 13 (plain G^e_h, runlist update
+                // overlaps the CPU-side terms).
+                let demand = if busy { p.ge_star } else { p.ge };
+                scratch.push(jg(prep, h, resp, opts), p.period, demand);
+            }
+        }
+        for &h32 in prep.cross_gpu.get(i) {
+            let h = h32 as usize;
+            let p = &prep.t[h];
+            if p.gpu == me.gpu && cross_higher(ts, prep, i, h, opts) {
+                scratch.push(jg(prep, h, resp, opts), p.period, p.ge_star);
+            }
+        }
+    } else if busy {
+        // Lemma 11: indirect delay for CPU-only tasks, restricted to the
+        // engines of same-core busy-waiting carriers (engines ≥ 64 alias
+        // mod 64 — conservative, see the reference module).
+        let mut carrier_mask: u64 = 0;
+        for &h32 in prep.hpp.get(i) {
+            let p = &prep.t[h32 as usize];
+            if p.uses_gpu {
+                carrier_mask |= 1 << (p.gpu & 63);
+            }
+        }
+        if carrier_mask != 0 {
+            for &h32 in prep.cross_gpu.get(i) {
+                let h = h32 as usize;
+                let p = &prep.t[h];
+                if carrier_mask & (1 << (p.gpu & 63)) != 0
+                    && cross_higher(ts, prep, i, h, opts)
+                {
+                    scratch.push(jg(prep, h, resp, opts), p.period, p.ge_star);
+                }
+            }
+        }
+    }
 }
 
-/// Response time of one RT task under GCAPS (Eq. 1 with §6.3 terms).
+/// Lemma 8 blocking (R-independent; see the module docs of the
+/// reference path for the full channel discussion: same-engine ε vs
+/// same-core cross-engine α, combined by max).
+fn blocking(prep: &Prepared, i: usize) -> Time {
+    let me = prep.t[i];
+    let lp_gpu = |j: usize, p: &PrepTask| {
+        j != i && p.uses_gpu && (p.best_effort || p.cpu_prio < me.cpu_prio)
+    };
+    if me.uses_gpu {
+        let mut same_engine = 0;
+        let mut cross_alpha = 0;
+        for (j, p) in prep.t.iter().enumerate() {
+            if !lp_gpu(j, p) {
+                continue;
+            }
+            if p.gpu == me.gpu {
+                same_engine = me.eps;
+            } else if p.core == me.core {
+                cross_alpha = cross_alpha.max(p.alpha);
+            }
+        }
+        (me.eta_g + 1).saturating_mul(same_engine.max(cross_alpha))
+    } else {
+        // CPU-only τ_i: a single stall by an in-flight update on any
+        // engine (conservative, core-agnostic).
+        prep.t
+            .iter()
+            .enumerate()
+            .filter(|&(j, p)| lp_gpu(j, p))
+            .map(|(_, p)| p.eps)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Response time of one RT task under GCAPS (Eq. 1 with §6.3 terms),
+/// over a prebuilt kernel. `scratch` is a reusable term buffer.
+pub fn response_time_prepared(
+    ts: &TaskSet,
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    opts: &Options,
+    scratch: &mut Scratch,
+) -> Rta {
+    let me = prep.t[i];
+    // Own demand: C_i + G*_i (the job's own runlist updates, §6.3).
+    // Saturating like every demand on this path: crafted ε/η inputs
+    // must pin to MAX (failing the deadline check), never wrap small.
+    let own = me
+        .c
+        .saturating_add(me.g)
+        .saturating_add(me.eps.saturating_mul(2).saturating_mul(me.eta_g));
+    let base = own.saturating_add(blocking(prep, i));
+    build_terms(ts, prep, i, busy, resp, opts, scratch);
+    run_fixed_point(me.deadline, base, &scratch.terms)
+}
+
+/// Response time of one RT task (compatibility entry point: builds a
+/// throwaway kernel — use [`response_time_prepared`] in loops).
 pub fn response_time(
     ts: &TaskSet,
     i: usize,
@@ -202,78 +245,32 @@ pub fn response_time(
     resp: &[Option<Time>],
     opts: &Options,
 ) -> Rta {
-    let me = &ts.tasks[i];
-    let eps = eps_of(ts, me);
-    // Own demand: C_i + G*_i (the job's own runlist updates, §6.3).
-    let own = me.c() + me.g() + 2 * eps * me.eta_g() as Time;
-    // Lemma 8: blocking from lower-priority runlist updates. Two
-    // channels, both bounded per issue point (η^g_i + 1 of them):
-    //
-    // - SAME engine: an lp (or best-effort) task's in-flight update
-    //   holds τ_i's engine's driver lock — the printed lemma's ε.
-    // - OTHER engine, SAME core (multi-GPU only): the update doesn't
-    //   touch τ_i's lock, but its CPU-side call section is still
-    //   non-preemptible on τ_i's core (the DES models exactly this),
-    //   stalling τ_i by up to that engine's α = ε − θ.
-    //
-    // The channels are combined by MAX, not sum. This is exact w.r.t.
-    // the device model (the soundness oracle `tests/soundness.rs`
-    // checks against): there, the only physical stall is the same-core
-    // non-preemptible call section — cross-core driver calls never
-    // delay τ_i, and a displaced lp context is charged via I^dp — so
-    // one in-flight call per issue point bounds it. On a hypothetical
-    // real driver with per-engine locks, a cross-core same-engine
-    // lock hold could compound with a same-core cross-engine stall by
-    // up to min(ε, α) extra per issue point; we follow the printed
-    // Lemma 8 (which also charges one ε per issue point) and treat
-    // that as covered by its margin. Max also keeps the bound monotone
-    // in the engine count. With one engine this reduces exactly to the
-    // printed term.
-    let lp_gpu = |t: &&Task| {
-        t.id != me.id && t.uses_gpu() && (t.best_effort || t.cpu_prio < me.cpu_prio)
-    };
-    let blocking = if me.uses_gpu() {
-        let same_engine = if ts.tasks.iter().filter(lp_gpu).any(|t| t.gpu == me.gpu) {
-            eps
-        } else {
-            0
-        };
-        let cross_alpha = ts
-            .tasks
-            .iter()
-            .filter(lp_gpu)
-            .filter(|t| t.core == me.core && t.gpu != me.gpu)
-            .map(|t| {
-                let c = &ts.platform.gpus[t.gpu];
-                c.epsilon.saturating_sub(c.theta)
-            })
-            .max()
-            .unwrap_or(0);
-        (me.eta_g() as Time + 1) * same_engine.max(cross_alpha)
-    } else {
-        // CPU-only τ_i: a single stall by an in-flight update on any
-        // engine (conservative, core-agnostic — matches the legacy
-        // single-GPU charge).
-        ts.tasks.iter().filter(lp_gpu).map(|t| eps_of(ts, t)).max().unwrap_or(0)
-    };
-    fixed_point(me.deadline, own + blocking, |r| {
-        own + blocking
-            + p_c(ts, i, r, busy, resp, opts)
-            + i_dp(ts, i, r, busy, resp, opts)
-            + if busy { i_id_busy(ts, i, r, resp, opts) } else { 0 }
-    })
+    let prep = Prepared::new(ts);
+    let mut scratch = Scratch::default();
+    response_time_prepared(ts, &prep, i, busy, resp, opts, &mut scratch)
+}
+
+/// Analyse all RT tasks in decreasing CPU-priority order over an
+/// existing kernel.
+pub fn analyze_prepared(
+    ts: &TaskSet,
+    prep: &Prepared,
+    busy: bool,
+    opts: &Options,
+) -> AnalysisResult {
+    let mut scratch = Scratch::default();
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for &i in &prep.order {
+        let r = response_time_prepared(ts, prep, i, busy, &resp, opts, &mut scratch);
+        resp[i] = r.time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
 /// Analyse all RT tasks in decreasing CPU-priority order.
 pub fn analyze(ts: &TaskSet, busy: bool, opts: &Options) -> AnalysisResult {
-    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
-    let mut order: Vec<usize> =
-        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
-    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
-    for i in order {
-        resp[i] = response_time(ts, i, busy, &resp, opts).time();
-    }
-    AnalysisResult::from_responses(&ts.tasks, resp)
+    let prep = Prepared::new(ts);
+    analyze_prepared(ts, &prep, busy, opts)
 }
 
 /// [`Analysis`] implementation: GCAPS with paper-default options (RM
@@ -495,5 +492,36 @@ mod tests {
         let r0 = res.response[0].unwrap();
         // τ_0 now sees τ_1's G^e* = 22 ms as direct preemption.
         assert!(r0 >= ms(12.0 + 22.0), "r0 = {r0}");
+    }
+
+    #[test]
+    fn prepared_reuse_across_gpu_prio_mutations() {
+        // One kernel must serve both before and after a π^g mutation —
+        // the property Audsley's search relies on.
+        let mut t0 = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let t1 = gpu_task(1, 1, 1, 2.0, 1.0, 20.0, 150.0);
+        t0.gpu_prio = 2;
+        let mut ts = TaskSet::new(vec![t0, t1], platform());
+        let opts = Options { use_gpu_prio: true, ..Default::default() };
+        let prep = Prepared::new(&ts);
+        let mut scratch = Scratch::default();
+        let no_resp = vec![None; 2];
+        let before =
+            response_time_prepared(&ts, &prep, 0, false, &no_resp, &opts, &mut scratch);
+        // Swap: τ_1 now outranks τ_0 on the GPU.
+        ts.tasks[0].gpu_prio = 1;
+        ts.tasks[1].gpu_prio = 2;
+        let after =
+            response_time_prepared(&ts, &prep, 0, false, &no_resp, &opts, &mut scratch);
+        assert_eq!(before, response_time(&ts_with_prio(&ts, 2, 1), 0, false, &no_resp, &opts));
+        assert_eq!(after, response_time(&ts, 0, false, &no_resp, &opts));
+        assert!(after.time().unwrap() > before.time().unwrap());
+    }
+
+    fn ts_with_prio(ts: &TaskSet, p0: u32, p1: u32) -> TaskSet {
+        let mut out = ts.clone();
+        out.tasks[0].gpu_prio = p0;
+        out.tasks[1].gpu_prio = p1;
+        out
     }
 }

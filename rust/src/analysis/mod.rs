@@ -17,17 +17,27 @@
 //! All analyses walk tasks in decreasing CPU-priority order so that
 //! higher-priority response times are available for jitter terms
 //! (falling back to D_h when unknown, as in §6.4).
+//!
+//! Every family evaluates its lemma sums through the precomputed
+//! per-taskset interference kernel ([`prep`]): partitions and starred
+//! constants are derived once per taskset, and fixed-point iterations
+//! reduce to flat term-slice sums. The pre-kernel iterator-chain
+//! implementations are retained in [`reference`] as the executable
+//! specification (`rust/tests/kernel_equivalence.rs` pins bit-equality).
 
 pub mod audsley;
 pub mod fmlp;
 pub mod gcaps;
 pub mod mpcp;
+pub mod prep;
+pub mod reference;
 pub mod rr;
 pub mod terms;
 
 pub use fmlp::FmlpAnalysis;
 pub use gcaps::GcapsAnalysis;
 pub use mpcp::MpcpAnalysis;
+pub use prep::Prepared;
 pub use rr::TsgRrAnalysis;
 pub use terms::{AnalysisResult, Rta};
 
@@ -155,12 +165,10 @@ pub fn analyze_with_gpu_prio(
     if base.schedulable {
         return (base, None);
     }
-    match audsley::assign_gpu_priorities(ts, busy) {
-        Some((assigned_ts, prios)) => {
-            let opts = gcaps::Options { use_gpu_prio: true, ..Default::default() };
-            let res = gcaps::analyze(&assigned_ts, busy, &opts);
-            (res, Some(prios))
-        }
+    // The search's final verification IS the analysis of the assigned
+    // taskset — reuse it instead of re-running the full analysis.
+    match audsley::assign_gpu_priorities_analyzed(ts, busy) {
+        Some((_assigned_ts, prios, res)) => (res, Some(prios)),
         None => (base, None),
     }
 }

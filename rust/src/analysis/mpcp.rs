@@ -22,43 +22,51 @@
 //! sync-based approaches). Total blocking B_i = Σ_j W_{i,j} over η^g_i
 //! requests; a CPU-only task still incurs one boost-blocking term from
 //! lower-priority gcs CPU portions executed at boosted priority.
+//!
+//! Implementation: the same-engine requester sets and per-task gcs
+//! bounds come precomputed from [`Prepared`]; both the W iteration and
+//! the response fixed point run over flat `Term` slices (zero set
+//! derivation per iteration). The original iterator-chain path lives in
+//! [`crate::analysis::reference`].
 
-use crate::analysis::terms::{fixed_point, jitter_c, njobs, njobs_jitter, AnalysisResult, Rta};
+use crate::analysis::prep::{eval, run_fixed_point, Prepared, Scratch};
+use crate::analysis::terms::{AnalysisResult, Rta};
 use crate::analysis::Analysis;
-use crate::model::{Task, TaskSet, Time, WaitMode};
+use crate::model::{TaskSet, Time, WaitMode};
 
 /// Per-request remote blocking W_i for task i (same bound reused for
 /// each of its η^g requests). Each GPU engine is its own lock, so only
 /// requesters sharing τ_i's engine queue against it. Returns None if
 /// the iteration diverges past the deadline (treated as unschedulable
 /// upstream).
-fn request_blocking(ts: &TaskSet, i: usize) -> Option<Time> {
-    let me = &ts.tasks[i];
-    if !me.uses_gpu() {
+fn request_blocking(prep: &Prepared, i: usize, scratch: &mut Scratch) -> Option<Time> {
+    let me = prep.t[i];
+    if !me.uses_gpu {
         return Some(0);
     }
     // Longest single gcs among same-engine lower-priority (or
-    // best-effort) requesters.
-    let lp_max: Time = ts
-        .sharing_gpu(i)
-        .filter(|t| t.best_effort || t.cpu_prio < me.cpu_prio)
-        .map(|t| t.max_gpu_segment())
-        .max()
-        .unwrap_or(0);
-    let hp: Vec<&Task> = ts
-        .sharing_gpu(i)
-        .filter(|t| !t.best_effort && t.cpu_prio > me.cpu_prio)
-        .collect();
-    // Iterate W = lp_max + Σ_h (ceil(W/T_h)+1) · Σ_j gcs_{h,j}.
+    // best-effort) requesters; higher-priority requesters' gcs totals
+    // become the W iteration's terms.
+    scratch.clear();
+    let mut lp_max: Time = 0;
+    let mut hp_const: Time = 0; // the "+1" part: Σ_h gcs_total_h
+    for &h32 in prep.sharing.get(i) {
+        let p = &prep.t[h32 as usize];
+        if p.best_effort || p.cpu_prio < me.cpu_prio {
+            lp_max = lp_max.max(p.max_gcs);
+        } else if p.cpu_prio > me.cpu_prio {
+            // (Best-effort sharers were all consumed by the lp branch.)
+            hp_const += p.gcs_total;
+            scratch.push(0, p.period, p.gcs_total);
+        }
+    }
+    // Iterate W = lp_max + Σ_h (ceil(W/T_h)+1) · gcs_total_h
+    // (saturating so a pathological gcs pins at MAX and fails the
+    // deadline check instead of wrapping).
+    let base = lp_max.saturating_add(hp_const);
     let mut w = lp_max;
     for _ in 0..10_000 {
-        let next = lp_max
-            + hp.iter()
-                .map(|h| {
-                    let gcs_total: Time = h.gpu_segments.iter().map(|g| g.total()).sum();
-                    (njobs(w, h.period) + 1) * gcs_total
-                })
-                .sum::<Time>();
+        let next = base.saturating_add(eval(w, &scratch.terms));
         if next == w {
             return Some(w);
         }
@@ -70,52 +78,62 @@ fn request_blocking(ts: &TaskSet, i: usize) -> Option<Time> {
     None
 }
 
-/// Boost blocking: lower-priority same-core lock holders execute the
-/// CPU-visible portion of their critical sections (G^m — the launch
-/// work; during G^e the holder suspends or spins at its own, lower
-/// priority) at *boosted* priority, preempting τ_i. A grant can land
-/// whenever the GPU frees up, even mid-CPU-segment of τ_i, so every job
-/// of every lower-priority GPU task in the window can boost once; the
-/// classic "(η_i + 1) issue points" bound undercounts this and is
-/// undercut by the device model, so we charge per lower-priority job
-/// (with D-jitter for carry-in).
-fn boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
-    let me = &ts.tasks[i];
-    ts.tasks
-        .iter()
-        .filter(|t| {
-            t.id != me.id
-                && t.core == me.core
-                && t.uses_gpu()
-                && (t.best_effort || t.cpu_prio < me.cpu_prio)
-        })
-        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
-        .sum()
+/// Lower boost blocking + CPU preemption for task `i` into
+/// `scratch.terms`. Boost: every job of every same-core lower-priority
+/// (or best-effort) GPU task can execute its G^m at boosted priority
+/// (D-jittered carry-in; see the reference module for why the classic
+/// issue-point bound undercounts). P^C: suspension-aware hp demand,
+/// inflated under busy-waiting by the waiter's blocking + gcs time.
+fn build_terms(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    w_all: &[Time],
+    scratch: &mut Scratch,
+) {
+    scratch.clear();
+    let me = prep.t[i];
+    for (j, p) in prep.t.iter().enumerate() {
+        if j != i
+            && p.core == me.core
+            && p.uses_gpu
+            && (p.best_effort || p.cpu_prio < me.cpu_prio)
+        {
+            scratch.push(p.deadline, p.period, p.gm);
+        }
+    }
+    for &h32 in prep.hpp.get(i) {
+        let h = h32 as usize;
+        let p = &prep.t[h];
+        let jit = if p.uses_gpu { prep.jitter_c(h, resp) } else { 0 };
+        let demand = if busy {
+            p.c.saturating_add(p.g).saturating_add(w_all[h].saturating_mul(p.eta_g))
+        } else {
+            p.c_gm
+        };
+        scratch.push(jit, p.period, demand);
+    }
 }
 
-/// CPU preemption from same-core higher-priority tasks. Under
-/// suspension, hp CPU demand per job is C_h + G^m_h with jitter; under
-/// busy-waiting the waiter occupies the CPU for its blocking + gcs too.
-fn p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>], w_h: &[Time]) -> Time {
-    ts.hpp(i)
-        .map(|h| {
-            let n = if h.uses_gpu() {
-                // Carry-in jitter: GPU interference (and suspension) can
-                // defer an hp job's CPU occupancy past its release.
-                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
-            } else {
-                njobs(r, h.period) // CPU-only hp: exact count
-            };
-            if busy {
-                n * (h.c() + h.g() + w_h[h.id] * h.eta_g() as Time)
-            } else {
-                n * (h.c() + h.gm())
-            }
-        })
-        .sum()
+/// Response time of task i under MPCP, over a prebuilt kernel.
+pub fn response_time_prepared(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    w_all: &[Time],
+    scratch: &mut Scratch,
+) -> Rta {
+    let me = prep.t[i];
+    let remote = w_all[i].saturating_mul(me.eta_g);
+    let own = me.c.saturating_add(me.g).saturating_add(remote);
+    build_terms(prep, i, busy, resp, w_all, scratch);
+    run_fixed_point(me.deadline, own, &scratch.terms)
 }
 
-/// Response time of task i under MPCP.
+/// Response time of task i under MPCP (compatibility entry point —
+/// builds a throwaway kernel; `w_all` as computed by [`analyze`]).
 pub fn response_time(
     ts: &TaskSet,
     i: usize,
@@ -123,42 +141,47 @@ pub fn response_time(
     resp: &[Option<Time>],
     w_all: &[Time],
 ) -> Rta {
-    let me = &ts.tasks[i];
-    let remote = w_all[i] * me.eta_g() as Time;
-    let own = me.c() + me.g() + remote;
-    fixed_point(me.deadline, own, |r| {
-        own + boost_blocking(ts, i, r) + p_c(ts, i, r, busy, resp, w_all)
-    })
+    let prep = Prepared::new(ts);
+    let mut scratch = Scratch::default();
+    response_time_prepared(&prep, i, busy, resp, w_all, &mut scratch)
 }
 
-/// Analyse all RT tasks.
-pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+/// Analyse all RT tasks over an existing kernel.
+pub fn analyze_prepared(ts: &TaskSet, prep: &Prepared, busy: bool) -> AnalysisResult {
     let n = ts.tasks.len();
+    let mut scratch = Scratch::default();
     let mut w_all = vec![0; n];
     let mut blocked_diverged = vec![false; n];
-    for t in ts.tasks.iter().filter(|t| !t.best_effort) {
-        match request_blocking(ts, t.id) {
-            Some(w) => w_all[t.id] = w,
-            None => blocked_diverged[t.id] = true,
+    for j in 0..n {
+        if prep.t[j].best_effort {
+            continue;
+        }
+        match request_blocking(prep, j, &mut scratch) {
+            Some(w) => w_all[j] = w,
+            None => blocked_diverged[j] = true,
         }
     }
     let mut resp: Vec<Option<Time>> = vec![None; n];
-    let mut order: Vec<usize> =
-        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
-    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
-    for i in order {
+    for &i in &prep.order {
         if blocked_diverged[i] {
             continue;
         }
         // Busy-waiting: a same-core higher-priority task whose remote
         // blocking diverged spins unboundedly on the CPU; no valid bound
         // exists for anything below it.
-        if busy && ts.hpp(i).any(|h| blocked_diverged[h.id]) {
+        if busy && prep.hpp.get(i).iter().any(|&h| blocked_diverged[h as usize]) {
             continue;
         }
-        resp[i] = response_time(ts, i, busy, &resp, &w_all).time();
+        let r = response_time_prepared(prep, i, busy, &resp, &w_all, &mut scratch);
+        resp[i] = r.time();
     }
     AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+/// Analyse all RT tasks.
+pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let prep = Prepared::new(ts);
+    analyze_prepared(ts, &prep, busy)
 }
 
 /// [`Analysis`] implementation: the MPCP synchronization baseline.

@@ -1,0 +1,407 @@
+//! Precomputed per-taskset interference kernel — the shared hot path of
+//! every response-time analysis family.
+//!
+//! A Fig. 8-style evaluation runs ~1000 tasksets × 8 approaches per
+//! sweep point, and each analysis re-enters its fixed-point closure
+//! dozens of times per task. Before this module, every one of those
+//! entries re-derived the interference sets (`hpp`, cross-core hp,
+//! same-engine sharers) through boxed `filter` iterator chains and
+//! recomputed the starred-demand constants per element — the dominant
+//! cost of the whole sweep.
+//!
+//! [`Prepared`] is built **once per taskset** and holds:
+//!
+//! - flat, contiguous index arrays for every partition the analyses
+//!   need ([`Slices`]): same-core higher-priority tasks (`hpp`),
+//!   cross-core RT GPU-using tasks (`cross_gpu`, priority-filtered at
+//!   term-build time so Audsley's mutating π^g search can reuse one
+//!   `Prepared`), and same-engine GPU sharers (`sharing`);
+//! - pre-starred per-task constants ([`PrepTask`]): `G^e*`, `G^m*`,
+//!   `C + G^m`, per-engine ε/α/θ/L, cached `Σ_j ceil(G^e_j / L)` round
+//!   counts for Eq. (3), gcs bounds for the lock-based baselines;
+//! - per-engine GPU-user counts (the ν bases of Lemmas 1/4) and the
+//!   decreasing-CPU-priority analysis order.
+//!
+//! Each family then lowers its lemma sums, once per analysed task, into
+//! a flat [`Term`] list inside a reusable [`Scratch`] buffer; the
+//! fixed-point closure is a single branch-light pass over that slice
+//! ([`eval`]) with **zero allocation and zero set derivation** per
+//! iteration.
+//!
+//! The original iterator-chain implementations are retained verbatim in
+//! [`crate::analysis::reference`] as the executable specification;
+//! `rust/tests/kernel_equivalence.rs` pins bit-identical results across
+//! both paths over hundreds of random tasksets.
+
+use crate::analysis::terms::{ceil_div, eps_of, fixed_point, ge_star, gm_star, Rta};
+use crate::model::{TaskSet, Time};
+
+/// One R-dependent interference term of a fixed-point iteration:
+/// `ceil((R + jitter) / period) · demand`. Terms with `jitter = 0`
+/// reduce exactly to the jitter-free job count `ceil(R / period)`, so
+/// one shape covers every lemma in §6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Term {
+    pub jitter: Time,
+    pub period: Time,
+    pub demand: Time,
+}
+
+/// Evaluate `Σ ceil((r + jitter)/period) · demand` over a term slice —
+/// the innermost loop of every analysis. Saturating so a pathological
+/// demand pins to `Time::MAX` (failing the deadline check, the sound
+/// direction) instead of wrapping.
+#[inline]
+pub fn eval(r: Time, terms: &[Term]) -> Time {
+    let mut total: Time = 0;
+    for t in terms {
+        let n = ceil_div(r.saturating_add(t.jitter), t.period);
+        total = total.saturating_add(n.saturating_mul(t.demand));
+    }
+    total
+}
+
+/// Run the Eq. 1 fixed point over a lowered term slice:
+/// `R ← base + Σ ceil((R + J)/T)·demand` from `base` — the one shape
+/// every family's response-time test reduces to. `saturating_add` so a
+/// saturated [`eval`] pins the iterate at `Time::MAX` (failing the
+/// deadline check, the sound direction) instead of wrapping back into
+/// range; defined once here so the invariant has a single home.
+pub fn run_fixed_point(deadline: Time, base: Time, terms: &[Term]) -> Rta {
+    fixed_point(deadline, base, |r| base.saturating_add(eval(r, terms)))
+}
+
+/// Flat index arrays: one contiguous `u32` pool plus per-task ranges.
+/// `get(i)` is the partition of task `i` as a plain slice — no
+/// per-iteration filtering, no boxed iterators.
+#[derive(Debug, Clone, Default)]
+pub struct Slices {
+    idx: Vec<u32>,
+    ranges: Vec<(u32, u32)>,
+}
+
+impl Slices {
+    /// Build per-task partitions: `member(i, j)` says whether task `j`
+    /// belongs to task `i`'s partition. Indices are stored in ascending
+    /// task order, matching the order the reference iterator chains
+    /// visit them.
+    fn build(n: usize, member: impl Fn(usize, usize) -> bool) -> Slices {
+        let mut idx = Vec::new();
+        let mut ranges = Vec::with_capacity(n);
+        for i in 0..n {
+            let start = idx.len() as u32;
+            for j in 0..n {
+                if member(i, j) {
+                    idx.push(j as u32);
+                }
+            }
+            ranges.push((start, idx.len() as u32));
+        }
+        Slices { idx, ranges }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> &[u32] {
+        let (a, b) = self.ranges[i];
+        &self.idx[a as usize..b as usize]
+    }
+}
+
+/// Pre-starred constants of one task (everything R- and
+/// assignment-independent that the lemma sums need).
+#[derive(Debug, Clone, Copy)]
+pub struct PrepTask {
+    pub c: Time,
+    pub gm: Time,
+    pub ge: Time,
+    pub g: Time,
+    /// C + G^m (Lemma 5/7/12 demand).
+    pub c_gm: Time,
+    /// ε of the task's engine.
+    pub eps: Time,
+    /// α = ε − θ of the task's engine.
+    pub alpha: Time,
+    /// θ of the task's engine.
+    pub theta: Time,
+    /// L (TSG slice) of the task's engine.
+    pub tsg_slice: Time,
+    /// G^e* = G^e + 2ε·η^g.
+    pub ge_star: Time,
+    /// G^m* = G^m + 2ε·η^g.
+    pub gm_star: Time,
+    pub eta_g: Time,
+    pub period: Time,
+    pub deadline: Time,
+    pub uses_gpu: bool,
+    pub best_effort: bool,
+    pub core: usize,
+    pub gpu: usize,
+    pub cpu_prio: u32,
+    /// Σ_j ceil(G^e_{i,j} / L): Eq. (3) round count over the whole job
+    /// (zero-length segments contribute zero rounds, exactly as
+    /// `interleave` returns 0 for them).
+    pub rounds_sum: Time,
+    /// max_j (G^m + G^e)_{i,j}: the longest single gcs (lock bounds).
+    pub max_gcs: Time,
+    /// Σ_j (G^m + G^e)_{i,j}: total gcs demand (MPCP hp term).
+    pub gcs_total: Time,
+}
+
+/// The per-taskset kernel. Build once with [`Prepared::new`]; valid for
+/// any sequence of analyses over the same taskset structure. GPU
+/// priorities (π^g) are deliberately **not** cached — the gcaps §6.4
+/// path reads them live from the `TaskSet`, so Audsley's search can
+/// mutate `gpu_prio` between candidate tests and keep reusing one
+/// `Prepared` (cores, CPU priorities, engines and segments never change
+/// during the search).
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    pub t: Vec<PrepTask>,
+    /// hpp(τ_i): same-core higher-CPU-priority RT tasks.
+    pub hpp: Slices,
+    /// Cross-core RT GPU-using tasks, *unfiltered by priority*: the
+    /// caller compares π^c (default) or live π^g (§6.4) per element at
+    /// term-build time — once per analysed task, not per iteration.
+    pub cross_gpu: Slices,
+    /// Same-engine GPU-using tasks excluding τ_i (RT + best-effort):
+    /// the lock-queue / interleaving sharer set.
+    pub sharing: Slices,
+    /// Per-engine GPU-using task count (RT + best-effort) — the ν
+    /// bases of Lemmas 1/4.
+    pub gpu_users: Vec<usize>,
+    /// RT task ids in decreasing CPU priority: the order every family
+    /// analyses tasks in (so higher-priority response times are
+    /// available for jitter terms).
+    pub order: Vec<usize>,
+}
+
+impl Prepared {
+    pub fn new(ts: &TaskSet) -> Prepared {
+        let n = ts.tasks.len();
+        let t: Vec<PrepTask> = ts
+            .tasks
+            .iter()
+            .map(|task| {
+                let ctx = ts.platform.gpus[task.gpu];
+                let eps = eps_of(ts, task);
+                PrepTask {
+                    c: task.c(),
+                    gm: task.gm(),
+                    ge: task.ge(),
+                    g: task.g(),
+                    c_gm: task.c() + task.gm(),
+                    eps,
+                    alpha: ctx.epsilon.saturating_sub(ctx.theta),
+                    theta: ctx.theta,
+                    tsg_slice: ctx.tsg_slice,
+                    ge_star: ge_star(task, eps),
+                    gm_star: gm_star(task, eps),
+                    eta_g: task.eta_g() as Time,
+                    period: task.period,
+                    deadline: task.deadline,
+                    uses_gpu: task.uses_gpu(),
+                    best_effort: task.best_effort,
+                    core: task.core,
+                    gpu: task.gpu,
+                    cpu_prio: task.cpu_prio,
+                    rounds_sum: task
+                        .gpu_segments
+                        .iter()
+                        .map(|g| ceil_div(g.exec, ctx.tsg_slice))
+                        .sum(),
+                    max_gcs: task.max_gpu_segment(),
+                    gcs_total: task.gpu_segments.iter().map(|g| g.total()).sum(),
+                }
+            })
+            .collect();
+
+        let tasks = &ts.tasks;
+        let hpp = Slices::build(n, |i, j| {
+            i != j
+                && !tasks[j].best_effort
+                && tasks[j].core == tasks[i].core
+                && tasks[j].cpu_prio > tasks[i].cpu_prio
+        });
+        let cross_gpu = Slices::build(n, |i, j| {
+            i != j
+                && !tasks[j].best_effort
+                && tasks[j].core != tasks[i].core
+                && tasks[j].uses_gpu()
+        });
+        let sharing = Slices::build(n, |i, j| {
+            i != j && tasks[j].uses_gpu() && tasks[j].gpu == tasks[i].gpu
+        });
+
+        let mut gpu_users = vec![0usize; ts.platform.num_gpus()];
+        for task in tasks.iter().filter(|t| t.uses_gpu()) {
+            gpu_users[task.gpu] += 1;
+        }
+
+        let mut order: Vec<usize> =
+            tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
+        order.sort_by(|&a, &b| tasks[b].cpu_prio.cmp(&tasks[a].cpu_prio));
+
+        Prepared { t, hpp, cross_gpu, sharing, gpu_users, order }
+    }
+
+    /// ν of Lemma 1 for task `i`: GPU-using sharers of its engine.
+    #[inline]
+    pub fn nu(&self, i: usize) -> usize {
+        self.gpu_users[self.t[i].gpu] - usize::from(self.t[i].uses_gpu)
+    }
+
+    /// J^g_h = R_h − G^e_h with an explicit response (None ⇒ the D_h
+    /// fallback of §6.4) — the one shared definition of the Lemma 10
+    /// jitter; every family goes through here.
+    #[inline]
+    pub fn jitter_g_of(&self, h: usize, r_h: Option<Time>) -> Time {
+        let p = &self.t[h];
+        r_h.unwrap_or(p.deadline).saturating_sub(p.ge)
+    }
+
+    /// J^g_h with the response table (the non-§6.4 path).
+    #[inline]
+    pub fn jitter_g(&self, h: usize, resp: &[Option<Time>]) -> Time {
+        self.jitter_g_of(h, resp[h])
+    }
+
+    /// J^c_h = R_h − (C_h + G^m_h) with an explicit response (None ⇒
+    /// D_h fallback) — the shared Lemma 7 jitter.
+    #[inline]
+    pub fn jitter_c_of(&self, h: usize, r_h: Option<Time>) -> Time {
+        let p = &self.t[h];
+        r_h.unwrap_or(p.deadline).saturating_sub(p.c_gm)
+    }
+
+    /// J^c_h with the response table.
+    #[inline]
+    pub fn jitter_c(&self, h: usize, resp: &[Option<Time>]) -> Time {
+        self.jitter_c_of(h, resp[h])
+    }
+}
+
+/// Reusable buffers: one allocation per analysis run, cleared per
+/// analysed task. `engines` is a generic per-engine counter used by the
+/// Lemma 4 ν bases.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    pub terms: Vec<Term>,
+    pub engines: Vec<usize>,
+}
+
+impl Scratch {
+    #[inline]
+    pub fn clear(&mut self) {
+        self.terms.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, jitter: Time, period: Time, demand: Time) {
+        if demand > 0 {
+            self.terms.push(Term { jitter, period, demand });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ms, GpuSegment, Platform, Task, WaitMode};
+
+    fn task(id: usize, core: usize, gpu: usize, prio: u32, gpu_segs: usize) -> Task {
+        Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(100.0),
+            deadline: ms(100.0),
+            cpu_segments: vec![ms(1.0); gpu_segs + 1],
+            gpu_segments: (0..gpu_segs)
+                .map(|_| GpuSegment::new(ms(1.0), ms(5.0)))
+                .collect(),
+            core,
+            gpu,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        }
+    }
+
+    fn set() -> TaskSet {
+        let p = Platform::single(2, 1024, 200, 1000).with_num_gpus(2);
+        TaskSet::new(
+            vec![
+                task(0, 0, 0, 30, 1),
+                task(1, 0, 1, 20, 2),
+                task(2, 1, 0, 10, 0),
+                task(3, 1, 1, 5, 1),
+            ],
+            p,
+        )
+    }
+
+    #[test]
+    fn partitions_match_taskset_iterators() {
+        let ts = set();
+        let prep = Prepared::new(&ts);
+        for i in 0..ts.len() {
+            let want: Vec<u32> = ts.hpp(i).map(|t| t.id as u32).collect();
+            assert_eq!(prep.hpp.get(i), &want[..], "hpp({i})");
+            let want: Vec<u32> = ts
+                .tasks
+                .iter()
+                .filter(|t| {
+                    !t.best_effort
+                        && t.id != i
+                        && t.core != ts.tasks[i].core
+                        && t.uses_gpu()
+                })
+                .map(|t| t.id as u32)
+                .collect();
+            assert_eq!(prep.cross_gpu.get(i), &want[..], "cross_gpu({i})");
+            let want: Vec<u32> = ts.sharing_gpu(i).map(|t| t.id as u32).collect();
+            assert_eq!(prep.sharing.get(i), &want[..], "sharing({i})");
+        }
+    }
+
+    #[test]
+    fn constants_match_model_accessors() {
+        let ts = set();
+        let prep = Prepared::new(&ts);
+        for (i, task) in ts.tasks.iter().enumerate() {
+            let p = &prep.t[i];
+            assert_eq!(p.c, task.c());
+            assert_eq!(p.g, task.g());
+            assert_eq!(p.c_gm, task.c() + task.gm());
+            assert_eq!(p.eps, crate::analysis::terms::eps_of(&ts, task));
+            assert_eq!(p.ge_star, crate::analysis::terms::ge_star(task, p.eps));
+            assert_eq!(p.gm_star, crate::analysis::terms::gm_star(task, p.eps));
+            assert_eq!(p.max_gcs, task.max_gpu_segment());
+        }
+        assert_eq!(prep.gpu_users, vec![1, 2]);
+        assert_eq!(prep.nu(0), 0); // alone on engine 0 among GPU users
+        assert_eq!(prep.nu(1), 1); // shares engine 1 with task 3
+        assert_eq!(prep.nu(2), 1); // CPU-only: all of engine 0's users
+        assert_eq!(prep.order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn eval_matches_manual_sum() {
+        let terms = [
+            Term { jitter: 0, period: 100, demand: 7 },
+            Term { jitter: 30, period: 40, demand: 5 },
+        ];
+        // r = 250: ceil(250/100)·7 + ceil(280/40)·5 = 21 + 35.
+        assert_eq!(eval(250, &terms), 21 + 35);
+        // r = 0: ceil(0/100)·7 + ceil(30/40)·5 = 0 + 5.
+        assert_eq!(eval(0, &terms), 5);
+    }
+
+    #[test]
+    fn scratch_drops_zero_demand_terms() {
+        let mut s = Scratch::default();
+        s.push(0, 100, 0);
+        s.push(0, 100, 3);
+        assert_eq!(s.terms.len(), 1);
+    }
+}

@@ -1,0 +1,550 @@
+//! The naive (iterator-chain) response-time analyses, retained verbatim
+//! as the executable specification of the prepared kernel
+//! ([`crate::analysis::prep`]).
+//!
+//! These are the pre-kernel implementations of all four families plus
+//! the Audsley search: every interference set is re-derived through
+//! `TaskSet`'s filter chains inside the fixed-point closure, exactly as
+//! the lemmas of §6 read. They are O(n) set derivation per iteration —
+//! never call them from a sweep hot path. Their single purpose is the
+//! equivalence property in `rust/tests/kernel_equivalence.rs`: the
+//! kernel-based family modules must return **bit-identical** responses
+//! on every taskset, so any future kernel optimisation is pinned
+//! against this spec.
+
+use crate::analysis::gcaps::Options;
+use crate::analysis::terms::{
+    eps_of, fixed_point, ge_star, gm_star, interleave, jitter_c, jitter_g, njobs,
+    njobs_jitter, AnalysisResult, Rta,
+};
+use crate::analysis::Approach;
+use crate::model::{Task, TaskSet, Time};
+
+/// RT ids in decreasing CPU priority — the shared analysis order.
+fn analysis_order(ts: &TaskSet) -> Vec<usize> {
+    let mut order: Vec<usize> =
+        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
+    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
+    order
+}
+
+// ---------------------------------------------------------------------
+// GCAPS (§6.3), reference path
+// ---------------------------------------------------------------------
+
+fn jg(t: &Task, resp: &[Option<Time>], opts: &Options) -> Time {
+    if opts.use_gpu_prio {
+        jitter_g(t, None)
+    } else {
+        jitter_g(t, resp[t.id])
+    }
+}
+
+fn jc(t: &Task, resp: &[Option<Time>], opts: &Options) -> Time {
+    if opts.use_gpu_prio {
+        jitter_c(t, None)
+    } else {
+        jitter_c(t, resp[t.id])
+    }
+}
+
+fn hp_gpu_cross<'a>(
+    ts: &'a TaskSet,
+    i: usize,
+    opts: &Options,
+) -> Box<dyn Iterator<Item = &'a Task> + 'a> {
+    if opts.use_gpu_prio {
+        Box::new(ts.hp_gpu_other_core(i).filter(|h| h.uses_gpu()))
+    } else {
+        Box::new(ts.hp_other_core(i).filter(|h| h.uses_gpu()))
+    }
+}
+
+fn gcaps_i_dp(
+    ts: &TaskSet,
+    i: usize,
+    r: Time,
+    busy: bool,
+    resp: &[Option<Time>],
+    opts: &Options,
+) -> Time {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return 0;
+    }
+    let mut total = 0;
+    for h in ts.hpp(i).filter(|h| h.uses_gpu() && h.gpu == me.gpu) {
+        total += if busy {
+            njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h))
+        } else {
+            njobs_jitter(r, jg(h, resp, opts), h.period) * h.ge()
+        };
+    }
+    for h in hp_gpu_cross(ts, i, opts).filter(|h| h.gpu == me.gpu) {
+        total += njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h));
+    }
+    total
+}
+
+fn gcaps_i_id_busy(
+    ts: &TaskSet,
+    i: usize,
+    r: Time,
+    resp: &[Option<Time>],
+    opts: &Options,
+) -> Time {
+    let me = &ts.tasks[i];
+    if me.uses_gpu() {
+        return 0;
+    }
+    let mut carrier_mask: u64 = 0;
+    for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
+        carrier_mask |= 1 << (h.gpu & 63);
+    }
+    if carrier_mask == 0 {
+        return 0;
+    }
+    hp_gpu_cross(ts, i, opts)
+        .filter(|h| carrier_mask & (1 << (h.gpu & 63)) != 0)
+        .map(|h| njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h)))
+        .sum()
+}
+
+fn gcaps_p_c(
+    ts: &TaskSet,
+    i: usize,
+    r: Time,
+    busy: bool,
+    resp: &[Option<Time>],
+    opts: &Options,
+) -> Time {
+    let me = &ts.tasks[i];
+    let mut total = 0;
+    for h in ts.hpp(i) {
+        total += if busy {
+            let mut demand = h.c() + h.gm();
+            let charged_by_lemma10 = me.uses_gpu() && h.gpu == me.gpu;
+            if h.uses_gpu() && !charged_by_lemma10 && !opts.paper_exact_lemma12 {
+                demand += ge_star(h, eps_of(ts, h));
+            }
+            if h.uses_gpu() {
+                njobs_jitter(r, jc(h, resp, opts), h.period) * demand
+            } else {
+                njobs(r, h.period) * demand
+            }
+        } else if h.uses_gpu() {
+            njobs_jitter(r, jc(h, resp, opts), h.period) * (h.c() + gm_star(h, eps_of(ts, h)))
+        } else {
+            njobs(r, h.period) * h.c()
+        };
+    }
+    total
+}
+
+/// Reference GCAPS response time (Eq. 1 with the §6.3 terms).
+pub fn gcaps_response_time(
+    ts: &TaskSet,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    opts: &Options,
+) -> Rta {
+    let me = &ts.tasks[i];
+    let eps = eps_of(ts, me);
+    let own = me.c() + me.g() + 2 * eps * me.eta_g() as Time;
+    let lp_gpu = |t: &&Task| {
+        t.id != me.id && t.uses_gpu() && (t.best_effort || t.cpu_prio < me.cpu_prio)
+    };
+    let blocking = if me.uses_gpu() {
+        let same_engine = if ts.tasks.iter().filter(lp_gpu).any(|t| t.gpu == me.gpu) {
+            eps
+        } else {
+            0
+        };
+        let cross_alpha = ts
+            .tasks
+            .iter()
+            .filter(lp_gpu)
+            .filter(|t| t.core == me.core && t.gpu != me.gpu)
+            .map(|t| {
+                let c = &ts.platform.gpus[t.gpu];
+                c.epsilon.saturating_sub(c.theta)
+            })
+            .max()
+            .unwrap_or(0);
+        (me.eta_g() as Time + 1) * same_engine.max(cross_alpha)
+    } else {
+        ts.tasks.iter().filter(lp_gpu).map(|t| eps_of(ts, t)).max().unwrap_or(0)
+    };
+    fixed_point(me.deadline, own + blocking, |r| {
+        own + blocking
+            + gcaps_p_c(ts, i, r, busy, resp, opts)
+            + gcaps_i_dp(ts, i, r, busy, resp, opts)
+            + if busy { gcaps_i_id_busy(ts, i, r, resp, opts) } else { 0 }
+    })
+}
+
+/// Reference GCAPS analysis over every RT task.
+pub fn gcaps_analyze(ts: &TaskSet, busy: bool, opts: &Options) -> AnalysisResult {
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for i in analysis_order(ts) {
+        resp[i] = gcaps_response_time(ts, i, busy, &resp, opts).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+// ---------------------------------------------------------------------
+// Default-driver TSG round-robin (§6.2), reference path
+// ---------------------------------------------------------------------
+
+fn rr_i_ie(ts: &TaskSet, i: usize) -> Time {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return 0;
+    }
+    let nu = ts.sharing_gpu(i).count();
+    let ctx = ts.gpu_ctx(i);
+    me.gpu_segments
+        .iter()
+        .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
+        .sum()
+}
+
+fn rr_i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
+    let mut total = 0;
+    let hpp_ids: Vec<usize> = ts.hpp(i).map(|t| t.id).collect();
+    let mut nu_base = vec![0usize; ts.platform.num_gpus()];
+    for k in ts.tasks.iter().filter(|k| k.uses_gpu() && !hpp_ids.contains(&k.id)) {
+        nu_base[k.gpu] += 1;
+    }
+    for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
+        let nu = nu_base[h.gpu] + 1;
+        let ctx = ts.platform.gpus[h.gpu];
+        let per_job: Time = h
+            .gpu_segments
+            .iter()
+            .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
+            .sum();
+        total += njobs_jitter(r, jitter_g(h, resp[h.id]), h.period) * per_job;
+    }
+    total
+}
+
+fn rr_p_c(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
+    ts.hpp(i)
+        .map(|h: &Task| {
+            let demand = h.c() + h.gm();
+            let n = if h.uses_gpu() {
+                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
+            } else {
+                njobs(r, h.period)
+            };
+            n * demand
+        })
+        .sum()
+}
+
+/// Reference default-driver response time (Eq. 1 with the §6.2 terms).
+pub fn rr_response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
+    let me = &ts.tasks[i];
+    let own = me.c() + me.g();
+    let iie = rr_i_ie(ts, i);
+    fixed_point(me.deadline, own + iie, |r| {
+        let idle = if busy { rr_i_id_busy(ts, i, r, resp) } else { 0 };
+        own + iie + idle + rr_p_c(ts, i, r, resp)
+    })
+}
+
+/// Reference default-driver analysis.
+pub fn rr_analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for i in analysis_order(ts) {
+        resp[i] = rr_response_time(ts, i, busy, &resp).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+// ---------------------------------------------------------------------
+// MPCP baseline, reference path
+// ---------------------------------------------------------------------
+
+fn mpcp_request_blocking(ts: &TaskSet, i: usize) -> Option<Time> {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return Some(0);
+    }
+    let lp_max: Time = ts
+        .sharing_gpu(i)
+        .filter(|t| t.best_effort || t.cpu_prio < me.cpu_prio)
+        .map(|t| t.max_gpu_segment())
+        .max()
+        .unwrap_or(0);
+    let hp: Vec<&Task> = ts
+        .sharing_gpu(i)
+        .filter(|t| !t.best_effort && t.cpu_prio > me.cpu_prio)
+        .collect();
+    let mut w = lp_max;
+    for _ in 0..10_000 {
+        let next = lp_max
+            + hp.iter()
+                .map(|h| {
+                    let gcs_total: Time = h.gpu_segments.iter().map(|g| g.total()).sum();
+                    (njobs(w, h.period) + 1) * gcs_total
+                })
+                .sum::<Time>();
+        if next == w {
+            return Some(w);
+        }
+        if next > me.deadline {
+            return None;
+        }
+        w = next;
+    }
+    None
+}
+
+fn mpcp_boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
+    let me = &ts.tasks[i];
+    ts.tasks
+        .iter()
+        .filter(|t| {
+            t.id != me.id
+                && t.core == me.core
+                && t.uses_gpu()
+                && (t.best_effort || t.cpu_prio < me.cpu_prio)
+        })
+        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
+        .sum()
+}
+
+fn mpcp_p_c(
+    ts: &TaskSet,
+    i: usize,
+    r: Time,
+    busy: bool,
+    resp: &[Option<Time>],
+    w_h: &[Time],
+) -> Time {
+    ts.hpp(i)
+        .map(|h| {
+            let n = if h.uses_gpu() {
+                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
+            } else {
+                njobs(r, h.period)
+            };
+            if busy {
+                n * (h.c() + h.g() + w_h[h.id] * h.eta_g() as Time)
+            } else {
+                n * (h.c() + h.gm())
+            }
+        })
+        .sum()
+}
+
+fn mpcp_response_time(
+    ts: &TaskSet,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    w_all: &[Time],
+) -> Rta {
+    let me = &ts.tasks[i];
+    let remote = w_all[i] * me.eta_g() as Time;
+    let own = me.c() + me.g() + remote;
+    fixed_point(me.deadline, own, |r| {
+        own + mpcp_boost_blocking(ts, i, r) + mpcp_p_c(ts, i, r, busy, resp, w_all)
+    })
+}
+
+/// Reference MPCP analysis.
+pub fn mpcp_analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let n = ts.tasks.len();
+    let mut w_all = vec![0; n];
+    let mut blocked_diverged = vec![false; n];
+    for t in ts.tasks.iter().filter(|t| !t.best_effort) {
+        match mpcp_request_blocking(ts, t.id) {
+            Some(w) => w_all[t.id] = w,
+            None => blocked_diverged[t.id] = true,
+        }
+    }
+    let mut resp: Vec<Option<Time>> = vec![None; n];
+    for i in analysis_order(ts) {
+        if blocked_diverged[i] {
+            continue;
+        }
+        if busy && ts.hpp(i).any(|h| blocked_diverged[h.id]) {
+            continue;
+        }
+        resp[i] = mpcp_response_time(ts, i, busy, &resp, &w_all).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+// ---------------------------------------------------------------------
+// FMLP+ baseline, reference path
+// ---------------------------------------------------------------------
+
+fn fmlp_request_blocking(ts: &TaskSet, i: usize) -> Time {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return 0;
+    }
+    ts.sharing_gpu(i).map(|t| t.max_gpu_segment()).sum()
+}
+
+fn fmlp_boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
+    let me = &ts.tasks[i];
+    ts.tasks
+        .iter()
+        .filter(|t| {
+            t.id != me.id
+                && t.core == me.core
+                && t.uses_gpu()
+                && (t.best_effort || t.cpu_prio < me.cpu_prio)
+        })
+        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
+        .sum()
+}
+
+fn fmlp_p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>]) -> Time {
+    ts.hpp(i)
+        .map(|h| {
+            let n = if h.uses_gpu() {
+                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
+            } else {
+                njobs(r, h.period)
+            };
+            if busy {
+                n * (h.c() + h.g() + fmlp_request_blocking(ts, h.id) * h.eta_g() as Time)
+            } else {
+                n * (h.c() + h.gm())
+            }
+        })
+        .sum()
+}
+
+fn fmlp_response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
+    let me = &ts.tasks[i];
+    let remote = fmlp_request_blocking(ts, i) * me.eta_g() as Time;
+    let own = me.c() + me.g() + remote;
+    fixed_point(me.deadline, own, |r| {
+        own + fmlp_boost_blocking(ts, i, r) + fmlp_p_c(ts, i, r, busy, resp)
+    })
+}
+
+/// Reference FMLP+ analysis.
+pub fn fmlp_analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for i in analysis_order(ts) {
+        resp[i] = fmlp_response_time(ts, i, busy, &resp).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+// ---------------------------------------------------------------------
+// Dispatch + the Fig. 8 GCAPS procedure, reference path
+// ---------------------------------------------------------------------
+
+/// Reference Audsley search (§5.3 / §6.4), using the reference GCAPS
+/// response-time test per candidate.
+pub fn assign_gpu_priorities(ts: &TaskSet, busy: bool) -> Option<(TaskSet, Vec<u32>)> {
+    let mut work = ts.clone();
+    let candidates: Vec<usize> = work
+        .tasks
+        .iter()
+        .filter(|t| !t.best_effort && t.uses_gpu())
+        .map(|t| t.id)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let mut levels: Vec<u32> = candidates.iter().map(|&i| ts.tasks[i].cpu_prio).collect();
+    levels.sort_unstable();
+
+    let mut unassigned: Vec<usize> = candidates.clone();
+    const UNASSIGNED: u32 = u32::MAX;
+    for &i in &unassigned {
+        work.tasks[i].gpu_prio = UNASSIGNED;
+    }
+
+    let opts = Options { use_gpu_prio: true, ..Default::default() };
+    let no_resp: Vec<Option<Time>> = vec![None; work.tasks.len()];
+
+    for &level in &levels {
+        let mut order = unassigned.clone();
+        order.sort_by_key(|&i| work.tasks[i].cpu_prio);
+        let mut placed = None;
+        for &cand in &order {
+            let core = work.tasks[cand].core;
+            let gpu = work.tasks[cand].gpu;
+            let violates = unassigned.iter().any(|&d| {
+                d != cand
+                    && work.tasks[d].core == core
+                    && work.tasks[d].gpu == gpu
+                    && work.tasks[d].cpu_prio < work.tasks[cand].cpu_prio
+            });
+            if violates {
+                continue;
+            }
+            work.tasks[cand].gpu_prio = level;
+            let rta = gcaps_response_time(&work, cand, busy, &no_resp, &opts);
+            if rta.ok() {
+                placed = Some(cand);
+                break;
+            }
+            work.tasks[cand].gpu_prio = UNASSIGNED;
+        }
+        match placed {
+            Some(cand) => unassigned.retain(|&i| i != cand),
+            None => return None,
+        }
+    }
+    debug_assert!(unassigned.is_empty());
+
+    let res = gcaps_analyze(&work, busy, &opts);
+    if !res.schedulable {
+        return None;
+    }
+    let prios = work.tasks.iter().map(|t| t.gpu_prio).collect();
+    Some((work, prios))
+}
+
+/// Reference per-approach analysis dispatch.
+pub fn analyze(ts: &TaskSet, approach: Approach) -> AnalysisResult {
+    match approach {
+        Approach::GcapsBusy => gcaps_analyze(ts, true, &Options::default()),
+        Approach::GcapsSuspend => gcaps_analyze(ts, false, &Options::default()),
+        Approach::TsgRrBusy => rr_analyze(ts, true),
+        Approach::TsgRrSuspend => rr_analyze(ts, false),
+        Approach::MpcpBusy => mpcp_analyze(ts, true),
+        Approach::MpcpSuspend => mpcp_analyze(ts, false),
+        Approach::FmlpBusy => fmlp_analyze(ts, true),
+        Approach::FmlpSuspend => fmlp_analyze(ts, false),
+    }
+}
+
+/// Reference §7.1.1 GCAPS procedure: default priorities first, Audsley
+/// retry on failure.
+pub fn analyze_with_gpu_prio(ts: &TaskSet, busy: bool) -> (AnalysisResult, Option<Vec<u32>>) {
+    let base = gcaps_analyze(ts, busy, &Options::default());
+    if base.schedulable {
+        return (base, None);
+    }
+    match assign_gpu_priorities(ts, busy) {
+        Some((assigned_ts, prios)) => {
+            let opts = Options { use_gpu_prio: true, ..Default::default() };
+            let res = gcaps_analyze(&assigned_ts, busy, &opts);
+            (res, Some(prios))
+        }
+        None => (base, None),
+    }
+}
+
+/// Reference full-procedure schedulability (what Fig. 8 cells compute).
+pub fn approach_schedulable(ts: &TaskSet, approach: Approach) -> bool {
+    match approach {
+        Approach::GcapsBusy => analyze_with_gpu_prio(ts, true).0.schedulable,
+        Approach::GcapsSuspend => analyze_with_gpu_prio(ts, false).0.schedulable,
+        a => analyze(ts, a).schedulable,
+    }
+}

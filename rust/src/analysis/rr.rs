@@ -22,105 +22,119 @@
 //! includes τ_h itself — the busy-wait window of τ_h covers τ_h's own
 //! time slices plus one slice + θ per other active TSG per round — which
 //! is what makes the busy-waiting bound account for the full wait.
+//!
+//! Implementation: Eq. (3) is linear in the round count `ceil(G^e/L)`,
+//! so [`Prepared`] caches each task's `Σ_j ceil(G^e_{i,j}/L)` once and
+//! every 𝓘-sum collapses to one `interleave_rounds` call — no segment
+//! walk, no per-iteration ν recount. The per-engine ν bases of Lemma 4
+//! come from `Prepared::gpu_users` minus a small hpp pass. The original
+//! iterator-chain path lives in [`crate::analysis::reference`].
 
-use crate::analysis::terms::{
-    fixed_point, interleave, jitter_c, jitter_g, njobs, njobs_jitter, AnalysisResult, Rta,
-};
+use crate::analysis::prep::{run_fixed_point, Prepared, Scratch};
+use crate::analysis::terms::{interleave_rounds, AnalysisResult, Rta};
 use crate::analysis::Analysis;
-use crate::model::{Task, TaskSet, Time, WaitMode};
+use crate::model::{TaskSet, Time, WaitMode};
 
-/// Lemma 1: interference on τ_i's own GPU segments from interleaved
-/// execution with every other GPU-using process on τ_i's ENGINE (RT and
-/// best-effort — the default driver treats all processes equally; each
-/// engine runs its own TSG ring, so other engines never interleave).
-fn i_ie(ts: &TaskSet, i: usize) -> Time {
-    let me = &ts.tasks[i];
-    if !me.uses_gpu() {
-        return 0;
-    }
-    let nu = ts.sharing_gpu(i).count();
-    let ctx = ts.gpu_ctx(i);
-    me.gpu_segments
-        .iter()
-        .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
-        .sum()
-}
+/// Lower Lemmas 4/5/7 for task `i` into `scratch.terms`.
+fn build_terms(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    scratch: &mut Scratch,
+) {
+    scratch.clear();
 
-/// Lemma 4 (busy-waiting): indirect delay from same-core higher-priority
-/// tasks busy-waiting on interleaved GPU execution. Each carrier τ_h
-/// waits on its OWN engine's ring, so its ν counts only tasks sharing
-/// τ_h's engine.
-fn i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
-    let mut total = 0;
-    // Hoisted out of the τ_h loop (perf: built once per fixpoint
-    // evaluation instead of once per (τ_h, evaluation) — §Perf).
-    let hpp_ids: Vec<usize> = ts.hpp(i).map(|t| t.id).collect();
-    let mut nu_base = vec![0usize; ts.platform.num_gpus()];
-    for k in ts.tasks.iter().filter(|k| k.uses_gpu() && !hpp_ids.contains(&k.id)) {
-        nu_base[k.gpu] += 1;
+    // Lemmas 5/7: CPU preemption from same-core higher-priority tasks.
+    // CPU-only hp tasks never suspend nor get GPU-deferred, so the
+    // plain ceil(R/T) count is exact for them; GPU-using hp tasks carry
+    // the J^c jitter in both modes (see the reference module docs).
+    for &h32 in prep.hpp.get(i) {
+        let h = h32 as usize;
+        let p = &prep.t[h];
+        let jit = if p.uses_gpu { prep.jitter_c(h, resp) } else { 0 };
+        scratch.push(jit, p.period, p.c_gm);
     }
-    for h in ts.hpp(i).filter(|h| h.uses_gpu()) {
-        // ν_h = |{k | τ_k ∉ hpp(τ_i) ∧ η^g_k > 0 ∧ τ_k on τ_h's engine}
-        //        ∪ {τ_h}|: the busy-wait window of τ_h interleaves with
-        // all same-engine GPU-using tasks outside hpp(τ_i) (those inside
-        // are counted by the outer iteration), plus τ_h's own slices.
-        let nu = nu_base[h.gpu] + 1; // τ_h itself (τ_h ∈ hpp, so not in the set)
-        let ctx = ts.platform.gpus[h.gpu];
-        let per_job: Time = h
-            .gpu_segments
-            .iter()
-            .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
-            .sum();
-        // Carry-in amendment: interleaved GPU execution defers τ_h's
-        // busy-wait window past its release; add the J^g jitter so the
-        // count covers the carry-in job (cf. Lemma 10's cross-core term).
-        total += njobs_jitter(r, jitter_g(h, resp[h.id]), h.period) * per_job;
-    }
-    total
-}
 
-/// Lemmas 5/7: CPU preemption from same-core higher-priority tasks.
-fn p_c(ts: &TaskSet, i: usize, r: Time, _busy: bool, resp: &[Option<Time>]) -> Time {
-    ts.hpp(i)
-        .map(|h: &Task| {
-            let demand = h.c() + h.gm();
-            // CPU-only hp tasks never suspend nor get GPU-deferred, so
-            // the plain ceil(R/T) count is exact for them (cf. Lemma
-            // 15's split); GPU-using hp tasks carry the J^c jitter in
-            // both modes (Lemma 7; busy mode needs it for the carry-in
-            // deferral the device model exhibits — see module docs).
-            let n = if h.uses_gpu() {
-                njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
-            } else {
-                njobs(r, h.period)
-            };
-            n * demand
-        })
-        .sum()
+    // Lemma 4 (busy-waiting): indirect delay from same-core
+    // higher-priority tasks busy-waiting on interleaved GPU execution.
+    // Each carrier τ_h waits on its OWN engine's ring: ν_h counts the
+    // engine's GPU users outside hpp(τ_i) (incl. best-effort and τ_i
+    // itself), plus τ_h's own slices.
+    if busy {
+        // Per-engine count of GPU-using hpp tasks (reusable buffer — no
+        // allocation per analysed task).
+        scratch.engines.clear();
+        scratch.engines.resize(prep.gpu_users.len(), 0);
+        for &h32 in prep.hpp.get(i) {
+            let p = &prep.t[h32 as usize];
+            if p.uses_gpu {
+                scratch.engines[p.gpu] += 1;
+            }
+        }
+        for &h32 in prep.hpp.get(i) {
+            let h = h32 as usize;
+            let p = &prep.t[h];
+            if !p.uses_gpu {
+                continue;
+            }
+            let nu = prep.gpu_users[p.gpu] - scratch.engines[p.gpu] + 1;
+            // Whole-job 𝓘 from the cached round sum (Eq. 3 is linear in
+            // rounds, so this equals the per-segment sum exactly).
+            let per_job = interleave_rounds(nu, p.rounds_sum, p.tsg_slice, p.theta);
+            // Carry-in amendment: J^g jitter covers GPU-deferred
+            // busy-wait windows (cf. Lemma 10's cross-core term).
+            scratch.push(prep.jitter_g(h, resp), p.period, per_job);
+        }
+    }
 }
 
 /// Response time of one task under the default driver (Eq. 1 with the
-/// §6.2 terms). `resp` carries already-computed higher-priority WCRTs.
+/// §6.2 terms), over a prebuilt kernel.
+pub fn response_time_prepared(
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    scratch: &mut Scratch,
+) -> Rta {
+    let me = prep.t[i];
+    let own = me.c.saturating_add(me.g);
+    // Lemma 1 (R-independent): interleaving on τ_i's own segments with
+    // the ν sharers of its engine.
+    let iie = if me.uses_gpu {
+        interleave_rounds(prep.nu(i), me.rounds_sum, me.tsg_slice, me.theta)
+    } else {
+        0
+    };
+    let base = own.saturating_add(iie);
+    build_terms(prep, i, busy, resp, scratch);
+    run_fixed_point(me.deadline, base, &scratch.terms)
+}
+
+/// Response time of one task (compatibility entry point: builds a
+/// throwaway kernel — use [`response_time_prepared`] in loops).
 pub fn response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
-    let me = &ts.tasks[i];
-    let own = me.c() + me.g();
-    let iie = i_ie(ts, i); // R-independent
-    fixed_point(me.deadline, own + iie, |r| {
-        let idle = if busy { i_id_busy(ts, i, r, resp) } else { 0 };
-        own + iie + idle + p_c(ts, i, r, busy, resp)
-    })
+    let prep = Prepared::new(ts);
+    let mut scratch = Scratch::default();
+    response_time_prepared(&prep, i, busy, resp, &mut scratch)
+}
+
+/// Analyse all RT tasks over an existing kernel.
+pub fn analyze_prepared(ts: &TaskSet, prep: &Prepared, busy: bool) -> AnalysisResult {
+    let mut scratch = Scratch::default();
+    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
+    for &i in &prep.order {
+        let r = response_time_prepared(prep, i, busy, &resp, &mut scratch);
+        resp[i] = r.time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
 }
 
 /// Analyse all RT tasks (decreasing CPU priority so jitters resolve).
 pub fn analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
-    let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
-    let mut order: Vec<usize> =
-        ts.tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
-    order.sort_by(|&a, &b| ts.tasks[b].cpu_prio.cmp(&ts.tasks[a].cpu_prio));
-    for i in order {
-        resp[i] = response_time(ts, i, busy, &resp).time();
-    }
-    AnalysisResult::from_responses(&ts.tasks, resp)
+    let prep = Prepared::new(ts);
+    analyze_prepared(ts, &prep, busy)
 }
 
 /// [`Analysis`] implementation: the default driver's time-sliced

@@ -1,8 +1,10 @@
 //! Shared RTA machinery: ceiling division, the interleaved-execution
-//! bound 𝓘(ν, G^e) of Eq. (3), release-jitter arrival bounds, and the
-//! fixed-point iteration driver used by every analysis.
+//! bound 𝓘(ν, G^e) of Eq. (3), the starred-demand constants of §6.3
+//! (G^e*, G^m* — shared by every analysis family and precomputed by
+//! [`crate::analysis::prep::Prepared`]), release-jitter arrival bounds,
+//! and the fixed-point iteration driver used by every analysis.
 
-use crate::model::{Task, Time};
+use crate::model::{Task, TaskSet, Time};
 
 /// ceil(a / b) over integers (b > 0).
 pub fn ceil_div(a: Time, b: Time) -> Time {
@@ -36,12 +38,49 @@ pub fn njobs_jitter(r: Time, jitter: Time, t_h: Time) -> Time {
 /// round-robin hardware). We include it so the analysis dominates the
 /// simulator; the delta is ≤ 0.02% of a slice per round and does not
 /// change any Fig. 8 trend.
+///
+/// Saturating: for extreme G^e/ν the product `(L+θ)·ν·rounds` can exceed
+/// `Time::MAX`; wrapping there would report a tiny (unsound) bound, so
+/// every step saturates — an overflowed bound pins to `Time::MAX` and
+/// the fixed point fails the deadline check, which is the sound outcome.
 pub fn interleave(nu: usize, ge: Time, l: Time, theta: Time) -> Time {
     if ge == 0 {
         return 0;
     }
-    let rounds = ceil_div(ge, l);
-    (l + theta) * nu as Time * rounds + theta * rounds
+    interleave_rounds(nu, ceil_div(ge, l), l, theta)
+}
+
+/// The Eq. (3) bound in terms of a precomputed round count
+/// `rounds = ceil(G^e / L)`. Factored out so the prepared kernel can
+/// evaluate a task's whole-job interleaving from its cached
+/// `Σ_j ceil(G^e_{i,j} / L)` without re-walking the segments: the bound
+/// is linear in `rounds`, so summing rounds first distributes exactly.
+pub fn interleave_rounds(nu: usize, rounds: Time, l: Time, theta: Time) -> Time {
+    l.saturating_add(theta)
+        .saturating_mul(nu as Time)
+        .saturating_mul(rounds)
+        .saturating_add(theta.saturating_mul(rounds))
+}
+
+/// ε of the engine a task is assigned to (per-GPU overheads: a task's
+/// runlist updates go to its own engine's driver lock).
+pub fn eps_of(ts: &TaskSet, t: &Task) -> Time {
+    ts.platform.gpus[t.gpu].epsilon
+}
+
+/// G^e*_i = G^e_i + 2ε·η^g_i: pure GPU execution plus the runlist
+/// updates bracketing each segment (§6.3). Saturating for the same
+/// reason as [`interleave`]: a wrapped starred demand would report a
+/// tiny unsound bound on crafted ε/η inputs, while a pinned one fails
+/// the deadline check. (Shared by the kernel and reference paths, so
+/// both saturate identically.)
+pub fn ge_star(t: &Task, eps: Time) -> Time {
+    t.ge().saturating_add(eps.saturating_mul(2).saturating_mul(t.eta_g() as Time))
+}
+
+/// G^m*_i = G^m_i + 2ε·η^g_i (saturating, see [`ge_star`]).
+pub fn gm_star(t: &Task, eps: Time) -> Time {
+    t.gm().saturating_add(eps.saturating_mul(2).saturating_mul(t.eta_g() as Time))
 }
 
 /// Result of analysing one task.
@@ -71,13 +110,30 @@ impl Rta {
 /// non-decreasing in R (all our interference terms are: they are sums of
 /// ceil((R + J)/T) · const).
 pub fn fixed_point(deadline: Time, init: Time, f: impl Fn(Time) -> Time) -> Rta {
-    let mut r = init.min(deadline);
     if init > deadline {
         return Rta::Unschedulable;
     }
-    // Bounded iterations as a divergence backstop; monotone f over the
-    // integer lattice [init, deadline] converges well before this.
-    for _ in 0..100_000 {
+    let mut r = init;
+    // Divergence backstop, derived instead of a magic constant: every
+    // non-terminal iteration either converges (next == r), fails
+    // (next > deadline), or — f being monotone over the integer µs
+    // lattice — strictly advances r by ≥ 1 tick while r ≤ deadline.
+    // Only (deadline − init) such advances fit inside [init, deadline],
+    // so (deadline − init + 1) iterations reach any fixed point that
+    // exists ≤ deadline. Hitting the bound therefore cannot
+    // false-negative a schedulable task: that would require a
+    // convergent strictly-increasing integer sequence with more steps
+    // than there are integers in [init, deadline]. (Inclusive range:
+    // `span + 1` could overflow when deadline − init == Time::MAX.)
+    //
+    // Trade-off vs the old magic 100_000 cap: that cap could (in
+    // theory) reject slow-converging schedulable tasks; this bound
+    // cannot, but a crafted taskset FILE with a near-MAX deadline and
+    // µs-scale hp periods could make convergence take ~deadline/T_min
+    // iterations instead of being cut off. Generated tasksets (Table 3
+    // periods ≤ 500 ms ⇒ span ≤ 5·10^5) sit at the old cap's scale.
+    let span = deadline - init;
+    for _ in 0..=span {
         let next = f(r);
         if next == r {
             return Rta::Schedulable(r);
@@ -154,6 +210,66 @@ mod tests {
     fn interleave_exact_slice_boundary() {
         assert_eq!(interleave(1, 1024, 1024, 200), 1224 + 200);
         assert_eq!(interleave(1, 1025, 1024, 200), 2448 + 400);
+    }
+
+    #[test]
+    fn interleave_saturates_instead_of_wrapping() {
+        // Regression: (l + θ)·ν·rounds used to wrap Time for large
+        // G^e/ν, silently reporting a tiny (unsound) bound. It must pin
+        // to Time::MAX instead.
+        let huge = Time::MAX / 2;
+        assert_eq!(interleave(usize::MAX, huge, 1, 200), Time::MAX);
+        assert_eq!(interleave(3, huge, 1, huge), Time::MAX);
+        // The saturated bound still dominates every finite input's true
+        // value, and small inputs are untouched.
+        assert_eq!(interleave(3, 2500, 1024, 200), (1024 + 200) * 3 * 3 + 200 * 3);
+    }
+
+    #[test]
+    fn interleave_rounds_distributes_over_segments() {
+        // Σ_j I(ν, G^e_j) == interleave_rounds(ν, Σ_j rounds_j) — the
+        // identity the prepared kernel's cached round sums rely on.
+        let (l, theta, nu) = (1024, 200, 4);
+        let segs = [100u64, 1024, 5000, 1];
+        let per_seg: Time = segs.iter().map(|&g| interleave(nu, g, l, theta)).sum();
+        let rounds: Time = segs.iter().map(|&g| ceil_div(g, l)).sum();
+        assert_eq!(per_seg, interleave_rounds(nu, rounds, l, theta));
+    }
+
+    #[test]
+    fn starred_demand_helpers() {
+        let t = crate::model::Task {
+            id: 0,
+            name: "x".into(),
+            period: ms(100.0),
+            deadline: ms(100.0),
+            cpu_segments: vec![ms(2.0), ms(2.0), ms(2.0)],
+            gpu_segments: vec![
+                crate::model::GpuSegment::new(ms(1.0), ms(5.0)),
+                crate::model::GpuSegment::new(ms(2.0), ms(3.0)),
+            ],
+            core: 0,
+            gpu: 0,
+            cpu_prio: 1,
+            gpu_prio: 1,
+            best_effort: false,
+            mode: crate::model::WaitMode::SelfSuspend,
+        };
+        // η^g = 2, so each star adds 2ε·2 = 4ε.
+        assert_eq!(ge_star(&t, 1000), ms(8.0) + 4000);
+        assert_eq!(gm_star(&t, 1000), ms(3.0) + 4000);
+        assert_eq!(ge_star(&t, 0), t.ge());
+    }
+
+    #[test]
+    fn fixed_point_bound_is_iteration_count_not_magic() {
+        // A pathological f advancing 1 µs per step must still converge
+        // when the fixed point exists ≤ deadline, even past the old
+        // 100_000-iteration backstop.
+        let deadline = 300_000;
+        let target = 250_000;
+        let r = fixed_point(deadline, 0, |r| if r < target { r + 1 } else { target });
+        assert_eq!(r, Rta::Schedulable(target));
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! `gcaps bench` — the repo's tracked wall-clock performance baseline.
+//!
+//! Times two pinned workloads with `std::time::Instant` (no external
+//! deps) and writes machine-readable artifacts:
+//!
+//! - **RTA panel** (`BENCH_rta.json`): the Fig. 8b utilization panel —
+//!   6 sweep points × N tasksets × 8 analyses plus the Audsley retry —
+//!   at `--jobs 1`, i.e. the raw single-thread analysis kernel cost
+//!   that PR 1's sharding multiplies across workers.
+//! - **DES panel** (`BENCH_des.json`): all 5 simulator policies over N
+//!   pinned Table 3 tasksets at a fixed horizon — the event-calendar
+//!   engine's cost.
+//!
+//! Both are fully pinned (seed 2024, fixed panel/params/horizon) so
+//! successive runs on one machine are comparable; the JSON carries a
+//! result checksum so a "fast" run that silently computed different
+//! numbers is caught. `--quick` shrinks the workload for CI smoke runs
+//! (artifact shape identical; timings advisory on shared runners).
+//!
+//! EXPERIMENTS.md §Performance records the measurement protocol and the
+//! before/after numbers for each optimisation PR.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::experiments::fig8::{run_panel, Panel};
+use crate::experiments::ExpConfig;
+use crate::model::ms;
+use crate::sim::{simulate, Policy, SimConfig};
+use crate::taskgen::{generate, GenParams};
+use crate::util::rng::Pcg32;
+
+/// The pinned base seed of both panels.
+pub const BENCH_SEED: u64 = 2024;
+
+/// One timed workload.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Workload id (stable across PRs — the perf trajectory key).
+    pub bench: &'static str,
+    /// Artifact schema version.
+    pub schema: u32,
+    /// Whether this was a `--quick` (CI smoke) run.
+    pub quick: bool,
+    /// Worker threads used (RTA panel is pinned to 1).
+    pub jobs: usize,
+    /// Work units completed (RTA: analysis cells; DES: simulations).
+    pub units: u64,
+    /// Wall-clock time for the whole workload.
+    pub wall_ms: f64,
+    /// Throughput derived from the two above.
+    pub units_per_s: f64,
+    /// Result checksum: identical across machines for one code version;
+    /// a changed checksum means the timing compares different work.
+    pub checksum: f64,
+}
+
+impl BenchResult {
+    /// Hand-rolled JSON (fixed keys, numeric values — nothing to
+    /// escape; the crate is dependency-free by design).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"schema\": {},\n  \"quick\": {},\n  \
+             \"jobs\": {},\n  \"seed\": {},\n  \"units\": {},\n  \
+             \"wall_ms\": {:.3},\n  \"units_per_s\": {:.3},\n  \"checksum\": {:.6}\n}}\n",
+            self.bench,
+            self.schema,
+            self.quick,
+            self.jobs,
+            BENCH_SEED,
+            self.units,
+            self.wall_ms,
+            self.units_per_s,
+            self.checksum
+        )
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<18} {:>8} units in {:>10.1} ms ({:>9.1} units/s, checksum {:.4})",
+            self.bench, self.units, self.wall_ms, self.units_per_s, self.checksum
+        )
+    }
+}
+
+fn finish(
+    bench: &'static str,
+    quick: bool,
+    jobs: usize,
+    units: u64,
+    start: Instant,
+    checksum: f64,
+) -> BenchResult {
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    BenchResult {
+        bench,
+        schema: 1,
+        quick,
+        jobs,
+        units,
+        wall_ms,
+        units_per_s: units as f64 / (wall_ms / 1e3).max(1e-9),
+        checksum,
+    }
+}
+
+/// Time the pinned Fig. 8b RTA panel at `--jobs 1`.
+pub fn run_rta(quick: bool) -> BenchResult {
+    let tasksets = if quick { 8 } else { 100 };
+    let cfg = ExpConfig { tasksets, seed: BENCH_SEED, jobs: 1, progress: false };
+    let panel = Panel::UtilPerCpu;
+    let start = Instant::now();
+    let (xticks, series) = run_panel(panel, &cfg);
+    let units = (xticks.len() * tasksets) as u64; // cells (8 analyses each)
+    let checksum: f64 = series.iter().flat_map(|(_, ys)| ys.iter()).sum();
+    finish("rta_fig8_panel_b", quick, 1, units, start, checksum)
+}
+
+/// Time the pinned DES panel: all 5 policies over N Table 3 tasksets.
+pub fn run_des(quick: bool) -> BenchResult {
+    let (n_sets, horizon) = if quick { (4, ms(300.0)) } else { (16, ms(2000.0)) };
+    let mut rng = Pcg32::seeded(BENCH_SEED);
+    let sets: Vec<_> = (0..n_sets).map(|_| generate(&mut rng, &GenParams::default())).collect();
+    const POLICIES: [Policy; 5] =
+        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+    let start = Instant::now();
+    let mut units = 0u64;
+    let mut checksum = 0.0f64;
+    for ts in &sets {
+        for policy in POLICIES {
+            let res = simulate(ts, &SimConfig::new(policy, horizon));
+            units += 1;
+            checksum += res.per_task.iter().map(|m| m.jobs as f64).sum::<f64>()
+                + res.run.gpu_context_switches as f64;
+        }
+    }
+    finish("des_all_policies", quick, 1, units, start, checksum)
+}
+
+/// Run both panels and write `BENCH_rta.json` / `BENCH_des.json` into
+/// `out_dir`. Returns the two results (RTA first).
+pub fn run_all(quick: bool, out_dir: &Path) -> std::io::Result<(BenchResult, BenchResult)> {
+    let rta = run_rta(quick);
+    let des = run_des(quick);
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(out_dir.join("BENCH_rta.json"), rta.to_json())?;
+    std::fs::write(out_dir.join("BENCH_des.json"), des.to_json())?;
+    Ok((rta, des))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_rta_bench_runs_and_serializes() {
+        let r = run_rta(true);
+        assert_eq!(r.bench, "rta_fig8_panel_b");
+        assert_eq!(r.units, 6 * 8); // 6 utilization points × 8 tasksets
+        assert!(r.wall_ms >= 0.0 && r.units_per_s > 0.0);
+        let json = r.to_json();
+        let keys = [
+            "\"bench\"",
+            "\"schema\"",
+            "\"units\"",
+            "\"wall_ms\"",
+            "\"units_per_s\"",
+            "\"checksum\"",
+        ];
+        for key in keys {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn quick_des_bench_counts_all_policy_runs() {
+        let r = run_des(true);
+        assert_eq!(r.units, 4 * 5);
+        assert!(r.checksum > 0.0, "simulations ran no jobs?");
+    }
+
+    #[test]
+    fn bench_checksum_is_deterministic() {
+        // Same pinned inputs → same checksum (the timing varies, the
+        // work must not).
+        let a = run_des(true);
+        let b = run_des(true);
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.units, b.units);
+    }
+}

@@ -4,6 +4,7 @@
 //! paper-vs-measured comparison.
 
 pub mod ablation;
+pub mod bench;
 pub mod casestudy;
 pub mod examples_figs;
 pub mod fig8;

@@ -6,6 +6,7 @@
 //!           [--jobs N]
 //! gcaps analyze [--seed N]            one random taskset through all 8 analyses
 //! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
+//! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
 //! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
 //! ```
 //!
@@ -22,6 +23,7 @@ use std::time::Duration;
 use gcaps::analysis::{analyze, analyze_with_gpu_prio, Approach};
 use gcaps::coordinator::executor::{run as live_run, LiveMode};
 use gcaps::coordinator::workload::build_case_study;
+use gcaps::experiments::bench as perfbench;
 use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
 use gcaps::experiments::examples_figs::{run_examples, run_fig3, run_fig5, run_fig6, run_fig7};
 use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
@@ -176,6 +178,25 @@ fn cmd_sim(args: &Args) {
     );
 }
 
+fn cmd_bench(args: &Args) {
+    let quick = args.flag("quick").is_some();
+    let out = std::path::PathBuf::from(args.flag("out").unwrap_or("."));
+    println!(
+        "-- gcaps bench{}: pinned fig8b RTA panel + 5-policy DES panel (seed {}) --",
+        if quick { " --quick" } else { "" },
+        perfbench::BENCH_SEED
+    );
+    let (rta, des) =
+        perfbench::run_all(quick, &out).unwrap_or_else(|e| panic!("write bench artifacts: {e}"));
+    println!("{}", rta.report());
+    println!("{}", des.report());
+    println!(
+        "wrote {} and {}",
+        out.join("BENCH_rta.json").display(),
+        out.join("BENCH_des.json").display()
+    );
+}
+
 fn live_mode(args: &Args) -> LiveMode {
     match args.flag("mode").unwrap_or("gcaps") {
         "tsg_rr" => LiveMode::TsgRr,
@@ -288,10 +309,11 @@ fn main() {
         Some("export") => cmd_export(&args),
         Some("sim") => cmd_sim(&args),
         Some("exp") => cmd_exp(&args),
+        Some("bench") => cmd_bench(&args),
         Some("live") => cmd_live(&args),
         _ => {
             eprintln!(
-                "usage: gcaps <analyze|sim|exp|live> [...]\n\
+                "usage: gcaps <analyze|sim|exp|bench|live> [...]\n\
                  \n\
                  gcaps analyze [--seed N | --taskset FILE]\n\
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
@@ -302,6 +324,8 @@ fn main() {
                  \x20         (--jobs shards the sweep across N workers; results and CSV bytes\n\
                  \x20          are byte-identical for every worker count — per-cell seed-splitting;\n\
                  \x20          `exp multigpu` sweeps the platform over 1/2/4 GPU engines)\n\
+                 gcaps bench [--quick] [--out DIR]       # pinned RTA/DES wall-clock baseline\n\
+                 \x20         (writes BENCH_rta.json / BENCH_des.json; --quick for CI smoke)\n\
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"
             );
             std::process::exit(2);

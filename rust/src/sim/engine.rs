@@ -29,8 +29,39 @@
 //! short non-preemptible kernel sections; the real rt-mutex contention
 //! is exercised and measured by the live arbiter (coordinator/), so in
 //! the DES Lemma 8's (η+1)ε blocking term is pure safety margin.
+//!
+//! # Event-calendar hot path
+//!
+//! The seed engine re-scanned every task per settle round for due
+//! releases, re-derived the release horizon by another full scan, and
+//! checked settle quiescence with a full-state FNV fingerprint per
+//! round. This engine replaces all three:
+//!
+//! - **Release calendar**: a min-heap of `(release time, task)` keyed
+//!   so same-instant releases pop in task order — due-release handling
+//!   and the release horizon are heap peeks, O(log n) per release
+//!   instead of O(n) per round.
+//! - **Change-tracked settle**: every transition handler reports
+//!   whether it mutated scheduler-visible state; a round with no
+//!   mutation is quiescent. The tracked set is a superset of what the
+//!   fingerprint hashed (it additionally flags backlog-only releases,
+//!   costing at most one extra no-op round), so the exit point is
+//!   never earlier than the seed engine's.
+//! - **Dirty completion set**: GPU-segment completions are drained
+//!   from a candidate list maintained where remaining work reaches
+//!   zero (`advance`, `begin_gpu_segment`) instead of an O(n) phase
+//!   scan per round; candidates re-check their condition on pop.
+//! - Ring refreshes iterate a per-engine task list and reuse the ring
+//!   in place (the seed path allocated an eligibility `Vec` per engine
+//!   per round).
+//!
+//! The seed engine is retained in [`crate::sim::reference`];
+//! `rust/tests/kernel_equivalence.rs` pins both engines bit-identical
+//! — every trace interval, release, completion and metric — across
+//! random tasksets, policies and offset patterns.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::model::{TaskSet, Time, WaitMode};
 use crate::sim::metrics::{RunMetrics, TaskMetrics};
@@ -117,7 +148,6 @@ struct TState {
     abs_deadline: Time,
     /// Backlogged releases (job arrived while previous still running).
     backlog: VecDeque<Time>,
-    next_release: Time,
     /// Timestamp the current driver call (incl. mutex wait) started.
     drv_started: Time,
     /// Lock-policy FIFO ticket (FMLP+ ordering).
@@ -157,6 +187,15 @@ struct Engine<'a> {
     st: Vec<TState>,
     /// One device/driver state per GPU engine (index = `Task::gpu`).
     gpus: Vec<GpuState>,
+    /// Release calendar: min-heap of (next release, task). Exactly one
+    /// outstanding entry per task; ties pop in task order, matching the
+    /// seed engine's index-order release scan.
+    calendar: BinaryHeap<Reverse<(Time, usize)>>,
+    /// Tasks assigned to each engine (ascending), for ring refreshes.
+    on_engine: Vec<Vec<usize>>,
+    /// Dirty GPU-completion candidates: tasks whose remaining segment
+    /// work reached zero; re-checked when drained in settle().
+    gpu_done: Vec<usize>,
     metrics: Vec<TaskMetrics>,
     run: RunMetrics,
     trace: Option<Trace>,
@@ -167,7 +206,7 @@ impl<'a> Engine<'a> {
     fn new(ts: &'a TaskSet, cfg: &'a SimConfig) -> Engine<'a> {
         let n = ts.tasks.len();
         let st = (0..n)
-            .map(|i| TState {
+            .map(|_| TState {
                 phase: Phase::Idle,
                 seg: 0,
                 cpu_rem: 0,
@@ -175,17 +214,27 @@ impl<'a> Engine<'a> {
                 release: 0,
                 abs_deadline: 0,
                 backlog: Default::default(),
-                next_release: cfg.offsets.get(i).copied().unwrap_or(0),
                 drv_started: 0,
                 ticket: 0,
             })
             .collect();
+        let mut calendar = BinaryHeap::with_capacity(n);
+        for i in 0..n {
+            calendar.push(Reverse((cfg.offsets.get(i).copied().unwrap_or(0), i)));
+        }
+        let mut on_engine = vec![Vec::new(); ts.platform.num_gpus()];
+        for (i, t) in ts.tasks.iter().enumerate() {
+            on_engine[t.gpu].push(i);
+        }
         Engine {
             ts,
             cfg,
             now: 0,
             st,
             gpus: vec![GpuState::default(); ts.platform.num_gpus()],
+            calendar,
+            on_engine,
+            gpu_done: Vec::new(),
             metrics: vec![TaskMetrics::default(); n],
             run: RunMetrics::default(),
             trace: cfg.trace.then(Trace::default),
@@ -263,6 +312,10 @@ impl<'a> Engine<'a> {
         self.st[i].phase = Phase::GpuActive;
         self.st[i].cpu_rem = t.gpu_segments[seg].misc;
         self.st[i].gpu_rem = t.gpu_segments[seg].exec;
+        // Zero-length segment: completion-ready the instant it starts.
+        if self.st[i].cpu_rem == 0 && self.st[i].gpu_rem == 0 {
+            self.gpu_done.push(i);
+        }
     }
 
     /// Both halves of the GPU segment are done.
@@ -385,9 +438,10 @@ impl<'a> Engine<'a> {
 
     // -- lock-based policies -----------------------------------------------
 
-    fn try_grant_lock(&mut self, g: usize) {
+    /// Returns whether a grant happened.
+    fn try_grant_lock(&mut self, g: usize) -> bool {
         if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
-            return;
+            return false;
         }
         let idx = match self.cfg.policy {
             Policy::Mpcp => self.gpus[g]
@@ -411,6 +465,7 @@ impl<'a> Engine<'a> {
         let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
         self.gpus[g].lock_holder = Some(task);
         self.begin_gpu_segment(task);
+        true
     }
 
     // -- allocation ----------------------------------------------------------
@@ -488,17 +543,22 @@ impl<'a> Engine<'a> {
     }
 
     /// Sync engine `g`'s ring membership with eligibility, preserving
-    /// FIFO order.
-    fn refresh_ring(&mut self, g: usize) {
-        let eligible: Vec<usize> = (0..self.st.len())
-            .filter(|&i| self.gpu_of(i) == g && self.ring_eligible(i))
-            .collect();
-        self.gpus[g].ring.retain(|i| eligible.contains(i));
-        for i in eligible {
-            if !self.gpus[g].ring.contains(&i) {
-                self.gpus[g].ring.push_back(i);
+    /// FIFO order. Allocation-free: retains in place and appends newly
+    /// eligible TSGs in task order (the seed path collected an
+    /// eligibility Vec per call). Returns whether membership changed.
+    fn refresh_ring(&mut self, g: usize) -> bool {
+        let mut ring = std::mem::take(&mut self.gpus[g].ring);
+        let before = ring.len();
+        ring.retain(|&i| self.ring_eligible(i));
+        let mut changed = ring.len() != before;
+        for &i in &self.on_engine[g] {
+            if self.ring_eligible(i) && !ring.contains(&i) {
+                ring.push_back(i);
+                changed = true;
             }
         }
+        self.gpus[g].ring = ring;
+        changed
     }
 
     /// Which task should engine `g` execute now (pre-θ)?
@@ -526,11 +586,11 @@ impl<'a> Engine<'a> {
     }
 
     /// Apply engine `g`'s desired context: start a θ switch if it
-    /// changed.
-    fn update_gpu_context(&mut self, g: usize) {
+    /// changed. Returns whether it did.
+    fn update_gpu_context(&mut self, g: usize) -> bool {
         let want = self.desired_gpu_context(g);
         if want == self.gpus[g].context {
-            return;
+            return false;
         }
         match want {
             None => {
@@ -556,28 +616,38 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        true
     }
 
     // -- main loop -------------------------------------------------------------
 
-    fn release_due(&mut self) {
-        for i in 0..self.st.len() {
-            while self.st[i].next_release <= self.now {
-                let rel = self.st[i].next_release;
-                self.st[i].next_release += self.ts.tasks[i].period;
-                if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
-                    self.start_job(i, rel);
-                } else {
-                    self.st[i].backlog.push_back(rel);
-                }
+    /// Pop and handle every due release from the calendar. Ties pop in
+    /// task order (heap keyed on `(time, task)`), matching the seed
+    /// engine's index-order scan. Returns whether any release fired.
+    fn release_due(&mut self) -> bool {
+        let mut any = false;
+        while let Some(&Reverse((t, i))) = self.calendar.peek() {
+            if t > self.now {
+                break;
             }
+            self.calendar.pop();
+            self.calendar.push(Reverse((t + self.ts.tasks[i].period, i)));
+            if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
+                self.start_job(i, t);
+            } else {
+                self.st[i].backlog.push_back(t);
+            }
+            any = true;
         }
+        any
     }
 
     fn next_horizon(&self) -> Time {
         let mut h = self.cfg.duration;
-        for s in &self.st {
-            h = h.min(s.next_release);
+        // Release horizon: the calendar keeps the global minimum at its
+        // root — one peek instead of the seed engine's O(n) scan.
+        if let Some(&Reverse((t, _))) = self.calendar.peek() {
+            h = h.min(t);
         }
         for &slot in &self.cpu_alloc {
             if let Some(i) = slot {
@@ -628,6 +698,14 @@ impl<'a> Engine<'a> {
                 };
                 if progresses {
                     self.st[i].cpu_rem -= dt.min(self.st[i].cpu_rem);
+                    // G^m drained with the kernel already done: the
+                    // segment is completion-ready.
+                    if self.st[i].cpu_rem == 0
+                        && matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].gpu_rem == 0
+                    {
+                        self.gpu_done.push(i);
+                    }
                 }
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
@@ -660,6 +738,10 @@ impl<'a> Engine<'a> {
                 self.st[i].gpu_rem -= d;
                 self.gpus[g].slice_rem = self.gpus[g].slice_rem.saturating_sub(dt);
                 self.run.gpu_busy += d;
+                // Kernel drained with G^m already done.
+                if self.st[i].gpu_rem == 0 && self.st[i].cpu_rem == 0 {
+                    self.gpu_done.push(i);
+                }
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
                         resource: Resource::Gpu(g),
@@ -674,51 +756,20 @@ impl<'a> Engine<'a> {
         self.now += dt;
     }
 
-    /// Allocation-free state fingerprint for settle()'s quiescence check
-    /// (perf: replaces two Vec clones + a VecDeque clone per round — see
-    /// EXPERIMENTS.md §Perf). FNV-1a over every field that a zero-time
-    /// transition can change; a 64-bit collision is ~2^-64 per round and
-    /// at worst delays a transition to the next event timestamp.
-    fn fingerprint(&self) -> u64 {
-        const FNV_PRIME: u64 = 0x100000001b3;
-        let mut h = 0xcbf29ce484222325u64;
-        let mut mix = |v: u64| {
-            h ^= v;
-            h = h.wrapping_mul(FNV_PRIME);
-        };
-        for s in &self.st {
-            let phase = match s.phase {
-                Phase::Idle => 0u64,
-                Phase::Cpu => 1,
-                Phase::DrvCall { ending: false } => 2,
-                Phase::DrvCall { ending: true } => 3,
-                Phase::LockWait => 4,
-                Phase::GpuActive => 5,
-            };
-            mix(phase);
-            mix(s.seg as u64);
-            mix(s.cpu_rem);
-            mix(s.gpu_rem);
-        }
-        for gs in &self.gpus {
-            mix(gs.context.map_or(u64::MAX, |c| c as u64));
-            mix(gs.switch_rem);
-            for &r in &gs.ring {
-                mix(r as u64);
-            }
-            mix(gs.running.len() as u64);
-            mix(gs.pending.len() as u64);
-        }
-        h
-    }
-
     /// Handle all zero-time transitions at `now` until quiescent.
+    ///
+    /// Quiescence is change-tracked: every handler reports whether it
+    /// mutated scheduler-visible state, and the loop exits as soon as a
+    /// full round performs no transition — replacing the seed engine's
+    /// per-round full-state FNV fingerprint. The tracked mutation set
+    /// is a superset of what the fingerprint hashed (backlog-only
+    /// releases additionally flag, costing at most one extra no-op
+    /// round), so this never exits earlier than the seed engine;
+    /// `sim::reference` + the trace-equivalence suite pin the schedules
+    /// bit-identical.
     fn settle(&mut self) {
-        // One fingerprint per round: round k's "after" is round k+1's
-        // "before" (§Perf iteration 2).
-        let mut prev = self.fingerprint();
         for _round in 0..10_000 {
-            self.release_due();
+            let mut changed = self.release_due();
 
             // CPU-side completions (task must hold its CPU to finish
             // CPU-bound work).
@@ -727,28 +778,43 @@ impl<'a> Engine<'a> {
                 if let Some(i) = self.cpu_alloc[core] {
                     if self.st[i].cpu_rem == 0 {
                         match self.st[i].phase {
-                            Phase::Cpu => self.finish_cpu_segment(i),
-                            Phase::DrvCall { .. } => self.finish_driver_call(i),
+                            Phase::Cpu => {
+                                self.finish_cpu_segment(i);
+                                changed = true;
+                            }
+                            Phase::DrvCall { .. } => {
+                                self.finish_driver_call(i);
+                                changed = true;
+                            }
                             _ => {}
                         }
                     }
                 }
             }
 
-            // GPU-segment completions: both halves done.
-            for i in 0..self.st.len() {
-                if matches!(self.st[i].phase, Phase::GpuActive)
-                    && self.st[i].cpu_rem == 0
-                    && self.st[i].gpu_rem == 0
-                {
-                    self.finish_gpu_segment(i);
+            // GPU-segment completions: drained from the dirty candidate
+            // list (maintained where remaining work hits zero) instead
+            // of an O(n) phase scan; candidates re-check on pop and are
+            // processed in ascending task order like the seed scan.
+            if !self.gpu_done.is_empty() {
+                let mut done = std::mem::take(&mut self.gpu_done);
+                done.sort_unstable();
+                done.dedup();
+                for i in done {
+                    if matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].cpu_rem == 0
+                        && self.st[i].gpu_rem == 0
+                    {
+                        self.finish_gpu_segment(i);
+                        changed = true;
+                    }
                 }
             }
 
             // Lock grants (one lock per engine).
             if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
                 for g in 0..self.gpus.len() {
-                    self.try_grant_lock(g);
+                    changed |= self.try_grant_lock(g);
                 }
             }
 
@@ -780,6 +846,7 @@ impl<'a> Engine<'a> {
                         if let Some(k) = promote {
                             self.gpus[g].pending.retain(|&x| x != k);
                             self.gpus[g].running.push(k);
+                            changed = true;
                         }
                     }
                 }
@@ -787,7 +854,7 @@ impl<'a> Engine<'a> {
 
             // Ring upkeep + slice rotation, per engine.
             for g in 0..self.gpus.len() {
-                self.refresh_ring(g);
+                changed |= self.refresh_ring(g);
                 if let Some(i) = self.gpus[g].context {
                     if self.gpus[g].switch_rem == 0
                         && self.gpus[g].slice_rem == 0
@@ -795,19 +862,21 @@ impl<'a> Engine<'a> {
                         && self.gpus[g].ring.front() == Some(&i)
                     {
                         self.gpus[g].ring.rotate_left(1);
+                        changed = true;
                     } else if self.gpus[g].ring.len() == 1 && self.gpus[g].slice_rem == 0 {
+                        // Slice refill of a lone TSG: not scheduler-
+                        // visible (the seed fingerprint ignored
+                        // slice_rem too) — deliberately unflagged.
                         self.gpus[g].slice_rem = self.ts.platform.gpus[g].tsg_slice;
                     }
                 }
-                self.update_gpu_context(g);
+                changed |= self.update_gpu_context(g);
             }
             self.cpu_alloc = self.compute_cpu_alloc();
 
-            let cur = self.fingerprint();
-            if cur == prev {
+            if !changed {
                 return;
             }
-            prev = cur;
         }
         panic!("settle() did not quiesce at t = {} µs", self.now);
     }
@@ -819,10 +888,9 @@ impl<'a> Engine<'a> {
             let dt = h.saturating_sub(self.now);
             if dt == 0 {
                 let next = self
-                    .st
-                    .iter()
-                    .map(|s| s.next_release)
-                    .min()
+                    .calendar
+                    .peek()
+                    .map(|&Reverse((t, _))| t)
                     .unwrap_or(self.cfg.duration);
                 if next <= self.now {
                     break; // safety: nothing can advance

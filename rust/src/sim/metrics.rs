@@ -6,7 +6,7 @@ use crate::model::Time;
 use crate::util::stats::Summary;
 
 /// Metrics collected for one task over a simulation run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TaskMetrics {
     /// Response time of every completed job (µs).
     pub response_times: Vec<Time>,
@@ -33,7 +33,7 @@ impl TaskMetrics {
 }
 
 /// Whole-run aggregates.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RunMetrics {
     /// GPU context switches performed (entries × θ charged).
     pub gpu_context_switches: u64,

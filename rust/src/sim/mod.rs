@@ -24,9 +24,11 @@
 pub mod engine;
 pub mod metrics;
 pub mod perfetto;
+pub mod reference;
 pub mod trace;
 
 pub use engine::{simulate, SimConfig, SimResult};
+pub use reference::simulate_reference;
 pub use metrics::TaskMetrics;
 pub use trace::{Trace, TraceEvent};
 

@@ -1,0 +1,667 @@
+//! The seed (pre-calendar) discrete-event engine, retained verbatim as
+//! the executable specification of [`crate::sim::engine`].
+//!
+//! This is the recompute-on-event engine exactly as it shipped before
+//! the event-calendar optimisation: O(n) release scans per settle
+//! round, an FNV-1a full-state fingerprint per round for the
+//! quiescence check, and allocating ring refreshes. Its only purpose is
+//! the trace-for-trace equivalence property in
+//! `rust/tests/kernel_equivalence.rs` — the optimised engine must
+//! reproduce every release, completion, trace interval and metric of
+//! this one, bit for bit. Never call it from a sweep hot path.
+
+use std::collections::VecDeque;
+
+use crate::model::{TaskSet, Time, WaitMode};
+use crate::sim::engine::{SimConfig, SimResult};
+use crate::sim::metrics::{RunMetrics, TaskMetrics};
+use crate::sim::trace::{Activity, Resource, Trace, TraceEvent};
+use crate::sim::Policy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Idle,
+    Cpu,
+    DrvCall { ending: bool },
+    LockWait,
+    GpuActive,
+}
+
+#[derive(Debug, Clone)]
+struct TState {
+    phase: Phase,
+    seg: usize,
+    cpu_rem: Time,
+    gpu_rem: Time,
+    release: Time,
+    abs_deadline: Time,
+    backlog: VecDeque<Time>,
+    next_release: Time,
+    drv_started: Time,
+    ticket: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct GpuState {
+    running: Vec<usize>,
+    pending: Vec<usize>,
+    context: Option<usize>,
+    switch_rem: Time,
+    slice_rem: Time,
+    ring: VecDeque<usize>,
+    lock_holder: Option<usize>,
+    lock_queue: Vec<(usize, u64)>,
+    ticket_counter: u64,
+}
+
+struct Engine<'a> {
+    ts: &'a TaskSet,
+    cfg: &'a SimConfig,
+    now: Time,
+    st: Vec<TState>,
+    gpus: Vec<GpuState>,
+    metrics: Vec<TaskMetrics>,
+    run: RunMetrics,
+    trace: Option<Trace>,
+    cpu_alloc: Vec<Option<usize>>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(ts: &'a TaskSet, cfg: &'a SimConfig) -> Engine<'a> {
+        let n = ts.tasks.len();
+        let st = (0..n)
+            .map(|i| TState {
+                phase: Phase::Idle,
+                seg: 0,
+                cpu_rem: 0,
+                gpu_rem: 0,
+                release: 0,
+                abs_deadline: 0,
+                backlog: Default::default(),
+                next_release: cfg.offsets.get(i).copied().unwrap_or(0),
+                drv_started: 0,
+                ticket: 0,
+            })
+            .collect();
+        Engine {
+            ts,
+            cfg,
+            now: 0,
+            st,
+            gpus: vec![GpuState::default(); ts.platform.num_gpus()],
+            metrics: vec![TaskMetrics::default(); n],
+            run: RunMetrics::default(),
+            trace: cfg.trace.then(Trace::default),
+            cpu_alloc: vec![None; ts.platform.num_cpus],
+        }
+    }
+
+    fn gpu_of(&self, i: usize) -> usize {
+        self.ts.tasks[i].gpu
+    }
+
+    fn alpha_of(&self, i: usize) -> Time {
+        let ctx = self.ts.platform.gpus[self.gpu_of(i)];
+        ctx.epsilon.saturating_sub(ctx.theta)
+    }
+
+    fn gpu_rank(&self, i: usize) -> u64 {
+        match self.cfg.policy {
+            Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
+            _ => self.ts.tasks[i].gpu_prio as u64,
+        }
+    }
+
+    fn start_job(&mut self, i: usize, release: Time) {
+        let t = &self.ts.tasks[i];
+        let s = &mut self.st[i];
+        s.release = release;
+        s.abs_deadline = release + t.deadline;
+        s.seg = 0;
+        s.phase = Phase::Cpu;
+        s.cpu_rem = t.cpu_segments[0];
+        if let Some(tr) = &mut self.trace {
+            tr.releases.push((i, release));
+        }
+    }
+
+    fn finish_cpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        let seg = self.st[i].seg;
+        if seg < t.eta_g() {
+            match self.cfg.policy {
+                Policy::Gcaps | Policy::GcapsEdf => {
+                    self.st[i].phase = Phase::DrvCall { ending: false };
+                    self.st[i].cpu_rem = self.alpha_of(i);
+                    self.st[i].drv_started = self.now;
+                }
+                Policy::Mpcp | Policy::FmlpPlus => {
+                    let g = self.gpu_of(i);
+                    self.st[i].phase = Phase::LockWait;
+                    self.gpus[g].ticket_counter += 1;
+                    self.st[i].ticket = self.gpus[g].ticket_counter;
+                    let ticket = self.st[i].ticket;
+                    self.gpus[g].lock_queue.push((i, ticket));
+                }
+                Policy::TsgRr => self.begin_gpu_segment(i),
+            }
+        } else {
+            self.complete_job(i);
+        }
+    }
+
+    fn begin_gpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        let seg = self.st[i].seg;
+        self.st[i].phase = Phase::GpuActive;
+        self.st[i].cpu_rem = t.gpu_segments[seg].misc;
+        self.st[i].gpu_rem = t.gpu_segments[seg].exec;
+    }
+
+    fn finish_gpu_segment(&mut self, i: usize) {
+        match self.cfg.policy {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                self.st[i].phase = Phase::DrvCall { ending: true };
+                self.st[i].cpu_rem = self.alpha_of(i);
+                self.st[i].drv_started = self.now;
+            }
+            Policy::Mpcp | Policy::FmlpPlus => {
+                let g = self.gpu_of(i);
+                debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
+                self.gpus[g].lock_holder = None;
+                self.next_cpu_segment(i);
+            }
+            Policy::TsgRr => self.next_cpu_segment(i),
+        }
+    }
+
+    fn next_cpu_segment(&mut self, i: usize) {
+        let t = &self.ts.tasks[i];
+        self.st[i].seg += 1;
+        self.st[i].phase = Phase::Cpu;
+        self.st[i].cpu_rem = t.cpu_segments[self.st[i].seg];
+    }
+
+    fn complete_job(&mut self, i: usize) {
+        let s = &mut self.st[i];
+        let resp = self.now - s.release;
+        let missed = self.now > s.abs_deadline;
+        self.metrics[i].response_times.push(resp);
+        self.metrics[i].jobs += 1;
+        if missed {
+            self.metrics[i].deadline_misses += 1;
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.completions.push((i, self.now));
+        }
+        s.phase = Phase::Idle;
+        if let Some(next) = s.backlog.pop_front() {
+            self.start_job(i, next);
+        }
+    }
+
+    fn finish_driver_call(&mut self, i: usize) {
+        let g = self.gpu_of(i);
+        let ending = matches!(self.st[i].phase, Phase::DrvCall { ending: true });
+        let theta = self.ts.platform.gpus[g].theta;
+        self.metrics[i]
+            .runlist_updates
+            .push(self.now - self.st[i].drv_started + theta);
+        let me = &self.ts.tasks[i];
+        if !ending {
+            if me.best_effort {
+                let rt_running =
+                    self.gpus[g].running.iter().any(|&k| !self.ts.tasks[k].best_effort);
+                if rt_running {
+                    self.gpus[g].pending.push(i);
+                } else {
+                    self.gpus[g].running.push(i);
+                }
+            } else {
+                let tau_h = self.gpus[g]
+                    .running
+                    .iter()
+                    .copied()
+                    .max_by_key(|&k| self.gpu_rank(k));
+                let preempt = match tau_h {
+                    None => true,
+                    Some(h) => self.gpu_rank(i) > self.gpu_rank(h),
+                };
+                if preempt {
+                    let displaced: Vec<usize> = self.gpus[g].running.drain(..).collect();
+                    self.gpus[g].pending.extend(displaced);
+                    self.gpus[g].running.push(i);
+                } else {
+                    self.gpus[g].pending.push(i);
+                }
+            }
+            self.begin_gpu_segment(i);
+        } else {
+            self.gpus[g].running.retain(|&k| k != i);
+            self.gpus[g].pending.retain(|&k| k != i);
+            let tau_k = self.gpus[g]
+                .pending
+                .iter()
+                .copied()
+                .filter(|&k| !self.ts.tasks[k].best_effort)
+                .max_by_key(|&k| self.gpu_rank(k));
+            if let Some(k) = tau_k {
+                self.gpus[g].pending.retain(|&x| x != k);
+                self.gpus[g].running.push(k);
+            } else {
+                let all: Vec<usize> = self.gpus[g].pending.drain(..).collect();
+                self.gpus[g].running.extend(all);
+            }
+            self.next_cpu_segment(i);
+        }
+    }
+
+    fn try_grant_lock(&mut self, g: usize) {
+        if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
+            return;
+        }
+        let idx = match self.cfg.policy {
+            Policy::Mpcp => self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(t, tk))| {
+                    (self.ts.tasks[t].cpu_prio, std::cmp::Reverse(tk))
+                })
+                .map(|(j, _)| j)
+                .unwrap(),
+            Policy::FmlpPlus => self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &(_, tk))| tk)
+                .map(|(j, _)| j)
+                .unwrap(),
+            _ => unreachable!(),
+        };
+        let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
+        self.gpus[g].lock_holder = Some(task);
+        self.begin_gpu_segment(task);
+    }
+
+    fn wants_cpu(&self, i: usize) -> bool {
+        match self.st[i].phase {
+            Phase::Cpu | Phase::DrvCall { .. } => true,
+            Phase::GpuActive => {
+                self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+            }
+            Phase::LockWait => self.ts.tasks[i].mode == WaitMode::BusyWait,
+            Phase::Idle => false,
+        }
+    }
+
+    fn eff_prio(&self, i: usize) -> u64 {
+        let base = self.ts.tasks[i].cpu_prio as u64;
+        let boosted = self.gpus[self.gpu_of(i)].lock_holder == Some(i)
+            && matches!(self.st[i].phase, Phase::GpuActive)
+            && self.st[i].cpu_rem > 0;
+        if boosted {
+            return (1 << 40) | base;
+        }
+        if matches!(self.st[i].phase, Phase::DrvCall { .. })
+            && self.st[i].cpu_rem < self.alpha_of(i)
+        {
+            return (1 << 41) | base;
+        }
+        base
+    }
+
+    fn compute_cpu_alloc(&self) -> Vec<Option<usize>> {
+        let mut alloc = vec![None::<usize>; self.ts.platform.num_cpus];
+        for (i, t) in self.ts.tasks.iter().enumerate() {
+            if !self.wants_cpu(i) {
+                continue;
+            }
+            let p = self.eff_prio(i);
+            match alloc[t.core] {
+                None => alloc[t.core] = Some(i),
+                Some(cur) => {
+                    let pc = self.eff_prio(cur);
+                    if (p, std::cmp::Reverse(i)) > (pc, std::cmp::Reverse(cur)) {
+                        alloc[t.core] = Some(i);
+                    }
+                }
+            }
+        }
+        alloc
+    }
+
+    fn ring_eligible(&self, i: usize) -> bool {
+        if !(matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0) {
+            return false;
+        }
+        match self.cfg.policy {
+            Policy::TsgRr => true,
+            Policy::Gcaps | Policy::GcapsEdf => {
+                self.ts.tasks[i].best_effort
+                    && self.gpus[self.gpu_of(i)].running.contains(&i)
+            }
+            _ => false,
+        }
+    }
+
+    fn refresh_ring(&mut self, g: usize) {
+        let eligible: Vec<usize> = (0..self.st.len())
+            .filter(|&i| self.gpu_of(i) == g && self.ring_eligible(i))
+            .collect();
+        self.gpus[g].ring.retain(|i| eligible.contains(i));
+        for i in eligible {
+            if !self.gpus[g].ring.contains(&i) {
+                self.gpus[g].ring.push_back(i);
+            }
+        }
+    }
+
+    fn desired_gpu_context(&self, g: usize) -> Option<usize> {
+        let execing = |i: usize| {
+            matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+        };
+        match self.cfg.policy {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                let rt = self.gpus[g]
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&i| !self.ts.tasks[i].best_effort && execing(i))
+                    .max_by_key(|&i| self.gpu_rank(i));
+                rt.or_else(|| self.gpus[g].ring.front().copied())
+            }
+            Policy::TsgRr => self.gpus[g].ring.front().copied(),
+            Policy::Mpcp | Policy::FmlpPlus => {
+                self.gpus[g].lock_holder.filter(|&i| execing(i))
+            }
+        }
+    }
+
+    fn update_gpu_context(&mut self, g: usize) {
+        let want = self.desired_gpu_context(g);
+        if want == self.gpus[g].context {
+            return;
+        }
+        match want {
+            None => {
+                self.gpus[g].context = None;
+                self.gpus[g].switch_rem = 0;
+            }
+            Some(i) => {
+                let charge = match self.cfg.policy {
+                    Policy::Mpcp | Policy::FmlpPlus => 0,
+                    Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
+                        self.ts.platform.gpus[g].theta
+                    }
+                };
+                self.gpus[g].context = Some(i);
+                self.gpus[g].switch_rem = charge;
+                self.gpus[g].slice_rem = self.ts.platform.gpus[g].tsg_slice;
+                if charge > 0 {
+                    self.run.gpu_context_switches += 1;
+                }
+            }
+        }
+    }
+
+    fn release_due(&mut self) {
+        for i in 0..self.st.len() {
+            while self.st[i].next_release <= self.now {
+                let rel = self.st[i].next_release;
+                self.st[i].next_release += self.ts.tasks[i].period;
+                if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
+                    self.start_job(i, rel);
+                } else {
+                    self.st[i].backlog.push_back(rel);
+                }
+            }
+        }
+    }
+
+    fn next_horizon(&self) -> Time {
+        let mut h = self.cfg.duration;
+        for s in &self.st {
+            h = h.min(s.next_release);
+        }
+        for &slot in &self.cpu_alloc {
+            if let Some(i) = slot {
+                if self.st[i].cpu_rem > 0 {
+                    match self.st[i].phase {
+                        Phase::Cpu | Phase::DrvCall { .. } | Phase::GpuActive => {
+                            h = h.min(self.now + self.st[i].cpu_rem)
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        for gs in &self.gpus {
+            if let Some(i) = gs.context {
+                if gs.switch_rem > 0 {
+                    h = h.min(self.now + gs.switch_rem);
+                } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+                {
+                    h = h.min(self.now + self.st[i].gpu_rem);
+                    if gs.ring.len() > 1 && gs.ring.front() == Some(&i) {
+                        h = h.min(self.now + gs.slice_rem);
+                    }
+                }
+            }
+        }
+        h.max(self.now)
+    }
+
+    fn advance(&mut self, dt: Time) {
+        if dt == 0 {
+            return;
+        }
+        for core in 0..self.cpu_alloc.len() {
+            if let Some(i) = self.cpu_alloc[core] {
+                let (act, progresses) = match self.st[i].phase {
+                    Phase::Cpu => (Activity::CpuSeg, true),
+                    Phase::DrvCall { .. } => (Activity::DriverCall, true),
+                    Phase::GpuActive => {
+                        if self.st[i].cpu_rem > 0 {
+                            (Activity::GpuMisc, true)
+                        } else {
+                            (Activity::BusyWait, false)
+                        }
+                    }
+                    Phase::LockWait => (Activity::BusyWait, false),
+                    Phase::Idle => (Activity::CpuSeg, false),
+                };
+                if progresses {
+                    self.st[i].cpu_rem -= dt.min(self.st[i].cpu_rem);
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Core(core),
+                        task: i,
+                        activity: act,
+                        start: self.now,
+                        end: self.now + dt,
+                    });
+                }
+            }
+        }
+        for g in 0..self.gpus.len() {
+            let Some(i) = self.gpus[g].context else { continue };
+            if self.gpus[g].switch_rem > 0 {
+                let d = dt.min(self.gpus[g].switch_rem);
+                self.gpus[g].switch_rem -= d;
+                self.run.gpu_switch_time += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
+                let d = dt.min(self.st[i].gpu_rem);
+                self.st[i].gpu_rem -= d;
+                self.gpus[g].slice_rem = self.gpus[g].slice_rem.saturating_sub(dt);
+                self.run.gpu_busy += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::GpuExec,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            }
+        }
+        self.now += dt;
+    }
+
+    fn fingerprint(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        for s in &self.st {
+            let phase = match s.phase {
+                Phase::Idle => 0u64,
+                Phase::Cpu => 1,
+                Phase::DrvCall { ending: false } => 2,
+                Phase::DrvCall { ending: true } => 3,
+                Phase::LockWait => 4,
+                Phase::GpuActive => 5,
+            };
+            mix(phase);
+            mix(s.seg as u64);
+            mix(s.cpu_rem);
+            mix(s.gpu_rem);
+        }
+        for gs in &self.gpus {
+            mix(gs.context.map_or(u64::MAX, |c| c as u64));
+            mix(gs.switch_rem);
+            for &r in &gs.ring {
+                mix(r as u64);
+            }
+            mix(gs.running.len() as u64);
+            mix(gs.pending.len() as u64);
+        }
+        h
+    }
+
+    fn settle(&mut self) {
+        let mut prev = self.fingerprint();
+        for _round in 0..10_000 {
+            self.release_due();
+
+            self.cpu_alloc = self.compute_cpu_alloc();
+            for core in 0..self.cpu_alloc.len() {
+                if let Some(i) = self.cpu_alloc[core] {
+                    if self.st[i].cpu_rem == 0 {
+                        match self.st[i].phase {
+                            Phase::Cpu => self.finish_cpu_segment(i),
+                            Phase::DrvCall { .. } => self.finish_driver_call(i),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+
+            for i in 0..self.st.len() {
+                if matches!(self.st[i].phase, Phase::GpuActive)
+                    && self.st[i].cpu_rem == 0
+                    && self.st[i].gpu_rem == 0
+                {
+                    self.finish_gpu_segment(i);
+                }
+            }
+
+            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
+                for g in 0..self.gpus.len() {
+                    self.try_grant_lock(g);
+                }
+            }
+
+            if matches!(self.cfg.policy, Policy::Gcaps | Policy::GcapsEdf) {
+                let execing = |st: &TState| {
+                    matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
+                };
+                for g in 0..self.gpus.len() {
+                    let any_running_exec =
+                        self.gpus[g].running.iter().any(|&k| execing(&self.st[k]));
+                    if !any_running_exec {
+                        let promote = self.gpus[g]
+                            .pending
+                            .iter()
+                            .copied()
+                            .filter(|&k| {
+                                !self.ts.tasks[k].best_effort && execing(&self.st[k])
+                            })
+                            .max_by_key(|&k| self.gpu_rank(k));
+                        if let Some(k) = promote {
+                            self.gpus[g].pending.retain(|&x| x != k);
+                            self.gpus[g].running.push(k);
+                        }
+                    }
+                }
+            }
+
+            for g in 0..self.gpus.len() {
+                self.refresh_ring(g);
+                if let Some(i) = self.gpus[g].context {
+                    if self.gpus[g].switch_rem == 0
+                        && self.gpus[g].slice_rem == 0
+                        && self.gpus[g].ring.len() > 1
+                        && self.gpus[g].ring.front() == Some(&i)
+                    {
+                        self.gpus[g].ring.rotate_left(1);
+                    } else if self.gpus[g].ring.len() == 1 && self.gpus[g].slice_rem == 0 {
+                        self.gpus[g].slice_rem = self.ts.platform.gpus[g].tsg_slice;
+                    }
+                }
+                self.update_gpu_context(g);
+            }
+            self.cpu_alloc = self.compute_cpu_alloc();
+
+            let cur = self.fingerprint();
+            if cur == prev {
+                return;
+            }
+            prev = cur;
+        }
+        panic!("settle() did not quiesce at t = {} µs", self.now);
+    }
+
+    fn run(mut self) -> SimResult {
+        while self.now < self.cfg.duration {
+            self.settle();
+            let h = self.next_horizon();
+            let dt = h.saturating_sub(self.now);
+            if dt == 0 {
+                let next = self
+                    .st
+                    .iter()
+                    .map(|s| s.next_release)
+                    .min()
+                    .unwrap_or(self.cfg.duration);
+                if next <= self.now {
+                    break;
+                }
+                self.advance(next.min(self.cfg.duration) - self.now);
+            } else {
+                self.advance(dt);
+            }
+        }
+        self.run.horizon = self.now;
+        SimResult { per_task: self.metrics, run: self.run, trace: self.trace }
+    }
+}
+
+/// Simulate `ts` under `cfg` with the seed engine.
+pub fn simulate_reference(ts: &TaskSet, cfg: &SimConfig) -> SimResult {
+    debug_assert!(ts.validate().is_ok(), "invalid taskset: {:?}", ts.validate());
+    Engine::new(ts, cfg).run()
+}

@@ -55,7 +55,7 @@ pub struct TraceEvent {
 }
 
 /// A full run trace.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     pub events: Vec<TraceEvent>,
     pub releases: Vec<(usize, Time)>,

@@ -1,0 +1,184 @@
+//! The perf-kernel contract, enforced end-to-end:
+//!
+//! 1. **RTA kernel ≡ naive reference** — every analysis family (and the
+//!    full Fig. 8 GCAPS procedure incl. the Audsley search) must return
+//!    bit-identical responses through the precomputed `Prepared` kernel
+//!    and through the retained iterator-chain reference path, over
+//!    hundreds of random tasksets spanning 1/2/4 GPU engines, both wait
+//!    modes and all 8 approaches.
+//! 2. **Event-calendar DES ≡ seed engine** — the heap-calendar engine
+//!    must reproduce the seed engine's runs event-for-event: identical
+//!    trace intervals, releases, completions, per-task metrics and run
+//!    aggregates, across all 5 policies and random offset patterns.
+//!
+//! Together these pin every experiment CSV byte across the perf
+//! refactor: the sweeps consume exactly the outputs compared here.
+
+use gcaps::analysis::{analyze, analyze_with_gpu_prio, reference, Approach};
+use gcaps::model::{Platform, Time, WaitMode};
+use gcaps::sim::{simulate, simulate_reference, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::check::forall;
+use gcaps::util::rng::Pcg32;
+
+const GPU_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn params(num_gpus: usize, mode: WaitMode) -> GenParams {
+    GenParams {
+        mode,
+        platform: Platform::default().with_num_gpus(num_gpus),
+        ..GenParams::default()
+    }
+}
+
+#[test]
+fn kernel_matches_naive_reference_for_all_8_approaches() {
+    // ≥ 200 random tasksets: 204 cases cycling the engine count, each
+    // generating a suspend and a busy variant and running all 8
+    // approaches through both paths.
+    let mut case = 0usize;
+    forall("RTA kernel = naive reference", 204, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        let suspend = generate(rng, &params(g, WaitMode::SelfSuspend));
+        let busy = generate(rng, &params(g, WaitMode::BusyWait));
+        for a in Approach::ALL {
+            let ts = if a.is_busy() { &busy } else { &suspend };
+            let kernel = analyze(ts, a);
+            let naive = reference::analyze(ts, a);
+            if kernel.response != naive.response {
+                return Err(format!(
+                    "{} (g = {g}): kernel {:?} != naive {:?}",
+                    a.label(),
+                    kernel.response,
+                    naive.response
+                ));
+            }
+            if kernel.schedulable != naive.schedulable {
+                return Err(format!("{} (g = {g}): schedulable bit diverged", a.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_gcaps_procedure_matches_reference_incl_audsley() {
+    // The Fig. 8 GCAPS cells go through analyze_with_gpu_prio (base RM
+    // run + Audsley retry). The kernel-backed search shares one
+    // Prepared across levels — its placements and final responses must
+    // match the naive search exactly.
+    let mut case = 0usize;
+    forall("gcaps+audsley kernel = reference", 60, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        for (busy, mode) in [(false, WaitMode::SelfSuspend), (true, WaitMode::BusyWait)] {
+            let ts = generate(rng, &params(g, mode));
+            let (res_k, prios_k) = analyze_with_gpu_prio(&ts, busy);
+            let (res_n, prios_n) = reference::analyze_with_gpu_prio(&ts, busy);
+            if res_k.response != res_n.response {
+                return Err(format!(
+                    "busy = {busy}, g = {g}: procedure responses diverged"
+                ));
+            }
+            if prios_k != prios_n {
+                return Err(format!(
+                    "busy = {busy}, g = {g}: Audsley assignment diverged \
+                     ({prios_k:?} vs {prios_n:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn calendar_engine_matches_seed_engine_traces() {
+    const POLICIES: [Policy; 5] =
+        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+    let mut case = 0usize;
+    forall("calendar DES = seed DES", 30, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        let ts = generate(rng, &params(g, WaitMode::SelfSuspend));
+        let horizon = ts.tasks.iter().map(|t| t.period).max().unwrap() * 4;
+        // Synchronous release plus one random offset pattern.
+        let mut patterns: Vec<Vec<Time>> = vec![vec![0; ts.len()]];
+        patterns.push(ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect());
+        for policy in POLICIES {
+            for offsets in &patterns {
+                let cfg = SimConfig::new(policy, horizon)
+                    .with_offsets(offsets.clone())
+                    .with_trace();
+                let new = simulate(&ts, &cfg);
+                let old = simulate_reference(&ts, &cfg);
+                if new.per_task != old.per_task {
+                    return Err(format!("{policy:?}: per-task metrics diverged"));
+                }
+                if new.run != old.run {
+                    return Err(format!("{policy:?}: run aggregates diverged"));
+                }
+                if new.trace != old.trace {
+                    let (a, b) = (new.trace.unwrap(), old.trace.unwrap());
+                    let detail = if a.releases != b.releases {
+                        "releases"
+                    } else if a.completions != b.completions {
+                        "completions"
+                    } else {
+                        "event intervals"
+                    };
+                    return Err(format!("{policy:?}: traces diverged in {detail}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn calendar_engine_handles_zero_length_edges_like_seed() {
+    // The dirty completion list's hardest inputs: zero-length CPU and
+    // GPU segments chain zero-time transitions. Both engines must agree
+    // on them too (mirrors the engine's own edge-case suite).
+    use gcaps::model::{ms, GpuSegment, Task, TaskSet};
+    let mk = |id: usize, core: usize, prio: u32| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(20.0),
+        deadline: ms(20.0),
+        cpu_segments: vec![0, 0],
+        gpu_segments: vec![GpuSegment::new(0, ms(2.0))],
+        core,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let mut zero_gpu = mk(1, 1, 1);
+    zero_gpu.gpu_segments = vec![GpuSegment::new(0, 0)];
+    zero_gpu.cpu_segments = vec![ms(1.0), 0];
+    let ts = TaskSet::new(vec![mk(0, 0, 2), zero_gpu], Platform::single(2, 1024, 200, 1000));
+    for policy in [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus]
+    {
+        let cfg = SimConfig::new(policy, ms(200.0)).with_trace();
+        let new = simulate(&ts, &cfg);
+        let old = simulate_reference(&ts, &cfg);
+        assert_eq!(new.per_task, old.per_task, "{policy:?}: metrics diverged");
+        assert_eq!(new.trace, old.trace, "{policy:?}: traces diverged");
+        assert!(new.per_task[0].jobs > 0, "{policy:?}: no jobs completed");
+    }
+}
+
+#[test]
+fn kernel_survives_deterministic_reruns() {
+    // Same taskset, two kernel runs: identical (guards against hidden
+    // state in the Prepared/Scratch reuse path).
+    let mut rng = Pcg32::seeded(7);
+    let ts = generate(&mut rng, &params(2, WaitMode::SelfSuspend));
+    for a in Approach::ALL {
+        let r1 = analyze(&ts, a);
+        let r2 = analyze(&ts, a);
+        assert_eq!(r1.response, r2.response, "{}", a.label());
+    }
+}
