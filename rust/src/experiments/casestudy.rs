@@ -22,11 +22,19 @@ pub enum Board {
 }
 
 impl Board {
-    pub fn platform(&self) -> Platform {
+    /// The registered `[gpu]` profile name (`model::config::GPU_PROFILES`)
+    /// this board preset is built from.
+    pub fn profile_name(&self) -> &'static str {
         match self {
-            Board::XavierNx => Platform::single(6, 1024, 250, 1000),
-            Board::OrinNano => Platform::single(6, 1024, 160, 1100),
+            Board::XavierNx => "xavier_nx",
+            Board::OrinNano => "orin_nano",
         }
+    }
+
+    pub fn platform(&self) -> Platform {
+        let ctx = crate::model::config::gpu_profile(self.profile_name())
+            .expect("board profile registered");
+        Platform { num_cpus: 6, gpus: vec![ctx] }
     }
 
     pub fn label(&self) -> &'static str {
@@ -305,6 +313,14 @@ pub fn run_table5(cfg: &ExpConfig) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn board_platforms_pin_the_measured_values() {
+        // Golden: the boards must keep producing the pre-profile bytes
+        // (Fig. 10/11/Table 5 CSVs depend on these constants).
+        assert_eq!(Board::XavierNx.platform(), Platform::single(6, 1024, 250, 1000));
+        assert_eq!(Board::OrinNano.platform(), Platform::single(6, 1024, 160, 1100));
+    }
 
     #[test]
     fn table4_taskset_valid() {

@@ -183,16 +183,7 @@ pub fn run_panel(panel: Panel, cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Ve
     let cells = sweep::grid2(points.len(), cfg.tasksets);
     let seed = cfg.seed;
     let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
-        let suspend = memo::taskset(seed, &params[pi], ti);
-        let busy_params =
-            GenParams { mode: WaitMode::BusyWait, ..params[pi].clone() };
-        let busy = memo::taskset(seed, &busy_params, ti);
-        let mut out = [false; 8];
-        for (k, a) in Approach::ALL.iter().enumerate() {
-            let ts = if a.is_busy() { &busy } else { &suspend };
-            out[k] = approach_schedulable(ts, *a);
-        }
-        out
+        crate::experiments::eight_approaches(seed, &params[pi], ti)
     });
 
     let mut series: Vec<(String, Vec<f64>)> = Approach::ALL

@@ -11,8 +11,33 @@ pub mod fig8;
 pub mod fig9;
 pub mod multigpu;
 pub mod overhead;
+pub mod scenarios;
 
 use std::path::PathBuf;
+
+use crate::analysis::{approach_schedulable, Approach};
+use crate::model::WaitMode;
+use crate::sweep::memo;
+use crate::taskgen::GenParams;
+
+/// Evaluate the eight Fig. 8 approaches on taskset `index` of `p`:
+/// suspend + busy variants of the same memoized draws, with the §7.1.1
+/// Audsley GPU-priority retry for the GCAPS rows. The shared per-cell
+/// recipe of the Fig. 8 panels, the multi-GPU sweep and the scenario
+/// sweeps — one definition so the harnesses cannot silently diverge.
+/// Results are in `Approach::ALL` order.
+pub fn eight_approaches(seed: u64, p: &GenParams, index: usize) -> [bool; 8] {
+    let susp = GenParams { mode: WaitMode::SelfSuspend, ..p.clone() };
+    let busy = GenParams { mode: WaitMode::BusyWait, ..p.clone() };
+    let suspend_ts = memo::taskset(seed, &susp, index);
+    let busy_ts = memo::taskset(seed, &busy, index);
+    let mut out = [false; 8];
+    for (k, a) in Approach::ALL.iter().enumerate() {
+        let ts = if a.is_busy() { &busy_ts } else { &suspend_ts };
+        out[k] = approach_schedulable(ts, *a);
+    }
+    out
+}
 
 /// Results directory: `$GCAPS_RESULTS` or `./results`.
 pub fn results_dir() -> PathBuf {

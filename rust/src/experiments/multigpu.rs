@@ -13,10 +13,10 @@
 //! GCAPS rows — the same procedure as the Fig. 8 panels, so g = 1
 //! reproduces the fig8 default point exactly.
 
-use crate::analysis::{approach_schedulable, Approach};
+use crate::analysis::Approach;
 use crate::experiments::{results_dir, ExpConfig};
 use crate::model::{Platform, WaitMode};
-use crate::sweep::{self, memo};
+use crate::sweep;
 use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
@@ -43,14 +43,8 @@ pub fn run_sweep(cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
     let cells = sweep::grid2(GPU_COUNTS.len(), cfg.tasksets);
     let seed = cfg.seed;
     let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(gi, ti)| {
-        let suspend = memo::taskset(seed, &params_for(GPU_COUNTS[gi], WaitMode::SelfSuspend), ti);
-        let busy = memo::taskset(seed, &params_for(GPU_COUNTS[gi], WaitMode::BusyWait), ti);
-        let mut out = [false; 8];
-        for (k, a) in Approach::ALL.iter().enumerate() {
-            let ts = if a.is_busy() { &busy } else { &suspend };
-            out[k] = approach_schedulable(ts, *a);
-        }
-        out
+        let p = params_for(GPU_COUNTS[gi], WaitMode::SelfSuspend);
+        crate::experiments::eight_approaches(seed, &p, ti)
     });
 
     let mut series: Vec<(String, Vec<f64>)> = Approach::ALL

@@ -1,0 +1,610 @@
+//! Scenario sweeps beyond the paper (the ROADMAP's "scenario sweeps"
+//! item): three harness families probing the design space where §7
+//! fixes a single board's ε/θ and a single GPU engine.
+//!
+//! 1. **ε×θ overhead grids per board** (`scenarios_epstheta.csv`):
+//!    schedulability of all 8 approaches at every cell of an ε×θ grid
+//!    scaled around each registered board profile
+//!    ([`crate::model::config::GPU_PROFILES`]). Overhead constants
+//!    dominate schedulability comparisons between preemptive and
+//!    server/lock-based approaches (Kim et al.'s server-based analysis
+//!    makes the same point), so the grid shows *where* each approach's
+//!    lead survives. The memo's platform-normalized key means every
+//!    grid cell analyses the **same** tasksets — the grid isolates the
+//!    overhead terms exactly.
+//! 2. **EDF vs FP** (`scenarios_edfvfp.csv`): the §8 EDF extension
+//!    (`Policy::GcapsEdf` in the DES) against fixed-priority GCAPS
+//!    (analysis + DES) across utilization × GPU-task-ratio — the
+//!    priority-policy axis the authors' follow-up work argues is the
+//!    decisive lever.
+//! 3. **Heterogeneous multi-GPU** (`scenarios_hetero.csv`): 2-engine
+//!    platforms whose engines carry *different* ε/θ/L (one fast + one
+//!    slow) against a uniform platform with the same **mean** per-engine
+//!    overheads, across utilization. Exercises the first-class
+//!    heterogeneous-platform path end-to-end: `Platform::heterogeneous`
+//!    → taskgen (WFD over engines) → per-engine analysis sets → DES.
+//!
+//! All three run through the sharded `sweep/` worker pool; results and
+//! CSV bytes are identical for every `--jobs` value
+//! (`rust/tests/scenarios.rs` pins it, plus per-sub-sweep anchors).
+//!
+//! Sampling note (same as the multi-GPU sweep): distinct platforms /
+//! generator knobs hash to distinct memo keys, so cross-point deltas
+//! compare independent taskset draws — distribution-level, not paired.
+
+use crate::analysis::{approach_schedulable, Approach};
+use crate::experiments::{eight_approaches, results_dir, ExpConfig};
+use crate::model::{config, ms, GpuContext, Platform, Time};
+use crate::sim::{simulate, Policy, SimConfig};
+use crate::sweep::{self, memo};
+use crate::taskgen::GenParams;
+use crate::util::csv::CsvTable;
+
+/// The sub-sweep names accepted by `gcaps exp scenarios --only <name>`.
+pub const SCENARIOS: [&str; 3] = ["epstheta", "edfvfp", "hetero"];
+
+/// DES horizon per replica (µs as ms input): 6–100 jobs per task at
+/// Table 3 periods (30–500 ms) — enough for aggregate miss ratios
+/// (long-period tasks contribute few jobs each, so per-point tails are
+/// noisier than the short-period mass), short enough for CI smoke
+/// grids.
+const DES_HORIZON_MS: f64 = 3_000.0;
+
+/// DES replica cap per sweep point — the simulation dominates the cell
+/// cost (the ablation harness bounds its miss-ratio sweep identically).
+const MAX_SIM_TASKSETS: usize = 60;
+
+/// RT deadline misses and jobs of one simulation run.
+fn rt_misses(ts: &crate::model::TaskSet, policy: Policy) -> (u64, u64) {
+    let res = simulate(ts, &SimConfig::new(policy, ms(DES_HORIZON_MS)));
+    let mut misses = 0u64;
+    let mut jobs = 0u64;
+    for t in ts.rt_tasks() {
+        misses += res.per_task[t.id].deadline_misses;
+        jobs += res.per_task[t.id].jobs;
+    }
+    (misses, jobs)
+}
+
+// ---------------------------------------------------------------------
+// (a) ε×θ grid per board profile
+// ---------------------------------------------------------------------
+
+/// Multipliers applied to each board profile's measured ε (rows) and θ
+/// (columns). Chosen so ε ≥ θ holds at every cell of both boards (α =
+/// ε − θ saturates at 0 otherwise).
+pub const EPS_FACTORS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+pub const THETA_FACTORS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// One ε×θ result row: (board, scaled engine context, per-approach
+/// schedulable ratios in `Approach::ALL` order).
+pub type EpsThetaRow = ((&'static str, GpuContext), [f64; 8]);
+
+fn scale(base: Time, f: f64) -> Time {
+    (base as f64 * f).round() as Time
+}
+
+/// The (board, scaled context) grid points — board-major, then ε-major,
+/// then θ-minor: the canonical cell and CSV row order.
+pub fn epstheta_points() -> Vec<(&'static str, GpuContext)> {
+    let mut pts = Vec::new();
+    for (board, base) in config::GPU_PROFILES {
+        for &fe in EPS_FACTORS.iter() {
+            for &ft in THETA_FACTORS.iter() {
+                pts.push((
+                    board,
+                    GpuContext {
+                        tsg_slice: base.tsg_slice,
+                        theta: scale(base.theta, ft),
+                        epsilon: scale(base.epsilon, fe),
+                    },
+                ));
+            }
+        }
+    }
+    pts
+}
+
+/// Sweep (a): all 8 approaches at every (board, ε, θ) grid cell.
+pub fn epstheta_sweep(cfg: &ExpConfig) -> Vec<EpsThetaRow> {
+    let points = epstheta_points();
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+        let (_, ctx) = points[pi];
+        let p = GenParams {
+            platform: Platform::default().with_gpu(0, ctx),
+            ..GenParams::default()
+        };
+        eight_approaches(seed, &p, ti)
+    });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pi, &point)| {
+            let slice = &per_cell[pi * n..(pi + 1) * n];
+            let mut ys = [0.0f64; 8];
+            for oks in slice {
+                for (k, &ok) in oks.iter().enumerate() {
+                    ys[k] += ok as usize as f64;
+                }
+            }
+            for y in ys.iter_mut() {
+                *y /= n.max(1) as f64;
+            }
+            (point, ys)
+        })
+        .collect()
+}
+
+/// Format sweep (a) as its CSV (pure — the determinism suite compares
+/// these bytes across worker counts).
+pub fn epstheta_csv(rows: &[EpsThetaRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "board",
+        "epsilon_us",
+        "theta_us",
+        "approach",
+        "schedulable_ratio",
+    ]);
+    for ((board, ctx), ys) in rows {
+        for (a, y) in Approach::ALL.iter().zip(ys) {
+            csv.row(vec![
+                board.to_string(),
+                ctx.epsilon.to_string(),
+                ctx.theta.to_string(),
+                a.label().to_string(),
+                format!("{y:.4}"),
+            ]);
+        }
+    }
+    csv
+}
+
+fn epstheta_report(rows: &[EpsThetaRow]) -> String {
+    let k = Approach::ALL
+        .iter()
+        .position(|a| *a == Approach::GcapsSuspend)
+        .unwrap();
+    let mut out = String::from(
+        "== Scenarios (a): ε×θ overhead grids (gcaps_suspend ratio shown; \
+         all 8 approaches in the CSV) ==\n",
+    );
+    for (board, _) in config::GPU_PROFILES {
+        let mut thetas: Vec<Time> = rows
+            .iter()
+            .filter(|((b, _), _)| *b == board)
+            .map(|((_, c), _)| c.theta)
+            .collect();
+        thetas.sort_unstable();
+        thetas.dedup();
+        let mut epss: Vec<Time> = rows
+            .iter()
+            .filter(|((b, _), _)| *b == board)
+            .map(|((_, c), _)| c.epsilon)
+            .collect();
+        epss.sort_unstable();
+        epss.dedup();
+        out.push_str(&format!("  [{board}]\n        ε\\θ(µs)"));
+        for t in &thetas {
+            out.push_str(&format!("{t:>7}"));
+        }
+        out.push('\n');
+        for e in &epss {
+            out.push_str(&format!("    {e:>11}"));
+            for t in &thetas {
+                let v = rows
+                    .iter()
+                    .find(|((b, c), _)| *b == board && c.epsilon == *e && c.theta == *t)
+                    .map(|(_, ys)| ys[k])
+                    .unwrap_or(0.0);
+                out.push_str(&format!("{v:>7.2}"));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// (b) EDF vs FP across utilization × GPU-task ratio
+// ---------------------------------------------------------------------
+
+pub const EDF_UTILS: [f64; 4] = [0.4, 0.5, 0.6, 0.7];
+pub const EDF_GPU_RATIOS: [f64; 4] = [0.2, 0.4, 0.6, 0.8];
+
+/// One EDF-vs-FP result row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdfVsFpRow {
+    pub util: f64,
+    pub gpu_ratio: f64,
+    /// GCAPS fixed-priority analysis acceptance (self-suspending,
+    /// §7.1.1 Audsley retry). No EDF response-time analysis exists —
+    /// the paper leaves it as future work — so the analysis column is
+    /// FP-only and the DES columns carry the comparison.
+    pub sched_fp: f64,
+    /// Simulated RT deadline-miss ratio, fixed-priority GCAPS.
+    pub miss_fp: f64,
+    /// Simulated RT deadline-miss ratio, the §8 EDF extension.
+    pub miss_edf: f64,
+}
+
+/// The generator knobs for one (utilization, GPU-ratio) point — shared
+/// by the sweep and its test anchor so both hash to the same memo key
+/// (bit-identical float expressions matter).
+pub fn edfvfp_params(util: f64, gpu_ratio: f64) -> GenParams {
+    GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        gpu_task_ratio: (gpu_ratio, gpu_ratio),
+        ..GenParams::default()
+    }
+}
+
+/// Sweep (b): FP analysis acceptance + FP/EDF DES miss ratios at every
+/// utilization × GPU-ratio point. The DES runs are capped at
+/// [`MAX_SIM_TASKSETS`] replicas per point.
+pub fn edfvfp_sweep(cfg: &ExpConfig) -> Vec<EdfVsFpRow> {
+    let points: Vec<(f64, f64)> = EDF_UTILS
+        .iter()
+        .flat_map(|&u| EDF_GPU_RATIOS.iter().map(move |&r| (u, r)))
+        .collect();
+    let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<(bool, Option<(u64, u64, u64, u64)>)> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            let (util, ratio) = points[pi];
+            let p = edfvfp_params(util, ratio);
+            let ts = memo::taskset(seed, &p, ti);
+            let sched = approach_schedulable(&ts, Approach::GcapsSuspend);
+            let sim = (ti < n_sim).then(|| {
+                let (mf, jf) = rt_misses(&ts, Policy::Gcaps);
+                let (me, je) = rt_misses(&ts, Policy::GcapsEdf);
+                (mf, jf, me, je)
+            });
+            (sched, sim)
+        });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pi, &(util, gpu_ratio))| {
+            let slice = &per_cell[pi * n..(pi + 1) * n];
+            let sched = slice.iter().filter(|&&(s, _)| s).count() as f64 / n.max(1) as f64;
+            let (mut mf, mut jf, mut me, mut je) = (0u64, 0u64, 0u64, 0u64);
+            for (_, sim) in slice {
+                if let Some((a, b, c, d)) = *sim {
+                    mf += a;
+                    jf += b;
+                    me += c;
+                    je += d;
+                }
+            }
+            EdfVsFpRow {
+                util,
+                gpu_ratio,
+                sched_fp: sched,
+                miss_fp: mf as f64 / jf.max(1) as f64,
+                miss_edf: me as f64 / je.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Format sweep (b) as its CSV.
+pub fn edfvfp_csv(rows: &[EdfVsFpRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "util_per_cpu",
+        "gpu_task_ratio",
+        "gcaps_fp_sched_ratio",
+        "miss_ratio_fp",
+        "miss_ratio_edf",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            format!("{:.1}", r.util),
+            format!("{:.1}", r.gpu_ratio),
+            format!("{:.4}", r.sched_fp),
+            format!("{:.5}", r.miss_fp),
+            format!("{:.5}", r.miss_edf),
+        ]);
+    }
+    csv
+}
+
+fn edfvfp_report(rows: &[EdfVsFpRow]) -> String {
+    let mut out = String::from(
+        "== Scenarios (b): EDF extension vs fixed-priority GCAPS ==\n\
+         \x20   util  gpu%   FP sched   miss(FP)   miss(EDF)\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "    {:>4.1}  {:>3.0}%     {:>6.2}    {:>7.4}     {:>7.4}\n",
+            r.util,
+            r.gpu_ratio * 100.0,
+            r.sched_fp,
+            r.miss_fp,
+            r.miss_edf
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// (c) heterogeneous multi-GPU platforms
+// ---------------------------------------------------------------------
+
+pub const HETERO_UTILS: [f64; 4] = [0.4, 0.5, 0.6, 0.7];
+
+/// The compared 2-engine platforms. All three carry the same engine
+/// count and the same **mean** per-engine overheads (ε̄ = 1 ms, θ̄ =
+/// 200 µs — the Table 3 defaults), so the sweep isolates the *spread*
+/// of the overheads across engines at equal total overhead budget;
+/// `hetero_wide` additionally doubles the slow engine's TSG slice so a
+/// distinct per-engine L flows through end-to-end.
+pub fn hetero_platforms() -> Vec<(&'static str, Platform)> {
+    vec![
+        ("uniform_g2", Platform::uniform(4, 2, GpuContext::default())),
+        (
+            "hetero_mild",
+            Platform::heterogeneous(
+                4,
+                vec![
+                    GpuContext { tsg_slice: 1024, theta: 150, epsilon: 750 },
+                    GpuContext { tsg_slice: 1024, theta: 250, epsilon: 1250 },
+                ],
+            ),
+        ),
+        (
+            "hetero_wide",
+            Platform::heterogeneous(
+                4,
+                vec![
+                    GpuContext { tsg_slice: 1024, theta: 50, epsilon: 250 },
+                    GpuContext { tsg_slice: 2048, theta: 350, epsilon: 1750 },
+                ],
+            ),
+        ),
+    ]
+}
+
+/// One hetero sweep row: (platform name, utilization, per-approach
+/// ratios in `Approach::ALL` order, simulated gcaps DES miss ratio).
+pub type HeteroRow = (&'static str, f64, [f64; 8], f64);
+
+/// The generator knobs for one (platform, utilization) point (shared
+/// with the test anchors; see [`edfvfp_params`]).
+pub fn hetero_params(platform: &Platform, util: f64) -> GenParams {
+    GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        platform: platform.clone(),
+        ..GenParams::default()
+    }
+}
+
+/// Sweep (c): all 8 approaches + the gcaps DES at every (platform,
+/// utilization) point. Heterogeneous platforms hash to their own memo
+/// keys (`memo::params_hash` folds the per-engine contexts when the
+/// engines differ), so every point draws its own tasksets.
+pub fn hetero_sweep(cfg: &ExpConfig) -> Vec<HeteroRow> {
+    let platforms = hetero_platforms();
+    let points: Vec<(usize, f64)> = (0..platforms.len())
+        .flat_map(|pi| HETERO_UTILS.iter().map(move |&u| (pi, u)))
+        .collect();
+    let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<([bool; 8], Option<(u64, u64)>)> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pt, ti)| {
+            let (pi, util) = points[pt];
+            let p = hetero_params(&platforms[pi].1, util);
+            let oks = eight_approaches(seed, &p, ti);
+            let sim = (ti < n_sim).then(|| {
+                let ts = memo::taskset(seed, &p, ti);
+                rt_misses(&ts, Policy::Gcaps)
+            });
+            (oks, sim)
+        });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pt, &(pi, util))| {
+            let slice = &per_cell[pt * n..(pt + 1) * n];
+            let mut ys = [0.0f64; 8];
+            for (oks, _) in slice {
+                for (k, &ok) in oks.iter().enumerate() {
+                    ys[k] += ok as usize as f64;
+                }
+            }
+            for y in ys.iter_mut() {
+                *y /= n.max(1) as f64;
+            }
+            let (mut misses, mut jobs) = (0u64, 0u64);
+            for (_, sim) in slice {
+                if let Some((m, j)) = *sim {
+                    misses += m;
+                    jobs += j;
+                }
+            }
+            (platforms[pi].0, util, ys, misses as f64 / jobs.max(1) as f64)
+        })
+        .collect()
+}
+
+/// Format sweep (c) as its CSV (long format: one metric per row —
+/// `sched_<approach>` ratios plus `miss_ratio_gcaps_des`).
+pub fn hetero_csv(rows: &[HeteroRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec!["platform", "util_per_cpu", "metric", "value"]);
+    for (name, util, ys, miss) in rows {
+        for (a, y) in Approach::ALL.iter().zip(ys) {
+            csv.row(vec![
+                name.to_string(),
+                format!("{util:.1}"),
+                format!("sched_{}", a.label()),
+                format!("{y:.4}"),
+            ]);
+        }
+        csv.row(vec![
+            name.to_string(),
+            format!("{util:.1}"),
+            "miss_ratio_gcaps_des".to_string(),
+            format!("{miss:.5}"),
+        ]);
+    }
+    csv
+}
+
+fn hetero_report(rows: &[HeteroRow]) -> String {
+    let k = Approach::ALL
+        .iter()
+        .position(|a| *a == Approach::GcapsSuspend)
+        .unwrap();
+    let mut out = String::from(
+        "== Scenarios (c): heterogeneous 2-engine platforms (equal mean overheads) ==\n\
+         \x20   platform      util   gcaps_susp sched   miss(gcaps DES)\n",
+    );
+    for (name, util, ys, miss) in rows {
+        out.push_str(&format!(
+            "    {name:<12}  {util:>4.1}        {:>6.2}          {miss:>7.4}\n",
+            ys[k]
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------
+
+/// Run the selected sub-sweeps (`only = None` runs all three), write
+/// `results/scenarios_{epstheta,edfvfp,hetero}.csv`, and return the
+/// ASCII report. Unknown `only` values are the caller's job to reject
+/// (the CLI exits with an error naming the flag).
+pub fn run_and_report(cfg: &ExpConfig, only: Option<&str>) -> String {
+    let selected = |name: &str| only.is_none_or(|o| o == name);
+    let mut out = String::new();
+    if selected("epstheta") {
+        let rows = epstheta_sweep(cfg);
+        let path = results_dir().join("scenarios_epstheta.csv");
+        epstheta_csv(&rows).write(&path).expect("write csv");
+        out.push_str(&epstheta_report(&rows));
+        out.push_str(&format!("wrote {}\n\n", path.display()));
+    }
+    if selected("edfvfp") {
+        let rows = edfvfp_sweep(cfg);
+        let path = results_dir().join("scenarios_edfvfp.csv");
+        edfvfp_csv(&rows).write(&path).expect("write csv");
+        out.push_str(&edfvfp_report(&rows));
+        out.push_str(&format!("wrote {}\n\n", path.display()));
+    }
+    if selected("hetero") {
+        let rows = hetero_sweep(cfg);
+        let path = results_dir().join("scenarios_hetero.csv");
+        hetero_csv(&rows).write(&path).expect("write csv");
+        out.push_str(&hetero_report(&rows));
+        out.push_str(&format!("wrote {}\n", path.display()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig { tasksets: 5, seed: 19, ..ExpConfig::default() }
+    }
+
+    #[test]
+    fn epstheta_grid_shape_and_ranges() {
+        let rows = epstheta_sweep(&tiny());
+        assert_eq!(
+            rows.len(),
+            config::GPU_PROFILES.len() * EPS_FACTORS.len() * THETA_FACTORS.len()
+        );
+        for ((board, ctx), ys) in &rows {
+            assert!(
+                ctx.epsilon >= ctx.theta,
+                "{board}: grid cell ε {} < θ {} (α would clamp)",
+                ctx.epsilon,
+                ctx.theta
+            );
+            for &y in ys {
+                assert!((0.0..=1.0).contains(&y), "{board}: ratio {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn epstheta_schedulability_declines_with_epsilon() {
+        // Same memoized tasksets at every cell (uniform platforms of
+        // identical slice), so growing ε alone can only remove
+        // schedulable sets for the ε-sensitive gcaps analyses.
+        let rows = epstheta_sweep(&tiny());
+        let k = Approach::ALL
+            .iter()
+            .position(|a| *a == Approach::GcapsSuspend)
+            .unwrap();
+        let base = config::gpu_profile("xavier_nx").unwrap();
+        let at = |fe: f64| {
+            rows.iter()
+                .find(|((b, c), _)| {
+                    *b == "xavier_nx"
+                        && c.epsilon == scale(base.epsilon, fe)
+                        && c.theta == base.theta
+                })
+                .map(|(_, ys)| ys[k])
+                .unwrap()
+        };
+        assert!(at(0.5) >= at(4.0), "gcaps ratio grew with ε: {} < {}", at(0.5), at(4.0));
+    }
+
+    #[test]
+    fn edfvfp_rows_cover_the_grid() {
+        let rows = edfvfp_sweep(&ExpConfig { tasksets: 3, ..tiny() });
+        assert_eq!(rows.len(), EDF_UTILS.len() * EDF_GPU_RATIOS.len());
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.sched_fp));
+            assert!((0.0..=1.0).contains(&r.miss_fp));
+            assert!((0.0..=1.0).contains(&r.miss_edf));
+        }
+    }
+
+    #[test]
+    fn hetero_platforms_share_mean_overheads() {
+        // The design premise of sweep (c): equal total overhead budget.
+        for (name, p) in hetero_platforms() {
+            assert_eq!(p.num_gpus(), 2, "{name}");
+            let eps: u64 = p.gpus.iter().map(|g| g.epsilon).sum();
+            let theta: u64 = p.gpus.iter().map(|g| g.theta).sum();
+            assert_eq!(eps, 2000, "{name}: mean ε moved");
+            assert_eq!(theta, 400, "{name}: mean θ moved");
+            for g in &p.gpus {
+                assert!(g.epsilon >= g.theta, "{name}: ε < θ");
+            }
+        }
+        assert!(!hetero_platforms()[2].1.is_uniform());
+    }
+
+    #[test]
+    fn hetero_sweep_rows_cover_the_grid() {
+        let rows = hetero_sweep(&ExpConfig { tasksets: 3, ..tiny() });
+        assert_eq!(rows.len(), hetero_platforms().len() * HETERO_UTILS.len());
+        for (_, _, ys, miss) in &rows {
+            for &y in ys {
+                assert!((0.0..=1.0).contains(&y));
+            }
+            assert!((0.0..=1.0).contains(miss));
+        }
+    }
+
+    #[test]
+    fn only_filter_selects_a_single_sub_sweep() {
+        let out = run_and_report(&ExpConfig { tasksets: 2, ..tiny() }, Some("epstheta"));
+        assert!(out.contains("scenarios_epstheta.csv"));
+        assert!(!out.contains("scenarios_edfvfp.csv"));
+        assert!(!out.contains("scenarios_hetero.csv"));
+    }
+}

@@ -1,9 +1,9 @@
 //! `gcaps` — CLI for the GCAPS reproduction.
 //!
 //! ```text
-//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|all>
-//!           [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N]
-//!           [--jobs N]
+//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all>
+//!           [--panel a..f] [--board xavier|orin] [--only epstheta|edfvfp|hetero]
+//!           [--tasksets N] [--seed N] [--jobs N]
 //! gcaps analyze [--seed N]            one random taskset through all 8 analyses
 //! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
 //! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
@@ -30,6 +30,7 @@ use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
 use gcaps::experiments::fig9::run_and_report as fig9;
 use gcaps::experiments::multigpu::run_and_report as run_multigpu;
 use gcaps::experiments::ablation::run_and_report as run_ablation;
+use gcaps::experiments::scenarios::{self, run_and_report as run_scenarios};
 use gcaps::experiments::overhead::{fig12_histogram, run_fig12_sim, run_fig13};
 use gcaps::experiments::ExpConfig;
 use gcaps::model::{config, ms, to_ms, TaskSet, WaitMode};
@@ -66,12 +67,34 @@ impl Args {
     fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
+
+    /// Strict flag parsing: an absent flag yields the default, but a
+    /// present-and-malformed value is an error naming the flag — a typo
+    /// like `--tasksets 1O0` or `--jobs 4x` must never silently run the
+    /// experiment with the default value. (A flag given without a value
+    /// parses as the literal "true" and fails the same way.)
+    fn parse_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value {v:?} for --{name}")),
+        }
+    }
+
     fn usize_flag(&self, name: &str, default: usize) -> usize {
-        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
     }
+
     fn u64_flag(&self, name: &str, default: u64) -> u64 {
-        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
     }
+}
+
+/// Print a CLI error and exit with status 2 (the usage-error status).
+fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
 }
 
 fn exp_config(args: &Args) -> ExpConfig {
@@ -138,10 +161,14 @@ fn cmd_analyze(args: &Args) {
 }
 
 fn cmd_sim(args: &Args) {
-    let policy = args
-        .flag("policy")
-        .and_then(Policy::from_label)
-        .unwrap_or(Policy::Gcaps);
+    let policy = match args.flag("policy") {
+        None => Policy::Gcaps,
+        Some(l) => Policy::from_label(l).unwrap_or_else(|| {
+            fail(&format!(
+                "invalid value {l:?} for --policy (expected gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf)"
+            ))
+        }),
+    };
     let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
     let ts = load_or_generate(args, false, &mut rng);
     let horizon = ms(args.u64_flag("ms", 30_000) as f64);
@@ -199,10 +226,13 @@ fn cmd_bench(args: &Args) {
 
 fn live_mode(args: &Args) -> LiveMode {
     match args.flag("mode").unwrap_or("gcaps") {
+        "gcaps" => LiveMode::Gcaps,
         "tsg_rr" => LiveMode::TsgRr,
         "fmlp" | "fmlp+" => LiveMode::FmlpPlus,
         "mpcp" => LiveMode::Mpcp,
-        _ => LiveMode::Gcaps,
+        other => fail(&format!(
+            "invalid value {other:?} for --mode (expected gcaps|tsg_rr|fmlp|mpcp)"
+        )),
     }
 }
 
@@ -258,8 +288,11 @@ fn cmd_exp(args: &Args) {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let cfg = exp_config(args);
     let board = match args.flag("board") {
+        None | Some("xavier") => Board::XavierNx,
         Some("orin") => Board::OrinNano,
-        _ => Board::XavierNx,
+        Some(other) => {
+            fail(&format!("invalid value {other:?} for --board (expected xavier|orin)"))
+        }
     };
     let run_one = |name: &str| match name {
         "fig3" => print!("{}", run_fig3()),
@@ -268,7 +301,9 @@ fn cmd_exp(args: &Args) {
         "fig7" => print!("{}", run_fig7()),
         "fig8" => {
             let panels: Vec<Panel> = match args.flag("panel") {
-                Some(l) => vec![Panel::from_letter(l).expect("panel a..f")],
+                Some(l) => vec![Panel::from_letter(l).unwrap_or_else(|| {
+                    fail(&format!("invalid value {l:?} for --panel (expected a..f)"))
+                })],
                 None => Panel::ALL.to_vec(),
             };
             for p in panels {
@@ -284,12 +319,26 @@ fn cmd_exp(args: &Args) {
         "examples" => print!("{}", run_examples(&cfg)),
         "ablation" => print!("{}", run_ablation(&cfg)),
         "multigpu" => print!("{}", run_multigpu(&cfg)),
-        other => eprintln!("unknown experiment {other}"),
+        "scenarios" => {
+            let only = args.flag("only");
+            if let Some(o) = only {
+                if !scenarios::SCENARIOS.contains(&o) {
+                    fail(&format!(
+                        "invalid value {o:?} for --only (expected epstheta|edfvfp|hetero)"
+                    ));
+                }
+            }
+            print!("{}", run_scenarios(&cfg, only));
+        }
+        other => fail(&format!(
+            "unknown experiment {other:?} (expected fig3|fig5|fig6|fig7|examples|fig8|\
+             fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all)"
+        )),
     };
     if which == "all" {
         for name in [
             "examples", "fig8", "fig9", "fig10", "fig11", "table5", "fig12", "fig13",
-            "ablation", "multigpu",
+            "ablation", "multigpu", "scenarios",
         ] {
             println!("\n================ {name} ================");
             run_one(name);
@@ -299,6 +348,58 @@ fn cmd_exp(args: &Args) {
         print!("{}", run_fig10(Board::OrinNano, &cfg));
     } else {
         run_one(which);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_with(flags: &[(&str, &str)]) -> Args {
+        Args {
+            positional: vec![],
+            flags: flags.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+        }
+    }
+
+    #[test]
+    fn absent_flag_yields_the_default() {
+        let a = args_with(&[]);
+        assert_eq!(a.parse_flag("jobs", 7usize), Ok(7));
+        assert_eq!(a.parse_flag::<u64>("seed", 2024), Ok(2024));
+    }
+
+    #[test]
+    fn well_formed_values_parse() {
+        let a = args_with(&[("tasksets", "100"), ("seed", "42")]);
+        assert_eq!(a.parse_flag("tasksets", 1usize), Ok(100));
+        assert_eq!(a.parse_flag::<u64>("seed", 1), Ok(42));
+    }
+
+    #[test]
+    fn malformed_values_error_naming_the_flag() {
+        // Regression: `--tasksets 1O0` / `--jobs 4x` used to silently
+        // run the experiment with the default value.
+        let a = args_with(&[("tasksets", "1O0"), ("jobs", "4x")]);
+        let e = a.parse_flag::<usize>("tasksets", 200).unwrap_err();
+        assert!(e.contains("--tasksets") && e.contains("1O0"), "{e}");
+        let e = a.parse_flag::<usize>("jobs", 8).unwrap_err();
+        assert!(e.contains("--jobs") && e.contains("4x"), "{e}");
+    }
+
+    #[test]
+    fn valueless_numeric_flag_is_an_error() {
+        // `gcaps exp --jobs --seed 5` leaves jobs = "true" (flag with no
+        // value): must error, not silently use the default.
+        let a = args_with(&[("jobs", "true")]);
+        assert!(a.parse_flag::<usize>("jobs", 1).is_err());
+    }
+
+    #[test]
+    fn negative_and_overflowing_values_are_errors() {
+        let a = args_with(&[("tasksets", "-5"), ("seed", "99999999999999999999999999")]);
+        assert!(a.parse_flag::<usize>("tasksets", 1).is_err());
+        assert!(a.parse_flag::<u64>("seed", 1).is_err());
     }
 }
 
@@ -319,11 +420,14 @@ fn main() {
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
                  gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
                  \x20         [--ms N] [--trace-out trace.json]\n\
-                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|all>\n\
-                 \x20         [--panel a..f] [--board xavier|orin] [--tasksets N] [--seed N] [--jobs N]\n\
+                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all>\n\
+                 \x20         [--panel a..f] [--board xavier|orin] [--only epstheta|edfvfp|hetero]\n\
+                 \x20         [--tasksets N] [--seed N] [--jobs N]\n\
                  \x20         (--jobs shards the sweep across N workers; results and CSV bytes\n\
                  \x20          are byte-identical for every worker count — per-cell seed-splitting;\n\
-                 \x20          `exp multigpu` sweeps the platform over 1/2/4 GPU engines)\n\
+                 \x20          `exp multigpu` sweeps the platform over 1/2/4 GPU engines;\n\
+                 \x20          `exp scenarios` runs the beyond-the-paper sweeps: per-board ε×θ\n\
+                 \x20          grids, EDF vs FP, heterogeneous multi-GPU — --only picks one)\n\
                  gcaps bench [--quick] [--out DIR]       # pinned RTA/DES wall-clock baseline\n\
                  \x20         (writes BENCH_rta.json / BENCH_des.json; --quick for CI smoke)\n\
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"

@@ -12,9 +12,11 @@
 //! slice_us = 1024
 //!
 //! [gpu]                     # optional: one section per engine for
-//! epsilon_us = 1000         # heterogeneous platforms (overrides the
-//! theta_us = 200            # scalar keys; section count must match
-//! slice_us = 1024           # num_gpus when both are given)
+//! profile = xavier_nx       # optional board preset (xavier_nx |
+//! epsilon_us = 1000         # orin_nano) — put it first, later keys
+//! theta_us = 200            # override it. Sections override the scalar
+//! slice_us = 1024           # keys; section count must match num_gpus
+//!                           # when both are given.
 //!
 //! [task]
 //! name = camera
@@ -37,6 +39,22 @@
 
 use crate::model::{ms, to_ms, GpuContext, GpuSegment, Platform, Task, TaskSet, WaitMode};
 
+/// Named GPU-engine presets for the measured Jetson boards (§7.1.1 /
+/// §7.2, Fig. 12–13): ε up to ~1 ms on both boards (Orin ~10% higher
+/// despite half the GPU clock), θ *lower* on Orin, L = 1024 µs on both.
+/// Usable as `profile = <name>` inside a `[gpu]` section (put it first;
+/// later keys override individual fields), as `--board` presets in the
+/// case study, and as the board axis of `gcaps exp scenarios`.
+pub const GPU_PROFILES: [(&str, GpuContext); 2] = [
+    ("xavier_nx", GpuContext { tsg_slice: 1024, theta: 250, epsilon: 1000 }),
+    ("orin_nano", GpuContext { tsg_slice: 1024, theta: 160, epsilon: 1100 }),
+];
+
+/// Look up a named board preset.
+pub fn gpu_profile(name: &str) -> Option<GpuContext> {
+    GPU_PROFILES.iter().find(|(n, _)| *n == name).map(|&(_, ctx)| ctx)
+}
+
 /// Parse a taskset from the text format above.
 pub fn parse(text: &str) -> Result<TaskSet, String> {
     let mut num_cpus = Platform::default().num_cpus;
@@ -47,6 +65,9 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
     let mut section = String::new();
     let mut current: Option<Task> = None;
     let mut current_gpu: Option<GpuContext> = None;
+    // Whether an explicit per-field key was set in the CURRENT [gpu]
+    // section — a later `profile =` would silently discard it.
+    let mut current_gpu_touched = false;
 
     let flush = |tasks: &mut Vec<Task>,
                  gpu_sections: &mut Vec<GpuContext>,
@@ -89,6 +110,7 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
                 // Each [gpu] section starts from the scalar defaults
                 // accumulated so far and overrides per-engine.
                 current_gpu = Some(base);
+                current_gpu_touched = false;
             } else if section != "platform" {
                 return Err(err(&format!("unknown section [{section}]")));
             }
@@ -133,12 +155,38 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
             ("gpu", k) => {
                 let g = current_gpu.as_mut().ok_or_else(|| err("gpu key outside [gpu]"))?;
                 match k {
-                    "epsilon_us" => {
-                        g.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?
+                    "profile" => {
+                        // Whole-context preset. It replaces the entire
+                        // context, so it must come FIRST in its section
+                        // — a profile after an explicit key would
+                        // silently discard that key; reject instead.
+                        if current_gpu_touched {
+                            return Err(err(
+                                "profile must precede the explicit gpu keys it applies to",
+                            ));
+                        }
+                        *g = gpu_profile(value).ok_or_else(|| {
+                            err(&format!(
+                                "unknown gpu profile {value:?} (known: {})",
+                                GPU_PROFILES
+                                    .iter()
+                                    .map(|(n, _)| *n)
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            ))
+                        })?;
                     }
-                    "theta_us" => g.theta = value.parse().map_err(|_| err("bad theta_us"))?,
+                    "epsilon_us" => {
+                        g.epsilon = value.parse().map_err(|_| err("bad epsilon_us"))?;
+                        current_gpu_touched = true;
+                    }
+                    "theta_us" => {
+                        g.theta = value.parse().map_err(|_| err("bad theta_us"))?;
+                        current_gpu_touched = true;
+                    }
                     "slice_us" => {
-                        g.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?
+                        g.tsg_slice = value.parse().map_err(|_| err("bad slice_us"))?;
+                        current_gpu_touched = true;
                     }
                     other => return Err(err(&format!("unknown gpu key {other:?}"))),
                 }
@@ -228,7 +276,7 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
 /// platforms add `num_gpus`; heterogeneous ones add `[gpu]` sections.
 pub fn to_text(ts: &TaskSet) -> String {
     let gpus = &ts.platform.gpus;
-    let uniform = gpus.windows(2).all(|w| w[0] == w[1]);
+    let uniform = ts.platform.is_uniform();
     let mut out = String::from("[platform]\n");
     out.push_str(&format!("num_cpus = {}\n", ts.platform.num_cpus));
     if gpus.len() != 1 {
@@ -402,6 +450,33 @@ mode = busy
         let back = parse(&to_text(&ts)).unwrap();
         assert_eq!(back.platform, ts.platform);
         assert_eq!(back.tasks, ts.tasks);
+    }
+
+    #[test]
+    fn gpu_profiles_parse_and_override() {
+        // A bare profile equals the registered preset.
+        let ts = parse("[gpu]\nprofile = orin_nano\n").unwrap();
+        assert_eq!(ts.platform.gpus[0], gpu_profile("orin_nano").unwrap());
+        assert_eq!(ts.platform.gpus[0].theta, 160);
+        // Later keys refine the preset; a second section can use another
+        // board, yielding a heterogeneous platform.
+        let ts = parse(
+            "[gpu]\nprofile = xavier_nx\ntheta_us = 99\n\
+             [gpu]\nprofile = orin_nano\n",
+        )
+        .unwrap();
+        assert_eq!(ts.platform.num_gpus(), 2);
+        assert_eq!(ts.platform.gpus[0].theta, 99);
+        assert_eq!(ts.platform.gpus[0].epsilon, 1000);
+        assert_eq!(ts.platform.gpus[1], gpu_profile("orin_nano").unwrap());
+        assert!(!ts.platform.is_uniform());
+        // Unknown profile names are an error, not a silent default.
+        assert!(parse("[gpu]\nprofile = bogus_board\n").is_err());
+        // A profile AFTER an explicit key would silently discard it —
+        // rejected (mirrors the scalar-key-after-[gpu]-section rule).
+        assert!(parse("[gpu]\nepsilon_us = 400\nprofile = xavier_nx\n").is_err());
+        // ...but only within the same section: a fresh section resets.
+        parse("[gpu]\nepsilon_us = 400\n[gpu]\nprofile = orin_nano\n").unwrap();
     }
 
     #[test]

@@ -55,16 +55,54 @@ impl Platform {
         Platform { num_cpus, gpus: vec![ctx; num_gpus] }
     }
 
+    /// A platform with explicit per-engine contexts (heterogeneous —
+    /// e.g. one fast + one slow engine with different ε/θ/L).
+    pub fn heterogeneous(num_cpus: usize, gpus: Vec<GpuContext>) -> Platform {
+        assert!(!gpus.is_empty(), "a platform needs at least one GPU engine");
+        Platform { num_cpus, gpus }
+    }
+
     /// g: the number of GPU engines.
     pub fn num_gpus(&self) -> usize {
         self.gpus.len()
     }
 
+    /// True iff every engine carries the same ε/θ/L. Single-GPU
+    /// platforms are trivially uniform.
+    pub fn is_uniform(&self) -> bool {
+        self.gpus.windows(2).all(|w| w[0] == w[1])
+    }
+
     /// Resize to `num_gpus` engines, replicating engine 0's parameters.
+    ///
+    /// Only valid on a **uniform** platform (where replication cannot
+    /// lose information); resizing a heterogeneous platform would
+    /// silently discard the per-engine configuration, so it panics —
+    /// use [`Platform::heterogeneous`] / [`Platform::with_gpu`] to
+    /// restructure engine sets explicitly. A same-size call is a no-op
+    /// and allowed on any platform.
     pub fn with_num_gpus(mut self, num_gpus: usize) -> Platform {
         assert!(num_gpus >= 1, "a platform needs at least one GPU engine");
+        assert!(
+            num_gpus == self.gpus.len() || self.is_uniform(),
+            "with_num_gpus({num_gpus}) would discard a heterogeneous engine \
+             configuration ({} distinct engines); use heterogeneous()/with_gpu()",
+            self.gpus.len()
+        );
         let proto = self.gpus[0];
         self.gpus.resize(num_gpus, proto);
+        self
+    }
+
+    /// Replace engine `idx`'s context (builder for heterogeneous
+    /// platforms; panics if `idx` is out of range).
+    pub fn with_gpu(mut self, idx: usize, ctx: GpuContext) -> Platform {
+        assert!(
+            idx < self.gpus.len(),
+            "engine index {idx} out of range ({} engines)",
+            self.gpus.len()
+        );
+        self.gpus[idx] = ctx;
         self
     }
 
@@ -412,5 +450,55 @@ mod tests {
         let u = Platform::uniform(4, 2, GpuContext::default());
         assert_eq!(u.num_gpus(), 2);
         assert_eq!(u.gpus[0], u.gpus[1]);
+    }
+
+    #[test]
+    fn heterogeneous_builders() {
+        let fast = GpuContext { tsg_slice: 1024, theta: 50, epsilon: 250 };
+        let slow = GpuContext { tsg_slice: 2048, theta: 400, epsilon: 2000 };
+        let h = Platform::heterogeneous(3, vec![fast, slow]);
+        assert_eq!((h.num_cpus, h.num_gpus()), (3, 2));
+        assert!(!h.is_uniform());
+        assert_eq!((h.gpus[0], h.gpus[1]), (fast, slow));
+
+        let p = Platform::default().with_num_gpus(2).with_gpu(1, slow);
+        assert!(!p.is_uniform());
+        assert_eq!(p.gpus[0], GpuContext::default());
+        assert_eq!(p.gpus[1], slow);
+
+        // Uniformity: trivially true at g = 1 and after replication.
+        assert!(Platform::default().is_uniform());
+        assert!(Platform::default().with_num_gpus(4).is_uniform());
+        assert!(Platform::uniform(4, 3, slow).is_uniform());
+        // Overwriting every engine to the same context restores it.
+        assert!(p.with_gpu(1, GpuContext::default()).is_uniform());
+    }
+
+    #[test]
+    fn with_num_gpus_same_size_is_a_noop_on_heterogeneous_platforms() {
+        let h = Platform::heterogeneous(
+            2,
+            vec![GpuContext::default(), GpuContext { epsilon: 400, ..GpuContext::default() }],
+        );
+        let same = h.clone().with_num_gpus(2);
+        assert_eq!(same, h);
+    }
+
+    #[test]
+    #[should_panic(expected = "heterogeneous")]
+    fn with_num_gpus_refuses_to_discard_heterogeneous_engines() {
+        // Regression: this used to silently replicate engine 0, throwing
+        // away the per-engine configuration.
+        let h = Platform::heterogeneous(
+            2,
+            vec![GpuContext::default(), GpuContext { epsilon: 400, ..GpuContext::default() }],
+        );
+        let _ = h.with_num_gpus(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn with_gpu_rejects_out_of_range_index() {
+        let _ = Platform::default().with_gpu(1, GpuContext::default());
     }
 }

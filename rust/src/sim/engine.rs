@@ -269,7 +269,11 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         let s = &mut self.st[i];
         s.release = release;
-        s.abs_deadline = release + t.deadline;
+        // Saturating: at long horizons (or near-MAX release offsets) the
+        // unchecked sum wraps, silently inverting the EDF rank
+        // (`u64::MAX - abs_deadline`) and flagging bogus misses. A
+        // saturated deadline is "never" — rank 0, never missed.
+        s.abs_deadline = release.saturating_add(t.deadline);
         s.seg = 0;
         s.phase = Phase::Cpu;
         s.cpu_rem = t.cpu_segments[0];
@@ -383,7 +387,7 @@ impl<'a> Engine<'a> {
         let theta = self.ts.platform.gpus[g].theta;
         self.metrics[i]
             .runlist_updates
-            .push(self.now - self.st[i].drv_started + theta);
+            .push((self.now - self.st[i].drv_started).saturating_add(theta));
         let me = &self.ts.tasks[i];
         if !ending {
             // --- TSG_SCHEDULER(τ_i, add) ---
@@ -631,7 +635,9 @@ impl<'a> Engine<'a> {
                 break;
             }
             self.calendar.pop();
-            self.calendar.push(Reverse((t + self.ts.tasks[i].period, i)));
+            // Saturating: a next-release past u64::MAX means "never"
+            // (now can only reach it after the run loop has exited).
+            self.calendar.push(Reverse((t.saturating_add(self.ts.tasks[i].period), i)));
             if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
                 self.start_job(i, t);
             } else {
@@ -649,12 +655,15 @@ impl<'a> Engine<'a> {
         if let Some(&Reverse((t, _))) = self.calendar.peek() {
             h = h.min(t);
         }
+        // Saturating sums: a remaining-work horizon past u64::MAX clamps
+        // to MAX (≥ duration, so it never wins the min) instead of
+        // wrapping to a bogus past instant.
         for &slot in &self.cpu_alloc {
             if let Some(i) = slot {
                 if self.st[i].cpu_rem > 0 {
                     match self.st[i].phase {
                         Phase::Cpu | Phase::DrvCall { .. } | Phase::GpuActive => {
-                            h = h.min(self.now + self.st[i].cpu_rem)
+                            h = h.min(self.now.saturating_add(self.st[i].cpu_rem))
                         }
                         _ => {}
                     }
@@ -664,12 +673,12 @@ impl<'a> Engine<'a> {
         for gs in &self.gpus {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
-                    h = h.min(self.now + gs.switch_rem);
+                    h = h.min(self.now.saturating_add(gs.switch_rem));
                 } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
                 {
-                    h = h.min(self.now + self.st[i].gpu_rem);
+                    h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
                     if gs.ring.len() > 1 && gs.ring.front() == Some(&i) {
-                        h = h.min(self.now + gs.slice_rem);
+                        h = h.min(self.now.saturating_add(gs.slice_rem));
                     }
                 }
             }
@@ -1047,6 +1056,31 @@ mod tests {
         let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
         assert!(res.per_task[1].deadline_misses > 0);
         assert!(!res.no_rt_misses(&ts));
+    }
+
+    #[test]
+    fn near_max_deadlines_saturate_instead_of_wrapping() {
+        // Regression: `abs_deadline = release + t.deadline` wrapped when
+        // a job was released near u64::MAX, inverting the EDF rank
+        // (`u64::MAX - abs_deadline`) and flagging every such job as
+        // missed. With saturation the deadline pins to MAX: rank 0 and
+        // never missed. Release offsets near MAX are the crafted input
+        // (deadlines themselves are constrained to ≤ T by validate()).
+        let a = gpu_task(0, 0, 2, 2.0, 0.5, 5.0, 100.0);
+        let b = gpu_task(1, 0, 1, 2.0, 0.5, 5.0, 120.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
+        for policy in [Policy::GcapsEdf, Policy::Gcaps] {
+            let cfg = SimConfig::new(policy, u64::MAX).with_offsets(offsets.clone());
+            let res = simulate(&ts, &cfg);
+            for i in [0, 1] {
+                assert!(res.per_task[i].jobs >= 1, "{policy:?}: tau{i} never ran");
+                assert_eq!(
+                    res.per_task[i].deadline_misses, 0,
+                    "{policy:?}: tau{i} flagged a bogus wrap-around miss"
+                );
+            }
+        }
     }
 
     #[test]

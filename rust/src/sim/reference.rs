@@ -9,6 +9,11 @@
 //! `rust/tests/kernel_equivalence.rs` — the optimised engine must
 //! reproduce every release, completion, trace interval and metric of
 //! this one, bit for bit. Never call it from a sweep hot path.
+//!
+//! One deliberate divergence from the seed bytes: `Time` additions that
+//! could wrap (absolute deadlines, release advance, horizon sums) are
+//! saturating here exactly as in `sim::engine` — correctness fixes are
+//! applied to both engines so the bit-equality contract keeps holding.
 
 use std::collections::VecDeque;
 
@@ -116,7 +121,9 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         let s = &mut self.st[i];
         s.release = release;
-        s.abs_deadline = release + t.deadline;
+        // Saturating, mirroring sim::engine bit-for-bit: a wrapped sum
+        // inverts the EDF rank and miss detection.
+        s.abs_deadline = release.saturating_add(t.deadline);
         s.seg = 0;
         s.phase = Phase::Cpu;
         s.cpu_rem = t.cpu_segments[0];
@@ -206,7 +213,7 @@ impl<'a> Engine<'a> {
         let theta = self.ts.platform.gpus[g].theta;
         self.metrics[i]
             .runlist_updates
-            .push(self.now - self.st[i].drv_started + theta);
+            .push((self.now - self.st[i].drv_started).saturating_add(theta));
         let me = &self.ts.tasks[i];
         if !ending {
             if me.best_effort {
@@ -409,7 +416,10 @@ impl<'a> Engine<'a> {
         for i in 0..self.st.len() {
             while self.st[i].next_release <= self.now {
                 let rel = self.st[i].next_release;
-                self.st[i].next_release += self.ts.tasks[i].period;
+                // Saturating (mirrors the engine's release calendar):
+                // wrapped, the next release lands in the past and this
+                // loop releases forever.
+                self.st[i].next_release = rel.saturating_add(self.ts.tasks[i].period);
                 if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
                     self.start_job(i, rel);
                 } else {
@@ -424,12 +434,13 @@ impl<'a> Engine<'a> {
         for s in &self.st {
             h = h.min(s.next_release);
         }
+        // Saturating sums, mirroring sim::engine.
         for &slot in &self.cpu_alloc {
             if let Some(i) = slot {
                 if self.st[i].cpu_rem > 0 {
                     match self.st[i].phase {
                         Phase::Cpu | Phase::DrvCall { .. } | Phase::GpuActive => {
-                            h = h.min(self.now + self.st[i].cpu_rem)
+                            h = h.min(self.now.saturating_add(self.st[i].cpu_rem))
                         }
                         _ => {}
                     }
@@ -439,12 +450,12 @@ impl<'a> Engine<'a> {
         for gs in &self.gpus {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
-                    h = h.min(self.now + gs.switch_rem);
+                    h = h.min(self.now.saturating_add(gs.switch_rem));
                 } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
                 {
-                    h = h.min(self.now + self.st[i].gpu_rem);
+                    h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
                     if gs.ring.len() > 1 && gs.ring.front() == Some(&i) {
-                        h = h.min(self.now + gs.slice_rem);
+                        h = h.min(self.now.saturating_add(gs.slice_rem));
                     }
                 }
             }

@@ -43,6 +43,18 @@ const CACHE_CAP: usize = 8192;
 /// normalizing it away would hand a 2-GPU sweep point the cached 1-GPU
 /// assignment. It is appended only when > 1 so every legacy single-GPU
 /// key (and therefore every legacy CSV byte) is unchanged.
+///
+/// Per-engine overheads normalize away only while the platform is
+/// **uniform**. A heterogeneous platform additionally folds every
+/// engine's full (ε, θ, L) context into the key: today the generator's
+/// WFD assignment ignores engine parameters, so equal-count hetero
+/// platforms *would* be safe to share — but that is an accident of the
+/// current assignment policy, and a future overhead-aware placement
+/// would silently corrupt the cache through such a collision. Making
+/// the hetero digest part of the key states the invariant explicitly
+/// ("sharing requires uniformity") instead of leaning on it. Uniform
+/// keys — including every pre-existing sweep — are byte-unchanged
+/// (`single_gpu_hash_is_pinned` pins the legacy constant).
 pub fn params_hash(p: &GenParams) -> u64 {
     let mut parts = vec![
         p.num_cpus as u64,
@@ -64,6 +76,13 @@ pub fn params_hash(p: &GenParams) -> u64 {
     ];
     if p.platform.num_gpus() > 1 {
         parts.push(p.platform.num_gpus() as u64);
+    }
+    if !p.platform.is_uniform() {
+        for g in &p.platform.gpus {
+            parts.push(g.epsilon);
+            parts.push(g.theta);
+            parts.push(g.tsg_slice);
+        }
     }
     cell_hash(&parts)
 }
@@ -91,9 +110,10 @@ pub fn taskset(seed: u64, p: &GenParams, index: usize) -> Arc<TaskSet> {
 }
 
 /// Re-stamp the requested wait mode and platform onto a cached taskset.
-/// Safe for the per-engine overheads only — the engine COUNT is part of
+/// Safe for the per-engine overheads only — the engine COUNT (and, for
+/// heterogeneous platforms, the full per-engine context set) is part of
 /// the cache key, so the cached WFD task-to-GPU assignment always
-/// matches `p.platform.num_gpus()`.
+/// matches `p.platform`.
 fn adapt(ts: Arc<TaskSet>, p: &GenParams) -> Arc<TaskSet> {
     let platform = Platform { num_cpus: p.num_cpus, gpus: p.platform.gpus.clone() };
     debug_assert_eq!(ts.platform.num_gpus(), platform.num_gpus());
@@ -214,6 +234,43 @@ mod tests {
             ..GenParams::default()
         };
         assert_eq!(params_hash(&g2), params_hash(&g2_eps));
+    }
+
+    #[test]
+    fn heterogeneous_platforms_get_distinct_keys() {
+        use crate::model::GpuContext;
+        let ctx = |eps: u64| GpuContext { epsilon: eps, ..GpuContext::default() };
+        let uni = GenParams {
+            platform: Platform::default().with_num_gpus(2),
+            ..GenParams::default()
+        };
+        let het_a = GenParams {
+            platform: Platform::default().with_num_gpus(2).with_gpu(1, ctx(400)),
+            ..GenParams::default()
+        };
+        let het_b = GenParams {
+            platform: Platform::default().with_num_gpus(2).with_gpu(1, ctx(500)),
+            ..GenParams::default()
+        };
+        // Equal engine counts no longer collide once the engines differ:
+        // uniform vs hetero, and hetero variants among themselves.
+        assert_ne!(params_hash(&uni), params_hash(&het_a));
+        assert_ne!(params_hash(&het_a), params_hash(&het_b));
+        // Uniform multi-GPU keys keep normalizing the overheads away
+        // (the legacy behavior every existing CSV depends on).
+        let uni_eps = GenParams {
+            platform: Platform::default().with_num_gpus(2).with_epsilon(123),
+            ..GenParams::default()
+        };
+        assert_eq!(params_hash(&uni), params_hash(&uni_eps));
+        // The memoized taskset carries the requested hetero platform
+        // end-to-end and stays valid (engine bounds, priority order).
+        let ts = taskset(3, &het_a, 0);
+        assert_eq!(ts.platform, het_a.platform);
+        ts.validate().unwrap();
+        // Cache round-trip returns the same draws.
+        let again = taskset(3, &het_a, 0);
+        assert_eq!(ts.tasks, again.tasks);
     }
 
     #[test]

@@ -85,3 +85,23 @@ fn multigpu_harness_runs() {
     assert_eq!(csv.lines().count(), 1 + 8 * 3, "unexpected row count:\n{csv}");
     assert!(csv.lines().next().unwrap().contains("num_gpus"));
 }
+
+#[test]
+fn scenarios_harness_produces_all_three_csvs() {
+    let out = gcaps::experiments::scenarios::run_and_report(
+        &ExpConfig { tasksets: 3, seed: 77, ..ExpConfig::default() },
+        None,
+    );
+    assert!(out.contains("Scenarios (a)"));
+    assert!(out.contains("Scenarios (b)"));
+    assert!(out.contains("Scenarios (c)"));
+    for (file, min_lines) in [
+        ("scenarios_epstheta.csv", 24),
+        ("scenarios_edfvfp.csv", 16),
+        ("scenarios_hetero.csv", 27),
+    ] {
+        let path = results_dir().join(file);
+        let csv = std::fs::read_to_string(&path).expect("csv written");
+        assert!(csv.lines().count() > min_lines, "{path:?} too small:\n{csv}");
+    }
+}

@@ -1,0 +1,209 @@
+//! `gcaps exp scenarios` determinism + golden anchors.
+//!
+//! 1. **Worker-count invariance** — each sub-sweep's CSV bytes are
+//!    identical at `--jobs 1 / 2 / 8` (the sweep engine's core
+//!    guarantee, extended to the new harness family).
+//! 2. **Anchors** — one small grid cell per sub-sweep is pinned against
+//!    an independent recomputation: the ε×θ cell against a from-scratch
+//!    serial pass through the documented memo seeding recipe (no cache
+//!    path, no worker pool), the EDF-vs-FP point against direct
+//!    simulation calls, and the heterogeneous platform against a
+//!    handcrafted taskset with *exact* per-engine response times
+//!    (distinct ε/θ/L end-to-end, optimised engine bit-equal to the
+//!    seed reference).
+
+use gcaps::analysis::{analyze, approach_schedulable, Approach};
+use gcaps::experiments::scenarios::{
+    edfvfp_csv, edfvfp_params, edfvfp_sweep, epstheta_csv, epstheta_sweep, hetero_csv,
+    hetero_params, hetero_platforms, hetero_sweep,
+};
+use gcaps::experiments::ExpConfig;
+use gcaps::model::{config, ms, GpuContext, GpuSegment, Platform, Task, TaskSet, WaitMode};
+use gcaps::sim::{simulate, simulate_reference, Policy, SimConfig};
+use gcaps::sweep::{cell_hash, cell_rng, memo};
+use gcaps::taskgen::{generate, GenParams};
+
+fn cfg(tasksets: usize, jobs: usize) -> ExpConfig {
+    ExpConfig { tasksets, seed: 2024, jobs, progress: false }
+}
+
+// ---------------------------------------------------------------------
+// worker-count invariance (CSV bytes)
+// ---------------------------------------------------------------------
+
+#[test]
+fn epstheta_csv_identical_across_worker_counts() {
+    let b1 = epstheta_csv(&epstheta_sweep(&cfg(6, 1))).to_string();
+    let b2 = epstheta_csv(&epstheta_sweep(&cfg(6, 2))).to_string();
+    let b8 = epstheta_csv(&epstheta_sweep(&cfg(6, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "epstheta CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "epstheta CSV diverged at jobs = 8");
+    assert!(b1.lines().count() > 24, "epstheta CSV suspiciously small:\n{b1}");
+}
+
+#[test]
+fn edfvfp_csv_identical_across_worker_counts() {
+    let b1 = edfvfp_csv(&edfvfp_sweep(&cfg(4, 1))).to_string();
+    let b2 = edfvfp_csv(&edfvfp_sweep(&cfg(4, 2))).to_string();
+    let b8 = edfvfp_csv(&edfvfp_sweep(&cfg(4, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "edfvfp CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "edfvfp CSV diverged at jobs = 8");
+    assert!(b1.lines().count() > 16, "edfvfp CSV suspiciously small:\n{b1}");
+}
+
+#[test]
+fn hetero_csv_identical_across_worker_counts() {
+    let b1 = hetero_csv(&hetero_sweep(&cfg(4, 1))).to_string();
+    let b2 = hetero_csv(&hetero_sweep(&cfg(4, 2))).to_string();
+    let b8 = hetero_csv(&hetero_sweep(&cfg(4, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "hetero CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "hetero CSV diverged at jobs = 8");
+    assert!(b1.lines().count() > 27, "hetero CSV suspiciously small:\n{b1}");
+}
+
+// ---------------------------------------------------------------------
+// anchors
+// ---------------------------------------------------------------------
+
+#[test]
+fn epstheta_anchor_cell_matches_manual_generation_recipe() {
+    // The (xavier_nx, 1×ε, 1×θ) cell must equal a from-scratch serial
+    // recomputation through the documented seeding recipe: per-taskset
+    // PRNG = cell_rng(seed, cell_hash([params_hash, index])), canonical
+    // suspend-mode generation, no memo cache, no worker pool.
+    let c = cfg(6, 2);
+    let rows = epstheta_sweep(&c);
+    let base = config::gpu_profile("xavier_nx").unwrap();
+    let (_, ys) = rows
+        .iter()
+        .find(|((b, ctx), _)| {
+            *b == "xavier_nx" && ctx.epsilon == base.epsilon && ctx.theta == base.theta
+        })
+        .expect("the 1x grid cell exists");
+    let p = GenParams {
+        platform: Platform::default().with_gpu(0, base),
+        ..GenParams::default()
+    };
+    for (k, a) in Approach::ALL.iter().enumerate() {
+        let mode = a.wait_mode();
+        let mut ok = 0usize;
+        for i in 0..c.tasksets {
+            let h = memo::params_hash(&p);
+            let mut rng = cell_rng(c.seed, cell_hash(&[h, i as u64]));
+            let canon = GenParams { mode: WaitMode::SelfSuspend, ..p.clone() };
+            let mut ts = generate(&mut rng, &canon);
+            for t in &mut ts.tasks {
+                t.mode = mode;
+            }
+            if approach_schedulable(&ts, *a) {
+                ok += 1;
+            }
+        }
+        assert_eq!(
+            ys[k],
+            ok as f64 / c.tasksets as f64,
+            "{}: harness cell diverged from the manual recipe",
+            a.label()
+        );
+    }
+}
+
+#[test]
+fn edfvfp_anchor_point_matches_direct_simulation() {
+    let c = cfg(4, 2);
+    let rows = edfvfp_sweep(&c);
+    let (u, r) = (0.5, 0.4);
+    let row = rows
+        .iter()
+        .find(|row| row.util == u && row.gpu_ratio == r)
+        .expect("the (0.5, 0.4) point exists");
+    let p = edfvfp_params(u, r);
+    let horizon = ms(3_000.0);
+    let (mut sched, mut mf, mut jf, mut me, mut je) = (0usize, 0u64, 0u64, 0u64, 0u64);
+    for i in 0..c.tasksets {
+        let ts = memo::taskset(c.seed, &p, i);
+        if approach_schedulable(&ts, Approach::GcapsSuspend) {
+            sched += 1;
+        }
+        let fp = simulate(&ts, &SimConfig::new(Policy::Gcaps, horizon));
+        let edf = simulate(&ts, &SimConfig::new(Policy::GcapsEdf, horizon));
+        for t in ts.rt_tasks() {
+            mf += fp.per_task[t.id].deadline_misses;
+            jf += fp.per_task[t.id].jobs;
+            me += edf.per_task[t.id].deadline_misses;
+            je += edf.per_task[t.id].jobs;
+        }
+    }
+    assert_eq!(row.sched_fp, sched as f64 / c.tasksets as f64);
+    assert_eq!(row.miss_fp, mf as f64 / jf.max(1) as f64);
+    assert_eq!(row.miss_edf, me as f64 / je.max(1) as f64);
+}
+
+#[test]
+fn hetero_anchor_engines_carry_distinct_overheads_end_to_end() {
+    // Exact golden values on a handcrafted 2-task / 2-engine platform
+    // with distinct per-engine ε/θ/L. Each task is alone on its core
+    // AND its engine, so its DES response is the closed-form lone-task
+    // bound R = C + 2α_g + max(G^m, θ_g + G^e) — with the *task's own
+    // engine's* α and θ. A platform-wide overhead model would collapse
+    // the two values.
+    let fast = GpuContext { tsg_slice: 1024, theta: 100, epsilon: 500 }; // α = 400 µs
+    let slow = GpuContext { tsg_slice: 2048, theta: 400, epsilon: 2000 }; // α = 1600 µs
+    let platform = Platform::heterogeneous(2, vec![fast, slow]);
+    let mk = |id: usize, core: usize, gpu: usize, prio: u32| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(100.0),
+        deadline: ms(100.0),
+        cpu_segments: vec![ms(1.0), ms(1.0)],
+        gpu_segments: vec![GpuSegment::new(ms(0.5), ms(5.0))],
+        core,
+        gpu,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let ts = TaskSet::new(vec![mk(0, 0, 0, 2), mk(1, 1, 1, 1)], platform);
+    ts.validate().unwrap();
+    let sim_cfg = SimConfig::new(Policy::Gcaps, ms(1000.0));
+    let res = simulate(&ts, &sim_cfg);
+    // fast engine: 2 + 2·0.4 + max(0.5, 0.1 + 5) = 7.9 ms
+    assert_eq!(res.per_task[0].mort(), Some(ms(7.9)));
+    // slow engine: 2 + 2·1.6 + max(0.5, 0.4 + 5) = 10.6 ms
+    assert_eq!(res.per_task[1].mort(), Some(ms(10.6)));
+    assert_eq!(res.per_task[0].deadline_misses, 0);
+    assert_eq!(res.per_task[1].deadline_misses, 0);
+    // Optimised engine bit-equal to the seed reference on the hetero
+    // platform.
+    let seed_res = simulate_reference(&ts, &sim_cfg);
+    assert_eq!(res.per_task, seed_res.per_task);
+    // The analyses see the same asymmetry (per-engine ε/θ in the RTA).
+    for a in [Approach::GcapsSuspend, Approach::TsgRrSuspend] {
+        let r = analyze(&ts, a);
+        let (r0, r1) = (r.response[0].unwrap(), r.response[1].unwrap());
+        assert!(r0 < r1, "{}: fast-engine task not faster ({r0} vs {r1})", a.label());
+    }
+}
+
+#[test]
+fn hetero_sweep_point_exercises_generated_hetero_tasksets() {
+    // End-to-end through taskgen: the wide hetero platform's memoized
+    // tasksets carry the hetero platform, validate, and (whenever at
+    // least 2 GPU tasks exist) populate both engines via WFD.
+    let (name, platform) = hetero_platforms().into_iter().last().unwrap();
+    assert_eq!(name, "hetero_wide");
+    let p = hetero_params(&platform, 0.5);
+    for i in 0..5 {
+        let ts = memo::taskset(2024, &p, i);
+        assert_eq!(ts.platform, platform);
+        ts.validate().unwrap();
+        if ts.num_gpu_tasks() >= 2 {
+            assert!(ts.on_gpu(0).count() >= 1, "taskset {i}: engine 0 empty");
+            assert!(ts.on_gpu(1).count() >= 1, "taskset {i}: engine 1 empty");
+        }
+        // And the DES accepts the hetero platform (smoke, short run).
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(500.0)));
+        assert!(res.run.horizon >= ms(500.0));
+    }
+}

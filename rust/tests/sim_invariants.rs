@@ -221,3 +221,45 @@ fn gcaps_two_updates_per_segment() {
         Ok(())
     });
 }
+
+/// Regression (wrap-around audit): jobs released near u64::MAX keep the
+/// two engines bit-equal and never flag wrap-around deadline misses —
+/// `abs_deadline = release + deadline` used to overflow there, inverting
+/// the EDF rank and the miss check in both engines.
+#[test]
+fn near_max_release_offsets_stay_wrap_free_and_bit_equal() {
+    let mk = |id: usize, prio: u32, t: f64| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(t),
+        deadline: ms(t),
+        cpu_segments: vec![ms(1.0), ms(1.0)],
+        gpu_segments: vec![GpuSegment::new(ms(0.5), ms(5.0))],
+        core: 0,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let ts = TaskSet::new(
+        vec![mk(0, 2, 100.0), mk(1, 1, 120.0)],
+        Platform::single(2, 1024, 200, 1000),
+    );
+    ts.validate().unwrap();
+    let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
+    for policy in [Policy::GcapsEdf, Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus]
+    {
+        let cfg = SimConfig::new(policy, u64::MAX).with_offsets(offsets.clone());
+        let fast = simulate(&ts, &cfg);
+        let seed = gcaps::sim::simulate_reference(&ts, &cfg);
+        assert_eq!(fast.per_task, seed.per_task, "{policy:?}: engines diverged");
+        for i in [0, 1] {
+            assert!(fast.per_task[i].jobs >= 1, "{policy:?}: tau{i} never ran");
+            assert_eq!(
+                fast.per_task[i].deadline_misses, 0,
+                "{policy:?}: tau{i} flagged a bogus wrap-around miss"
+            );
+        }
+    }
+}
