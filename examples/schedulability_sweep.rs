@@ -1,13 +1,13 @@
 //! Schedulability sweep (a runnable miniature of Fig. 8): generates
 //! random tasksets per Table 3 and compares all eight analyses across
-//! a utilization sweep, printing the ASCII chart + CSV the full
-//! experiment harness produces.
+//! a utilization sweep through the experiment registry — the ASCII
+//! chart plus the CSV and JSONL artifacts of one run.
 //!
 //! Run with: `cargo run --release --example schedulability_sweep`
 //! (optionally `-- --tasksets 500`).
 
-use gcaps::experiments::fig8::{run_and_report, Panel};
-use gcaps::experiments::ExpConfig;
+use gcaps::api::{self, SinkSpec};
+use gcaps::experiments::{ExpConfig, Opts};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -17,8 +17,22 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(100);
-    let cfg = ExpConfig { tasksets, seed: 2024 };
+    let cfg = ExpConfig {
+        tasksets,
+        seed: 2024,
+        opts: Opts::default().set("panel", "b"),
+        ..ExpConfig::default()
+    };
     println!("running Fig. 8b (utilization sweep) with {tasksets} tasksets/point ...\n");
-    print!("{}", run_and_report(Panel::UtilPerCpu, &cfg));
-    println!("\nrun `gcaps exp fig8` for all six panels (a-f).");
+    // dir: None → `$GCAPS_RESULTS` or `./results`, like the CLI.
+    let spec = SinkSpec { csv: true, jsonl: true, ascii: true, dir: None };
+    let report = api::run("fig8", &cfg, &spec).expect("fig8 run");
+    print!("{}", report.ascii);
+    println!(
+        "{} rows in {:.0} ms -> {:?}",
+        report.rows(),
+        report.wall.as_secs_f64() * 1e3,
+        report.outputs
+    );
+    println!("\nrun `gcaps exp --list` for every registered experiment.");
 }

@@ -11,7 +11,7 @@ use gcaps::util::bench::run;
 fn main() {
     // jobs pinned to 1 so the DES throughput numbers stay comparable
     // across hosts (and with pre-sweep-engine baselines).
-    let cfg = ExpConfig { tasksets: 0, seed: 1, jobs: 1, progress: false };
+    let cfg = ExpConfig { tasksets: 0, seed: 1, jobs: 1, ..ExpConfig::default() };
     run("casestudy/fig10_morts_xavier", move || morts(Board::XavierNx, &cfg).len());
 
     let ts_s = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);

@@ -14,10 +14,11 @@ fn main() {
     // numbers must measure the cold generation + analysis path (what
     // pre-sweep-engine baselines in EXPERIMENTS.md recorded), not
     // host-dependent thread pools or Arc-clone cache hits.
-    let cfg = ExpConfig { tasksets: 25, seed: 2024, jobs: 1, progress: false };
+    let cfg = ExpConfig { tasksets: 25, seed: 2024, jobs: 1, ..ExpConfig::default() };
 
     for approach in Approach::ALL {
         let name = format!("fig8/point25/{}", approach.label());
+        let cfg = cfg.clone();
         let m = run(&name, move || {
             memo::clear();
             schedulability(approach, &|_| {}, &cfg)
@@ -26,7 +27,7 @@ fn main() {
     }
 
     // A whole miniature panel (the per-figure regeneration target).
-    let small = ExpConfig { tasksets: 10, seed: 1, jobs: 1, progress: false };
+    let small = ExpConfig { tasksets: 10, seed: 1, jobs: 1, ..ExpConfig::default() };
     run("fig8/panel_b_mini", move || {
         memo::clear();
         run_panel(Panel::UtilPerCpu, &small).1.len()

@@ -1,0 +1,202 @@
+//! Library facade over the experiment registry: list and run any
+//! registered experiment in-process — no shelling out to the `gcaps`
+//! binary — with pluggable output formats and a structured report.
+//!
+//! ```no_run
+//! use gcaps::api;
+//! use gcaps::experiments::ExpConfig;
+//!
+//! let cfg = ExpConfig { tasksets: 100, seed: 2024, ..ExpConfig::default() };
+//! let report = api::run("fig9", &cfg, &api::SinkSpec::csv_jsonl("results")).unwrap();
+//! println!(
+//!     "{}: {} rows in {} tables, {:?} -> {:?}",
+//!     report.name,
+//!     report.rows(),
+//!     report.tables.len(),
+//!     report.wall,
+//!     report.outputs,
+//! );
+//! ```
+//!
+//! Experiment-specific options ride in [`ExpConfig::opts`] and are
+//! validated (names and values) before any sweeping starts:
+//!
+//! ```no_run
+//! use gcaps::api;
+//! use gcaps::experiments::{ExpConfig, Opts};
+//!
+//! let cfg = ExpConfig {
+//!     tasksets: 50,
+//!     opts: Opts::default().set("panel", "b"),
+//!     ..ExpConfig::default()
+//! };
+//! let report = api::run("fig8", &cfg, &api::SinkSpec::jsonl_only("out")).unwrap();
+//! assert_eq!(report.tables[0].name, "fig8b");
+//! ```
+
+use std::path::PathBuf;
+
+use crate::err;
+use crate::experiments::registry;
+use crate::experiments::sink::{AsciiSink, CsvSink, JsonlSink, Sink, Tee};
+use crate::experiments::{results_dir, ExpConfig};
+use crate::util::error::Result;
+
+pub use crate::experiments::registry::{Experiment, ExpReport, TableStat};
+
+/// Which sinks [`run`] attaches, and where file sinks write.
+#[derive(Debug, Clone, Default)]
+pub struct SinkSpec {
+    /// Write `<dir>/<table>.csv` (the legacy byte-pinned artifacts).
+    pub csv: bool,
+    /// Write `<dir>/<table>.jsonl` (one self-describing object/row).
+    pub jsonl: bool,
+    /// Collect the rendered ASCII report into [`ExpReport::ascii`].
+    pub ascii: bool,
+    /// Output directory for the file sinks; `None` = the default
+    /// results directory (`$GCAPS_RESULTS` or `./results`).
+    pub dir: Option<PathBuf>,
+}
+
+impl SinkSpec {
+    /// CSV files only.
+    pub fn csv_only(dir: impl Into<PathBuf>) -> SinkSpec {
+        SinkSpec { csv: true, dir: Some(dir.into()), ..SinkSpec::default() }
+    }
+
+    /// JSONL files only.
+    pub fn jsonl_only(dir: impl Into<PathBuf>) -> SinkSpec {
+        SinkSpec { jsonl: true, dir: Some(dir.into()), ..SinkSpec::default() }
+    }
+
+    /// CSV + JSONL side by side from one run.
+    pub fn csv_jsonl(dir: impl Into<PathBuf>) -> SinkSpec {
+        SinkSpec { csv: true, jsonl: true, dir: Some(dir.into()), ..SinkSpec::default() }
+    }
+
+    /// No files — ASCII report only (compute + render).
+    pub fn ascii_only() -> SinkSpec {
+        SinkSpec { ascii: true, ..SinkSpec::default() }
+    }
+
+    /// Also collect the ASCII report.
+    pub fn with_ascii(mut self) -> SinkSpec {
+        self.ascii = true;
+        self
+    }
+}
+
+/// All registered experiments, in `gcaps exp --list` order.
+pub fn list() -> &'static [&'static dyn Experiment] {
+    registry::all()
+}
+
+/// Look an experiment up by its stable name.
+pub fn find(name: &str) -> Option<&'static dyn Experiment> {
+    registry::find(name)
+}
+
+/// Run the named experiment at the given scale through the sinks the
+/// spec asks for. Unknown names, unknown/invalid options
+/// ([`ExpConfig::opts`]) and sink I/O failures are `Err`; on success
+/// the report carries per-table row counts, every written path, the
+/// wall-clock, and (when requested) the ASCII rendition.
+pub fn run(name: &str, cfg: &ExpConfig, spec: &SinkSpec) -> Result<ExpReport> {
+    let exp = registry::find(name).ok_or_else(|| {
+        err!(
+            "unknown experiment {name:?} (expected one of: {})",
+            registry::all().iter().map(|e| e.name()).collect::<Vec<_>>().join("|")
+        )
+    })?;
+    run_experiment(exp, cfg, spec)
+}
+
+/// [`run`] for a trait object you already hold (e.g. from [`list`]).
+pub fn run_experiment(
+    exp: &dyn Experiment,
+    cfg: &ExpConfig,
+    spec: &SinkSpec,
+) -> Result<ExpReport> {
+    let dir = spec.dir.clone().unwrap_or_else(results_dir);
+    let mut csv = spec.csv.then(|| CsvSink::new(&dir));
+    let mut jsonl = spec.jsonl.then(|| JsonlSink::new(&dir));
+    let mut ascii = spec.ascii.then(AsciiSink::new);
+    let mut fanout: Vec<&mut dyn Sink> = Vec::new();
+    if let Some(s) = csv.as_mut() {
+        fanout.push(s);
+    }
+    if let Some(s) = jsonl.as_mut() {
+        fanout.push(s);
+    }
+    if let Some(s) = ascii.as_mut() {
+        fanout.push(s);
+    }
+    let mut report = {
+        let mut tee = Tee(fanout);
+        registry::run(exp, cfg, &mut tee)?
+    };
+    if let Some(a) = ascii {
+        report.ascii = a.into_string();
+    }
+    Ok(report)
+}
+
+/// One line per experiment: name, description, extra flags — the body
+/// of `gcaps exp --list`.
+pub fn render_list() -> String {
+    let mut out = String::new();
+    for e in registry::all() {
+        let flags: String = e
+            .flags()
+            .iter()
+            .map(|f| format!(" [--{} {}]", f.name, f.values))
+            .collect();
+        let tag = if e.in_all() { "" } else { " (not in `exp all`)" };
+        out.push_str(&format!("  {:<10} {}{flags}{tag}\n", e.name(), e.about()));
+    }
+    out.push_str("  all        every experiment above not marked otherwise\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_name_is_an_error() {
+        let e = run("nope", &ExpConfig::default(), &SinkSpec::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("nope") && e.contains("fig8"), "{e}");
+    }
+
+    #[test]
+    fn ascii_only_run_fills_the_report() {
+        let cfg = ExpConfig { tasksets: 2, seed: 3, ..ExpConfig::default() };
+        let report = run("fig9", &cfg, &SinkSpec::ascii_only()).unwrap();
+        assert!(report.ascii.contains("Fig. 9"), "{}", report.ascii);
+        assert!(report.outputs.is_empty());
+        assert_eq!(report.rows(), 20);
+    }
+
+    #[test]
+    fn csv_jsonl_spec_writes_both_artifacts() {
+        let dir = std::env::temp_dir().join("gcaps_api_test_both");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ExpConfig { tasksets: 2, seed: 3, ..ExpConfig::default() };
+        let report = run("fig9", &cfg, &SinkSpec::csv_jsonl(&dir)).unwrap();
+        assert_eq!(report.outputs, vec![dir.join("fig9.csv"), dir.join("fig9.jsonl")]);
+        assert!(report.outputs.iter().all(|p| p.exists()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_list_covers_every_experiment() {
+        let out = render_list();
+        for e in list() {
+            assert!(out.contains(e.name()), "{} missing from list", e.name());
+        }
+        assert!(out.contains("--panel a..f"), "{out}");
+        assert!(out.contains("--only epstheta|edfvfp|hetero"), "{out}");
+    }
+}

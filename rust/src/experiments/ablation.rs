@@ -11,12 +11,15 @@
 //!    grows (the design's key overhead knob, cf. Fig. 8e's discussion).
 
 use crate::analysis::gcaps::{analyze as gcaps_rta, Options};
-use crate::experiments::{results_dir, ExpConfig};
+use crate::experiments::registry::Experiment;
+use crate::experiments::sink::Sink;
+use crate::experiments::ExpConfig;
 use crate::model::{ms, Platform, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 
 /// (sound ratio, paper-exact ratio) of gcaps_busy schedulability. Both
 /// variants run on the same memoized taskset per cell, so the exact
@@ -88,7 +91,8 @@ pub fn epsilon_sensitivity(cfg: &ExpConfig, eps_us: u64) -> f64 {
     oks.iter().filter(|&&ok| ok).count() as f64 / cfg.tasksets.max(1) as f64
 }
 
-pub fn run_and_report(cfg: &ExpConfig) -> String {
+/// Run all three ablations. Pure render: (CSV, ASCII).
+pub fn ablation_render(cfg: &ExpConfig) -> (CsvTable, String) {
     let mut out = String::from("== Ablations ==\n");
     let mut csv = CsvTable::new(vec!["ablation", "x", "value"]);
 
@@ -121,10 +125,27 @@ pub fn run_and_report(cfg: &ExpConfig) -> String {
         csv.row(vec!["epsilon".into(), format!("{eps}"), format!("{v:.4}")]);
     }
 
-    let path = results_dir().join("ablations.csv");
-    csv.write(&path).expect("write csv");
-    out.push_str(&format!("wrote {}\n", path.display()));
-    out
+    (csv, out)
+}
+
+/// Registry face: `gcaps exp ablation`.
+pub struct AblationExp;
+
+impl Experiment for AblationExp {
+    fn name(&self) -> &'static str {
+        "ablation"
+    }
+
+    fn about(&self) -> &'static str {
+        "Lemma 12 soundness, FP-vs-EDF misses, eps sensitivity"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (csv, text) = ablation_render(cfg);
+        sink.table("ablations", &csv);
+        sink.text(&text);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

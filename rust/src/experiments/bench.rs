@@ -108,7 +108,7 @@ fn finish(
 /// Time the pinned Fig. 8b RTA panel at `--jobs 1`.
 pub fn run_rta(quick: bool) -> BenchResult {
     let tasksets = if quick { 8 } else { 100 };
-    let cfg = ExpConfig { tasksets, seed: BENCH_SEED, jobs: 1, progress: false };
+    let cfg = ExpConfig { tasksets, seed: BENCH_SEED, jobs: 1, ..ExpConfig::default() };
     let panel = Panel::UtilPerCpu;
     let start = Instant::now();
     let (xticks, series) = run_panel(panel, &cfg);

@@ -3,12 +3,16 @@
 //! the PJRT runtime (`run_live`) with real AOT kernels.
 
 use crate::analysis::{gcaps, rr};
-use crate::experiments::{results_dir, ExpConfig};
+use crate::err;
+use crate::experiments::registry::{Experiment, FlagSpec};
+use crate::experiments::sink::Sink;
+use crate::experiments::ExpConfig;
 use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep;
 use crate::util::ascii::bar_chart;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 use crate::util::stats::Summary;
 
 /// Simulated platform presets (Fig. 10a vs 10b). ε and θ follow the
@@ -170,7 +174,9 @@ pub fn morts(board: Board, cfg: &ExpConfig) -> Vec<(String, Vec<f64>)> {
 }
 
 /// Fig. 10: MORT bars per task per approach on one board.
-pub fn run_fig10(board: Board, cfg: &ExpConfig) -> String {
+/// Pure render: (table stem, CSV, ASCII) — the registry goldens pin
+/// the CSV bytes against the pre-redesign harness.
+pub fn fig10_render(board: Board, cfg: &ExpConfig) -> (String, CsvTable, String) {
     let results = morts(board, cfg);
     let ts = table4_taskset(&board.platform(), WaitMode::SelfSuspend);
     let mut csv = CsvTable::new(vec!["approach", "task", "mort_ms"]);
@@ -190,18 +196,58 @@ pub fn run_fig10(board: Board, cfg: &ExpConfig) -> String {
             csv.row(vec![label.clone(), t.name.clone(), format!("{:.3}", ms_per_task[t.id])]);
         }
     }
-    let path = results_dir().join(format!(
-        "fig10_{}.csv",
+    let stem = format!(
+        "fig10_{}",
         if board == Board::XavierNx { "xavier" } else { "orin" }
-    ));
-    csv.write(&path).expect("write csv");
-    out.push_str(&format!("wrote {}\n", path.display()));
-    out
+    );
+    (stem, csv, out)
+}
+
+fn board_value_ok(v: &str) -> bool {
+    matches!(v, "xavier" | "orin")
+}
+
+/// Registry face: `gcaps exp fig10 [--board xavier|orin]` — both
+/// boards (Fig. 10a then 10b) when none is selected.
+pub struct Fig10Exp;
+
+impl Experiment for Fig10Exp {
+    fn name(&self) -> &'static str {
+        "fig10"
+    }
+
+    fn about(&self) -> &'static str {
+        "Case-study MORT per task per approach (simulated boards)"
+    }
+
+    fn flags(&self) -> &'static [FlagSpec] {
+        static FLAGS: [FlagSpec; 1] =
+            [FlagSpec { name: "board", values: "xavier|orin", check: board_value_ok }];
+        &FLAGS
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let boards: Vec<Board> = match cfg.opts.get("board") {
+            None => vec![Board::XavierNx, Board::OrinNano],
+            Some("xavier") => vec![Board::XavierNx],
+            Some("orin") => vec![Board::OrinNano],
+            Some(other) => {
+                return Err(err!("invalid value {other:?} for --board (expected xavier|orin)"))
+            }
+        };
+        for board in boards {
+            let (stem, csv, text) = fig10_render(board, cfg);
+            sink.table(&stem, &csv);
+            sink.text(&text);
+        }
+        Ok(())
+    }
 }
 
 /// Fig. 11: response-time variability (max-mean / mean-min error bars,
 /// average relative range) across randomized-offset runs.
-pub fn run_fig11(cfg: &ExpConfig) -> String {
+/// Pure render: (CSV, ASCII).
+pub fn fig11_render(cfg: &ExpConfig) -> (CsvTable, String) {
     const REPS: usize = 8;
     let platform = Board::XavierNx.platform();
     let seed = cfg.seed;
@@ -251,15 +297,32 @@ pub fn run_fig11(cfg: &ExpConfig) -> String {
         let avg_rel = rel_ranges.iter().sum::<f64>() / rel_ranges.len().max(1) as f64;
         out.push_str(&format!("{label:16} average relative range = {avg_rel:.3}\n"));
     }
-    let path = results_dir().join("fig11.csv");
-    csv.write(&path).expect("write csv");
-    out.push_str(&format!("wrote {}\n", path.display()));
-    out
+    (csv, out)
+}
+
+/// Registry face: `gcaps exp fig11`.
+pub struct Fig11Exp;
+
+impl Experiment for Fig11Exp {
+    fn name(&self) -> &'static str {
+        "fig11"
+    }
+
+    fn about(&self) -> &'static str {
+        "Case-study response-time variability across offsets"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (csv, text) = fig11_render(cfg);
+        sink.table("fig11", &csv);
+        sink.text(&text);
+        Ok(())
+    }
 }
 
 /// Table 5: MORT vs analytic WCRT per RT task, for the default driver
-/// and GCAPS (busy + suspend).
-pub fn run_table5(cfg: &ExpConfig) -> String {
+/// and GCAPS (busy + suspend). Pure render: (CSV, ASCII).
+pub fn table5_render(cfg: &ExpConfig) -> (CsvTable, String) {
     let platform = Board::XavierNx.platform();
     let mut out = String::from(
         "== Table 5: MORT vs WCRT (ms) on simulated Xavier ==\n\
@@ -304,10 +367,27 @@ pub fn run_table5(cfg: &ExpConfig) -> String {
         }
         out.push('\n');
     }
-    let path = results_dir().join("table5.csv");
-    csv.write(&path).expect("write csv");
-    out.push_str(&format!("wrote {}\n", path.display()));
-    out
+    (csv, out)
+}
+
+/// Registry face: `gcaps exp table5`.
+pub struct Table5Exp;
+
+impl Experiment for Table5Exp {
+    fn name(&self) -> &'static str {
+        "table5"
+    }
+
+    fn about(&self) -> &'static str {
+        "Case-study MORT vs analytic WCRT (simulated Xavier)"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (csv, text) = table5_render(cfg);
+        sink.table("table5", &csv);
+        sink.text(&text);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -4,10 +4,13 @@
 //! ASCII Gantt charts from real simulator traces.
 
 use crate::analysis::gcaps::{analyze, Options};
+use crate::experiments::registry::Experiment;
+use crate::experiments::sink::Sink;
 use crate::experiments::ExpConfig;
 use crate::model::{ms, to_ms, GpuSegment, Platform, Task, TaskSet, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep;
+use crate::util::error::Result;
 
 fn mk(
     id: usize,
@@ -189,6 +192,77 @@ pub fn run_examples(cfg: &ExpConfig) -> String {
     ];
     let rendered = sweep::run(&cfg.sweep(), figs, |_, &(_, f)| f());
     rendered.concat()
+}
+
+/// Registry face of one schedule-example figure: pure ASCII (the
+/// illustrative timelines have no tabular artifact), parameter-free.
+macro_rules! example_experiment {
+    ($exp:ident, $name:literal, $about:literal, $run:expr) => {
+        pub struct $exp;
+
+        impl Experiment for $exp {
+            fn name(&self) -> &'static str {
+                $name
+            }
+
+            fn about(&self) -> &'static str {
+                $about
+            }
+
+            /// Covered by the `examples` aggregate in `exp all`.
+            fn in_all(&self) -> bool {
+                false
+            }
+
+            fn run(&self, _cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+                sink.text(&$run());
+                Ok(())
+            }
+        }
+    };
+}
+
+example_experiment!(
+    Fig3Exp,
+    "fig3",
+    "Example 1 timeline: sync-based (MPCP) vs GCAPS Gantt",
+    run_fig3
+);
+example_experiment!(
+    Fig5Exp,
+    "fig5",
+    "Example 2 (Table 2): separate GPU priorities fix tau4",
+    run_fig5
+);
+example_experiment!(
+    Fig6Exp,
+    "fig6",
+    "Busy-waiting interference taxonomy timeline",
+    run_fig6
+);
+example_experiment!(
+    Fig7Exp,
+    "fig7",
+    "Runlist-update delay timeline (eps-blocking 1-3)",
+    run_fig7
+);
+
+/// All four schedule examples, concatenated in figure order.
+pub struct ExamplesExp;
+
+impl Experiment for ExamplesExp {
+    fn name(&self) -> &'static str {
+        "examples"
+    }
+
+    fn about(&self) -> &'static str {
+        "All schedule-example figures (fig3/fig5/fig6/fig7)"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        sink.text(&run_examples(cfg));
+        Ok(())
+    }
 }
 
 #[cfg(test)]

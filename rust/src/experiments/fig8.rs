@@ -6,12 +6,16 @@
 //! assignment on failure.
 
 use crate::analysis::{approach_schedulable, Approach};
-use crate::experiments::{results_dir, ExpConfig};
+use crate::err;
+use crate::experiments::registry::{Experiment, FlagSpec};
+use crate::experiments::sink::Sink;
+use crate::experiments::ExpConfig;
 use crate::model::WaitMode;
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 
 /// One Fig. 8 panel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -224,21 +228,54 @@ pub fn panel_csv(
     csv
 }
 
-/// Run + persist one panel.
-pub fn run_and_report(panel: Panel, cfg: &ExpConfig) -> String {
-    let (xticks, series) = run_panel(panel, cfg);
-    let csv = panel_csv(panel, &xticks, &series);
-    let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
-    csv.write(&path).expect("write csv");
-    let chart = line_chart(
+/// Render one panel's ASCII chart.
+pub fn panel_chart(panel: Panel, xticks: &[String], series: &[(String, Vec<f64>)]) -> String {
+    line_chart(
         &format!("Fig. 8{}: schedulability vs {}", panel.letter(), panel.xlabel()),
         panel.xlabel(),
-        &xticks,
-        &series,
+        xticks,
+        series,
         1.0,
         16,
-    );
-    format!("{chart}\nwrote {}\n", path.display())
+    )
+}
+
+fn panel_value_ok(v: &str) -> bool {
+    Panel::from_letter(v).is_some()
+}
+
+/// Registry face: `gcaps exp fig8 [--panel a..f]` — all six panels
+/// when no panel is selected, one table per panel (`fig8a`..`fig8f`).
+pub struct Fig8Exp;
+
+impl Experiment for Fig8Exp {
+    fn name(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn about(&self) -> &'static str {
+        "Schedulability of 8 approaches over six parameter sweeps"
+    }
+
+    fn flags(&self) -> &'static [FlagSpec] {
+        static FLAGS: [FlagSpec; 1] =
+            [FlagSpec { name: "panel", values: "a..f", check: panel_value_ok }];
+        &FLAGS
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let panels: Vec<Panel> = match cfg.opts.get("panel") {
+            Some(l) => vec![Panel::from_letter(l)
+                .ok_or_else(|| err!("invalid value {l:?} for --panel (expected a..f)"))?],
+            None => Panel::ALL.to_vec(),
+        };
+        for panel in panels {
+            let (xticks, series) = run_panel(panel, cfg);
+            sink.table(&format!("fig8{}", panel.letter()), &panel_csv(panel, &xticks, &series));
+            sink.text(&format!("{}\n", panel_chart(panel, &xticks, &series)));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

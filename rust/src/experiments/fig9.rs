@@ -4,12 +4,15 @@
 //! priority choice most; the paper reports busy-waiting benefits more).
 
 use crate::analysis::{analyze_with_gpu_prio, gcaps};
-use crate::experiments::{results_dir, ExpConfig};
+use crate::experiments::registry::Experiment;
+use crate::experiments::sink::Sink;
+use crate::experiments::ExpConfig;
 use crate::model::WaitMode;
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 
 /// (ratio without assignment, ratio with assignment) at one point.
 /// Sharded across the sweep pool, one cell per taskset; both variants
@@ -36,7 +39,8 @@ pub fn point(busy: bool, util: f64, cfg: &ExpConfig) -> (f64, f64) {
     (base_ok as f64 / n, auds_ok as f64 / n)
 }
 
-pub fn run_and_report(cfg: &ExpConfig) -> String {
+/// Run the utilization sweep; returns (xticks, the four series).
+pub fn sweep(cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
     let utils = [0.3, 0.4, 0.5, 0.6, 0.7];
     let xticks: Vec<String> = utils.iter().map(|u| format!("{u:.1}")).collect();
     let mut series: Vec<(String, Vec<f64>)> = vec![
@@ -53,23 +57,47 @@ pub fn run_and_report(cfg: &ExpConfig) -> String {
         series[2].1.push(s0);
         series[3].1.push(s1);
     }
+    (xticks, series)
+}
+
+/// Format the merged results as the `fig9` CSV table (pure — byte
+/// schema pinned by the registry goldens).
+pub fn fig9_csv(xticks: &[String], series: &[(String, Vec<f64>)]) -> CsvTable {
     let mut csv = CsvTable::new(vec!["series", "util_per_cpu", "schedulable_ratio"]);
-    for (label, ys) in &series {
+    for (label, ys) in series {
         for (x, y) in xticks.iter().zip(ys) {
             csv.row(vec![label.clone(), x.clone(), format!("{y:.4}")]);
         }
     }
-    let path = results_dir().join("fig9.csv");
-    csv.write(&path).expect("write csv");
-    let chart = line_chart(
-        "Fig. 9: schedulability gain from GPU priority assignment",
-        "utilization per CPU",
-        &xticks,
-        &series,
-        1.0,
-        16,
-    );
-    format!("{chart}\nwrote {}\n", path.display())
+    csv
+}
+
+/// Registry face: `gcaps exp fig9`.
+pub struct Fig9Exp;
+
+impl Experiment for Fig9Exp {
+    fn name(&self) -> &'static str {
+        "fig9"
+    }
+
+    fn about(&self) -> &'static str {
+        "Schedulability gain from Audsley GPU-priority assignment"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (xticks, series) = sweep(cfg);
+        sink.table("fig9", &fig9_csv(&xticks, &series));
+        let chart = line_chart(
+            "Fig. 9: schedulability gain from GPU priority assignment",
+            "utilization per CPU",
+            &xticks,
+            &series,
+            1.0,
+            16,
+        );
+        sink.text(&format!("{chart}\n"));
+        Ok(())
+    }
 }
 
 #[cfg(test)]

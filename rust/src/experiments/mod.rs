@@ -1,7 +1,9 @@
 //! Experiment harnesses: one module per paper figure/table (see
-//! DESIGN.md §4 for the index). Every harness writes a CSV under
-//! `results/` and prints an ASCII rendition; EXPERIMENTS.md records the
-//! paper-vs-measured comparison.
+//! DESIGN.md §4 for the index). Every harness is a first-class
+//! [`registry::Experiment`] emitting typed rows into pluggable
+//! [`sink::Sink`]s (CSV under `results/`, JSONL, ASCII); EXPERIMENTS.md
+//! records the paper-vs-measured comparison. Dispatch via
+//! [`crate::api`] or `gcaps exp <name>`.
 
 pub mod ablation;
 pub mod bench;
@@ -11,7 +13,9 @@ pub mod fig8;
 pub mod fig9;
 pub mod multigpu;
 pub mod overhead;
+pub mod registry;
 pub mod scenarios;
+pub mod sink;
 
 use std::path::PathBuf;
 
@@ -46,8 +50,36 @@ pub fn results_dir() -> PathBuf {
         .unwrap_or_else(|| "results".into())
 }
 
+/// Per-experiment option values (`--panel a` → `("panel", "a")`),
+/// validated against the experiment's declared [`registry::FlagSpec`]s
+/// before dispatch. Raw strings by design: each experiment parses its
+/// own options, the registry guarantees the names and values are legal.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Opts(Vec<(String, String)>);
+
+impl Opts {
+    /// Builder-style insert (later values win on duplicate names).
+    pub fn set(mut self, name: &str, value: &str) -> Opts {
+        self.0.retain(|(n, _)| n != name);
+        self.0.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.0.iter().map(|(n, v)| (n.as_str(), v.as_str()))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
 /// Shared experiment scale knobs (CLI-settable).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ExpConfig {
     /// Tasksets per data point (paper: 1000).
     pub tasksets: usize,
@@ -58,6 +90,8 @@ pub struct ExpConfig {
     pub jobs: usize,
     /// Print sweep progress/throughput to stderr (CLI runs only).
     pub progress: bool,
+    /// Validated per-experiment options (`--panel`, `--board`, `--only`).
+    pub opts: Opts,
 }
 
 impl Default for ExpConfig {
@@ -67,6 +101,7 @@ impl Default for ExpConfig {
             seed: 2024,
             jobs: crate::sweep::available_jobs(),
             progress: false,
+            opts: Opts::default(),
         }
     }
 }

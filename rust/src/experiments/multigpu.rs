@@ -14,12 +14,15 @@
 //! reproduces the fig8 default point exactly.
 
 use crate::analysis::Approach;
-use crate::experiments::{results_dir, ExpConfig};
+use crate::experiments::registry::Experiment;
+use crate::experiments::sink::Sink;
+use crate::experiments::ExpConfig;
 use crate::model::{Platform, WaitMode};
 use crate::sweep;
 use crate::taskgen::GenParams;
 use crate::util::ascii::line_chart;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 
 /// The swept GPU-engine counts.
 pub const GPU_COUNTS: [usize; 3] = [1, 2, 4];
@@ -81,21 +84,32 @@ pub fn sweep_csv(xticks: &[String], series: &[(String, Vec<f64>)]) -> CsvTable {
     csv
 }
 
-/// Run + persist the sweep.
-pub fn run_and_report(cfg: &ExpConfig) -> String {
-    let (xticks, series) = run_sweep(cfg);
-    let csv = sweep_csv(&xticks, &series);
-    let path = results_dir().join("multigpu.csv");
-    csv.write(&path).expect("write csv");
-    let chart = line_chart(
-        "Multi-GPU: schedulability vs GPU engine count (Table 3 defaults)",
-        "num_gpus",
-        &xticks,
-        &series,
-        1.0,
-        16,
-    );
-    format!("{chart}\nwrote {}\n", path.display())
+/// Registry face: `gcaps exp multigpu`.
+pub struct MultigpuExp;
+
+impl Experiment for MultigpuExp {
+    fn name(&self) -> &'static str {
+        "multigpu"
+    }
+
+    fn about(&self) -> &'static str {
+        "Schedulability of 8 approaches over 1/2/4 GPU engines"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (xticks, series) = run_sweep(cfg);
+        sink.table("multigpu", &sweep_csv(&xticks, &series));
+        let chart = line_chart(
+            "Multi-GPU: schedulability vs GPU engine count (Table 3 defaults)",
+            "num_gpus",
+            &xticks,
+            &series,
+            1.0,
+            16,
+        );
+        sink.text(&format!("{chart}\n"));
+        Ok(())
+    }
 }
 
 #[cfg(test)]

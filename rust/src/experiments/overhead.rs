@@ -18,12 +18,15 @@
 //! configured θ. The live variant applies the same estimator to real
 //! concurrent PJRT launch streams.
 
+use crate::experiments::registry::Experiment;
+use crate::experiments::sink::Sink;
 use crate::experiments::{results_dir, ExpConfig};
 use crate::model::{ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep;
 use crate::util::ascii::{bar_chart, histogram_chart};
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 use crate::util::stats::Histogram;
 
 /// A GPU-only task running one `ge`-long kernel once (period padded so
@@ -72,7 +75,8 @@ pub fn estimate_theta_sim(platform: &Platform, ge: Time, nu: usize) -> (f64, f64
 /// Fig. 13 (DES): θ estimation across kernel lengths and ν values. Each
 /// (board, kernel, ν) cell runs two DES instances; the grid is sharded
 /// across the sweep pool and merged in canonical board-major order.
-pub fn run_fig13(cfg: &ExpConfig) -> String {
+/// Pure render: (CSV, ASCII).
+pub fn fig13_render(cfg: &ExpConfig) -> (CsvTable, String) {
     use crate::experiments::casestudy::Board;
     // Board presets come from the case study so Fig. 10/13 cannot drift
     // apart. ε is irrelevant here (the Eq. 15 runs use Policy::TsgRr,
@@ -111,17 +115,35 @@ pub fn run_fig13(cfg: &ExpConfig) -> String {
         let avg = ests.iter().sum::<f64>() / ests.len() as f64;
         rows.push((format!("{board} (θ_config = {} µs)", platform.gpus[0].theta), avg));
     }
-    let path = results_dir().join("fig13.csv");
-    csv.write(&path).expect("write csv");
-    let mut out = bar_chart("Fig. 13: estimated TSG context-switch overhead (Eq. 15)", &rows, "µs");
-    out.push_str(&format!("wrote {}\n", path.display()));
-    out
+    let out = bar_chart("Fig. 13: estimated TSG context-switch overhead (Eq. 15)", &rows, "µs");
+    (csv, out)
 }
 
-/// Fig. 12 histogram from ε samples (µs).
-pub fn fig12_histogram(samples_us: &[f64], label: &str) -> String {
+/// Registry face: `gcaps exp fig13`.
+pub struct Fig13Exp;
+
+impl Experiment for Fig13Exp {
+    fn name(&self) -> &'static str {
+        "fig13"
+    }
+
+    fn about(&self) -> &'static str {
+        "TSG context-switch overhead estimation (Eq. 15, DES)"
+    }
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let (csv, text) = fig13_render(cfg);
+        sink.table("fig13", &csv);
+        sink.text(&text);
+        Ok(())
+    }
+}
+
+/// Fig. 12: histogram table + chart from ε samples (µs). Pure render:
+/// `None` table when there are no samples.
+pub fn fig12_parts(samples_us: &[f64], label: &str) -> (Option<CsvTable>, String) {
     if samples_us.is_empty() {
-        return format!("== Fig. 12 ({label}): no samples ==\n");
+        return (None, format!("== Fig. 12 ({label}): no samples ==\n"));
     }
     let max = samples_us.iter().cloned().fold(0.0f64, f64::max);
     let mut h = Histogram::new(0.0, (max * 1.1).max(1.0), 20);
@@ -133,28 +155,60 @@ pub fn fig12_histogram(samples_us: &[f64], label: &str) -> String {
         let (lo, hi) = h.bin_edges(k);
         csv.row(vec![format!("{lo:.3}"), format!("{hi:.3}"), c.to_string()]);
     }
-    let path = results_dir().join(format!("fig12_{label}.csv"));
-    csv.write(&path).expect("write csv");
-    let mut out = histogram_chart(
+    let out = histogram_chart(
         &format!("Fig. 12 ({label}): runlist update overhead"),
         &h,
         "µs",
     );
-    out.push_str(&format!("wrote {}\n", path.display()));
+    (Some(csv), out)
+}
+
+/// Fig. 12 histogram from ε samples (µs), written straight to the
+/// results dir — the live executive's entry point (`gcaps live fig12`),
+/// which runs outside the experiment registry.
+pub fn fig12_histogram(samples_us: &[f64], label: &str) -> String {
+    let (csv, mut out) = fig12_parts(samples_us, label);
+    if let Some(csv) = csv {
+        let path = results_dir().join(format!("fig12_{label}.csv"));
+        csv.write(&path).expect("write csv");
+        out.push_str(&format!("wrote {}\n", path.display()));
+    }
     out
 }
 
-/// Fig. 12 (DES variant): ε samples from the simulated case study.
-pub fn run_fig12_sim() -> String {
+/// ε samples (µs) of the simulated case study — the Fig. 12 DES input.
+pub fn fig12_sim_samples() -> Vec<f64> {
     use crate::experiments::casestudy::{table4_taskset, Board};
     let ts = table4_taskset(&Board::XavierNx.platform(), WaitMode::SelfSuspend);
     let sim = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(30_000.0)));
-    let samples: Vec<f64> = sim
-        .per_task
+    sim.per_task
         .iter()
         .flat_map(|m| m.runlist_updates.iter().map(|&d| d as f64))
-        .collect();
-    fig12_histogram(&samples, "sim")
+        .collect()
+}
+
+/// Registry face: `gcaps exp fig12` (the DES variant; the live variant
+/// is `gcaps live fig12`).
+pub struct Fig12Exp;
+
+impl Experiment for Fig12Exp {
+    fn name(&self) -> &'static str {
+        "fig12"
+    }
+
+    fn about(&self) -> &'static str {
+        "Runlist-update delay histogram (simulated case study)"
+    }
+
+    fn run(&self, _cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let samples = fig12_sim_samples();
+        let (csv, text) = fig12_parts(&samples, "sim");
+        if let Some(csv) = csv {
+            sink.table("fig12_sim", &csv);
+        }
+        sink.text(&text);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,278 @@
+//! The first-class [`Experiment`] trait and its static registry — the
+//! experiment-layer analog of the `Analysis` trait (PR 2): every paper
+//! figure/table and every beyond-the-paper sweep is one registered
+//! trait object, dispatched generically by the CLI (`gcaps exp <name>`,
+//! `gcaps exp --list`, `gcaps exp all`) and by the library facade
+//! [`crate::api`].
+//!
+//! An experiment declares its stable `name`, a one-line `about`, and
+//! the extra flags it accepts beyond the common scale knobs
+//! ([`FlagSpec`] — the registry validates option names AND values
+//! before dispatch, so a typo like `--panle a` or `--panel z` is a
+//! usage error, never a silent default run). Its `run` emits typed
+//! tables and ASCII blocks into a caller-supplied
+//! [`Sink`](crate::experiments::sink::Sink); [`run`] wraps dispatch
+//! with bookkeeping and returns an [`ExpReport`] — structured table
+//! stats, written output paths, and wall-clock.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::err;
+use crate::experiments::sink::Sink;
+use crate::experiments::{
+    ablation, casestudy, examples_figs, fig8, fig9, multigpu, overhead, scenarios, ExpConfig,
+};
+use crate::util::csv::CsvTable;
+use crate::util::error::Result;
+
+/// One extra flag accepted by an experiment (beyond the common
+/// `--tasksets/--seed/--jobs/--format`).
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    /// Flag name without the `--` prefix.
+    pub name: &'static str,
+    /// Human-readable accepted values, e.g. `"a..f"` — shown by
+    /// `gcaps exp --list` and embedded in rejection messages.
+    pub values: &'static str,
+    /// Value validator, applied before dispatch.
+    pub check: fn(&str) -> bool,
+}
+
+/// A first-class experiment harness.
+pub trait Experiment: Sync {
+    /// Stable CLI / registry name (`gcaps exp <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `gcaps exp --list`.
+    fn about(&self) -> &'static str;
+
+    /// Extra flags this experiment accepts (validated by [`validate`]).
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[]
+    }
+
+    /// Whether `gcaps exp all` includes this experiment (false for the
+    /// single figures an aggregate like `examples` already covers).
+    fn in_all(&self) -> bool {
+        true
+    }
+
+    /// Run at the given scale, emitting every typed table and ASCII
+    /// block into `sink` exactly once. Use [`run`] for dispatch with
+    /// validation, timing and the structured [`ExpReport`].
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()>;
+}
+
+/// Registry order = `--list` order; the `in_all` subset, in this
+/// order, is the canonical `gcaps exp all` sequence.
+static EXPERIMENTS: [&dyn Experiment; 15] = [
+    &examples_figs::Fig3Exp,
+    &examples_figs::Fig5Exp,
+    &examples_figs::Fig6Exp,
+    &examples_figs::Fig7Exp,
+    &examples_figs::ExamplesExp,
+    &fig8::Fig8Exp,
+    &fig9::Fig9Exp,
+    &casestudy::Fig10Exp,
+    &casestudy::Fig11Exp,
+    &casestudy::Table5Exp,
+    &overhead::Fig12Exp,
+    &overhead::Fig13Exp,
+    &ablation::AblationExp,
+    &multigpu::MultigpuExp,
+    &scenarios::ScenariosExp,
+];
+
+/// All registered experiments, in `--list` order.
+pub fn all() -> &'static [&'static dyn Experiment] {
+    &EXPERIMENTS
+}
+
+/// Look an experiment up by its stable name.
+pub fn find(name: &str) -> Option<&'static dyn Experiment> {
+    EXPERIMENTS.iter().copied().find(|e| e.name() == name)
+}
+
+/// The `gcaps exp all` subset, in canonical order.
+pub fn all_set() -> Vec<&'static dyn Experiment> {
+    EXPERIMENTS.iter().copied().filter(|e| e.in_all()).collect()
+}
+
+/// Shape of one emitted table (stable schema per experiment).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TableStat {
+    /// Artifact stem (`results/<name>.csv` / `.jsonl`).
+    pub name: String,
+    /// Column schema, in emission order.
+    pub columns: Vec<String>,
+    /// Data rows emitted (header excluded).
+    pub rows: usize,
+}
+
+/// Structured result of one registry dispatch.
+#[derive(Debug, Clone)]
+pub struct ExpReport {
+    /// The experiment's registry name.
+    pub name: &'static str,
+    /// Every table emitted, in emission order.
+    pub tables: Vec<TableStat>,
+    /// Files written by the sinks (CSV/JSONL), in emission order.
+    pub outputs: Vec<PathBuf>,
+    /// Wall-clock of the `run` call (sweep + sink emission).
+    pub wall: Duration,
+    /// The collected ASCII report, when an ASCII sink was requested
+    /// (filled by [`crate::api::run`]; empty otherwise).
+    pub ascii: String,
+}
+
+impl ExpReport {
+    /// Total data rows across all emitted tables.
+    pub fn rows(&self) -> usize {
+        self.tables.iter().map(|t| t.rows).sum()
+    }
+}
+
+/// Validate `cfg.opts` against the experiment's declared flags:
+/// unknown option names and invalid values are usage errors (the CLI
+/// maps them to exit status 2).
+pub fn validate(exp: &dyn Experiment, cfg: &ExpConfig) -> Result<()> {
+    for (name, value) in cfg.opts.iter() {
+        match exp.flags().iter().find(|f| f.name == name) {
+            None => {
+                return Err(err!(
+                    "unknown option {name:?} for experiment {} (accepted: {})",
+                    exp.name(),
+                    if exp.flags().is_empty() {
+                        "none".to_string()
+                    } else {
+                        exp.flags()
+                            .iter()
+                            .map(|f| format!("--{}", f.name))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    }
+                ))
+            }
+            Some(f) => {
+                if !(f.check)(value) {
+                    return Err(err!(
+                        "invalid value {value:?} for --{name} (expected {})",
+                        f.values
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Counting wrapper: forwards to the caller's sink while tallying the
+/// per-table stats for the [`ExpReport`].
+struct Recorder<'a> {
+    inner: &'a mut dyn Sink,
+    tables: Vec<TableStat>,
+}
+
+impl Sink for Recorder<'_> {
+    fn table(&mut self, name: &str, table: &CsvTable) {
+        self.tables.push(TableStat {
+            name: name.to_string(),
+            columns: table.header.clone(),
+            rows: table.rows.len(),
+        });
+        self.inner.table(name, table);
+    }
+
+    fn text(&mut self, text: &str) {
+        self.inner.text(text);
+    }
+}
+
+/// Dispatch one experiment: validate its options, run it against
+/// `sink`, finish the sink, and return the structured report.
+pub fn run(exp: &dyn Experiment, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<ExpReport> {
+    validate(exp, cfg)?;
+    let start = Instant::now();
+    let mut rec = Recorder { inner: &mut *sink, tables: Vec::new() };
+    exp.run(cfg, &mut rec)?;
+    let tables = rec.tables;
+    let outputs = sink.finish()?;
+    Ok(ExpReport {
+        name: exp.name(),
+        tables,
+        outputs,
+        wall: start.elapsed(),
+        ascii: String::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sink::NullSink;
+    use crate::experiments::Opts;
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let names: Vec<&str> = all().iter().map(|e| e.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "fig3", "fig5", "fig6", "fig7", "examples", "fig8", "fig9", "fig10",
+                "fig11", "table5", "fig12", "fig13", "ablation", "multigpu", "scenarios",
+            ]
+        );
+        for n in &names {
+            assert!(find(n).is_some(), "{n} not findable");
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn all_set_matches_the_legacy_exp_all_sequence() {
+        let names: Vec<&str> = all_set().iter().map(|e| e.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "examples", "fig8", "fig9", "fig10", "fig11", "table5", "fig12", "fig13",
+                "ablation", "multigpu", "scenarios",
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_option_is_rejected() {
+        let exp = find("fig8").unwrap();
+        let cfg = ExpConfig {
+            opts: Opts::default().set("panle", "a"),
+            ..ExpConfig::default()
+        };
+        let e = run(exp, &cfg, &mut NullSink).unwrap_err().to_string();
+        assert!(e.contains("panle") && e.contains("fig8"), "{e}");
+    }
+
+    #[test]
+    fn invalid_option_value_is_rejected() {
+        let exp = find("fig8").unwrap();
+        let cfg = ExpConfig {
+            opts: Opts::default().set("panel", "z"),
+            ..ExpConfig::default()
+        };
+        let e = run(exp, &cfg, &mut NullSink).unwrap_err().to_string();
+        assert!(e.contains("--panel") && e.contains("a..f"), "{e}");
+    }
+
+    #[test]
+    fn report_counts_tables_rows_and_wall_clock() {
+        let exp = find("fig9").unwrap();
+        let cfg = ExpConfig { tasksets: 2, seed: 5, ..ExpConfig::default() };
+        let report = run(exp, &cfg, &mut NullSink).unwrap();
+        assert_eq!(report.name, "fig9");
+        assert_eq!(report.tables.len(), 1);
+        assert_eq!(report.tables[0].name, "fig9");
+        assert_eq!(report.tables[0].rows, 4 * 5, "4 series × 5 utilization points");
+        assert_eq!(report.rows(), 20);
+        assert!(report.outputs.is_empty(), "NullSink writes nothing");
+    }
+}

@@ -33,12 +33,15 @@
 //! compare independent taskset draws — distribution-level, not paired.
 
 use crate::analysis::{approach_schedulable, Approach};
-use crate::experiments::{eight_approaches, results_dir, ExpConfig};
+use crate::experiments::registry::{Experiment, FlagSpec};
+use crate::experiments::sink::Sink;
+use crate::experiments::{eight_approaches, ExpConfig};
 use crate::model::{config, ms, GpuContext, Platform, Time};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
 
 /// The sub-sweep names accepted by `gcaps exp scenarios --only <name>`.
 pub const SCENARIOS: [&str; 3] = ["epstheta", "edfvfp", "hetero"];
@@ -478,35 +481,53 @@ fn hetero_report(rows: &[HeteroRow]) -> String {
 // driver
 // ---------------------------------------------------------------------
 
-/// Run the selected sub-sweeps (`only = None` runs all three), write
-/// `results/scenarios_{epstheta,edfvfp,hetero}.csv`, and return the
-/// ASCII report. Unknown `only` values are the caller's job to reject
-/// (the CLI exits with an error naming the flag).
-pub fn run_and_report(cfg: &ExpConfig, only: Option<&str>) -> String {
-    let selected = |name: &str| only.is_none_or(|o| o == name);
-    let mut out = String::new();
-    if selected("epstheta") {
-        let rows = epstheta_sweep(cfg);
-        let path = results_dir().join("scenarios_epstheta.csv");
-        epstheta_csv(&rows).write(&path).expect("write csv");
-        out.push_str(&epstheta_report(&rows));
-        out.push_str(&format!("wrote {}\n\n", path.display()));
+fn only_value_ok(v: &str) -> bool {
+    SCENARIOS.contains(&v)
+}
+
+/// Registry face: `gcaps exp scenarios [--only epstheta|edfvfp|hetero]`
+/// — all three sub-sweeps when none is selected, one table each
+/// (`scenarios_<name>`).
+pub struct ScenariosExp;
+
+impl Experiment for ScenariosExp {
+    fn name(&self) -> &'static str {
+        "scenarios"
     }
-    if selected("edfvfp") {
-        let rows = edfvfp_sweep(cfg);
-        let path = results_dir().join("scenarios_edfvfp.csv");
-        edfvfp_csv(&rows).write(&path).expect("write csv");
-        out.push_str(&edfvfp_report(&rows));
-        out.push_str(&format!("wrote {}\n\n", path.display()));
+
+    fn about(&self) -> &'static str {
+        "Beyond-the-paper sweeps: eps x theta grids, EDF vs FP, hetero GPUs"
     }
-    if selected("hetero") {
-        let rows = hetero_sweep(cfg);
-        let path = results_dir().join("scenarios_hetero.csv");
-        hetero_csv(&rows).write(&path).expect("write csv");
-        out.push_str(&hetero_report(&rows));
-        out.push_str(&format!("wrote {}\n", path.display()));
+
+    fn flags(&self) -> &'static [FlagSpec] {
+        static FLAGS: [FlagSpec; 1] = [FlagSpec {
+            name: "only",
+            values: "epstheta|edfvfp|hetero",
+            check: only_value_ok,
+        }];
+        &FLAGS
     }
-    out
+
+    fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
+        let only = cfg.opts.get("only");
+        let selected = |name: &str| only.is_none_or(|o| o == name);
+        if selected("epstheta") {
+            let rows = epstheta_sweep(cfg);
+            sink.table("scenarios_epstheta", &epstheta_csv(&rows));
+            sink.text(&epstheta_report(&rows));
+        }
+        if selected("edfvfp") {
+            let rows = edfvfp_sweep(cfg);
+            sink.table("scenarios_edfvfp", &edfvfp_csv(&rows));
+            sink.text(&edfvfp_report(&rows));
+        }
+        if selected("hetero") {
+            let rows = hetero_sweep(cfg);
+            sink.table("scenarios_hetero", &hetero_csv(&rows));
+            sink.text(&hetero_report(&rows));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -602,9 +623,16 @@ mod tests {
 
     #[test]
     fn only_filter_selects_a_single_sub_sweep() {
-        let out = run_and_report(&ExpConfig { tasksets: 2, ..tiny() }, Some("epstheta"));
-        assert!(out.contains("scenarios_epstheta.csv"));
-        assert!(!out.contains("scenarios_edfvfp.csv"));
-        assert!(!out.contains("scenarios_hetero.csv"));
+        use crate::experiments::registry::{self, Experiment};
+        use crate::experiments::sink::NullSink;
+        let cfg = ExpConfig {
+            tasksets: 2,
+            opts: crate::experiments::Opts::default().set("only", "epstheta"),
+            ..tiny()
+        };
+        let report = registry::run(&ScenariosExp, &cfg, &mut NullSink).unwrap();
+        let names: Vec<&str> = report.tables.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["scenarios_epstheta"]);
+        assert_eq!(ScenariosExp.flags().len(), 1);
     }
 }

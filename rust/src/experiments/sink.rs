@@ -1,0 +1,387 @@
+//! Pluggable result sinks for the experiment registry.
+//!
+//! Every [`Experiment`](crate::experiments::registry::Experiment) emits
+//! its results exactly once — typed tables (a stable column schema per
+//! experiment, the legacy `results/<name>.csv` stem as the table name)
+//! plus rendered ASCII blocks — into a `&mut dyn Sink`. The sink
+//! decides the output format, so one run can feed CSV, JSONL and the
+//! ASCII report simultaneously ([`Tee`]) without re-sweeping:
+//!
+//! - [`CsvSink`] — writes `<dir>/<name>.csv`, byte-identical to the
+//!   pre-registry harness output (the `tests/registry.rs` goldens pin
+//!   this).
+//! - [`JsonlSink`] — writes `<dir>/<name>.jsonl`, one self-describing
+//!   JSON object per row (`{"table":..., "<column>":...}`), numeric
+//!   cells emitted verbatim as JSON numbers — the machine-readable
+//!   face for batch/service ingestion.
+//! - [`AsciiSink`] — collects the rendered text blocks (charts,
+//!   gantts, report tables) for the CLI.
+//! - [`Tee`] — fans every call out to several sinks.
+//! - [`NullSink`] — drops everything (compute-only runs).
+//!
+//! File sinks defer I/O errors to [`Sink::finish`] so experiment code
+//! stays infallible on the emission path.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::csv::CsvTable;
+use crate::util::error::{Error, Result};
+
+/// A consumer of one experiment run's typed tables and ASCII blocks.
+pub trait Sink {
+    /// A completed table of typed rows. `name` is the stable artifact
+    /// stem (`results/<name>.csv` before the redesign); `table.header`
+    /// is the experiment's column schema.
+    fn table(&mut self, name: &str, table: &CsvTable);
+
+    /// A rendered human-readable block (chart, gantt, report section).
+    fn text(&mut self, text: &str);
+
+    /// Flush, surface deferred I/O errors, and report written paths.
+    fn finish(&mut self) -> Result<Vec<PathBuf>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Shared core of the file sinks: one rendered artifact per table
+/// under `<dir>/<name>.<ext>`, with the first I/O error deferred to
+/// [`Sink::finish`].
+#[derive(Debug)]
+struct FileSink {
+    dir: PathBuf,
+    ext: &'static str,
+    render: fn(&str, &CsvTable) -> String,
+    written: Vec<PathBuf>,
+    error: Option<String>,
+}
+
+impl FileSink {
+    fn new(
+        dir: impl Into<PathBuf>,
+        ext: &'static str,
+        render: fn(&str, &CsvTable) -> String,
+    ) -> FileSink {
+        FileSink { dir: dir.into(), ext, render, written: Vec::new(), error: None }
+    }
+}
+
+impl Sink for FileSink {
+    fn table(&mut self, name: &str, table: &CsvTable) {
+        let path = self.dir.join(format!("{name}.{}", self.ext));
+        let write = |path: &Path| -> std::io::Result<()> {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(path, (self.render)(name, table))
+        };
+        match write(&path) {
+            Ok(()) => self.written.push(path),
+            Err(e) => {
+                self.error.get_or_insert(format!("write {}: {e}", path.display()));
+            }
+        }
+    }
+
+    fn text(&mut self, _text: &str) {}
+
+    fn finish(&mut self) -> Result<Vec<PathBuf>> {
+        match self.error.take() {
+            Some(e) => Err(Error::msg(e)),
+            None => Ok(std::mem::take(&mut self.written)),
+        }
+    }
+}
+
+/// Writes each table as `<dir>/<name>.csv` — the same bytes
+/// [`CsvTable::write`] produced before the registry (pinned by the
+/// `tests/registry.rs` goldens).
+#[derive(Debug)]
+pub struct CsvSink(FileSink);
+
+impl CsvSink {
+    pub fn new(dir: impl Into<PathBuf>) -> CsvSink {
+        CsvSink(FileSink::new(dir, "csv", |_, t| t.to_string()))
+    }
+}
+
+impl Sink for CsvSink {
+    fn table(&mut self, name: &str, table: &CsvTable) {
+        self.0.table(name, table);
+    }
+
+    fn text(&mut self, _text: &str) {}
+
+    fn finish(&mut self) -> Result<Vec<PathBuf>> {
+        self.0.finish()
+    }
+}
+
+/// Writes each table as `<dir>/<name>.jsonl` — one self-describing
+/// JSON object per row ([`to_jsonl`]).
+#[derive(Debug)]
+pub struct JsonlSink(FileSink);
+
+impl JsonlSink {
+    pub fn new(dir: impl Into<PathBuf>) -> JsonlSink {
+        JsonlSink(FileSink::new(dir, "jsonl", to_jsonl))
+    }
+}
+
+impl Sink for JsonlSink {
+    fn table(&mut self, name: &str, table: &CsvTable) {
+        self.0.table(name, table);
+    }
+
+    fn text(&mut self, _text: &str) {}
+
+    fn finish(&mut self) -> Result<Vec<PathBuf>> {
+        self.0.finish()
+    }
+}
+
+/// Collects the rendered ASCII blocks in emission order.
+#[derive(Debug, Default)]
+pub struct AsciiSink {
+    out: String,
+}
+
+impl AsciiSink {
+    pub fn new() -> AsciiSink {
+        AsciiSink::default()
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+}
+
+impl Sink for AsciiSink {
+    fn table(&mut self, _name: &str, _table: &CsvTable) {}
+
+    fn text(&mut self, text: &str) {
+        self.out.push_str(text);
+    }
+}
+
+/// Fans every call out to several sinks (one sweep, all formats).
+pub struct Tee<'a>(pub Vec<&'a mut dyn Sink>);
+
+impl Sink for Tee<'_> {
+    fn table(&mut self, name: &str, table: &CsvTable) {
+        for s in &mut self.0 {
+            s.table(name, table);
+        }
+    }
+
+    fn text(&mut self, text: &str) {
+        for s in &mut self.0 {
+            s.text(text);
+        }
+    }
+
+    fn finish(&mut self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for s in &mut self.0 {
+            out.extend(s.finish()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Drops everything — compute-only dispatch (tests, dry runs).
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    fn table(&mut self, _name: &str, _table: &CsvTable) {}
+    fn text(&mut self, _text: &str) {}
+}
+
+/// Render a table as JSON Lines: one flat object per row, keyed by the
+/// table name plus the column schema, in header order. Cells that are
+/// valid JSON number literals are emitted verbatim (so `0.1200` keeps
+/// its trailing zeros and stays a number); everything else becomes a
+/// JSON string. No table uses `table` as a column name — the
+/// self-description key cannot collide.
+pub fn to_jsonl(table_name: &str, t: &CsvTable) -> String {
+    let mut s = String::new();
+    for row in &t.rows {
+        s.push_str("{\"table\":");
+        s.push_str(&json_string(table_name));
+        for (k, v) in t.header.iter().zip(row) {
+            s.push(',');
+            s.push_str(&json_string(k));
+            s.push(':');
+            if is_json_number(v) {
+                s.push_str(v);
+            } else {
+                s.push_str(&json_string(v));
+            }
+        }
+        s.push_str("}\n");
+    }
+    s
+}
+
+/// Quote and escape `s` as a JSON string literal.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Is `s` a valid JSON number literal, verbatim?
+/// (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?` — notably `01`,
+/// `1.`, `.5`, `+3`, `nan` and `inf` are not.)
+pub fn is_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if i < b.len() && b[i] == b'-' {
+        i += 1;
+    }
+    let int_start = i;
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == int_start || (b[int_start] == b'0' && i - int_start > 1) {
+        return false;
+    }
+    if i < b.len() && b[i] == b'.' {
+        i += 1;
+        let frac_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac_start {
+            return false;
+        }
+    }
+    if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        i += 1;
+        if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+            i += 1;
+        }
+        let exp_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == exp_start {
+            return false;
+        }
+    }
+    i == b.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsvTable {
+        let mut t = CsvTable::new(vec!["approach", "ratio"]);
+        t.row(vec!["gcaps_suspend", "0.1200"]);
+        t.row(vec!["say \"hi\"", "20%"]);
+        t
+    }
+
+    #[test]
+    fn json_number_recognition() {
+        for ok in ["0", "7", "-5", "0.1200", "1e3", "-2.5E-2", "100"] {
+            assert!(is_json_number(ok), "{ok} should be a JSON number");
+        }
+        for bad in ["", "-", "01", "1.", ".5", "+3", "nan", "inf", "4x", "1O0", "1e", "0x1"] {
+            assert!(!is_json_number(bad), "{bad} should NOT be a JSON number");
+        }
+    }
+
+    #[test]
+    fn jsonl_is_self_describing_and_typed() {
+        let s = to_jsonl("fig9", &sample());
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"table\":\"fig9\",\"approach\":\"gcaps_suspend\",\"ratio\":0.1200}"
+        );
+        // Quotes escaped; non-numeric cell stays a string.
+        assert_eq!(
+            lines[1],
+            "{\"table\":\"fig9\",\"approach\":\"say \\\"hi\\\"\",\"ratio\":\"20%\"}"
+        );
+    }
+
+    #[test]
+    fn json_string_escapes_controls() {
+        assert_eq!(json_string("a\"b\\c\nd\re\tf\u{1}"), "\"a\\\"b\\\\c\\nd\\re\\tf\\u0001\"");
+    }
+
+    #[test]
+    fn csv_sink_writes_legacy_bytes() {
+        let dir = std::env::temp_dir().join("gcaps_sink_test_csv");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = CsvSink::new(&dir);
+        let t = sample();
+        sink.table("demo", &t);
+        let outputs = sink.finish().unwrap();
+        assert_eq!(outputs, vec![dir.join("demo.csv")]);
+        assert_eq!(std::fs::read_to_string(&outputs[0]).unwrap(), t.to_string());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_object_per_row() {
+        let dir = std::env::temp_dir().join("gcaps_sink_test_jsonl");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = JsonlSink::new(&dir);
+        sink.table("demo", &sample());
+        let outputs = sink.finish().unwrap();
+        assert_eq!(outputs, vec![dir.join("demo.jsonl")]);
+        let body = std::fs::read_to_string(&outputs[0]).unwrap();
+        assert_eq!(body.lines().count(), 2);
+        assert!(body.lines().all(|l| l.starts_with("{\"table\":\"demo\",")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tee_fans_out_and_merges_outputs() {
+        let dir = std::env::temp_dir().join("gcaps_sink_test_tee");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut csv = CsvSink::new(&dir);
+        let mut jsonl = JsonlSink::new(&dir);
+        let mut ascii = AsciiSink::new();
+        {
+            let mut tee = Tee(vec![&mut csv, &mut jsonl, &mut ascii]);
+            tee.table("demo", &sample());
+            tee.text("chart\n");
+            let outputs = tee.finish().unwrap();
+            assert_eq!(outputs, vec![dir.join("demo.csv"), dir.join("demo.jsonl")]);
+        }
+        assert_eq!(ascii.into_string(), "chart\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_sink_errors_surface_in_finish() {
+        // A directory path that cannot be created (a file is in the way).
+        let base = std::env::temp_dir().join("gcaps_sink_test_err");
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let blocker = base.join("blocked");
+        std::fs::write(&blocker, "not a dir").unwrap();
+        let mut sink = CsvSink::new(blocker.join("sub"));
+        sink.table("demo", &sample());
+        assert!(sink.finish().is_err());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -16,8 +16,29 @@
 //!
 //! See DESIGN.md for the module inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! ## Running experiments as a library
+//!
+//! Every experiment harness is a first-class
+//! [`experiments::registry::Experiment`] in a static registry; the
+//! [`api`] facade lists and runs them in-process with pluggable result
+//! sinks (CSV, JSONL, ASCII) and a structured report — no shelling out
+//! to the `gcaps` binary:
+//!
+//! ```no_run
+//! use gcaps::api::{self, Experiment};
+//! use gcaps::experiments::ExpConfig;
+//!
+//! for exp in api::list() {
+//!     println!("{:<10} {}", exp.name(), exp.about());
+//! }
+//! let cfg = ExpConfig { tasksets: 100, ..ExpConfig::default() };
+//! let report = api::run("multigpu", &cfg, &api::SinkSpec::csv_jsonl("results")).unwrap();
+//! println!("{} rows in {:?}; wrote {:?}", report.rows(), report.wall, report.outputs);
+//! ```
 
 pub mod analysis;
+pub mod api;
 pub mod coordinator;
 pub mod experiments;
 pub mod model;

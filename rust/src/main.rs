@@ -1,16 +1,22 @@
 //! `gcaps` — CLI for the GCAPS reproduction.
 //!
 //! ```text
-//! gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all>
-//!           [--panel a..f] [--board xavier|orin] [--only epstheta|edfvfp|hetero]
-//!           [--tasksets N] [--seed N] [--jobs N]
+//! gcaps exp <name|all> [--tasksets N] [--seed N] [--jobs N]
+//!           [--format csv|jsonl|all] [per-experiment flags]
+//! gcaps exp --list                    names, descriptions, per-experiment flags
 //! gcaps analyze [--seed N]            one random taskset through all 8 analyses
 //! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
 //! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
 //! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
 //! ```
 //!
-//! Experiment outputs land in `results/` (CSV) and on stdout (ASCII).
+//! The `exp` subcommand dispatches through the [`Experiment`] registry
+//! (`gcaps::experiments::registry`): every experiment declares its
+//! name, description and extra flags there, and `main` knows none of
+//! them individually. Results flow through pluggable sinks — CSV under
+//! `results/` (default), JSONL (`--format jsonl`), or both (`--format
+//! all`) — plus the ASCII report on stdout; one run feeds all formats
+//! without re-sweeping.
 //!
 //! `--jobs N` shards each experiment sweep across N worker threads
 //! (default: the host's available parallelism). The sweeps derive every
@@ -21,81 +27,19 @@
 use std::time::Duration;
 
 use gcaps::analysis::{analyze, analyze_with_gpu_prio, Approach};
+use gcaps::api::{self, SinkSpec};
 use gcaps::coordinator::executor::{run as live_run, LiveMode};
 use gcaps::coordinator::workload::build_case_study;
 use gcaps::experiments::bench as perfbench;
-use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
-use gcaps::experiments::examples_figs::{run_examples, run_fig3, run_fig5, run_fig6, run_fig7};
-use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
-use gcaps::experiments::fig9::run_and_report as fig9;
-use gcaps::experiments::multigpu::run_and_report as run_multigpu;
-use gcaps::experiments::ablation::run_and_report as run_ablation;
-use gcaps::experiments::scenarios::{self, run_and_report as run_scenarios};
-use gcaps::experiments::overhead::{fig12_histogram, run_fig12_sim, run_fig13};
-use gcaps::experiments::ExpConfig;
+use gcaps::experiments::overhead::fig12_histogram;
+use gcaps::experiments::registry::Experiment;
+use gcaps::experiments::{ExpConfig, Opts};
 use gcaps::model::{config, ms, to_ms, TaskSet, WaitMode};
 use gcaps::runtime::{artifacts_dir, Runtime};
 use gcaps::sim::{simulate, Policy, SimConfig};
 use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::cli::{fail, Args};
 use gcaps::util::rng::Pcg32;
-
-struct Args {
-    positional: Vec<String>,
-    flags: std::collections::HashMap<String, String>,
-}
-
-fn parse_args() -> Args {
-    let mut positional = Vec::new();
-    let mut flags = std::collections::HashMap::new();
-    let mut it = std::env::args().skip(1).peekable();
-    while let Some(a) = it.next() {
-        if let Some(name) = a.strip_prefix("--") {
-            let val = if it.peek().is_some_and(|v| !v.starts_with("--")) {
-                it.next().unwrap()
-            } else {
-                "true".to_string()
-            };
-            flags.insert(name.to_string(), val);
-        } else {
-            positional.push(a);
-        }
-    }
-    Args { positional, flags }
-}
-
-impl Args {
-    fn flag(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
-    }
-
-    /// Strict flag parsing: an absent flag yields the default, but a
-    /// present-and-malformed value is an error naming the flag — a typo
-    /// like `--tasksets 1O0` or `--jobs 4x` must never silently run the
-    /// experiment with the default value. (A flag given without a value
-    /// parses as the literal "true" and fails the same way.)
-    fn parse_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
-        match self.flag(name) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| format!("invalid value {v:?} for --{name}")),
-        }
-    }
-
-    fn usize_flag(&self, name: &str, default: usize) -> usize {
-        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
-    }
-
-    fn u64_flag(&self, name: &str, default: u64) -> u64 {
-        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
-    }
-}
-
-/// Print a CLI error and exit with status 2 (the usage-error status).
-fn fail(msg: &str) -> ! {
-    eprintln!("error: {msg}");
-    std::process::exit(2);
-}
 
 fn exp_config(args: &Args) -> ExpConfig {
     ExpConfig {
@@ -103,16 +47,19 @@ fn exp_config(args: &Args) -> ExpConfig {
         seed: args.u64_flag("seed", 2024),
         jobs: args.usize_flag("jobs", gcaps::sweep::available_jobs()),
         progress: true,
+        opts: Opts::default(),
     }
 }
 
 /// Load a taskset from --taskset FILE, or generate one from --seed.
+/// Unreadable or unparsable files are usage errors (exit 2), like
+/// every other malformed CLI input.
 fn load_or_generate(args: &Args, busy: bool, rng: &mut Pcg32) -> TaskSet {
     match args.flag("taskset") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
-                .unwrap_or_else(|e| panic!("read {path}: {e}"));
-            config::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e}"))
+                .unwrap_or_else(|e| fail(&format!("read {path}: {e}")));
+            config::parse(&text).unwrap_or_else(|e| fail(&format!("parse {path}: {e}")))
         }
         None => {
             let p = GenParams {
@@ -125,12 +72,14 @@ fn load_or_generate(args: &Args, busy: bool, rng: &mut Pcg32) -> TaskSet {
 }
 
 fn cmd_export(args: &Args) {
+    args.reject_unknown("gcaps export", &["seed"]);
     let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
     let ts = generate(&mut rng, &GenParams::default());
     print!("{}", config::to_text(&ts));
 }
 
 fn cmd_analyze(args: &Args) {
+    args.reject_unknown("gcaps analyze", &["seed", "taskset"]);
     let mut rng = Pcg32::seeded(args.u64_flag("seed", 1));
     for mode_busy in [false, true] {
         let ts = load_or_generate(args, mode_busy, &mut rng);
@@ -161,6 +110,7 @@ fn cmd_analyze(args: &Args) {
 }
 
 fn cmd_sim(args: &Args) {
+    args.reject_unknown("gcaps sim", &["policy", "seed", "taskset", "ms", "trace-out"]);
     let policy = match args.flag("policy") {
         None => Policy::Gcaps,
         Some(l) => Policy::from_label(l).unwrap_or_else(|| {
@@ -206,6 +156,7 @@ fn cmd_sim(args: &Args) {
 }
 
 fn cmd_bench(args: &Args) {
+    args.reject_unknown("gcaps bench", &["quick", "out"]);
     let quick = args.flag("quick").is_some();
     let out = std::path::PathBuf::from(args.flag("out").unwrap_or("."));
     println!(
@@ -237,6 +188,7 @@ fn live_mode(args: &Args) -> LiveMode {
 }
 
 fn cmd_live(args: &Args) {
+    args.reject_unknown("gcaps live", &["seconds", "mode", "busy"]);
     let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("case");
     let rt = Runtime::load_dir(&artifacts_dir()).expect("load artifacts (run `make artifacts`)");
     let busy = args.flag("busy").is_some();
@@ -284,127 +236,89 @@ fn cmd_live(args: &Args) {
     }
 }
 
-fn cmd_exp(args: &Args) {
-    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-    let cfg = exp_config(args);
-    let board = match args.flag("board") {
-        None | Some("xavier") => Board::XavierNx,
-        Some("orin") => Board::OrinNano,
-        Some(other) => {
-            fail(&format!("invalid value {other:?} for --board (expected xavier|orin)"))
-        }
-    };
-    let run_one = |name: &str| match name {
-        "fig3" => print!("{}", run_fig3()),
-        "fig5" => print!("{}", run_fig5()),
-        "fig6" => print!("{}", run_fig6()),
-        "fig7" => print!("{}", run_fig7()),
-        "fig8" => {
-            let panels: Vec<Panel> = match args.flag("panel") {
-                Some(l) => vec![Panel::from_letter(l).unwrap_or_else(|| {
-                    fail(&format!("invalid value {l:?} for --panel (expected a..f)"))
-                })],
-                None => Panel::ALL.to_vec(),
-            };
-            for p in panels {
-                print!("{}", fig8(p, &cfg));
-            }
-        }
-        "fig9" => print!("{}", fig9(&cfg)),
-        "fig10" => print!("{}", run_fig10(board, &cfg)),
-        "fig11" => print!("{}", run_fig11(&cfg)),
-        "table5" => print!("{}", run_table5(&cfg)),
-        "fig12" => print!("{}", run_fig12_sim()),
-        "fig13" => print!("{}", run_fig13(&cfg)),
-        "examples" => print!("{}", run_examples(&cfg)),
-        "ablation" => print!("{}", run_ablation(&cfg)),
-        "multigpu" => print!("{}", run_multigpu(&cfg)),
-        "scenarios" => {
-            let only = args.flag("only");
-            if let Some(o) = only {
-                if !scenarios::SCENARIOS.contains(&o) {
-                    fail(&format!(
-                        "invalid value {o:?} for --only (expected epstheta|edfvfp|hetero)"
-                    ));
-                }
-            }
-            print!("{}", run_scenarios(&cfg, only));
-        }
+/// The common `gcaps exp` flags every experiment accepts.
+const EXP_COMMON_FLAGS: [&str; 5] = ["tasksets", "seed", "jobs", "format", "list"];
+
+/// Map `--format` to the sinks attached to every selected experiment.
+fn sink_spec(args: &Args) -> SinkSpec {
+    match args.flag("format").unwrap_or("csv") {
+        "csv" => SinkSpec { csv: true, ..SinkSpec::default() }.with_ascii(),
+        "jsonl" => SinkSpec { jsonl: true, ..SinkSpec::default() }.with_ascii(),
+        "all" => SinkSpec { csv: true, jsonl: true, ..SinkSpec::default() }.with_ascii(),
         other => fail(&format!(
-            "unknown experiment {other:?} (expected fig3|fig5|fig6|fig7|examples|fig8|\
-             fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all)"
+            "invalid value {other:?} for --format (expected csv|jsonl|all)"
         )),
-    };
-    if which == "all" {
-        for name in [
-            "examples", "fig8", "fig9", "fig10", "fig11", "table5", "fig12", "fig13",
-            "ablation", "multigpu", "scenarios",
-        ] {
-            println!("\n================ {name} ================");
-            run_one(name);
-        }
-        // Fig. 10b (Orin) as part of `all`.
-        println!("\n================ fig10 (orin) ================");
-        print!("{}", run_fig10(Board::OrinNano, &cfg));
-    } else {
-        run_one(which);
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
+/// Generic experiment dispatch: every experiment comes from the
+/// registry — `main` holds no per-experiment knowledge.
+fn cmd_exp(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let selected: Vec<&'static dyn Experiment> = if which == "all" {
+        gcaps::experiments::registry::all_set()
+    } else {
+        vec![api::find(which).unwrap_or_else(|| {
+            fail(&format!(
+                "unknown experiment {which:?} (expected one of: {}|all; see `gcaps exp --list`)",
+                api::list().iter().map(|e| e.name()).collect::<Vec<_>>().join("|")
+            ))
+        })]
+    };
 
-    fn args_with(flags: &[(&str, &str)]) -> Args {
-        Args {
-            positional: vec![],
-            flags: flags.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+    // Reject unknown flags against the selected experiments' declared
+    // sets (for `all`: the union over the whole registry, since each
+    // experiment picks up its own flags from the shared command line).
+    // Runs before the --list early exit so a typo'd flag never passes
+    // silently.
+    let mut allowed: Vec<&str> = EXP_COMMON_FLAGS.to_vec();
+    for exp in &selected {
+        allowed.extend(exp.flags().iter().map(|f| f.name));
+    }
+    args.reject_unknown(&format!("gcaps exp {which}"), &allowed);
+
+    if args.flag("list").is_some() {
+        print!("experiments (gcaps exp <name>):\n{}", api::render_list());
+        return;
+    }
+
+    let spec = sink_spec(args);
+    let base = exp_config(args);
+
+    // Build and validate EVERY selected experiment's options up front:
+    // a bad value must abort before any sweeping starts, not mid-way
+    // through an expensive `exp all` run.
+    let runs: Vec<(&'static dyn Experiment, ExpConfig)> = selected
+        .into_iter()
+        .map(|exp| {
+            let mut opts = Opts::default();
+            for f in exp.flags() {
+                if let Some(v) = args.flag(f.name) {
+                    opts = opts.set(f.name, v);
+                }
+            }
+            let cfg = ExpConfig { opts, ..base.clone() };
+            gcaps::experiments::registry::validate(exp, &cfg)
+                .unwrap_or_else(|e| fail(&e.to_string()));
+            (exp, cfg)
+        })
+        .collect();
+
+    for (exp, cfg) in runs {
+        if which == "all" {
+            println!("\n================ {} ================", exp.name());
         }
-    }
-
-    #[test]
-    fn absent_flag_yields_the_default() {
-        let a = args_with(&[]);
-        assert_eq!(a.parse_flag("jobs", 7usize), Ok(7));
-        assert_eq!(a.parse_flag::<u64>("seed", 2024), Ok(2024));
-    }
-
-    #[test]
-    fn well_formed_values_parse() {
-        let a = args_with(&[("tasksets", "100"), ("seed", "42")]);
-        assert_eq!(a.parse_flag("tasksets", 1usize), Ok(100));
-        assert_eq!(a.parse_flag::<u64>("seed", 1), Ok(42));
-    }
-
-    #[test]
-    fn malformed_values_error_naming_the_flag() {
-        // Regression: `--tasksets 1O0` / `--jobs 4x` used to silently
-        // run the experiment with the default value.
-        let a = args_with(&[("tasksets", "1O0"), ("jobs", "4x")]);
-        let e = a.parse_flag::<usize>("tasksets", 200).unwrap_err();
-        assert!(e.contains("--tasksets") && e.contains("1O0"), "{e}");
-        let e = a.parse_flag::<usize>("jobs", 8).unwrap_err();
-        assert!(e.contains("--jobs") && e.contains("4x"), "{e}");
-    }
-
-    #[test]
-    fn valueless_numeric_flag_is_an_error() {
-        // `gcaps exp --jobs --seed 5` leaves jobs = "true" (flag with no
-        // value): must error, not silently use the default.
-        let a = args_with(&[("jobs", "true")]);
-        assert!(a.parse_flag::<usize>("jobs", 1).is_err());
-    }
-
-    #[test]
-    fn negative_and_overflowing_values_are_errors() {
-        let a = args_with(&[("tasksets", "-5"), ("seed", "99999999999999999999999999")]);
-        assert!(a.parse_flag::<usize>("tasksets", 1).is_err());
-        assert!(a.parse_flag::<u64>("seed", 1).is_err());
+        let report =
+            api::run_experiment(exp, &cfg, &spec).unwrap_or_else(|e| fail(&e.to_string()));
+        print!("{}", report.ascii);
+        for path in &report.outputs {
+            println!("wrote {}", path.display());
+        }
     }
 }
 
 fn main() {
-    let args = parse_args();
+    let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("analyze") => cmd_analyze(&args),
         Some("export") => cmd_export(&args),
@@ -420,14 +334,13 @@ fn main() {
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
                  gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
                  \x20         [--ms N] [--trace-out trace.json]\n\
-                 gcaps exp <fig3|fig5|fig6|fig7|examples|fig8|fig9|fig10|fig11|table5|fig12|fig13|ablation|multigpu|scenarios|all>\n\
-                 \x20         [--panel a..f] [--board xavier|orin] [--only epstheta|edfvfp|hetero]\n\
-                 \x20         [--tasksets N] [--seed N] [--jobs N]\n\
-                 \x20         (--jobs shards the sweep across N workers; results and CSV bytes\n\
-                 \x20          are byte-identical for every worker count — per-cell seed-splitting;\n\
-                 \x20          `exp multigpu` sweeps the platform over 1/2/4 GPU engines;\n\
-                 \x20          `exp scenarios` runs the beyond-the-paper sweeps: per-board ε×θ\n\
-                 \x20          grids, EDF vs FP, heterogeneous multi-GPU — --only picks one)\n\
+                 gcaps exp <name|all> [--tasksets N] [--seed N] [--jobs N]\n\
+                 \x20         [--format csv|jsonl|all] [per-experiment flags]\n\
+                 gcaps exp --list                        # registered experiments + their flags\n\
+                 \x20         (every experiment is dispatched through the Experiment registry;\n\
+                 \x20          CSVs land in results/, --format jsonl adds machine-readable\n\
+                 \x20          JSONL from the same run; --jobs shards the sweep across N\n\
+                 \x20          workers with byte-identical results for every worker count)\n\
                  gcaps bench [--quick] [--out DIR]       # pinned RTA/DES wall-clock baseline\n\
                  \x20         (writes BENCH_rta.json / BENCH_des.json; --quick for CI smoke)\n\
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"

@@ -1,0 +1,177 @@
+//! Strict CLI argument plumbing shared by `main.rs` and the experiment
+//! registry's per-experiment flag validation.
+//!
+//! The rules (enforced everywhere, not per-subcommand):
+//!
+//! - an **absent** flag yields its default;
+//! - a **present-and-malformed** value is a usage error naming the flag
+//!   (a typo like `--tasksets 1O0` must never silently run with the
+//!   default);
+//! - an **unknown** flag name is a usage error naming the flag and the
+//!   accepted set (a typo like `--panle a` must never run silently with
+//!   default options) — see [`Args::reject_unknown`] and the registry's
+//!   per-experiment validation
+//!   ([`crate::experiments::registry::validate`]).
+//!
+//! Usage errors exit with status 2 via [`fail`].
+
+use std::collections::HashMap;
+
+/// Parsed command line: positional words plus `--name value` flags.
+/// A `--flag` with no following value parses as the literal `"true"`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse a token stream (the program name already stripped).
+    pub fn parse(tokens: impl Iterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = tokens.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if it.peek().is_some_and(|v| !v.starts_with("--")) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// The given flag names, sorted (for deterministic error messages).
+    pub fn flag_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.flags.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Strict flag parsing: an absent flag yields the default, but a
+    /// present-and-malformed value is an error naming the flag — a typo
+    /// like `--tasksets 1O0` or `--jobs 4x` must never silently run the
+    /// experiment with the default value. (A flag given without a value
+    /// parses as the literal "true" and fails the same way.)
+    pub fn parse_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value {v:?} for --{name}")),
+        }
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> u64 {
+        self.parse_flag(name, default).unwrap_or_else(|e| fail(&e))
+    }
+
+    /// Exit with a usage error if any given flag is not in `allowed`.
+    /// `context` names the subcommand for the message.
+    pub fn reject_unknown(&self, context: &str, allowed: &[&str]) {
+        for name in self.flag_names() {
+            if !allowed.contains(&name) {
+                let mut accepted: Vec<&str> = allowed.to_vec();
+                accepted.sort_unstable();
+                fail(&format!(
+                    "unknown flag --{name} for `{context}` (accepted: {})",
+                    accepted
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+    }
+}
+
+/// Print a CLI error and exit with status 2 (the usage-error status).
+pub fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_with(flags: &[(&str, &str)]) -> Args {
+        Args {
+            positional: vec![],
+            flags: flags.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+        }
+    }
+
+    #[test]
+    fn parse_splits_positionals_and_flags() {
+        let a = Args::parse(
+            ["exp", "fig8", "--panel", "b", "--jobs", "4", "--quick"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["exp", "fig8"]);
+        assert_eq!(a.flag("panel"), Some("b"));
+        assert_eq!(a.flag("jobs"), Some("4"));
+        assert_eq!(a.flag("quick"), Some("true"), "valueless flag parses as true");
+        assert_eq!(a.flag_names(), vec!["jobs", "panel", "quick"]);
+    }
+
+    #[test]
+    fn absent_flag_yields_the_default() {
+        let a = args_with(&[]);
+        assert_eq!(a.parse_flag("jobs", 7usize), Ok(7));
+        assert_eq!(a.parse_flag::<u64>("seed", 2024), Ok(2024));
+    }
+
+    #[test]
+    fn well_formed_values_parse() {
+        let a = args_with(&[("tasksets", "100"), ("seed", "42")]);
+        assert_eq!(a.parse_flag("tasksets", 1usize), Ok(100));
+        assert_eq!(a.parse_flag::<u64>("seed", 1), Ok(42));
+    }
+
+    #[test]
+    fn malformed_values_error_naming_the_flag() {
+        // Regression: `--tasksets 1O0` / `--jobs 4x` used to silently
+        // run the experiment with the default value.
+        let a = args_with(&[("tasksets", "1O0"), ("jobs", "4x")]);
+        let e = a.parse_flag::<usize>("tasksets", 200).unwrap_err();
+        assert!(e.contains("--tasksets") && e.contains("1O0"), "{e}");
+        let e = a.parse_flag::<usize>("jobs", 8).unwrap_err();
+        assert!(e.contains("--jobs") && e.contains("4x"), "{e}");
+    }
+
+    #[test]
+    fn valueless_numeric_flag_is_an_error() {
+        // `gcaps exp --jobs --seed 5` leaves jobs = "true" (flag with no
+        // value): must error, not silently use the default.
+        let a = args_with(&[("jobs", "true")]);
+        assert!(a.parse_flag::<usize>("jobs", 1).is_err());
+    }
+
+    #[test]
+    fn negative_and_overflowing_values_are_errors() {
+        let a = args_with(&[("tasksets", "-5"), ("seed", "99999999999999999999999999")]);
+        assert!(a.parse_flag::<usize>("tasksets", 1).is_err());
+        assert!(a.parse_flag::<u64>("seed", 1).is_err());
+    }
+}

@@ -31,7 +31,9 @@ impl CsvTable {
     }
 
     fn escape(cell: &str) -> String {
-        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        // RFC 4180: quote on separator, quote, or EITHER line-break
+        // byte — a bare `\r` corrupts the row for strict readers.
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') || cell.contains('\r') {
             format!("\"{}\"", cell.replace('"', "\"\""))
         } else {
             cell.to_string()
@@ -80,6 +82,18 @@ mod tests {
         let s = t.to_string();
         assert!(s.contains("\"he,llo\""));
         assert!(s.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn escapes_bare_carriage_returns() {
+        // Regression: a cell holding a bare `\r` (no `\n`) used to be
+        // emitted unquoted, splitting the row for strict CSV readers.
+        let mut t = CsvTable::new(vec!["x"]);
+        t.row(vec!["a\rb"]);
+        t.row(vec!["a\r\nb"]);
+        let s = t.to_string();
+        assert!(s.contains("\"a\rb\""), "bare CR not quoted: {s:?}");
+        assert!(s.contains("\"a\r\nb\""), "CRLF not quoted: {s:?}");
     }
 
     #[test]

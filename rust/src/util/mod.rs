@@ -4,6 +4,7 @@
 pub mod ascii;
 pub mod bench;
 pub mod check;
+pub mod cli;
 pub mod csv;
 pub mod error;
 pub mod rng;

@@ -1,16 +1,20 @@
-//! Smoke tests: every experiment harness runs end-to-end at tiny scale
-//! and produces its CSV. Keeps `gcaps exp all` from bit-rotting.
+//! Smoke tests: every registered experiment runs end-to-end at tiny
+//! scale through the `Experiment` registry and produces its artifacts.
+//! Keeps `gcaps exp all` from bit-rotting.
 
-use gcaps::experiments::ablation;
-use gcaps::experiments::casestudy::{run_fig10, run_fig11, run_table5, Board};
+use gcaps::api::{self, SinkSpec};
+use gcaps::experiments::casestudy::{fig10_render, fig11_render, table5_render, Board};
 use gcaps::experiments::examples_figs::{run_fig3, run_fig5, run_fig6, run_fig7};
-use gcaps::experiments::fig8::{run_and_report as fig8, Panel};
-use gcaps::experiments::fig9;
-use gcaps::experiments::overhead::{run_fig12_sim, run_fig13};
-use gcaps::experiments::{results_dir, ExpConfig};
+use gcaps::experiments::fig8::Panel;
+use gcaps::experiments::{results_dir, ExpConfig, Opts};
 
 fn tiny() -> ExpConfig {
     ExpConfig { tasksets: 5, seed: 123, ..ExpConfig::default() }
+}
+
+fn run_csv(name: &str, cfg: &ExpConfig) -> gcaps::api::ExpReport {
+    let spec = SinkSpec { csv: true, ascii: true, dir: None, ..SinkSpec::default() };
+    api::run(name, cfg, &spec).expect(name)
 }
 
 #[test]
@@ -22,10 +26,20 @@ fn schedule_examples_render() {
 }
 
 #[test]
+fn schedule_example_experiments_emit_ascii_only() {
+    for name in ["fig3", "fig5", "fig6", "fig7"] {
+        let report = run_csv(name, &tiny());
+        assert!(report.tables.is_empty(), "{name} should emit no tables");
+        assert!(report.ascii.contains("Fig."), "{name}: {}", report.ascii);
+    }
+}
+
+#[test]
 fn fig8_all_panels_produce_csv() {
+    let report = run_csv("fig8", &tiny());
+    assert!(report.ascii.contains("Fig. 8"));
+    assert_eq!(report.tables.len(), Panel::ALL.len(), "one table per panel");
     for panel in Panel::ALL {
-        let out = fig8(panel, &tiny());
-        assert!(out.contains("Fig. 8"));
         let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
         let csv = std::fs::read_to_string(&path).expect("csv written");
         // Header + 8 approaches × #points rows.
@@ -34,67 +48,96 @@ fn fig8_all_panels_produce_csv() {
 }
 
 #[test]
+fn fig8_single_panel_option_narrows_the_run() {
+    let cfg = ExpConfig { opts: Opts::default().set("panel", "b"), ..tiny() };
+    let report = run_csv("fig8", &cfg);
+    assert_eq!(report.tables.len(), 1);
+    assert_eq!(report.tables[0].name, "fig8b");
+}
+
+#[test]
 fn fig9_produces_csv() {
-    let out = fig9::run_and_report(&tiny());
-    assert!(out.contains("Fig. 9"));
+    let report = run_csv("fig9", &tiny());
+    assert!(report.ascii.contains("Fig. 9"));
     assert!(results_dir().join("fig9.csv").exists());
+    assert_eq!(report.tables[0].columns, vec!["series", "util_per_cpu", "schedulable_ratio"]);
 }
 
 #[test]
 fn case_study_harnesses_run() {
     let cfg = ExpConfig { tasksets: 0, seed: 1, ..ExpConfig::default() };
-    let f10 = run_fig10(Board::XavierNx, &cfg);
+    let (stem, _, f10) = fig10_render(Board::XavierNx, &cfg);
+    assert_eq!(stem, "fig10_xavier");
     assert!(f10.contains("MORT under gcaps_busy"));
-    let f11 = run_fig11(&cfg);
+    let (_, f11) = fig11_render(&cfg);
     assert!(f11.contains("average relative range"));
-    let t5 = run_table5(&cfg);
+    let (t5_csv, t5) = table5_render(&cfg);
     assert!(t5.contains("Table 5"));
     assert!(t5.contains("histogram"));
+    assert!(!t5_csv.rows.is_empty());
+}
+
+#[test]
+fn fig10_experiment_covers_both_boards_by_default() {
+    let cfg = ExpConfig { tasksets: 0, seed: 1, ..ExpConfig::default() };
+    let report = run_csv("fig10", &cfg);
+    let names: Vec<&str> = report.tables.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, vec!["fig10_xavier", "fig10_orin"]);
+
+    let orin_only = ExpConfig { opts: Opts::default().set("board", "orin"), ..cfg };
+    let report = run_csv("fig10", &orin_only);
+    let names: Vec<&str> = report.tables.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, vec!["fig10_orin"]);
 }
 
 #[test]
 fn overhead_harnesses_run() {
-    assert!(run_fig12_sim().contains("Fig. 12"));
-    assert!(run_fig13(&tiny()).contains("Fig. 13"));
+    let cfg = ExpConfig { tasksets: 0, seed: 1, ..tiny() };
+    let f12 = run_csv("fig12", &cfg);
+    assert!(f12.ascii.contains("Fig. 12"));
+    assert_eq!(f12.tables[0].name, "fig12_sim");
+    let f13 = run_csv("fig13", &tiny());
+    assert!(f13.ascii.contains("Fig. 13"));
+    assert!(results_dir().join("fig13.csv").exists());
 }
 
 #[test]
 fn examples_aggregate_runs() {
-    use gcaps::experiments::examples_figs::run_examples;
-    let out = run_examples(&tiny());
+    let report = run_csv("examples", &tiny());
     for fig in ["Fig. 3", "Fig. 5", "Fig. 6", "Fig. 7"] {
-        assert!(out.contains(fig), "{fig} missing from examples aggregate");
+        assert!(report.ascii.contains(fig), "{fig} missing from examples aggregate");
     }
 }
 
 #[test]
 fn ablation_harness_runs() {
-    let out = ablation::run_and_report(&tiny());
-    assert!(out.contains("Lemma 12"));
-    assert!(out.contains("EDF"));
+    let report = run_csv("ablation", &tiny());
+    assert!(report.ascii.contains("Lemma 12"));
+    assert!(report.ascii.contains("EDF"));
     assert!(results_dir().join("ablations.csv").exists());
 }
 
 #[test]
 fn multigpu_harness_runs() {
-    let out = gcaps::experiments::multigpu::run_and_report(&tiny());
-    assert!(out.contains("Multi-GPU"));
+    let report = run_csv("multigpu", &tiny());
+    assert!(report.ascii.contains("Multi-GPU"));
     let path = results_dir().join("multigpu.csv");
     let csv = std::fs::read_to_string(&path).expect("csv written");
     // Header + 8 approaches × 3 GPU counts.
     assert_eq!(csv.lines().count(), 1 + 8 * 3, "unexpected row count:\n{csv}");
     assert!(csv.lines().next().unwrap().contains("num_gpus"));
+    assert_eq!(report.tables[0].rows, 8 * 3);
 }
 
 #[test]
 fn scenarios_harness_produces_all_three_csvs() {
-    let out = gcaps::experiments::scenarios::run_and_report(
+    let report = run_csv(
+        "scenarios",
         &ExpConfig { tasksets: 3, seed: 77, ..ExpConfig::default() },
-        None,
     );
-    assert!(out.contains("Scenarios (a)"));
-    assert!(out.contains("Scenarios (b)"));
-    assert!(out.contains("Scenarios (c)"));
+    assert!(report.ascii.contains("Scenarios (a)"));
+    assert!(report.ascii.contains("Scenarios (b)"));
+    assert!(report.ascii.contains("Scenarios (c)"));
     for (file, min_lines) in [
         ("scenarios_epstheta.csv", 24),
         ("scenarios_edfvfp.csv", 16),
@@ -104,4 +147,6 @@ fn scenarios_harness_produces_all_three_csvs() {
         let csv = std::fs::read_to_string(&path).expect("csv written");
         assert!(csv.lines().count() > min_lines, "{path:?} too small:\n{csv}");
     }
+    assert_eq!(report.tables.len(), 3);
+    assert_eq!(report.outputs.len(), 3);
 }

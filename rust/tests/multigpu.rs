@@ -188,7 +188,7 @@ fn multigpu_sweep_g1_column_equals_fig8_default_point() {
     // the new trait machinery and the memoized generator, and must land
     // exactly on the Fig. 8 procedure's numbers.
     use gcaps::experiments::{fig8, multigpu, ExpConfig};
-    let cfg = ExpConfig { tasksets: 8, seed: 2024, jobs: 2, progress: false };
+    let cfg = ExpConfig { tasksets: 8, seed: 2024, jobs: 2, ..ExpConfig::default() };
     let (xticks, series) = multigpu::run_sweep(&cfg);
     assert_eq!(xticks[0], "1");
     for (k, a) in Approach::ALL.iter().enumerate() {

@@ -1,0 +1,275 @@
+//! The experiment registry's core guarantee, enforced end-to-end:
+//!
+//! 1. **Registry-vs-direct equality** — dispatching an experiment
+//!    through the `Experiment` trait + `CsvSink` produces CSV bytes
+//!    identical to the pre-redesign direct call (the pure
+//!    `run_*`/`*_csv` functions each harness kept as its compute
+//!    path). A violation means the sink/registry plumbing altered an
+//!    artifact the paper-comparison files pin.
+//! 2. **JSONL schema** — the machine-readable face: every emitted
+//!    line parses as a flat JSON object, the key set is exactly
+//!    `table` + the CSV column schema in order, and every value
+//!    round-trips against the CSV cell.
+
+use std::path::PathBuf;
+
+use gcaps::api::{self, SinkSpec};
+use gcaps::experiments::sink::is_json_number;
+use gcaps::experiments::{ablation, casestudy, fig8, fig9, multigpu, scenarios};
+use gcaps::experiments::{ExpConfig, Opts};
+use gcaps::util::csv::CsvTable;
+
+fn tmp(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gcaps_registry_{label}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Dispatch `name` through the registry into a scratch CSV sink and
+/// return the written bytes per table stem.
+fn registry_csv(name: &str, cfg: &ExpConfig, stems: &[&str]) -> Vec<String> {
+    let dir = tmp(name);
+    let report = api::run(name, cfg, &SinkSpec::csv_only(&dir)).expect(name);
+    assert_eq!(report.name, name);
+    let out = stems
+        .iter()
+        .map(|stem| {
+            std::fs::read_to_string(dir.join(format!("{stem}.csv")))
+                .unwrap_or_else(|e| panic!("{stem}: {e}"))
+        })
+        .collect();
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[test]
+fn fig8_registry_matches_direct_call() {
+    let cfg = ExpConfig {
+        tasksets: 6,
+        seed: 2024,
+        opts: Opts::default().set("panel", "b"),
+        ..ExpConfig::default()
+    };
+    let via_registry = registry_csv("fig8", &cfg, &["fig8b"]);
+    let (xticks, series) = fig8::run_panel(fig8::Panel::UtilPerCpu, &cfg);
+    let direct = fig8::panel_csv(fig8::Panel::UtilPerCpu, &xticks, &series).to_string();
+    assert_eq!(via_registry[0].as_bytes(), direct.as_bytes(), "fig8b bytes diverged");
+}
+
+#[test]
+fn fig9_registry_matches_direct_call() {
+    let cfg = ExpConfig { tasksets: 5, seed: 7, ..ExpConfig::default() };
+    let via_registry = registry_csv("fig9", &cfg, &["fig9"]);
+    let (xticks, series) = fig9::sweep(&cfg);
+    let direct = fig9::fig9_csv(&xticks, &series).to_string();
+    assert_eq!(via_registry[0].as_bytes(), direct.as_bytes(), "fig9 bytes diverged");
+}
+
+#[test]
+fn multigpu_registry_matches_direct_call() {
+    let cfg = ExpConfig { tasksets: 4, seed: 17, ..ExpConfig::default() };
+    let via_registry = registry_csv("multigpu", &cfg, &["multigpu"]);
+    let (xticks, series) = multigpu::run_sweep(&cfg);
+    let direct = multigpu::sweep_csv(&xticks, &series).to_string();
+    assert_eq!(via_registry[0].as_bytes(), direct.as_bytes(), "multigpu bytes diverged");
+}
+
+#[test]
+fn ablation_registry_matches_direct_call() {
+    let cfg = ExpConfig { tasksets: 4, seed: 9, ..ExpConfig::default() };
+    let via_registry = registry_csv("ablation", &cfg, &["ablations"]);
+    let (direct, _) = ablation::ablation_render(&cfg);
+    assert_eq!(
+        via_registry[0].as_bytes(),
+        direct.to_string().as_bytes(),
+        "ablations bytes diverged"
+    );
+}
+
+#[test]
+fn casestudy_registry_matches_direct_calls() {
+    // tasksets is unused by the case study (fixed Table 4 set); 0 keeps
+    // the DES replica count at its pinned 5/8.
+    let cfg = ExpConfig { tasksets: 0, seed: 1, ..ExpConfig::default() };
+
+    let via_registry = registry_csv("fig10", &cfg, &["fig10_xavier", "fig10_orin"]);
+    for (i, board) in [casestudy::Board::XavierNx, casestudy::Board::OrinNano]
+        .into_iter()
+        .enumerate()
+    {
+        let (_, direct, _) = casestudy::fig10_render(board, &cfg);
+        assert_eq!(
+            via_registry[i].as_bytes(),
+            direct.to_string().as_bytes(),
+            "fig10 bytes diverged for {board:?}"
+        );
+    }
+
+    let via_registry = registry_csv("fig11", &cfg, &["fig11"]);
+    let (direct, _) = casestudy::fig11_render(&cfg);
+    assert_eq!(via_registry[0].as_bytes(), direct.to_string().as_bytes());
+
+    let via_registry = registry_csv("table5", &cfg, &["table5"]);
+    let (direct, _) = casestudy::table5_render(&cfg);
+    assert_eq!(via_registry[0].as_bytes(), direct.to_string().as_bytes());
+}
+
+#[test]
+fn scenarios_registry_matches_direct_calls() {
+    let cfg = ExpConfig { tasksets: 2, seed: 19, ..ExpConfig::default() };
+    let via_registry = registry_csv(
+        "scenarios",
+        &cfg,
+        &["scenarios_epstheta", "scenarios_edfvfp", "scenarios_hetero"],
+    );
+    let direct = [
+        scenarios::epstheta_csv(&scenarios::epstheta_sweep(&cfg)).to_string(),
+        scenarios::edfvfp_csv(&scenarios::edfvfp_sweep(&cfg)).to_string(),
+        scenarios::hetero_csv(&scenarios::hetero_sweep(&cfg)).to_string(),
+    ];
+    for (got, want) in via_registry.iter().zip(&direct) {
+        assert_eq!(got.as_bytes(), want.as_bytes(), "scenario bytes diverged");
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSONL schema
+// ---------------------------------------------------------------------
+
+/// Parse one flat JSON object (`{"k":"v","n":1.5,...}`) into ordered
+/// (key, decoded value) pairs. Restricted to the grammar the JSONL
+/// sink can emit: string keys, string-or-number values, no nesting.
+fn parse_flat_object(line: &str) -> Vec<(String, String)> {
+    let inner = line
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .unwrap_or_else(|| panic!("not an object: {line}"));
+    let mut out = Vec::new();
+    let mut chars = inner.chars().peekable();
+    loop {
+        let key = parse_string(&mut chars).unwrap_or_else(|| panic!("bad key in {line}"));
+        assert_eq!(chars.next(), Some(':'), "missing ':' in {line}");
+        let value = if chars.peek() == Some(&'"') {
+            parse_string(&mut chars).unwrap_or_else(|| panic!("bad string in {line}"))
+        } else {
+            let mut tok = String::new();
+            while let Some(&c) = chars.peek() {
+                if c == ',' {
+                    break;
+                }
+                tok.push(c);
+                chars.next();
+            }
+            assert!(is_json_number(&tok), "bad number token {tok:?} in {line}");
+            tok
+        };
+        out.push((key, value));
+        match chars.next() {
+            None => break,
+            Some(',') => continue,
+            Some(c) => panic!("unexpected {c:?} in {line}"),
+        }
+    }
+    out
+}
+
+/// Parse a JSON string literal off the front of `chars` (consumes both
+/// quotes), decoding the escapes the sink can emit.
+fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<String> {
+    if chars.next()? != '"' {
+        return None;
+    }
+    let mut out = String::new();
+    loop {
+        match chars.next()? {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                'r' => out.push('\r'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = (0..4).filter_map(|_| chars.next()).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                other => panic!("unexpected escape \\{other}"),
+            },
+            c => out.push(c),
+        }
+    }
+}
+
+/// Every JSONL row of `stem` must parse, carry exactly `table` + the
+/// CSV columns in order, and agree cell-for-cell with the CSV table.
+fn assert_jsonl_matches(stem: &str, jsonl: &str, csv: &CsvTable) {
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), csv.rows.len(), "{stem}: row count");
+    for (line, row) in lines.iter().zip(&csv.rows) {
+        let fields = parse_flat_object(line);
+        assert_eq!(fields[0], ("table".to_string(), stem.to_string()), "{stem}: {line}");
+        let keys: Vec<&str> = fields[1..].iter().map(|(k, _)| k.as_str()).collect();
+        let header: Vec<&str> = csv.header.iter().map(|s| s.as_str()).collect();
+        assert_eq!(keys, header, "{stem}: column set/order");
+        for ((_, got), want) in fields[1..].iter().zip(row) {
+            assert_eq!(got, want, "{stem}: cell diverged in {line}");
+        }
+    }
+}
+
+#[test]
+fn jsonl_rows_parse_and_match_the_csv_schema() {
+    let dir = tmp("jsonl");
+    let cfg = ExpConfig { tasksets: 3, seed: 11, ..ExpConfig::default() };
+    api::run("fig9", &cfg, &SinkSpec::csv_jsonl(&dir)).unwrap();
+    api::run("multigpu", &cfg, &SinkSpec::csv_jsonl(&dir)).unwrap();
+
+    let (xticks, series) = fig9::sweep(&cfg);
+    let fig9_table = fig9::fig9_csv(&xticks, &series);
+    let jsonl = std::fs::read_to_string(dir.join("fig9.jsonl")).unwrap();
+    assert_jsonl_matches("fig9", &jsonl, &fig9_table);
+
+    let (xticks, series) = multigpu::run_sweep(&cfg);
+    let mg_table = multigpu::sweep_csv(&xticks, &series);
+    let jsonl = std::fs::read_to_string(dir.join("multigpu.jsonl")).unwrap();
+    assert_jsonl_matches("multigpu", &jsonl, &mg_table);
+
+    // Numeric cells must have landed as JSON numbers, not strings.
+    let line = std::fs::read_to_string(dir.join("fig9.jsonl")).unwrap();
+    let first = line.lines().next().unwrap().to_string();
+    assert!(
+        first.contains("\"schedulable_ratio\":0.") || first.contains("\"schedulable_ratio\":1."),
+        "ratio not numeric: {first}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn one_run_feeds_csv_and_jsonl_identically() {
+    // `--format all` semantics: both artifacts from a single sweep —
+    // the CSV written alongside the JSONL must equal the CSV-only run.
+    let dir_both = tmp("both");
+    let dir_csv = tmp("csvonly");
+    let cfg = ExpConfig { tasksets: 3, seed: 23, ..ExpConfig::default() };
+    let both = api::run("fig9", &cfg, &SinkSpec::csv_jsonl(&dir_both)).unwrap();
+    api::run("fig9", &cfg, &SinkSpec::csv_only(&dir_csv)).unwrap();
+    assert_eq!(both.outputs.len(), 2);
+    let a = std::fs::read_to_string(dir_both.join("fig9.csv")).unwrap();
+    let b = std::fs::read_to_string(dir_csv.join("fig9.csv")).unwrap();
+    assert_eq!(a.as_bytes(), b.as_bytes());
+    let _ = std::fs::remove_dir_all(&dir_both);
+    let _ = std::fs::remove_dir_all(&dir_csv);
+}
+
+#[test]
+fn report_carries_rows_outputs_and_wall_clock() {
+    let dir = tmp("report");
+    let cfg = ExpConfig { tasksets: 2, seed: 3, ..ExpConfig::default() };
+    let report = api::run("multigpu", &cfg, &SinkSpec::csv_jsonl(&dir).with_ascii()).unwrap();
+    assert_eq!(report.rows(), 24, "8 approaches x 3 GPU counts");
+    assert_eq!(report.outputs, vec![dir.join("multigpu.csv"), dir.join("multigpu.jsonl")]);
+    assert!(report.ascii.contains("Multi-GPU"));
+    assert_eq!(report.tables[0].columns, vec!["approach", "num_gpus", "schedulable_ratio"]);
+    let _ = std::fs::remove_dir_all(&dir);
+}

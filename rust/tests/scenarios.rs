@@ -24,7 +24,7 @@ use gcaps::sweep::{cell_hash, cell_rng, memo};
 use gcaps::taskgen::{generate, GenParams};
 
 fn cfg(tasksets: usize, jobs: usize) -> ExpConfig {
-    ExpConfig { tasksets, seed: 2024, jobs, progress: false }
+    ExpConfig { tasksets, seed: 2024, jobs, ..ExpConfig::default() }
 }
 
 // ---------------------------------------------------------------------

@@ -7,7 +7,7 @@ use gcaps::experiments::fig8::{panel_csv, run_panel, Panel};
 use gcaps::experiments::{ablation, casestudy, fig9, multigpu, ExpConfig};
 
 fn cfg_with_jobs(jobs: usize) -> ExpConfig {
-    ExpConfig { tasksets: 8, seed: 2024, jobs, progress: false }
+    ExpConfig { tasksets: 8, seed: 2024, jobs, ..ExpConfig::default() }
 }
 
 #[test]
