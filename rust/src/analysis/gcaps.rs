@@ -47,7 +47,7 @@
 //! is retained in [`crate::analysis::reference`] and pinned bit-equal by
 //! `rust/tests/kernel_equivalence.rs`.
 
-use crate::analysis::prep::{run_fixed_point, PrepTask, Prepared, Scratch};
+use crate::analysis::prep::{run_fixed_point_warm, PrepTask, Prepared, Scratch};
 use crate::analysis::terms::{AnalysisResult, Rta};
 use crate::analysis::Analysis;
 use crate::model::{TaskSet, Time, WaitMode};
@@ -223,6 +223,25 @@ pub fn response_time_prepared(
     opts: &Options,
     scratch: &mut Scratch,
 ) -> Rta {
+    response_time_prepared_warm(ts, prep, i, busy, resp, opts, scratch, None)
+}
+
+/// [`response_time_prepared`] with a warm-start hint for the fixed
+/// point — see [`run_fixed_point_warm`] for the soundness contract
+/// (`hint` must be the task's least fixed point under a
+/// pointwise-smaller iteration map, e.g. its response time before one
+/// more task was admitted).
+#[allow(clippy::too_many_arguments)]
+pub fn response_time_prepared_warm(
+    ts: &TaskSet,
+    prep: &Prepared,
+    i: usize,
+    busy: bool,
+    resp: &[Option<Time>],
+    opts: &Options,
+    scratch: &mut Scratch,
+    hint: Option<Time>,
+) -> Rta {
     let me = prep.t[i];
     // Own demand: C_i + G*_i (the job's own runlist updates, §6.3).
     // Saturating like every demand on this path: crafted ε/η inputs
@@ -233,7 +252,7 @@ pub fn response_time_prepared(
         .saturating_add(me.eps.saturating_mul(2).saturating_mul(me.eta_g));
     let base = own.saturating_add(blocking(prep, i));
     build_terms(ts, prep, i, busy, resp, opts, scratch);
-    run_fixed_point(me.deadline, base, &scratch.terms)
+    run_fixed_point_warm(me.deadline, base, hint, &scratch.terms)
 }
 
 /// Response time of one RT task (compatibility entry point: builds a
@@ -258,10 +277,36 @@ pub fn analyze_prepared(
     busy: bool,
     opts: &Options,
 ) -> AnalysisResult {
+    analyze_prepared_warm(ts, prep, busy, opts, &[])
+}
+
+/// [`analyze_prepared`] warm-started from a previous response table —
+/// the admission server's incremental re-analysis after one task joins.
+///
+/// `warm[i]`, when present, must be τ_i's response time from analysing
+/// a taskset whose per-task iteration maps were pointwise ≤ the current
+/// ones. Admitting one task only *grows* every map — it adds hp
+/// interference terms for lower-priority tasks, can only raise the
+/// Lemma 8 blocking maxima in the base, and (inductively down the
+/// priority order) only raises the hp response times feeding the jitter
+/// terms, with the `unwrap_or(deadline)` fallback dominating any
+/// schedulable response — so warm results are **bit-equal to the cold
+/// analysis** (pinned by `kernel_equivalence`). After a removal the
+/// maps shrink and old responses may overshoot: re-analyse cold (empty
+/// `warm`). An empty or short `warm` table degrades to cold per task.
+pub fn analyze_prepared_warm(
+    ts: &TaskSet,
+    prep: &Prepared,
+    busy: bool,
+    opts: &Options,
+    warm: &[Option<Time>],
+) -> AnalysisResult {
     let mut scratch = Scratch::default();
     let mut resp: Vec<Option<Time>> = vec![None; ts.tasks.len()];
     for &i in &prep.order {
-        let r = response_time_prepared(ts, prep, i, busy, &resp, opts, &mut scratch);
+        let hint = warm.get(i).copied().flatten();
+        let r =
+            response_time_prepared_warm(ts, prep, i, busy, &resp, opts, &mut scratch, hint);
         resp[i] = r.time();
     }
     AnalysisResult::from_responses(&ts.tasks, resp)
@@ -523,5 +568,29 @@ mod tests {
         out.tasks[0].gpu_prio = p0;
         out.tasks[1].gpu_prio = p1;
         out
+    }
+
+    #[test]
+    fn warm_reanalysis_after_admit_is_bit_equal() {
+        // The admission server's fast path: analyse a 1-task set, admit
+        // a second task via the kernel delta, re-analyse warm from the
+        // old response table — must be bit-equal to a cold analysis of
+        // the grown set, in both wait modes.
+        let t0 = gpu_task(0, 0, 2, 2.0, 1.0, 5.0, 100.0);
+        let t1 = gpu_task(1, 1, 1, 2.0, 1.0, 20.0, 150.0);
+        let small = TaskSet::new(vec![t0.clone()], platform());
+        let grown = TaskSet::new(vec![t0, t1], platform());
+        let mut prep = crate::analysis::Prepared::new(&small);
+        prep.admit_task(&grown);
+        for busy in [false, true] {
+            let old = analyze(&small, busy, &Options::default());
+            let mut warm = old.response.clone();
+            warm.push(None); // the joiner has no previous response
+            let cold = analyze(&grown, busy, &Options::default());
+            let inc =
+                analyze_prepared_warm(&grown, &prep, busy, &Options::default(), &warm);
+            assert_eq!(inc.response, cold.response, "busy = {busy}");
+            assert_eq!(inc.schedulable, cold.schedulable);
+        }
     }
 }

@@ -28,10 +28,22 @@
 //! ([`eval`]) with **zero allocation and zero set derivation** per
 //! iteration.
 //!
+//! The kernel is also **incrementally maintainable** for the admission
+//! server (`gcaps serve`): [`Prepared::admit_task`] /
+//! [`Prepared::remove_task`] delta-update the partitions when one task
+//! joins (at the new maximum index) or leaves (with the taskset's own
+//! id reindexing), and [`Prepared::update_task`] re-stars one task's
+//! constants for demand-only headroom probes. All three are pinned
+//! bit-equal to a cold [`Prepared::new`] rebuild — membership
+//! predicates read only structural fields of the two tasks they
+//! relate, so no other pair's membership can change.
+//!
 //! The original iterator-chain implementations are retained verbatim in
 //! [`crate::analysis::reference`] as the executable specification;
 //! `rust/tests/kernel_equivalence.rs` pins bit-identical results across
-//! both paths over hundreds of random tasksets.
+//! both paths over hundreds of random tasksets, and bit-identical
+//! incremental-vs-cold results across hundreds of admit/remove
+//! sequences.
 
 use crate::analysis::terms::{ceil_div, eps_of, fixed_point, ge_star, gm_star, Rta};
 use crate::model::{TaskSet, Time};
@@ -71,6 +83,27 @@ pub fn run_fixed_point(deadline: Time, base: Time, terms: &[Term]) -> Rta {
     fixed_point(deadline, base, |r| base.saturating_add(eval(r, terms)))
 }
 
+/// [`run_fixed_point`] warm-started from `hint` — the admission
+/// server's fast path. Sound and **bit-equal to the cold start** when
+/// `hint` is a previous least fixed point of a pointwise-smaller
+/// iteration map `F_old ≤ F` (e.g. the task's response time in the
+/// currently-admitted set, before one more task joins): then
+/// `hint = F_old(hint) ≤ F(hint)` keeps the Kleene iteration
+/// non-decreasing, and `hint ≤ lfp(F)` (the Kleene chains of `F_old`
+/// and `F` dominate termwise) pins the limit to the same least fixed
+/// point. After a *removal* the map shrinks and an old response may
+/// overshoot the new least fixed point — callers must cold-start then
+/// (pass `None`).
+pub fn run_fixed_point_warm(
+    deadline: Time,
+    base: Time,
+    hint: Option<Time>,
+    terms: &[Term],
+) -> Rta {
+    let init = base.max(hint.unwrap_or(0));
+    fixed_point(deadline, init, |r| base.saturating_add(eval(r, terms)))
+}
+
 /// Flat index arrays: one contiguous `u32` pool plus per-task ranges.
 /// `get(i)` is the partition of task `i` as a plain slice — no
 /// per-iteration filtering, no boxed iterators.
@@ -100,11 +133,88 @@ impl Slices {
         Slices { idx, ranges }
     }
 
+    /// Delta counterpart of [`Slices::build`] for a task joining at the
+    /// new maximum index `n`: splice `n` into every existing row where
+    /// `member(i, n)` holds (it lands at each row's end, indices being
+    /// ascending and `n` the maximum), then append row `n` itself. One
+    /// O(pool + n) pass — equivalent to `build(n + 1, member)` because
+    /// `member` only reads structural task fields, which an admission
+    /// never changes for pre-existing tasks.
+    fn admit(&mut self, n: usize, member: impl Fn(usize, usize) -> bool) {
+        let mut idx = Vec::with_capacity(self.idx.len() + 2 * n + 2);
+        let mut ranges = Vec::with_capacity(n + 1);
+        for i in 0..n {
+            let start = idx.len() as u32;
+            idx.extend_from_slice(self.get(i));
+            if member(i, n) {
+                idx.push(n as u32);
+            }
+            ranges.push((start, idx.len() as u32));
+        }
+        let start = idx.len() as u32;
+        for j in 0..=n {
+            if member(n, j) {
+                idx.push(j as u32);
+            }
+        }
+        ranges.push((start, idx.len() as u32));
+        self.idx = idx;
+        self.ranges = ranges;
+    }
+
+    /// Delta counterpart of [`Slices::build`] for the task at index `k`
+    /// leaving: drop row `k`, remove `k` from every other row, and
+    /// shift indices above `k` down by one — mirroring the taskset's
+    /// own reindexing (ids must equal indices). Equivalent to a full
+    /// rebuild because membership between two surviving tasks does not
+    /// depend on the removed one.
+    fn remove(&mut self, k: usize) {
+        let n = self.ranges.len();
+        let mut idx = Vec::with_capacity(self.idx.len());
+        let mut ranges = Vec::with_capacity(n - 1);
+        for i in (0..n).filter(|&i| i != k) {
+            let start = idx.len() as u32;
+            for &j32 in self.get(i) {
+                let j = j32 as usize;
+                if j != k {
+                    idx.push(if j > k { (j - 1) as u32 } else { j32 });
+                }
+            }
+            ranges.push((start, idx.len() as u32));
+        }
+        self.idx = idx;
+        self.ranges = ranges;
+    }
+
     #[inline]
     pub fn get(&self, i: usize) -> &[u32] {
         let (a, b) = self.ranges[i];
         &self.idx[a as usize..b as usize]
     }
+}
+
+/// hpp membership: same-core higher-CPU-priority RT task. The three
+/// membership predicates read only *structural* task fields (core,
+/// priorities, engine, best-effort, GPU use) — the property the delta
+/// updates ([`Prepared::admit_task`], [`Prepared::remove_task`]) rely
+/// on: admitting or removing one task never changes membership between
+/// two others.
+#[inline]
+fn member_hpp(t: &[PrepTask], i: usize, j: usize) -> bool {
+    i != j && !t[j].best_effort && t[j].core == t[i].core && t[j].cpu_prio > t[i].cpu_prio
+}
+
+/// cross_gpu membership: cross-core RT GPU-using task (priority
+/// filtering happens at term-build time, see [`Prepared::cross_gpu`]).
+#[inline]
+fn member_cross_gpu(t: &[PrepTask], i: usize, j: usize) -> bool {
+    i != j && !t[j].best_effort && t[j].core != t[i].core && t[j].uses_gpu
+}
+
+/// sharing membership: same-engine GPU-using task (RT + best-effort).
+#[inline]
+fn member_sharing(t: &[PrepTask], i: usize, j: usize) -> bool {
+    i != j && t[j].uses_gpu && t[j].gpu == t[i].gpu
 }
 
 /// Pre-starred constants of one task (everything R- and
@@ -175,73 +285,136 @@ pub struct Prepared {
     pub order: Vec<usize>,
 }
 
+/// Derive one task's pre-starred constants (shared by [`Prepared::new`]
+/// and the delta updates, so both paths star identically).
+fn prep_task(ts: &TaskSet, task: &crate::model::Task) -> PrepTask {
+    let ctx = ts.platform.gpus[task.gpu];
+    let eps = eps_of(ts, task);
+    PrepTask {
+        c: task.c(),
+        gm: task.gm(),
+        ge: task.ge(),
+        g: task.g(),
+        c_gm: task.c() + task.gm(),
+        eps,
+        alpha: ctx.epsilon.saturating_sub(ctx.theta),
+        theta: ctx.theta,
+        tsg_slice: ctx.tsg_slice,
+        ge_star: ge_star(task, eps),
+        gm_star: gm_star(task, eps),
+        eta_g: task.eta_g() as Time,
+        period: task.period,
+        deadline: task.deadline,
+        uses_gpu: task.uses_gpu(),
+        best_effort: task.best_effort,
+        core: task.core,
+        gpu: task.gpu,
+        cpu_prio: task.cpu_prio,
+        rounds_sum: task
+            .gpu_segments
+            .iter()
+            .map(|g| ceil_div(g.exec, ctx.tsg_slice))
+            .sum(),
+        max_gcs: task.max_gpu_segment(),
+        gcs_total: task.gpu_segments.iter().map(|g| g.total()).sum(),
+    }
+}
+
 impl Prepared {
     pub fn new(ts: &TaskSet) -> Prepared {
         let n = ts.tasks.len();
-        let t: Vec<PrepTask> = ts
-            .tasks
-            .iter()
-            .map(|task| {
-                let ctx = ts.platform.gpus[task.gpu];
-                let eps = eps_of(ts, task);
-                PrepTask {
-                    c: task.c(),
-                    gm: task.gm(),
-                    ge: task.ge(),
-                    g: task.g(),
-                    c_gm: task.c() + task.gm(),
-                    eps,
-                    alpha: ctx.epsilon.saturating_sub(ctx.theta),
-                    theta: ctx.theta,
-                    tsg_slice: ctx.tsg_slice,
-                    ge_star: ge_star(task, eps),
-                    gm_star: gm_star(task, eps),
-                    eta_g: task.eta_g() as Time,
-                    period: task.period,
-                    deadline: task.deadline,
-                    uses_gpu: task.uses_gpu(),
-                    best_effort: task.best_effort,
-                    core: task.core,
-                    gpu: task.gpu,
-                    cpu_prio: task.cpu_prio,
-                    rounds_sum: task
-                        .gpu_segments
-                        .iter()
-                        .map(|g| ceil_div(g.exec, ctx.tsg_slice))
-                        .sum(),
-                    max_gcs: task.max_gpu_segment(),
-                    gcs_total: task.gpu_segments.iter().map(|g| g.total()).sum(),
-                }
-            })
-            .collect();
+        let t: Vec<PrepTask> = ts.tasks.iter().map(|task| prep_task(ts, task)).collect();
 
-        let tasks = &ts.tasks;
-        let hpp = Slices::build(n, |i, j| {
-            i != j
-                && !tasks[j].best_effort
-                && tasks[j].core == tasks[i].core
-                && tasks[j].cpu_prio > tasks[i].cpu_prio
-        });
-        let cross_gpu = Slices::build(n, |i, j| {
-            i != j
-                && !tasks[j].best_effort
-                && tasks[j].core != tasks[i].core
-                && tasks[j].uses_gpu()
-        });
-        let sharing = Slices::build(n, |i, j| {
-            i != j && tasks[j].uses_gpu() && tasks[j].gpu == tasks[i].gpu
-        });
+        let hpp = Slices::build(n, |i, j| member_hpp(&t, i, j));
+        let cross_gpu = Slices::build(n, |i, j| member_cross_gpu(&t, i, j));
+        let sharing = Slices::build(n, |i, j| member_sharing(&t, i, j));
 
         let mut gpu_users = vec![0usize; ts.platform.num_gpus()];
-        for task in tasks.iter().filter(|t| t.uses_gpu()) {
-            gpu_users[task.gpu] += 1;
+        for p in t.iter().filter(|p| p.uses_gpu) {
+            gpu_users[p.gpu] += 1;
         }
 
-        let mut order: Vec<usize> =
-            tasks.iter().filter(|t| !t.best_effort).map(|t| t.id).collect();
-        order.sort_by(|&a, &b| tasks[b].cpu_prio.cmp(&tasks[a].cpu_prio));
+        let mut order: Vec<usize> = (0..n).filter(|&i| !t[i].best_effort).collect();
+        order.sort_by(|&a, &b| t[b].cpu_prio.cmp(&t[a].cpu_prio));
 
         Prepared { t, hpp, cross_gpu, sharing, gpu_users, order }
+    }
+
+    /// Delta-update the kernel for a task that joined `ts` at the new
+    /// maximum index `n = old len` (the admission server's reindexing
+    /// convention: ids equal indices, a joiner goes last). Equivalent
+    /// to `Prepared::new(ts)` — pinned by the in-module tests and the
+    /// `kernel_equivalence` property sweep — because the membership
+    /// predicates only read structural fields of the two tasks they
+    /// relate, so pre-existing pairs are unaffected; only the new
+    /// task's row and its column entries are computed, in O(pool + n)
+    /// instead of O(n²) predicate evaluations.
+    pub fn admit_task(&mut self, ts: &TaskSet) {
+        let n = self.t.len();
+        debug_assert_eq!(ts.tasks.len(), n + 1, "admit_task: ts must have one new last task");
+        self.t.push(prep_task(ts, &ts.tasks[n]));
+        let Prepared { t, hpp, cross_gpu, sharing, gpu_users, order } = self;
+        hpp.admit(n, |i, j| member_hpp(t, i, j));
+        cross_gpu.admit(n, |i, j| member_cross_gpu(t, i, j));
+        sharing.admit(n, |i, j| member_sharing(t, i, j));
+        let new = &t[n];
+        if new.uses_gpu {
+            if gpu_users.len() <= new.gpu {
+                gpu_users.resize(ts.platform.num_gpus(), 0);
+            }
+            gpu_users[new.gpu] += 1;
+        }
+        if !new.best_effort {
+            // RT CPU priorities are unique (TaskSet::validate), so this
+            // insertion position reproduces the full sort exactly.
+            let pos = order
+                .iter()
+                .position(|&h| t[h].cpu_prio < new.cpu_prio)
+                .unwrap_or(order.len());
+            order.insert(pos, n);
+        }
+    }
+
+    /// Delta-update the kernel for the task at index `k` leaving. The
+    /// caller removes the task from its `TaskSet` and shifts the ids of
+    /// later tasks down by one; this mirrors that reindexing across
+    /// every partition. Equivalent to a cold `Prepared::new` on the
+    /// shrunken set because membership between two surviving tasks
+    /// never depends on the departed one.
+    pub fn remove_task(&mut self, k: usize) {
+        let gone = self.t.remove(k);
+        self.hpp.remove(k);
+        self.cross_gpu.remove(k);
+        self.sharing.remove(k);
+        if gone.uses_gpu {
+            self.gpu_users[gone.gpu] -= 1;
+        }
+        self.order.retain(|&h| h != k);
+        for h in &mut self.order {
+            if *h > k {
+                *h -= 1;
+            }
+        }
+    }
+
+    /// Recompute task `i`'s pre-starred constants after a *demand-only*
+    /// mutation (segment WCETs, period, deadline) — the headroom
+    /// probe's workhorse. Structural fields (core, priorities, engine,
+    /// best-effort, GPU use) must be unchanged: they decide partition
+    /// membership, which this deliberately does not touch (asserted in
+    /// debug builds).
+    pub fn update_task(&mut self, ts: &TaskSet, i: usize) {
+        let new = prep_task(ts, &ts.tasks[i]);
+        let old = &self.t[i];
+        debug_assert!(
+            old.core == new.core
+                && old.gpu == new.gpu
+                && old.cpu_prio == new.cpu_prio
+                && old.best_effort == new.best_effort
+                && old.uses_gpu == new.uses_gpu,
+            "update_task: structural fields changed — use remove_task + admit_task"
+        );
+        self.t[i] = new;
     }
 
     /// ν of Lemma 1 for task `i`: GPU-using sharers of its engine.
@@ -403,5 +576,116 @@ mod tests {
         s.push(0, 100, 0);
         s.push(0, 100, 3);
         assert_eq!(s.terms.len(), 1);
+    }
+
+    /// Structural equality of two kernels, partition by partition.
+    fn assert_prep_eq(inc: &Prepared, cold: &Prepared, ctx: &str) {
+        assert_eq!(inc.t.len(), cold.t.len(), "{ctx}: task count");
+        for i in 0..cold.t.len() {
+            assert_eq!(inc.hpp.get(i), cold.hpp.get(i), "{ctx}: hpp({i})");
+            assert_eq!(inc.cross_gpu.get(i), cold.cross_gpu.get(i), "{ctx}: cross_gpu({i})");
+            assert_eq!(inc.sharing.get(i), cold.sharing.get(i), "{ctx}: sharing({i})");
+            let (a, b) = (&inc.t[i], &cold.t[i]);
+            assert_eq!(
+                (a.c, a.gm, a.ge, a.ge_star, a.gm_star, a.rounds_sum, a.max_gcs, a.gcs_total),
+                (b.c, b.gm, b.ge, b.ge_star, b.gm_star, b.rounds_sum, b.max_gcs, b.gcs_total),
+                "{ctx}: constants({i})"
+            );
+            assert_eq!(
+                (a.core, a.gpu, a.cpu_prio, a.best_effort, a.uses_gpu, a.period, a.deadline),
+                (b.core, b.gpu, b.cpu_prio, b.best_effort, b.uses_gpu, b.period, b.deadline),
+                "{ctx}: structure({i})"
+            );
+        }
+        assert_eq!(inc.gpu_users, cold.gpu_users, "{ctx}: gpu_users");
+        assert_eq!(inc.order, cold.order, "{ctx}: order");
+    }
+
+    /// Reassign ids to match indices (the serve/test admission
+    /// convention after splicing tasks in or out).
+    fn reindexed(mut tasks: Vec<Task>, p: &Platform) -> TaskSet {
+        for (idx, t) in tasks.iter_mut().enumerate() {
+            t.id = idx;
+        }
+        TaskSet::new(tasks, p.clone())
+    }
+
+    #[test]
+    fn admit_task_matches_cold_rebuild() {
+        let full = set();
+        let p = full.platform.clone();
+        // Grow task by task from empty; after each admission the
+        // delta-updated kernel must equal a cold rebuild.
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut prep = Prepared::new(&TaskSet::new(vec![], p.clone()));
+        for add in 0..full.len() {
+            tasks.push(full.tasks[add].clone());
+            let ts = reindexed(tasks.clone(), &p);
+            prep.admit_task(&ts);
+            assert_prep_eq(&prep, &Prepared::new(&ts), &format!("after admit {add}"));
+        }
+    }
+
+    #[test]
+    fn remove_task_matches_cold_rebuild() {
+        let full = set();
+        let p = full.platform.clone();
+        // Remove from every position of the 4-task set, including a
+        // middle index (exercises the > k index shift).
+        for k in 0..full.len() {
+            let mut prep = Prepared::new(&full);
+            prep.remove_task(k);
+            let mut tasks = full.tasks.clone();
+            tasks.remove(k);
+            let ts = reindexed(tasks, &p);
+            assert_prep_eq(&prep, &Prepared::new(&ts), &format!("after remove {k}"));
+        }
+    }
+
+    #[test]
+    fn admit_remove_roundtrip_restores_kernel() {
+        let full = set();
+        let mut prep = Prepared::new(&full);
+        // Admit a new last task, then remove it: back to the original.
+        let mut tasks = full.tasks.clone();
+        tasks.push(task(4, 1, 0, 40, 1));
+        let grown = TaskSet::new(tasks, full.platform.clone());
+        prep.admit_task(&grown);
+        assert_prep_eq(&prep, &Prepared::new(&grown), "grown");
+        prep.remove_task(4);
+        assert_prep_eq(&prep, &Prepared::new(&full), "restored");
+    }
+
+    #[test]
+    fn update_task_restars_constants() {
+        let full = set();
+        let mut prep = Prepared::new(&full);
+        let mut ts = full.clone();
+        ts.tasks[1].cpu_segments[0] += ms(3.0);
+        ts.tasks[1].gpu_segments[0].exec += ms(2.0);
+        prep.update_task(&ts, 1);
+        assert_prep_eq(&prep, &Prepared::new(&ts), "after update");
+        // Restoring the task restores the kernel (probe rollback path).
+        prep.update_task(&full, 1);
+        assert_prep_eq(&prep, &Prepared::new(&full), "after rollback");
+    }
+
+    #[test]
+    fn warm_start_from_previous_lfp_is_bit_equal() {
+        // F grows (extra term) between runs; warm-starting from the old
+        // least fixed point must land on the new one exactly.
+        let deadline = 1_000_000;
+        let t1 = [Term { jitter: 0, period: 1000, demand: 70 }];
+        let t2 = [
+            Term { jitter: 0, period: 1000, demand: 70 },
+            Term { jitter: 300, period: 700, demand: 40 },
+        ];
+        let cold1 = run_fixed_point(deadline, 500, &t1);
+        let hint = cold1.time();
+        let cold2 = run_fixed_point(deadline, 600, &t2);
+        let warm2 = run_fixed_point_warm(deadline, 600, hint, &t2);
+        assert_eq!(cold2, warm2);
+        // A None hint degrades to the plain cold start.
+        assert_eq!(run_fixed_point_warm(deadline, 600, None, &t2), cold2);
     }
 }

@@ -43,6 +43,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod taskgen;

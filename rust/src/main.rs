@@ -8,6 +8,7 @@
 //! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
 //! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
 //! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
+//! gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N] [--no-timing]
 //! ```
 //!
 //! The `exp` subcommand dispatches through the [`Experiment`] registry
@@ -36,6 +37,7 @@ use gcaps::experiments::registry::Experiment;
 use gcaps::experiments::{ExpConfig, Opts};
 use gcaps::model::{config, ms, to_ms, TaskSet, WaitMode};
 use gcaps::runtime::{artifacts_dir, Runtime};
+use gcaps::serve;
 use gcaps::sim::{simulate, Policy, SimConfig};
 use gcaps::taskgen::{generate, GenParams};
 use gcaps::util::cli::{fail, Args};
@@ -236,6 +238,40 @@ fn cmd_live(args: &Args) {
     }
 }
 
+/// `gcaps serve`: the long-running admission-control server. Flag
+/// errors and unbindable addresses are startup failures (exit 2);
+/// everything after startup answers on the protocol stream instead.
+fn cmd_serve(args: &Args) {
+    args.reject_unknown(
+        "gcaps serve",
+        &["stdin", "tcp", "approach", "cpus", "gpus", "no-timing"],
+    );
+    let approach = match args.flag("approach") {
+        None => Approach::GcapsSuspend,
+        Some(l) => Approach::from_label(l).unwrap_or_else(|| {
+            fail(&format!(
+                "invalid value {l:?} for --approach (expected one of: {})",
+                Approach::ALL.map(|a| a.label()).join("|")
+            ))
+        }),
+    };
+    let num_gpus = args.usize_flag("gpus", 1);
+    if num_gpus == 0 {
+        fail("--gpus must be at least 1");
+    }
+    let mut platform = gcaps::model::Platform::default().with_num_gpus(num_gpus);
+    platform.num_cpus = args.usize_flag("cpus", platform.num_cpus);
+    if platform.num_cpus == 0 {
+        fail("--cpus must be at least 1");
+    }
+    let cfg = serve::ServeConfig { platform, approach, timing: args.flag("no-timing").is_none() };
+    let result = match args.flag("tcp") {
+        Some(addr) => serve::serve_tcp(&cfg, addr),
+        None => serve::serve_stdio(&cfg), // --stdin is the default front-end
+    };
+    result.unwrap_or_else(|e| fail(&format!("serve: {e}")));
+}
+
 /// The common `gcaps exp` flags every experiment accepts.
 const EXP_COMMON_FLAGS: [&str; 5] = ["tasksets", "seed", "jobs", "format", "list"];
 
@@ -326,9 +362,10 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("bench") => cmd_bench(&args),
         Some("live") => cmd_live(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: gcaps <analyze|sim|exp|bench|live> [...]\n\
+                "usage: gcaps <analyze|sim|exp|bench|live|serve> [...]\n\
                  \n\
                  gcaps analyze [--seed N | --taskset FILE]\n\
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
@@ -343,7 +380,12 @@ fn main() {
                  \x20          workers with byte-identical results for every worker count)\n\
                  gcaps bench [--quick] [--out DIR]       # pinned RTA/DES wall-clock baseline\n\
                  \x20         (writes BENCH_rta.json / BENCH_des.json; --quick for CI smoke)\n\
-                 gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]"
+                 gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]\n\
+                 gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N]\n\
+                 \x20         [--no-timing]             # admission-control server (newline-JSON;\n\
+                 \x20          ops: admit/remove/check/headroom/stats/shutdown; incremental RTA\n\
+                 \x20          with warm-started fixed points; --no-timing zeroes latency stats\n\
+                 \x20          for byte-stable transcripts)"
             );
             std::process::exit(2);
         }

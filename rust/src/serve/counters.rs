@@ -1,0 +1,121 @@
+//! RealtimeStats-style service counters for `gcaps serve`: queries
+//! served, admits/rejects, and p50/p99 service latency over a bounded
+//! ring of recent observations.
+
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// Most recent service latencies retained for the percentile estimates.
+const LATENCY_RING: usize = 4096;
+
+/// Monotonic counters plus a latency ring. With timing disabled
+/// (`--no-timing`) every latency reads as exactly 0 so transcripts are
+/// byte-stable for the golden-file CI test.
+#[derive(Debug)]
+pub struct Counters {
+    pub queries: u64,
+    pub admits: u64,
+    pub rejects: u64,
+    pub removes: u64,
+    pub errors: u64,
+    timing: bool,
+    ring: Vec<f64>,
+    next: usize,
+}
+
+/// Snapshot of the latency distribution, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySnapshot {
+    pub samples: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl Counters {
+    pub fn new(timing: bool) -> Counters {
+        Counters {
+            queries: 0,
+            admits: 0,
+            rejects: 0,
+            removes: 0,
+            errors: 0,
+            timing,
+            ring: Vec::new(),
+            next: 0,
+        }
+    }
+
+    /// Start timing one query; pass the returned token to [`finish`].
+    /// Returns `None` when timing is disabled.
+    ///
+    /// [`finish`]: Counters::finish
+    pub fn start(&self) -> Option<Instant> {
+        self.timing.then(Instant::now)
+    }
+
+    /// Count a served query and file its latency into the ring
+    /// (overwriting the oldest once the ring is full).
+    pub fn finish(&mut self, started: Option<Instant>) {
+        self.queries += 1;
+        let us = match started {
+            Some(t) => t.elapsed().as_secs_f64() * 1e6,
+            None => return,
+        };
+        if self.ring.len() < LATENCY_RING {
+            self.ring.push(us);
+        } else {
+            self.ring[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_RING;
+        }
+    }
+
+    /// Latency percentiles over the retained ring. All-zero when timing
+    /// is disabled or nothing has been recorded yet.
+    pub fn latency(&self) -> LatencySnapshot {
+        let mut xs = self.ring.clone();
+        let p50 = percentile(&mut xs, 50.0).unwrap_or(0.0);
+        let p99 = percentile(&mut xs, 99.0).unwrap_or(0.0);
+        LatencySnapshot { samples: self.ring.len(), p50_us: p50, p99_us: p99 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timing_reports_zero_latency() {
+        let mut c = Counters::new(false);
+        for _ in 0..5 {
+            let t = c.start();
+            assert!(t.is_none());
+            c.finish(t);
+        }
+        assert_eq!(c.queries, 5);
+        assert_eq!(c.latency(), LatencySnapshot { samples: 0, p50_us: 0.0, p99_us: 0.0 });
+    }
+
+    #[test]
+    fn enabled_timing_records_latencies() {
+        let mut c = Counters::new(true);
+        let t = c.start();
+        assert!(t.is_some());
+        c.finish(t);
+        assert_eq!(c.queries, 1);
+        let snap = c.latency();
+        assert_eq!(snap.samples, 1);
+        assert!(snap.p50_us >= 0.0 && snap.p50_us.is_finite());
+        assert_eq!(snap.p50_us, snap.p99_us);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut c = Counters::new(true);
+        for _ in 0..(LATENCY_RING + 100) {
+            let t = c.start();
+            c.finish(t);
+        }
+        assert_eq!(c.queries, (LATENCY_RING + 100) as u64);
+        assert_eq!(c.latency().samples, LATENCY_RING);
+    }
+}

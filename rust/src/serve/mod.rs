@@ -1,0 +1,235 @@
+//! `gcaps serve` — a long-running, zero-dependency admission-control
+//! server speaking newline-delimited JSON over stdin/stdout or TCP.
+//!
+//! The server holds the currently-admitted task set and answers
+//! `admit` / `remove` / `check` / `headroom` / `stats` queries against
+//! the incrementally-maintained analysis kernel
+//! ([`crate::analysis::prep`]): joins and leaves delta-update the
+//! prepared partitions instead of rebuilding them, and GCAPS fixed
+//! points warm-start from the committed response table — pinned
+//! bit-equal to a cold rebuild by `tests/kernel_equivalence.rs`.
+//!
+//! Front-ends share one [`Session`]: `--stdin` serves the standard
+//! streams; `--tcp ADDR` accepts connections sequentially (an
+//! admission server is a serializer by design — concurrent admits
+//! against one platform would race the committed state).
+//!
+//! Failure policy: malformed JSON, unknown ops, invalid task specs and
+//! oversized request lines all produce an `{"ok":false,...}` response
+//! line and the server keeps serving. Process exit code 2 is reserved
+//! for unrecoverable startup errors (bad flags, unbindable address).
+
+pub mod counters;
+pub mod json;
+pub mod proto;
+pub mod session;
+
+pub use session::Session;
+
+use crate::analysis::Approach;
+use crate::model::Platform;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+/// Longest accepted request line, in bytes. Anything longer is drained
+/// (so the stream stays line-synchronized) and answered with an error
+/// response instead of being buffered without bound.
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// Server configuration assembled by the CLI front-end.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub platform: Platform,
+    pub approach: Approach,
+    /// Measure per-query service latency. `--no-timing` disables it so
+    /// transcripts are byte-stable (the golden-file CI test).
+    pub timing: bool,
+}
+
+impl ServeConfig {
+    pub fn session(&self) -> Session {
+        Session::new(self.platform.clone(), self.approach, self.timing)
+    }
+}
+
+enum LineStatus {
+    /// Stream ended with no pending data.
+    Eof,
+    /// A complete (or final, unterminated) line is in the buffer.
+    Line,
+    /// The line exceeded [`MAX_LINE`]; its bytes were discarded.
+    Overlong,
+}
+
+/// Read one newline-terminated line into `buf`, capped at [`MAX_LINE`]
+/// bytes. An overlong line is consumed to its newline but not stored,
+/// so one hostile or corrupt writer cannot balloon server memory or
+/// desynchronize subsequent requests.
+fn read_line_capped(r: &mut impl BufRead, buf: &mut Vec<u8>) -> io::Result<LineStatus> {
+    buf.clear();
+    let mut overlong = false;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(match (overlong, buf.is_empty()) {
+                (true, _) => LineStatus::Overlong,
+                (false, true) => LineStatus::Eof,
+                (false, false) => LineStatus::Line,
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.unwrap_or(chunk.len());
+        if !overlong {
+            if buf.len() + take <= MAX_LINE {
+                buf.extend_from_slice(&chunk[..take]);
+            } else {
+                overlong = true;
+            }
+        }
+        r.consume(take + usize::from(newline.is_some()));
+        if newline.is_some() {
+            return Ok(if overlong { LineStatus::Overlong } else { LineStatus::Line });
+        }
+    }
+}
+
+/// Serve one request stream to completion. Returns `true` when the
+/// client asked for shutdown (as opposed to just closing the stream).
+pub fn run(session: &mut Session, mut input: impl BufRead, mut out: impl Write) -> io::Result<bool> {
+    let mut buf = Vec::new();
+    loop {
+        let resp = match read_line_capped(&mut input, &mut buf)? {
+            LineStatus::Eof => return Ok(false),
+            LineStatus::Overlong => {
+                session.transport_error(&format!("request line exceeds {MAX_LINE} bytes"))
+            }
+            LineStatus::Line => {
+                let text = String::from_utf8_lossy(&buf);
+                let text = text.trim_end_matches('\r');
+                if text.trim().is_empty() {
+                    continue; // blank lines are keep-alive noise, not queries
+                }
+                let (resp, quit) = session.handle_line(text);
+                if quit {
+                    writeln!(out, "{}", resp.to_json())?;
+                    out.flush()?;
+                    return Ok(true);
+                }
+                resp
+            }
+        };
+        writeln!(out, "{}", resp.to_json())?;
+        out.flush()?;
+    }
+}
+
+/// Serve stdin→stdout until EOF or a `shutdown` request.
+pub fn serve_stdio(cfg: &ServeConfig) -> io::Result<()> {
+    let mut session = cfg.session();
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    run(&mut session, stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+/// Serve TCP connections sequentially on `addr` until a client sends
+/// `shutdown`. The admitted set persists across connections. Binding
+/// errors propagate (startup failure → exit 2 in the CLI); per-client
+/// I/O errors are reported to stderr and the listener keeps accepting.
+pub fn serve_tcp(cfg: &ServeConfig, addr: &str) -> io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "gcaps serve: listening on {} ({}, {} cpus, {} gpus)",
+        listener.local_addr()?,
+        cfg.approach.label(),
+        cfg.platform.num_cpus,
+        cfg.platform.num_gpus()
+    );
+    let mut session = cfg.session();
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("gcaps serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let reader = match stream.try_clone() {
+            Ok(s) => BufReader::new(s),
+            Err(e) => {
+                eprintln!("gcaps serve: clone failed: {e}");
+                continue;
+            }
+        };
+        match run(&mut session, reader, &stream) {
+            Ok(true) => return Ok(()),
+            Ok(false) => {}
+            Err(e) => eprintln!("gcaps serve: connection error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn serve_text(input: &str) -> Vec<String> {
+        let cfg = ServeConfig {
+            platform: Platform::default(),
+            approach: Approach::GcapsSuspend,
+            timing: false,
+        };
+        let mut session = cfg.session();
+        let mut out = Vec::new();
+        run(&mut session, Cursor::new(input.as_bytes()), &mut out).unwrap();
+        String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn one_response_line_per_request_line() {
+        let out = serve_text(concat!(
+            r#"{"op":"admit","task":{"name":"a","period_ms":100,"cpu_ms":[1],"prio":1}}"#,
+            "\n",
+            "garbage\n",
+            r#"{"op":"check"}"#,
+            "\n",
+        ));
+        assert_eq!(out.len(), 3);
+        assert!(out[0].contains(r#""admitted":true"#));
+        assert!(out[1].starts_with(r#"{"ok":false"#));
+        assert!(out[2].contains(r#""schedulable":true"#));
+    }
+
+    #[test]
+    fn blank_lines_and_crlf_are_tolerated() {
+        let out = serve_text("\n  \n{\"op\":\"stats\"}\r\n");
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains(r#""queries":0"#), "{}", out[0]);
+    }
+
+    #[test]
+    fn oversized_line_errors_and_stream_stays_synchronized() {
+        let big = format!("{{\"op\":\"admit\",\"pad\":\"{}\"}}\n", "x".repeat(MAX_LINE + 1));
+        let input = format!("{big}{}\n", r#"{"op":"stats"}"#);
+        let out = serve_text(&input);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].contains("exceeds"), "{}", out[0]);
+        assert!(out[1].contains(r#""errors":1"#), "oversize counts as error: {}", out[1]);
+    }
+
+    #[test]
+    fn shutdown_stops_before_remaining_lines() {
+        let out = serve_text("{\"op\":\"shutdown\"}\n{\"op\":\"stats\"}\n");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], r#"{"ok":true,"op":"shutdown"}"#);
+    }
+
+    #[test]
+    fn final_unterminated_line_is_served() {
+        let out = serve_text(r#"{"op":"check"}"#);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains(r#""schedulable":true"#));
+    }
+}

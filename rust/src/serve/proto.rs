@@ -1,0 +1,313 @@
+//! Wire protocol of `gcaps serve`: newline-delimited JSON requests and
+//! responses.
+//!
+//! Requests (one object per line; `op` selects the verb):
+//!
+//! ```text
+//! {"op":"admit","task":{"name":"cam","period_ms":100,"cpu_ms":[1,1],
+//!                       "gpu_ms":[[0.5,5]],"core":0,"prio":10}}
+//! {"op":"remove","task":"cam"}
+//! {"op":"check"}
+//! {"op":"headroom","task":"cam","param":"c"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Task spec fields: `name` (unique handle), `period_ms`, optional
+//! `deadline_ms` (default: period), `cpu_ms` (CPU segment WCETs, ms),
+//! optional `gpu_ms` (list of `[misc_ms, exec_ms]` pairs; alternation
+//! `η_c = η_g + 1` is required for GPU tasks), `core`, optional `gpu`
+//! engine (default 0), `prio` (unique RT priority; doubles as π^g),
+//! optional `best_effort` (default false).
+//!
+//! Every response is a single JSON object line. Malformed lines,
+//! unknown ops and invalid specs produce `{"ok":false,"error":...}` —
+//! never a panic, never an exit (exit code 2 is reserved for
+//! unrecoverable *startup* errors such as an unbindable TCP address).
+
+use crate::model::{ms, GpuSegment, Task, WaitMode};
+use crate::serve::json::Value;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Admit(TaskSpec),
+    Remove(String),
+    Check,
+    Headroom { task: String, param: Param },
+    Stats,
+    Shutdown,
+}
+
+/// Which per-task parameter a headroom query searches over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Param {
+    /// First CPU segment WCET (max admissible extra C).
+    C,
+    /// First GPU segment's pure execution (max admissible extra G^e).
+    Ge,
+}
+
+impl Param {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Param::C => "c",
+            Param::Ge => "ge",
+        }
+    }
+}
+
+/// A task specification from the wire (times in ms, as in the paper's
+/// tables; converted to integer µs on materialization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub name: String,
+    pub period_ms: f64,
+    pub deadline_ms: f64,
+    pub cpu_ms: Vec<f64>,
+    pub gpu_ms: Vec<(f64, f64)>,
+    pub core: usize,
+    pub gpu: usize,
+    pub prio: u32,
+    pub best_effort: bool,
+}
+
+impl TaskSpec {
+    /// Materialize as a model task at index `id` (ids equal indices in
+    /// the admitted set) in the server's wait mode.
+    pub fn to_task(&self, id: usize, mode: WaitMode) -> Task {
+        Task {
+            id,
+            name: self.name.clone(),
+            period: ms(self.period_ms),
+            deadline: ms(self.deadline_ms),
+            cpu_segments: self.cpu_ms.iter().map(|&c| ms(c)).collect(),
+            gpu_segments: self
+                .gpu_ms
+                .iter()
+                .map(|&(m, e)| GpuSegment::new(ms(m), ms(e)))
+                .collect(),
+            core: self.core,
+            gpu: self.gpu,
+            cpu_prio: self.prio,
+            gpu_prio: self.prio,
+            best_effort: self.best_effort,
+            mode,
+        }
+    }
+}
+
+fn field_str(v: &Value, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(|f| f.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field {key:?}"))
+}
+
+fn field_num(v: &Value, key: &str) -> Result<f64, String> {
+    let n = v
+        .get(key)
+        .and_then(|f| f.as_f64())
+        .ok_or_else(|| format!("missing or non-numeric field {key:?}"))?;
+    if n < 0.0 {
+        return Err(format!("field {key:?} must be non-negative"));
+    }
+    Ok(n)
+}
+
+fn field_usize(v: &Value, key: &str, default: usize) -> Result<usize, String> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(f) => {
+            let n = f.as_f64().ok_or_else(|| format!("non-numeric field {key:?}"))?;
+            if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                return Err(format!("field {key:?} must be a small non-negative integer"));
+            }
+            Ok(n as usize)
+        }
+    }
+}
+
+/// Largest accepted time value (ms) and segment count. Both bounds
+/// keep every µs quantity the analysis derives (sums of segments,
+/// starred constants, demand × jobs products) far from u64 overflow —
+/// a hostile request must get an error response, not a debug-mode
+/// arithmetic panic.
+const MAX_TIME_MS: f64 = 1e12;
+const MAX_SEGMENTS: usize = 64;
+
+fn parse_task_spec(v: &Value) -> Result<TaskSpec, String> {
+    let name = field_str(v, "name")?;
+    if name.is_empty() {
+        return Err("task name must be non-empty".into());
+    }
+    let period_ms = field_num(v, "period_ms")?;
+    if period_ms <= 0.0 {
+        return Err("field \"period_ms\" must be positive".into());
+    }
+    let deadline_ms = match v.get("deadline_ms") {
+        None => period_ms,
+        Some(_) => field_num(v, "deadline_ms")?,
+    };
+    let cpu_ms: Vec<f64> = v
+        .get("cpu_ms")
+        .and_then(|f| f.as_arr())
+        .ok_or("missing or non-array field \"cpu_ms\"")?
+        .iter()
+        .map(|x| x.as_f64().filter(|n| *n >= 0.0))
+        .collect::<Option<_>>()
+        .ok_or("field \"cpu_ms\" must hold non-negative numbers")?;
+    if cpu_ms.is_empty() {
+        return Err("field \"cpu_ms\" must be non-empty".into());
+    }
+    let gpu_ms: Vec<(f64, f64)> = match v.get("gpu_ms") {
+        None => Vec::new(),
+        Some(f) => f
+            .as_arr()
+            .ok_or("field \"gpu_ms\" must be an array of [misc_ms, exec_ms] pairs")?
+            .iter()
+            .map(|seg| {
+                let pair = seg.as_arr().filter(|p| p.len() == 2)?;
+                let m = pair[0].as_f64().filter(|n| *n >= 0.0)?;
+                let e = pair[1].as_f64().filter(|n| *n >= 0.0)?;
+                Some((m, e))
+            })
+            .collect::<Option<_>>()
+            .ok_or("field \"gpu_ms\" must hold [misc_ms, exec_ms] pairs")?,
+    };
+    if cpu_ms.len() > MAX_SEGMENTS || gpu_ms.len() > MAX_SEGMENTS {
+        return Err(format!("at most {MAX_SEGMENTS} segments per task"));
+    }
+    let times_ok = period_ms <= MAX_TIME_MS
+        && deadline_ms <= MAX_TIME_MS
+        && cpu_ms.iter().all(|&c| c <= MAX_TIME_MS)
+        && gpu_ms.iter().all(|&(m, e)| m <= MAX_TIME_MS && e <= MAX_TIME_MS);
+    if !times_ok {
+        return Err(format!("time values must be at most {MAX_TIME_MS} ms"));
+    }
+    let prio_f = field_num(v, "prio")?;
+    if prio_f.fract() != 0.0 || prio_f > u32::MAX as f64 {
+        return Err("field \"prio\" must be a non-negative integer".into());
+    }
+    Ok(TaskSpec {
+        name,
+        period_ms,
+        deadline_ms,
+        cpu_ms,
+        gpu_ms,
+        core: field_usize(v, "core", 0)?,
+        gpu: field_usize(v, "gpu", 0)?,
+        prio: prio_f as u32,
+        best_effort: v.get("best_effort").and_then(|f| f.as_bool()).unwrap_or(false),
+    })
+}
+
+/// Parse one request line's JSON value. Any malformed shape is an
+/// `Err(message)` — the server answers with an error response.
+pub fn parse_request(v: &Value) -> Result<Request, String> {
+    let op = v
+        .get("op")
+        .and_then(|f| f.as_str())
+        .ok_or("missing or non-string field \"op\"")?;
+    match op {
+        "admit" => {
+            let spec = v.get("task").ok_or("admit: missing field \"task\"")?;
+            Ok(Request::Admit(parse_task_spec(spec).map_err(|e| format!("admit: {e}"))?))
+        }
+        "remove" => Ok(Request::Remove(field_str(v, "task").map_err(|e| format!("remove: {e}"))?)),
+        "check" => Ok(Request::Check),
+        "headroom" => {
+            let task = field_str(v, "task").map_err(|e| format!("headroom: {e}"))?;
+            let param = match v.get("param").and_then(|f| f.as_str()) {
+                Some("c") => Param::C,
+                Some("ge") => Param::Ge,
+                _ => return Err("headroom: field \"param\" must be \"c\" or \"ge\"".into()),
+            };
+            Ok(Request::Headroom { task, param })
+        }
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!(
+            "unknown op {other:?} (expected admit|remove|check|headroom|stats|shutdown)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json::parse;
+
+    fn req(text: &str) -> Result<Request, String> {
+        parse_request(&parse(text).map_err(|e| e.to_string())?)
+    }
+
+    #[test]
+    fn parses_full_admit() {
+        let r = req(
+            r#"{"op":"admit","task":{"name":"cam","period_ms":100,"deadline_ms":80,
+                "cpu_ms":[1,1.5],"gpu_ms":[[0.5,5]],"core":1,"gpu":0,"prio":10,
+                "best_effort":false}}"#,
+        )
+        .unwrap();
+        let Request::Admit(spec) = r else { panic!("not admit") };
+        assert_eq!(spec.name, "cam");
+        assert_eq!(spec.deadline_ms, 80.0);
+        assert_eq!(spec.cpu_ms, vec![1.0, 1.5]);
+        assert_eq!(spec.gpu_ms, vec![(0.5, 5.0)]);
+        assert_eq!((spec.core, spec.gpu, spec.prio), (1, 0, 10));
+        let t = spec.to_task(3, WaitMode::SelfSuspend);
+        assert_eq!(t.id, 3);
+        assert_eq!(t.period, ms(100.0));
+        assert_eq!(t.deadline, ms(80.0));
+        assert_eq!(t.gpu_segments, vec![GpuSegment::new(ms(0.5), ms(5.0))]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let r = req(
+            r#"{"op":"admit","task":{"name":"t","period_ms":50,"cpu_ms":[2],"prio":1}}"#,
+        )
+        .unwrap();
+        let Request::Admit(spec) = r else { panic!() };
+        assert_eq!(spec.deadline_ms, 50.0);
+        assert!(spec.gpu_ms.is_empty());
+        assert_eq!((spec.core, spec.gpu), (0, 0));
+        assert!(!spec.best_effort);
+    }
+
+    #[test]
+    fn other_ops_parse() {
+        assert_eq!(req(r#"{"op":"remove","task":"cam"}"#), Ok(Request::Remove("cam".into())));
+        assert_eq!(req(r#"{"op":"check"}"#), Ok(Request::Check));
+        assert_eq!(req(r#"{"op":"stats"}"#), Ok(Request::Stats));
+        assert_eq!(req(r#"{"op":"shutdown"}"#), Ok(Request::Shutdown));
+        assert_eq!(
+            req(r#"{"op":"headroom","task":"cam","param":"ge"}"#),
+            Ok(Request::Headroom { task: "cam".into(), param: Param::Ge })
+        );
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        for text in [
+            r#"{}"#,
+            r#"{"op":7}"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"admit"}"#,
+            r#"{"op":"admit","task":{}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":0,"cpu_ms":[1],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[-1],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1],"prio":1.5}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1],"prio":1,"gpu_ms":[[1]]}}"#,
+            r#"{"op":"admit","task":{"name":"","period_ms":10,"cpu_ms":[1],"prio":1}}"#,
+            r#"{"op":"remove"}"#,
+            r#"{"op":"headroom","task":"x","param":"zz"}"#,
+            r#"{"op":"headroom","param":"c"}"#,
+        ] {
+            assert!(req(text).is_err(), "{text} should fail");
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! Admission-control session state: the currently-admitted task set,
+//! its incrementally-maintained [`Prepared`] kernel, the committed
+//! warm-start response table, and the service counters.
+//!
+//! Analysis policy: each query runs the *plain* per-approach analysis
+//! (no Audsley GPU-priority retry). The §5.3 Audsley search mutates
+//! `gpu_prio` across the whole set, which would churn already-admitted
+//! tasks' committed state on every admit — an admission server must
+//! answer against a stable configuration, so π^g stays equal to the
+//! task's RT priority. GCAPS queries warm-start from the committed
+//! response table (sound and bit-equal: an admit — or a headroom probe
+//! that only *grows* a WCET parameter — grows every task's iteration
+//! map pointwise, so the old least fixed point lower-bounds the new
+//! one); after a removal the maps shrink and the analysis restarts
+//! cold before re-committing.
+
+use crate::analysis::{fmlp, gcaps, mpcp, rr, Approach};
+use crate::analysis::{AnalysisResult, Prepared};
+use crate::model::{to_ms, Platform, Task, TaskSet, Time};
+use crate::serve::counters::Counters;
+use crate::serve::json::{obj, parse, Value};
+use crate::serve::proto::{parse_request, Param, Request, TaskSpec};
+
+/// One admission-control session (shared by stdin and TCP front-ends).
+pub struct Session {
+    approach: Approach,
+    ts: TaskSet,
+    prep: Prepared,
+    /// Committed response table of the admitted set (µs), used to
+    /// warm-start GCAPS fixed points. `warm[i]` is task i's response.
+    warm: Vec<Option<Time>>,
+    pub counters: Counters,
+}
+
+impl Session {
+    pub fn new(platform: Platform, approach: Approach, timing: bool) -> Session {
+        let ts = TaskSet::new(Vec::new(), platform);
+        let prep = Prepared::new(&ts);
+        Session { approach, ts, prep, warm: Vec::new(), counters: Counters::new(timing) }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.ts.tasks.len()
+    }
+
+    /// Serve one request line. Returns the response value plus whether
+    /// the server should shut down after sending it. Never panics on
+    /// bad input — every failure becomes an `ok:false` response.
+    pub fn handle_line(&mut self, line: &str) -> (Value, bool) {
+        let started = self.counters.start();
+        let (resp, quit) = match parse(line).and_then(|v| parse_request(&v)) {
+            Err(e) => {
+                self.counters.errors += 1;
+                (error_response(&e), false)
+            }
+            Ok(Request::Shutdown) => {
+                (obj(vec![("ok", Value::Bool(true)), ("op", Value::Str("shutdown".into()))]), true)
+            }
+            Ok(req) => (self.dispatch(req), false),
+        };
+        self.counters.finish(started);
+        (resp, quit)
+    }
+
+    fn dispatch(&mut self, req: Request) -> Value {
+        match req {
+            Request::Admit(spec) => self.admit(spec),
+            Request::Remove(name) => self.remove(&name),
+            Request::Check => self.check(),
+            Request::Headroom { task, param } => self.headroom(&task, param),
+            Request::Stats => self.stats(),
+            Request::Shutdown => unreachable!("handled in handle_line"),
+        }
+    }
+
+    /// Run the session's analysis over the current kernel. `warm` may
+    /// be shorter than the task count (missing entries start cold) and
+    /// is only consulted by the GCAPS family — the other families'
+    /// prepared analyses are already single-pass over the shared
+    /// delta-updated kernel.
+    fn analyze(&self, warm: &[Option<Time>]) -> AnalysisResult {
+        let busy = self.approach.is_busy();
+        match self.approach {
+            Approach::GcapsBusy | Approach::GcapsSuspend => gcaps::analyze_prepared_warm(
+                &self.ts,
+                &self.prep,
+                busy,
+                &gcaps::Options::default(),
+                warm,
+            ),
+            Approach::TsgRrBusy | Approach::TsgRrSuspend => {
+                rr::analyze_prepared(&self.ts, &self.prep, busy)
+            }
+            Approach::MpcpBusy | Approach::MpcpSuspend => {
+                mpcp::analyze_prepared(&self.ts, &self.prep, busy)
+            }
+            Approach::FmlpBusy | Approach::FmlpSuspend => {
+                fmlp::analyze_prepared(&self.ts, &self.prep, busy)
+            }
+        }
+    }
+
+    fn admit(&mut self, spec: TaskSpec) -> Value {
+        if self.ts.tasks.iter().any(|t| t.name == spec.name) {
+            self.counters.rejects += 1;
+            return rejected("admit", &format!("duplicate task name {:?}", spec.name));
+        }
+        let n = self.ts.tasks.len();
+        let task = spec.to_task(n, self.approach.wait_mode());
+        self.ts.tasks.push(task);
+        if let Err(e) = self.ts.validate() {
+            self.ts.tasks.pop();
+            self.counters.rejects += 1;
+            return rejected("admit", &e);
+        }
+        self.prep.admit_task(&self.ts);
+        let mut warm = self.warm.clone();
+        warm.push(None);
+        let res = self.analyze(&warm);
+        if res.schedulable {
+            self.counters.admits += 1;
+            let r = res.response[n];
+            self.warm = res.response;
+            obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", Value::Str("admit".into())),
+                ("admitted", Value::Bool(true)),
+                ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+                ("response_ms", r.map_or(Value::Null, |t| Value::Num(to_ms(t)))),
+            ])
+        } else {
+            // Roll the delta back; the roundtrip is pinned bit-equal to
+            // never having admitted (tests/kernel_equivalence.rs).
+            self.prep.remove_task(n);
+            self.ts.tasks.pop();
+            self.counters.rejects += 1;
+            let culprits: Vec<Value> = self
+                .ts
+                .tasks
+                .iter()
+                .filter(|t| !t.best_effort && res.response[t.id].is_none())
+                .map(|t| Value::Str(t.name.clone()))
+                .chain(res.response.last().and_then(|r| {
+                    r.is_none().then(|| Value::Str(spec.name.clone()))
+                }))
+                .collect();
+            obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", Value::Str("admit".into())),
+                ("admitted", Value::Bool(false)),
+                ("reason", Value::Str("unschedulable".into())),
+                ("failing", Value::Arr(culprits)),
+                ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+            ])
+        }
+    }
+
+    fn remove(&mut self, name: &str) -> Value {
+        let Some(k) = self.ts.tasks.iter().position(|t| t.name == name) else {
+            self.counters.errors += 1;
+            return error_response(&format!("remove: no admitted task named {name:?}"));
+        };
+        self.ts.tasks.remove(k);
+        for i in k..self.ts.tasks.len() {
+            self.ts.tasks[i].id = i;
+        }
+        self.prep.remove_task(k);
+        self.counters.removes += 1;
+        // Interference maps only shrank, so the set stays schedulable;
+        // re-analyse cold (shrunk maps invalidate warm hints) to
+        // refresh the committed response table.
+        let res = self.analyze(&[]);
+        debug_assert!(res.schedulable, "removal cannot make an admitted set unschedulable");
+        self.warm = res.response;
+        obj(vec![
+            ("ok", Value::Bool(true)),
+            ("op", Value::Str("remove".into())),
+            ("removed", Value::Bool(true)),
+            ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+        ])
+    }
+
+    fn check(&mut self) -> Value {
+        let res = self.analyze(&self.warm);
+        let tasks: Vec<Value> = self
+            .ts
+            .tasks
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("name", Value::Str(t.name.clone())),
+                    (
+                        "response_ms",
+                        res.response[t.id].map_or(Value::Null, |r| Value::Num(to_ms(r))),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("ok", Value::Bool(true)),
+            ("op", Value::Str("check".into())),
+            ("schedulable", Value::Bool(res.schedulable)),
+            ("tasks", Value::Arr(tasks)),
+        ])
+    }
+
+    /// Max additive slack Δ (binary search, µs granularity) on one
+    /// parameter of an admitted task such that the whole set stays
+    /// schedulable, capped at the task's deadline.
+    fn headroom(&mut self, name: &str, param: Param) -> Value {
+        let Some(k) = self.ts.tasks.iter().position(|t| t.name == name) else {
+            self.counters.errors += 1;
+            return error_response(&format!("headroom: no admitted task named {name:?}"));
+        };
+        if param == Param::Ge && self.ts.tasks[k].gpu_segments.is_empty() {
+            self.counters.errors += 1;
+            return error_response(&format!(
+                "headroom: task {name:?} has no GPU segments (param \"ge\")"
+            ));
+        }
+        let original = self.ts.tasks[k].clone();
+        let cap = original.deadline;
+        // feasible(0) holds: the committed set is schedulable. Probes
+        // only grow a WCET, so warm-starting from the committed table
+        // stays sound (see the module doc).
+        let mut lo: Time = 0;
+        let mut hi: Time = cap;
+        if self.probe(k, param, hi, &original) {
+            lo = hi;
+        } else {
+            // Invariant: feasible(lo), !feasible(hi).
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if self.probe(k, param, mid, &original) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+        }
+        // Restore the committed kernel entry.
+        self.ts.tasks[k] = original;
+        self.prep.update_task(&self.ts, k);
+        obj(vec![
+            ("ok", Value::Bool(true)),
+            ("op", Value::Str("headroom".into())),
+            ("task", Value::Str(name.into())),
+            ("param", Value::Str(param.label().into())),
+            ("headroom_ms", Value::Num(to_ms(lo))),
+            ("capped", Value::Bool(lo == cap)),
+        ])
+    }
+
+    /// Re-star task k with `delta` added to the searched parameter and
+    /// test schedulability of the whole set.
+    fn probe(&mut self, k: usize, param: Param, delta: Time, original: &Task) -> bool {
+        let mut t = original.clone();
+        match param {
+            Param::C => t.cpu_segments[0] += delta,
+            Param::Ge => t.gpu_segments[0].exec += delta,
+        }
+        self.ts.tasks[k] = t;
+        self.prep.update_task(&self.ts, k);
+        self.analyze(&self.warm).schedulable
+    }
+
+    /// File a transport-level error (e.g. an oversized request line
+    /// whose content was discarded unread) as a served query with an
+    /// error response.
+    pub fn transport_error(&mut self, msg: &str) -> Value {
+        let started = self.counters.start();
+        self.counters.errors += 1;
+        let v = error_response(msg);
+        self.counters.finish(started);
+        v
+    }
+
+    fn stats(&mut self) -> Value {
+        let lat = self.counters.latency();
+        obj(vec![
+            ("ok", Value::Bool(true)),
+            ("op", Value::Str("stats".into())),
+            ("approach", Value::Str(self.approach.label().into())),
+            ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+            ("queries", Value::Num(self.counters.queries as f64)),
+            ("admits", Value::Num(self.counters.admits as f64)),
+            ("rejects", Value::Num(self.counters.rejects as f64)),
+            ("removes", Value::Num(self.counters.removes as f64)),
+            ("errors", Value::Num(self.counters.errors as f64)),
+            ("latency_samples", Value::Num(lat.samples as f64)),
+            ("latency_p50_us", Value::Num(lat.p50_us)),
+            ("latency_p99_us", Value::Num(lat.p99_us)),
+        ])
+    }
+}
+
+fn error_response(msg: &str) -> Value {
+    obj(vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.into()))])
+}
+
+fn rejected(op: &str, reason: &str) -> Value {
+    obj(vec![
+        ("ok", Value::Bool(true)),
+        ("op", Value::Str(op.into())),
+        ("admitted", Value::Bool(false)),
+        ("reason", Value::Str(reason.into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session() -> Session {
+        Session::new(Platform::default(), Approach::GcapsSuspend, false)
+    }
+
+    fn line(s: &mut Session, text: &str) -> String {
+        let (v, _) = s.handle_line(text);
+        v.to_json()
+    }
+
+    fn admit_line(name: &str, period: f64, prio: u32, core: usize) -> String {
+        format!(
+            r#"{{"op":"admit","task":{{"name":"{name}","period_ms":{period},"cpu_ms":[1,1],"gpu_ms":[[0.5,2]],"core":{core},"prio":{prio}}}}}"#
+        )
+    }
+
+    #[test]
+    fn admit_check_remove_lifecycle() {
+        let mut s = session();
+        let r = line(&mut s, &admit_line("cam", 100.0, 10, 0));
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+        assert!(r.contains(r#""tasks":1"#), "{r}");
+        let r = line(&mut s, &admit_line("lidar", 50.0, 20, 1));
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+        let r = line(&mut s, r#"{"op":"check"}"#);
+        assert!(r.contains(r#""schedulable":true"#), "{r}");
+        assert!(r.contains("cam") && r.contains("lidar"), "{r}");
+        let r = line(&mut s, r#"{"op":"remove","task":"cam"}"#);
+        assert!(r.contains(r#""removed":true"#) && r.contains(r#""tasks":1"#), "{r}");
+        assert_eq!(s.num_tasks(), 1);
+        assert_eq!(s.ts.tasks[0].id, 0, "ids re-pack to indices after removal");
+    }
+
+    #[test]
+    fn duplicate_name_and_duplicate_prio_reject_without_state_change() {
+        let mut s = session();
+        line(&mut s, &admit_line("cam", 100.0, 10, 0));
+        let r = line(&mut s, &admit_line("cam", 80.0, 11, 1));
+        assert!(r.contains(r#""admitted":false"#) && r.contains("duplicate task name"), "{r}");
+        // Same RT priority on any core violates TaskSet::validate.
+        let r = line(&mut s, &admit_line("dup", 80.0, 10, 1));
+        assert!(r.contains(r#""admitted":false"#), "{r}");
+        assert_eq!(s.num_tasks(), 1);
+        let r = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(r.contains(r#""admits":1"#) && r.contains(r#""rejects":2"#), "{r}");
+    }
+
+    #[test]
+    fn unschedulable_admit_rolls_back() {
+        let mut s = session();
+        line(&mut s, &admit_line("a", 10.0, 10, 0));
+        // 9 ms of CPU on the same core inside a 10 ms period on top of
+        // task a's ~3.5 ms demand cannot fit.
+        let r = line(
+            &mut s,
+            r#"{"op":"admit","task":{"name":"hog","period_ms":10,"cpu_ms":[9],"core":0,"prio":5}}"#,
+        );
+        assert!(r.contains(r#""admitted":false"#) && r.contains("unschedulable"), "{r}");
+        assert!(r.contains("hog"), "failing list names the culprit: {r}");
+        assert_eq!(s.num_tasks(), 1);
+        // The rolled-back kernel still admits a feasible task.
+        let r = line(&mut s, &admit_line("b", 100.0, 3, 1));
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+    }
+
+    #[test]
+    fn malformed_and_unknown_requests_are_error_responses() {
+        let mut s = session();
+        for bad in [
+            "",
+            "not json",
+            "{\"op\":\"admit\"}",
+            "{\"op\":\"nope\"}",
+            "[1,2,3]",
+            "{\"op\":\"remove\",\"task\":\"ghost\"}",
+            "{\"op\":\"headroom\",\"task\":\"ghost\",\"param\":\"c\"}",
+        ] {
+            let (v, quit) = s.handle_line(bad);
+            let r = v.to_json();
+            assert!(r.starts_with(r#"{"ok":false"#), "{bad} -> {r}");
+            assert!(!quit);
+        }
+        let r = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(r.contains(r#""errors":7"#), "{r}");
+    }
+
+    #[test]
+    fn headroom_binary_search_is_consistent() {
+        let mut s = session();
+        line(&mut s, &admit_line("cam", 100.0, 10, 0));
+        line(&mut s, &admit_line("lidar", 20.0, 20, 0));
+        for (param, seg) in [("c", 0usize), ("ge", 1usize)] {
+            let r = line(&mut s, &format!(r#"{{"op":"headroom","task":"cam","param":"{param}"}}"#));
+            assert!(r.contains(r#""ok":true"#), "{r}");
+            let ms_val: f64 = r
+                .split("\"headroom_ms\":")
+                .nth(1)
+                .and_then(|t| t.split([',', '}']).next())
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert!(ms_val >= 0.0, "param {param} (seg {seg}): {r}");
+            // The probe loop must leave the committed state intact.
+            let chk = line(&mut s, r#"{"op":"check"}"#);
+            assert!(chk.contains(r#""schedulable":true"#), "{chk}");
+        }
+        // Headroom + delta admits must agree: admitting a task that
+        // consumes more than the remaining headroom must fail.
+        let r = line(&mut s, r#"{"op":"headroom","task":"ghost","param":"c"}"#);
+        assert!(r.contains(r#""ok":false"#), "{r}");
+        let r = line(&mut s, r#"{"op":"headroom","task":"lidar","param":"ge"}"#);
+        assert!(r.contains(r#""ok":true"#), "{r}");
+    }
+
+    #[test]
+    fn headroom_ge_on_cpu_only_task_errors() {
+        let mut s = session();
+        line(
+            &mut s,
+            r#"{"op":"admit","task":{"name":"cpu","period_ms":50,"cpu_ms":[1],"prio":1}}"#,
+        );
+        let r = line(&mut s, r#"{"op":"headroom","task":"cpu","param":"ge"}"#);
+        assert!(r.contains(r#""ok":false"#) && r.contains("no GPU segments"), "{r}");
+    }
+
+    #[test]
+    fn shutdown_sets_quit_flag() {
+        let mut s = session();
+        let (v, quit) = s.handle_line(r#"{"op":"shutdown"}"#);
+        assert!(quit);
+        assert_eq!(v.to_json(), r#"{"ok":true,"op":"shutdown"}"#);
+    }
+
+    #[test]
+    fn every_family_serves_admissions() {
+        for approach in Approach::ALL {
+            let mut s = Session::new(Platform::default(), approach, false);
+            let r = line(&mut s, &admit_line("cam", 100.0, 10, 0));
+            assert!(r.contains(r#""admitted":true"#), "{}: {r}", approach.label());
+            let r = line(&mut s, &admit_line("lidar", 50.0, 20, 1));
+            assert!(r.contains(r#""admitted":true"#), "{}: {r}", approach.label());
+            let r = line(&mut s, r#"{"op":"check"}"#);
+            assert!(r.contains(r#""schedulable":true"#), "{}: {r}", approach.label());
+            let r = line(&mut s, r#"{"op":"remove","task":"cam"}"#);
+            assert!(r.contains(r#""removed":true"#), "{}: {r}", approach.label());
+        }
+    }
+}

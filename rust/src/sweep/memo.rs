@@ -11,11 +11,14 @@
 //! The cache key is `(base seed, mode- and platform-normalized params
 //! hash, taskset index)`; the cached value is the canonical
 //! self-suspending taskset, and [`taskset`] re-stamps the requested
-//! mode/platform on the way out. Entries are evicted wholesale when the
-//! cache grows past a bound (sweeps re-generate cheaply on miss).
+//! mode/platform on the way out. When the cache grows past a bound,
+//! entries belonging to *other* `(seed, params-hash)` generations are
+//! evicted — never the generation currently being inserted (a sweep
+//! larger than the bound would otherwise clear its own entries on every
+//! store and re-generate its whole grid).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::model::{Platform, TaskSet, WaitMode};
 use crate::sweep::{cell_hash, cell_rng};
@@ -27,9 +30,29 @@ type Key = (u64, u64, usize);
 /// const initializer suffices (no external once-cell machinery).
 static CACHE: Mutex<Option<HashMap<Key, Arc<TaskSet>>>> = Mutex::new(None);
 
-/// Wholesale-eviction bound: ~a full Fig. 8 panel at paper scale
-/// (7 points × 1000 tasksets) before the map is cleared.
+/// Eviction bound: ~a full Fig. 8 panel at paper scale (7 points ×
+/// 1000 tasksets) before other-generation entries are evicted. The map
+/// may temporarily exceed this when a single sweep generation alone is
+/// larger than the cap — growth then stays bounded by that one sweep's
+/// own size, and the surplus is dropped as soon as a different
+/// generation overflows.
 const CACHE_CAP: usize = 8192;
+
+/// Lock the cache, recovering from poisoning. A sweep worker that
+/// panics while holding the guard (e.g. out-of-memory inside
+/// `HashMap::insert`, or a panicking assertion in test code) poisons
+/// the mutex; without recovery every later [`taskset`]/[`clear`] call
+/// in the process would panic too — fatal for a long-running
+/// `gcaps serve`. Recovery is sound here because the map carries no
+/// cross-entry invariant a partial critical section could break: each
+/// operation is a single `HashMap` call (`get`/`insert`/`clear`/
+/// `retain`), the values are immutable `Arc`s, and the key fully
+/// determines the (deterministically re-generable) value — any state
+/// the map can be observed in is a valid cache, at worst missing or
+/// still holding some entries.
+fn lock() -> MutexGuard<'static, Option<HashMap<Key, Arc<TaskSet>>>> {
+    CACHE.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Stable hash of every [`GenParams`] field that influences the
 /// generated task structure. Deliberately excludes `mode` (copied onto
@@ -132,23 +155,33 @@ fn adapt(ts: Arc<TaskSet>, p: &GenParams) -> Arc<TaskSet> {
 /// cache-state-independent); benchmarks use it to measure the cold
 /// generation path instead of Arc-clone cache hits.
 pub fn clear() {
-    let mut guard = CACHE.lock().unwrap();
+    let mut guard = lock();
     if let Some(m) = guard.as_mut() {
         m.clear();
     }
 }
 
 fn lookup(key: &Key) -> Option<Arc<TaskSet>> {
-    let guard = CACHE.lock().unwrap();
+    let guard = lock();
     guard.as_ref().and_then(|m| m.get(key).cloned())
 }
 
-fn store(key: Key, ts: Arc<TaskSet>) {
-    let mut guard = CACHE.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
+/// At the cap, evict other `(seed, params-hash)` generations only. The
+/// entry about to be inserted belongs to the sweep currently running;
+/// clearing its generation too (the old wholesale `map.clear()`) meant
+/// a sweep larger than the cap evicted its own cells on every store and
+/// re-generated its whole grid.
+fn evict_if_full(map: &mut HashMap<Key, Arc<TaskSet>>, key: &Key) {
     if map.len() >= CACHE_CAP {
-        map.clear();
+        let generation = (key.0, key.1);
+        map.retain(|k, _| (k.0, k.1) == generation);
     }
+}
+
+fn store(key: Key, ts: Arc<TaskSet>) {
+    let mut guard = lock();
+    let map = guard.get_or_insert_with(HashMap::new);
+    evict_if_full(map, &key);
     map.insert(key, ts);
 }
 
@@ -156,6 +189,76 @@ fn store(key: Key, ts: Arc<TaskSet>) {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
+
+    /// A cheap synthetic cache value for eviction-policy tests (the
+    /// policy only looks at keys, never at the stored taskset).
+    fn dummy() -> Arc<TaskSet> {
+        Arc::new(TaskSet::new(vec![], Platform::default()))
+    }
+
+    #[test]
+    fn poisoned_cache_recovers_and_serves_hits() {
+        // Warm one entry, then poison the mutex the way a panicking
+        // sweep worker would: die while holding the guard (the panic of
+        // a cached-generation closure propagates through `store`'s
+        // critical section). The panic is caught via the thread join.
+        let p = GenParams::default();
+        let warm = taskset(0x9054_0001, &p, 0);
+        let poisoner = std::thread::spawn(|| {
+            let _g = CACHE.lock().expect("not yet poisoned");
+            panic!("sweep worker dies while holding the cache lock");
+        });
+        assert!(poisoner.join().is_err(), "the poisoning panic must fire");
+        // Regression: these used to propagate the poison panic forever.
+        let hit = taskset(0x9054_0001, &p, 0);
+        assert!(Arc::ptr_eq(&warm, &hit), "cache must still serve hits");
+        let fresh = taskset(0x9054_0002, &p, 0);
+        assert_eq!(fresh.tasks.len(), taskset(0x9054_0002, &p, 0).tasks.len());
+    }
+
+    // The two eviction-policy tests below drive `evict_if_full` on a
+    // local map rather than the process-global cache: lib tests run in
+    // parallel, and filling the shared cache to `CACHE_CAP` would race
+    // the sweep tests in `experiments/` that store into it. `store`
+    // wires the same helper in front of its insert, so the policy under
+    // test is exactly the production one.
+
+    #[test]
+    fn overflow_evicts_only_other_generations() {
+        let mut map: HashMap<Key, Arc<TaskSet>> = HashMap::new();
+        // Cache at the cap, holding only a foreign generation.
+        let foreign = (0xF0F0_F0F0u64, 0xBADC_0FFEu64);
+        for i in 0..CACHE_CAP {
+            map.insert((foreign.0, foreign.1, i), dummy());
+        }
+        // One store from a live sweep overflows the cap: every foreign
+        // entry goes, the new entry stays.
+        let own = (0x9054_0003u64, 0x0DD5_EED5u64, 0usize);
+        evict_if_full(&mut map, &own);
+        map.insert(own, dummy());
+        assert_eq!(map.len(), 1, "every foreign entry evicted");
+        assert!(map.contains_key(&own));
+    }
+
+    #[test]
+    fn own_generation_survives_cap_overflow() {
+        // Regression: a sweep of CACHE_CAP + 1 cells used to wholesale-
+        // clear its OWN first CACHE_CAP cells when cell CAP + 1 stored,
+        // re-generating the whole grid on every later pass. With
+        // generation-aware eviction the re-generated remainder is
+        // exactly the evicted foreign entries — here zero.
+        let mut map: HashMap<Key, Arc<TaskSet>> = HashMap::new();
+        let generation = (0x9054_0004u64, 0xABCD_1234u64);
+        for i in 0..=CACHE_CAP {
+            let key = (generation.0, generation.1, i);
+            evict_if_full(&mut map, &key);
+            map.insert(key, dummy());
+        }
+        assert_eq!(map.len(), CACHE_CAP + 1, "no own-generation cell was dropped");
+        for i in 0..=CACHE_CAP {
+            assert!(map.contains_key(&(generation.0, generation.1, i)));
+        }
+    }
 
     #[test]
     fn memoized_equals_fresh_generation() {

@@ -13,8 +13,14 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// `None` for an empty sample — and for a sample containing any
+    /// non-finite observation. A NaN used to slip through the
+    /// `min`/`max` folds unchanged (both comparisons are false) and
+    /// emit a `min=inf/max=-inf`-corrupted row; an infinity poisons
+    /// mean and std the same way. Callers that can produce non-finite
+    /// samples must filter (and account for) them first.
     pub fn of(xs: &[f64]) -> Option<Summary> {
-        if xs.is_empty() {
+        if xs.is_empty() || xs.iter().any(|x| !x.is_finite()) {
             return None;
         }
         let n = xs.len();
@@ -59,16 +65,22 @@ pub struct Histogram {
     pub bins: Vec<usize>,
     pub underflow: usize,
     pub overflow: usize,
+    /// Non-finite samples (NaN, ±inf). A NaN used to be silently filed
+    /// into bin 0: both range comparisons are false, and
+    /// `(NaN as usize) == 0`.
+    pub invalid: usize,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
         assert!(hi > lo && nbins > 0);
-        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, invalid: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
-        if x < self.lo {
+        if !x.is_finite() {
+            self.invalid += 1;
+        } else if x < self.lo {
             self.underflow += 1;
         } else if x >= self.hi {
             self.overflow += 1;
@@ -80,7 +92,7 @@ impl Histogram {
     }
 
     pub fn total(&self) -> usize {
-        self.bins.iter().sum::<usize>() + self.underflow + self.overflow
+        self.bins.iter().sum::<usize>() + self.underflow + self.overflow + self.invalid
     }
 
     pub fn bin_edges(&self, k: usize) -> (f64, f64) {
@@ -90,11 +102,17 @@ impl Histogram {
 }
 
 /// Percentile (nearest-rank) of a sample; `p` in [0, 100].
+///
+/// Sorts by `total_cmp`, so a NaN sample never panics the comparator —
+/// NaNs order at the extremes (positive NaN after +inf, negative NaN
+/// before −inf) and never shuffle the finite ranks. Callers wanting
+/// NaN-free percentiles must filter first (the serve counters only
+/// ever record finite latencies).
 pub fn percentile(xs: &mut [f64], p: f64) -> Option<f64> {
     if xs.is_empty() {
         return None;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
     Some(xs[rank.clamp(1, xs.len()) - 1])
 }
@@ -159,5 +177,45 @@ mod tests {
         assert_eq!(percentile(&mut xs, 30.0), Some(20.0));
         assert_eq!(percentile(&mut xs, 100.0), Some(50.0));
         assert_eq!(percentile(&mut xs, 0.0), Some(15.0));
+    }
+
+    #[test]
+    fn summary_with_non_finite_sample_is_none() {
+        // Regression: a NaN sample used to slip through the min/max
+        // folds and emit a min=inf/max=-inf-corrupted row.
+        assert!(Summary::of(&[1.0, f64::NAN, 3.0]).is_none());
+        assert!(Summary::of(&[f64::NAN]).is_none());
+        assert!(Summary::of(&[1.0, f64::INFINITY]).is_none());
+        assert!(Summary::of(&[f64::NEG_INFINITY, 2.0]).is_none());
+        // Finite samples are unaffected.
+        assert!(Summary::of(&[1.0, 2.0]).is_some());
+    }
+
+    #[test]
+    fn histogram_counts_non_finite_as_invalid() {
+        // Regression: NaN used to land in bin 0 (`(NaN as usize) == 0`
+        // after both range comparisons are false).
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(f64::NAN);
+        h.add(f64::INFINITY);
+        h.add(f64::NEG_INFINITY);
+        assert_eq!(h.invalid, 3);
+        assert_eq!(h.bins[0], 0, "NaN must not be filed into bin 0");
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.overflow, 0);
+        assert_eq!(h.total(), 3, "invalid samples still count in total()");
+        h.add(0.5);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn percentile_with_nan_does_not_panic() {
+        // `partial_cmp().unwrap()` used to panic here; total_cmp orders
+        // (positive) NaN past +inf, leaving the finite ranks intact.
+        let mut xs = vec![2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&mut xs, 50.0), Some(2.0));
+        let p100 = percentile(&mut xs, 100.0).unwrap();
+        assert!(p100.is_nan(), "NaN sorts to the top rank");
     }
 }

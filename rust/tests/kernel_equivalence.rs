@@ -14,8 +14,8 @@
 //! Together these pin every experiment CSV byte across the perf
 //! refactor: the sweeps consume exactly the outputs compared here.
 
-use gcaps::analysis::{analyze, analyze_with_gpu_prio, reference, Approach};
-use gcaps::model::{Platform, Time, WaitMode};
+use gcaps::analysis::{analyze, analyze_with_gpu_prio, reference, Approach, Prepared};
+use gcaps::model::{Platform, TaskSet, Time, WaitMode};
 use gcaps::sim::{simulate, simulate_reference, Policy, SimConfig};
 use gcaps::taskgen::{generate, GenParams};
 use gcaps::util::check::forall;
@@ -168,6 +168,118 @@ fn calendar_engine_handles_zero_length_edges_like_seed() {
         assert_eq!(new.trace, old.trace, "{policy:?}: traces diverged");
         assert!(new.per_task[0].jobs > 0, "{policy:?}: no jobs completed");
     }
+}
+
+#[test]
+fn incremental_kernel_matches_cold_rebuild_over_random_admit_remove_sequences() {
+    // The admission server's contract (ISSUE 6): maintaining `Prepared`
+    // by admit_task/remove_task deltas — and warm-starting GCAPS fixed
+    // points from the previously committed response table — must be
+    // bit-equal to rebuilding the kernel cold at every step. ≥ 200
+    // random admit/remove sequences, cycling 1/2/4 GPU engines and both
+    // wait modes; every step cross-checks GCAPS (incremental + warm vs
+    // cold) plus one of the other three families over the delta kernel.
+    use gcaps::analysis::gcaps::{analyze_prepared, analyze_prepared_warm, Options};
+    use gcaps::analysis::{fmlp, mpcp, rr};
+
+    let mut case = 0usize;
+    forall("incremental prep + warm = cold rebuild", 204, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        let mode = if (case / GPU_COUNTS.len()) % 2 == 0 {
+            WaitMode::SelfSuspend
+        } else {
+            WaitMode::BusyWait
+        };
+        let busy = mode == WaitMode::BusyWait;
+        case += 1;
+        let pool = generate(rng, &params(g, mode));
+        let opts = Options::default();
+
+        let mut ts = TaskSet::new(Vec::new(), pool.platform.clone());
+        let mut prep = Prepared::new(&ts);
+        // Committed warm-start table: previous responses after an admit
+        // (maps grew pointwise — old lfp lower-bounds the new one);
+        // cleared after a removal (maps shrank — must restart cold).
+        let mut warm: Vec<Option<Time>> = Vec::new();
+        let mut next = 0usize;
+
+        let steps = pool.len() + pool.len() / 2;
+        for step in 0..steps {
+            let can_admit = next < pool.len();
+            let can_remove = !ts.tasks.is_empty();
+            if can_admit && (!can_remove || rng.range_u64(0, 2) != 0) {
+                let mut t = pool.tasks[next].clone();
+                next += 1;
+                t.id = ts.tasks.len();
+                ts.tasks.push(t);
+                prep.admit_task(&ts);
+                warm.push(None);
+            } else if can_remove {
+                let k = rng.range_usize(0, ts.tasks.len() - 1);
+                ts.tasks.remove(k);
+                for i in k..ts.tasks.len() {
+                    ts.tasks[i].id = i;
+                }
+                prep.remove_task(k);
+                warm.clear();
+                warm.resize(ts.tasks.len(), None);
+            } else {
+                break;
+            }
+
+            let cold = Prepared::new(&ts);
+            if prep.order != cold.order {
+                return Err(format!(
+                    "g = {g}, step {step}: order {:?} != cold {:?}",
+                    prep.order, cold.order
+                ));
+            }
+            if prep.gpu_users != cold.gpu_users {
+                return Err(format!(
+                    "g = {g}, step {step}: gpu_users {:?} != cold {:?}",
+                    prep.gpu_users, cold.gpu_users
+                ));
+            }
+
+            let inc = analyze_prepared_warm(&ts, &prep, busy, &opts, &warm);
+            let ref_cold = analyze_prepared(&ts, &cold, busy, &opts);
+            if inc.response != ref_cold.response || inc.schedulable != ref_cold.schedulable {
+                return Err(format!(
+                    "g = {g}, mode = {mode:?}, step {step}: gcaps incremental+warm \
+                     {:?} != cold {:?}",
+                    inc.response, ref_cold.response
+                ));
+            }
+            warm.clone_from(&inc.response);
+
+            // The other families run cold over the shared delta kernel;
+            // rotate one per step to keep the sweep fast.
+            let (label, a, b) = match step % 3 {
+                0 => (
+                    "rr",
+                    rr::analyze_prepared(&ts, &prep, busy),
+                    rr::analyze_prepared(&ts, &cold, busy),
+                ),
+                1 => (
+                    "mpcp",
+                    mpcp::analyze_prepared(&ts, &prep, busy),
+                    mpcp::analyze_prepared(&ts, &cold, busy),
+                ),
+                _ => (
+                    "fmlp",
+                    fmlp::analyze_prepared(&ts, &prep, busy),
+                    fmlp::analyze_prepared(&ts, &cold, busy),
+                ),
+            };
+            if a.response != b.response {
+                return Err(format!(
+                    "g = {g}, mode = {mode:?}, step {step}: {label} over delta kernel \
+                     diverged from cold rebuild"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

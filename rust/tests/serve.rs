@@ -1,0 +1,202 @@
+//! `gcaps serve` protocol robustness and transcript stability.
+//!
+//! - The committed golden transcript (`tests/data/serve_golden.jsonl`)
+//!   is pinned byte-for-byte against the scripted query stream — the
+//!   same pair of files the CI `serve-smoke` job pipes through the
+//!   release binary.
+//! - Hostile-input properties: the JSON parser and the full request
+//!   loop never panic on malformed, truncated, mutated or oversized
+//!   input — every bad line yields an `{"ok":false,...}` response
+//!   line (exit code 2 is reserved for startup errors, which never
+//!   arise here).
+
+use gcaps::analysis::Approach;
+use gcaps::model::Platform;
+use gcaps::serve::json::{parse, Value};
+use gcaps::serve::{run, ServeConfig, Session, MAX_LINE};
+use gcaps::util::check::forall;
+use gcaps::util::rng::Pcg32;
+use std::io::Cursor;
+
+const SCRIPT: &str = include_str!("data/serve_script.jsonl");
+const GOLDEN: &str = include_str!("data/serve_golden.jsonl");
+
+fn default_config() -> ServeConfig {
+    ServeConfig {
+        platform: Platform::default(),
+        approach: Approach::GcapsSuspend,
+        timing: false,
+    }
+}
+
+fn serve_bytes(cfg: &ServeConfig, input: &[u8]) -> String {
+    let mut session = cfg.session();
+    let mut out = Vec::new();
+    run(&mut session, Cursor::new(input), &mut out).unwrap();
+    String::from_utf8(out).unwrap()
+}
+
+#[test]
+fn golden_transcript_is_byte_stable() {
+    // Same comparison the CI serve-smoke job makes against the release
+    // binary; any analysis or wire-format drift must update the golden
+    // file (and is therefore reviewed).
+    let out = serve_bytes(&default_config(), SCRIPT.as_bytes());
+    for (i, (got, want)) in out.lines().zip(GOLDEN.lines()).enumerate() {
+        assert_eq!(got, want, "transcript line {} diverged", i + 1);
+    }
+    assert_eq!(out, GOLDEN);
+}
+
+#[test]
+fn every_response_line_is_valid_json() {
+    let out = serve_bytes(&default_config(), SCRIPT.as_bytes());
+    for line in out.lines() {
+        let v = parse(line).unwrap_or_else(|e| panic!("unparsable response {line:?}: {e}"));
+        assert!(v.get("ok").and_then(Value::as_bool).is_some(), "{line}");
+    }
+}
+
+#[test]
+fn parser_never_panics_on_random_bytes() {
+    // Charset biased toward JSON structure so the fuzz actually reaches
+    // the deep parser paths (strings, escapes, numbers, nesting).
+    const CHARS: &[u8] = br#"{}[]":,0123456789eE+-.\ anulltrefsopxu"#;
+    forall("json parser total on random bytes", 500, |rng| {
+        let len = rng.range_u64(0, 64) as usize;
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| CHARS[rng.range_usize(0, CHARS.len() - 1)])
+            .collect();
+        let text = String::from_utf8_lossy(&bytes);
+        // Ok or Err both fine; what is forbidden is a panic.
+        let _ = parse(&text);
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_valid_requests_never_panic_the_session() {
+    // Take each scripted line, flip a few random bytes, and drive the
+    // full session: the response must still be a single JSON line.
+    let lines: Vec<&str> = SCRIPT.lines().collect();
+    forall("session total on mutated requests", 300, |rng| {
+        let mut session = default_config().session();
+        let base = lines[rng.range_usize(0, lines.len() - 1)];
+        let mut bytes = base.as_bytes().to_vec();
+        for _ in 0..=rng.range_u64(0, 3) {
+            let i = rng.range_usize(0, bytes.len() - 1);
+            bytes[i] = rng.range_u64(0x20, 0x7f) as u8;
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let (resp, _) = session.handle_line(&text);
+        let line = resp.to_json();
+        if parse(&line).is_err() || line.contains('\n') {
+            return Err(format!("bad response {line:?} for input {text:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parser_roundtrips_generated_values() {
+    fn gen(rng: &mut Pcg32, depth: usize) -> Value {
+        // Leaves only at depth ≥ 3 so trees stay small.
+        match if depth >= 3 { rng.range_u64(0, 3) } else { rng.range_u64(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.range_u64(0, 1) == 0),
+            2 => Value::Num((rng.range_u64(0, 2_000_000) as f64 - 1_000_000.0) / 8.0),
+            3 => {
+                let n = rng.range_u64(0, 8) as usize;
+                Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(rng.range_u64(1, 0xD7FF) as u32).unwrap_or('?')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr((0..rng.range_u64(0, 3)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.range_u64(0, 3))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("parse(to_json(v)) == v", 300, |rng| {
+        let v = gen(rng, 0);
+        let text = v.to_json();
+        match parse(&text) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("{text}: reparsed as {back:?}")),
+            Err(e) => Err(format!("{text}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn oversized_request_line_is_rejected_and_recovered() {
+    let mut input = Vec::new();
+    input.extend_from_slice(b"{\"op\":\"admit\",\"pad\":\"");
+    input.extend_from_slice(&vec![b'x'; MAX_LINE + 10]);
+    input.extend_from_slice(b"\"}\n{\"op\":\"stats\"}\n");
+    let out = serve_bytes(&default_config(), &input);
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 2, "{out}");
+    assert!(lines[0].starts_with(r#"{"ok":false"#) && lines[0].contains("exceeds"), "{}", lines[0]);
+    assert!(lines[1].contains(r#""errors":1"#), "oversize filed as an error: {}", lines[1]);
+}
+
+#[test]
+fn non_utf8_input_is_an_error_response_not_a_panic() {
+    let input = b"{\"op\":\xff\xfe}\n{\"op\":\"check\"}\n".to_vec();
+    let out = serve_bytes(&default_config(), &input);
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 2);
+    assert!(lines[0].starts_with(r#"{"ok":false"#), "{}", lines[0]);
+    assert!(lines[1].contains(r#""schedulable":true"#), "{}", lines[1]);
+}
+
+#[test]
+fn transcript_is_identical_across_repeat_runs() {
+    // A fresh session must reproduce the transcript exactly — no hidden
+    // global state (the sweep memo cache is keyed elsewhere).
+    let a = serve_bytes(&default_config(), SCRIPT.as_bytes());
+    let b = serve_bytes(&default_config(), SCRIPT.as_bytes());
+    assert_eq!(a, b);
+}
+
+#[test]
+fn shutdown_is_honored_mid_stream_for_every_approach() {
+    for approach in Approach::ALL {
+        let cfg = ServeConfig { platform: Platform::default(), approach, timing: false };
+        let input = format!(
+            "{}\n{}\n{}\n",
+            r#"{"op":"admit","task":{"name":"t","period_ms":100,"cpu_ms":[1],"prio":1}}"#,
+            r#"{"op":"shutdown"}"#,
+            r#"{"op":"stats"}"#
+        );
+        let out = serve_bytes(&cfg, input.as_bytes());
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2, "{}: {out}", approach.label());
+        assert!(lines[0].contains(r#""admitted":true"#), "{}", approach.label());
+        assert_eq!(lines[1], r#"{"ok":true,"op":"shutdown"}"#, "{}", approach.label());
+    }
+}
+
+#[test]
+fn session_survives_a_panicking_sibling_thread() {
+    // The server is long-running: a panic on another thread (e.g. a
+    // background sweep poisoning the memo cache) must not take future
+    // queries down with it. Session state is thread-local by design,
+    // so this pins the zero-shared-state property end to end.
+    let mut session = default_config().session();
+    let (v, _) = session.handle_line(
+        r#"{"op":"admit","task":{"name":"t","period_ms":100,"cpu_ms":[1],"prio":1}}"#,
+    );
+    assert!(v.to_json().contains(r#""admitted":true"#));
+    let t = std::thread::spawn(|| panic!("sibling dies"));
+    assert!(t.join().is_err());
+    let (v, _) = session.handle_line(r#"{"op":"check"}"#);
+    assert!(v.to_json().contains(r#""schedulable":true"#));
+}
