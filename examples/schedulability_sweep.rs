@@ -1,5 +1,5 @@
 //! Schedulability sweep (a runnable miniature of Fig. 8): generates
-//! random tasksets per Table 3 and compares all eight analyses across
+//! random tasksets per Table 3 and compares all nine analyses across
 //! a utilization sweep through the experiment registry — the ASCII
 //! chart plus the CSV and JSONL artifacts of one run.
 //!

@@ -13,6 +13,9 @@
 //!   self-suspensions (Patel et al., RTAS 2018 — ref [20]).
 //! - [`fmlp`] — synchronization-based baseline: FMLP+ (Brandenburg,
 //!   ECRTS 2014 — ref [10]).
+//! - [`server`] — server-based GPU access baseline: a dedicated GPU
+//!   server task with Kim et al.'s improved request-handling analysis
+//!   (arXiv 1709.06613), suspension-only by construction.
 //!
 //! All analyses walk tasks in decreasing CPU-priority order so that
 //! higher-priority response times are available for jitter terms
@@ -32,6 +35,7 @@ pub mod mpcp;
 pub mod prep;
 pub mod reference;
 pub mod rr;
+pub mod server;
 pub mod terms;
 
 pub use fmlp::FmlpAnalysis;
@@ -39,11 +43,12 @@ pub use gcaps::GcapsAnalysis;
 pub use mpcp::MpcpAnalysis;
 pub use prep::Prepared;
 pub use rr::TsgRrAnalysis;
+pub use server::ServerAnalysis;
 pub use terms::{AnalysisResult, Rta};
 
 use crate::model::{TaskSet, WaitMode};
 
-/// A first-class response-time analysis: one of the four families in a
+/// A first-class response-time analysis: one of the five families in a
 /// fixed wait mode. All harnesses (Fig. 8, the multi-GPU sweep, the
 /// ablations) dispatch through this trait, so adding an analysis means
 /// implementing it and registering the approach — no call-site edits.
@@ -63,10 +68,13 @@ pub trait Analysis: Sync {
     fn analyze(&self, ts: &TaskSet) -> AnalysisResult;
 }
 
-/// The eight analysis configurations evaluated in Fig. 8 — a thin
-/// registry over the [`Analysis`] trait objects, kept as an enum so
-/// `Approach::ALL`-driven harnesses, CSV labels and match-based
-/// dispatch (e.g. the DES policy mapping) keep working.
+/// The nine analysis configurations the harnesses evaluate (the eight
+/// of Fig. 8 plus the server-based baseline) — a thin registry over the
+/// [`Analysis`] trait objects, kept as an enum so `Approach::ALL`-driven
+/// harnesses, CSV labels and match-based dispatch (e.g. the DES policy
+/// mapping) keep working. New approaches append to the END of
+/// [`Approach::ALL`]: every CSV is emitted approach-major in this
+/// order, so appending keeps the existing columns a byte-exact prefix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Approach {
     GcapsBusy,
@@ -77,6 +85,7 @@ pub enum Approach {
     MpcpSuspend,
     FmlpBusy,
     FmlpSuspend,
+    ServerSuspend,
 }
 
 static GCAPS_BUSY: GcapsAnalysis = GcapsAnalysis { busy: true };
@@ -87,9 +96,10 @@ static MPCP_BUSY: MpcpAnalysis = MpcpAnalysis { busy: true };
 static MPCP_SUSPEND: MpcpAnalysis = MpcpAnalysis { busy: false };
 static FMLP_BUSY: FmlpAnalysis = FmlpAnalysis { busy: true };
 static FMLP_SUSPEND: FmlpAnalysis = FmlpAnalysis { busy: false };
+static SERVER_SUSPEND: ServerAnalysis = ServerAnalysis;
 
 impl Approach {
-    pub const ALL: [Approach; 8] = [
+    pub const ALL: [Approach; 9] = [
         Approach::GcapsBusy,
         Approach::GcapsSuspend,
         Approach::TsgRrBusy,
@@ -98,6 +108,7 @@ impl Approach {
         Approach::MpcpSuspend,
         Approach::FmlpBusy,
         Approach::FmlpSuspend,
+        Approach::ServerSuspend,
     ];
 
     /// The trait object implementing this approach.
@@ -111,6 +122,7 @@ impl Approach {
             Approach::MpcpSuspend => &MPCP_SUSPEND,
             Approach::FmlpBusy => &FMLP_BUSY,
             Approach::FmlpSuspend => &FMLP_SUSPEND,
+            Approach::ServerSuspend => &SERVER_SUSPEND,
         }
     }
 

@@ -1,7 +1,7 @@
 //! Precomputed per-taskset interference kernel — the shared hot path of
 //! every response-time analysis family.
 //!
-//! A Fig. 8-style evaluation runs ~1000 tasksets × 8 approaches per
+//! A Fig. 8-style evaluation runs ~1000 tasksets × 9 approaches per
 //! sweep point, and each analysis re-enters its fixed-point closure
 //! dozens of times per task. Before this module, every one of those
 //! entries re-derived the interference sets (`hpp`, cross-core hp,

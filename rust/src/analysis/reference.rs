@@ -2,7 +2,7 @@
 //! as the executable specification of the prepared kernel
 //! ([`crate::analysis::prep`]).
 //!
-//! These are the pre-kernel implementations of all four families plus
+//! These are the pre-kernel implementations of all five families plus
 //! the Audsley search: every interference set is re-derived through
 //! `TaskSet`'s filter chains inside the fixed-point closure, exactly as
 //! the lemmas of §6 read. They are O(n) set derivation per iteration —
@@ -442,6 +442,101 @@ pub fn fmlp_analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
 }
 
 // ---------------------------------------------------------------------
+// Server-based GPU access baseline (Kim et al.), reference path
+// ---------------------------------------------------------------------
+
+/// S_j = Σ gcs + 2ε·η: the server's service demand for one job of τ_j.
+fn server_service(ts: &TaskSet, j: &Task) -> Time {
+    let gcs_total: Time = j.gpu_segments.iter().map(|g| g.total()).sum();
+    gcs_total + 2 * eps_of(ts, j) * j.eta_g() as Time
+}
+
+/// Cumulative request-handling window B_i (the improved bound: hp
+/// server demand counted once over the whole window, not per request).
+fn server_request_window(ts: &TaskSet, i: usize) -> Option<Time> {
+    let me = &ts.tasks[i];
+    if !me.uses_gpu() {
+        return Some(0);
+    }
+    let lp_max: Time = ts
+        .sharing_gpu(i)
+        .filter(|t| t.best_effort || t.cpu_prio < me.cpu_prio)
+        .map(|t| t.max_gpu_segment() + 2 * eps_of(ts, t))
+        .max()
+        .unwrap_or(0);
+    let hp: Vec<&Task> = ts
+        .sharing_gpu(i)
+        .filter(|t| !t.best_effort && t.cpu_prio > me.cpu_prio)
+        .collect();
+    let own = server_service(ts, me) + me.eta_g() as Time * lp_max;
+    let mut b = own;
+    for _ in 0..10_000 {
+        let next = own
+            + hp.iter()
+                .map(|h| (njobs(b, h.period) + 1) * server_service(ts, h))
+                .sum::<Time>();
+        if next == b {
+            return Some(b);
+        }
+        if next > me.deadline {
+            return None;
+        }
+        b = next;
+    }
+    None
+}
+
+fn server_p_c(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
+    ts.hpp(i)
+        .map(|h| {
+            let n = if h.uses_gpu() {
+                // GPU time runs on the server, so hp CPU demand is the
+                // plain C_h with suspension jitter J_h = R_h − C_h.
+                let jit = resp[h.id].unwrap_or(h.deadline).saturating_sub(h.c());
+                njobs_jitter(r, jit, h.period)
+            } else {
+                njobs(r, h.period)
+            };
+            n * h.c()
+        })
+        .sum()
+}
+
+fn server_response_time(
+    ts: &TaskSet,
+    i: usize,
+    resp: &[Option<Time>],
+    b_all: &[Time],
+) -> Rta {
+    let me = &ts.tasks[i];
+    let own = me.c() + b_all[i];
+    fixed_point(me.deadline, own, |r| own + server_p_c(ts, i, r, resp))
+}
+
+/// Reference server-based analysis (suspension-only by construction:
+/// requesters self-suspend while the server executes on their behalf;
+/// no boost blocking — the server has its own core).
+pub fn server_analyze(ts: &TaskSet) -> AnalysisResult {
+    let n = ts.tasks.len();
+    let mut b_all = vec![0; n];
+    let mut blocked_diverged = vec![false; n];
+    for t in ts.tasks.iter().filter(|t| !t.best_effort) {
+        match server_request_window(ts, t.id) {
+            Some(b) => b_all[t.id] = b,
+            None => blocked_diverged[t.id] = true,
+        }
+    }
+    let mut resp: Vec<Option<Time>> = vec![None; n];
+    for i in analysis_order(ts) {
+        if blocked_diverged[i] {
+            continue;
+        }
+        resp[i] = server_response_time(ts, i, &resp, &b_all).time();
+    }
+    AnalysisResult::from_responses(&ts.tasks, resp)
+}
+
+// ---------------------------------------------------------------------
 // Dispatch + the Fig. 8 GCAPS procedure, reference path
 // ---------------------------------------------------------------------
 
@@ -520,6 +615,7 @@ pub fn analyze(ts: &TaskSet, approach: Approach) -> AnalysisResult {
         Approach::MpcpSuspend => mpcp_analyze(ts, false),
         Approach::FmlpBusy => fmlp_analyze(ts, true),
         Approach::FmlpSuspend => fmlp_analyze(ts, false),
+        Approach::ServerSuspend => server_analyze(ts),
     }
 }
 

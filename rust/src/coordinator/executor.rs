@@ -2,7 +2,7 @@
 //! spin work), and drives GPU segments through the arbiter + GPU server
 //! — the live analog of the paper's case study (§7.2).
 //!
-//! Scheduling modes mirror the evaluation's four approaches:
+//! Scheduling modes mirror the evaluation's approaches:
 //! - `Gcaps`: segments bracketed by `seg_begin`/`seg_end` (Alg. 1);
 //!   launches wait for admission, so preemption lands at kernel
 //!   boundaries.
@@ -10,6 +10,12 @@
 //!   requesters (default-driver behaviour).
 //! - `FmlpPlus`: a FIFO ticket lock held for the whole segment.
 //! - `Mpcp`: a priority-ordered lock held for the whole segment.
+//! - `Server`: no locks and no arbiter — tasks submit launches freely
+//!   and the GPU server itself picks the highest-priority pending
+//!   request (`ServiceMode::PriorityQueue`), the live analog of the
+//!   server-based approach of Kim et al. (arXiv 1709.06613). Each
+//!   submitting thread blocks in `launch` until served, i.e. it
+//!   self-suspends, matching the analysis's suspension-based model.
 //!
 //! The container exposes a single hardware core, so CPU-side
 //! partitioning fidelity comes from the DES (`sim/`); the live
@@ -54,6 +60,7 @@ pub enum LiveMode {
     TsgRr,
     FmlpPlus,
     Mpcp,
+    Server,
 }
 
 impl LiveMode {
@@ -63,6 +70,7 @@ impl LiveMode {
             LiveMode::TsgRr => "tsg_rr",
             LiveMode::FmlpPlus => "fmlp+",
             LiveMode::Mpcp => "mpcp",
+            LiveMode::Server => "server",
         }
     }
 }
@@ -166,6 +174,7 @@ pub fn run(
     let client = GpuClient { tx };
     let service = match mode {
         LiveMode::TsgRr => ServiceMode::RoundRobin,
+        LiveMode::Server => ServiceMode::PriorityQueue,
         _ => ServiceMode::Fifo,
     };
 
@@ -201,19 +210,22 @@ pub fn run(
                                 arbiter.seg_begin(id);
                                 for _ in 0..seg.launches {
                                     arbiter.wait_admitted(id, task.busy);
-                                    client.launch(id, &seg.workload);
+                                    client.launch(id, task.gpu_prio, task.rt, &seg.workload);
                                 }
                                 arbiter.seg_end(id);
                             }
-                            LiveMode::TsgRr => {
+                            LiveMode::TsgRr | LiveMode::Server => {
+                                // No upstream arbitration: under Server
+                                // the priority-queue service picks the
+                                // winner; each launch self-suspends.
                                 for _ in 0..seg.launches {
-                                    client.launch(id, &seg.workload);
+                                    client.launch(id, task.gpu_prio, task.rt, &seg.workload);
                                 }
                             }
                             LiveMode::FmlpPlus | LiveMode::Mpcp => {
                                 lock.acquire(id, task.gpu_prio, mode == LiveMode::FmlpPlus);
                                 for _ in 0..seg.launches {
-                                    client.launch(id, &seg.workload);
+                                    client.launch(id, task.gpu_prio, task.rt, &seg.workload);
                                 }
                                 lock.release();
                             }

@@ -10,6 +10,11 @@
 //! - `TsgRr`: all tasks submit freely; the server round-robins across
 //!   requesters at kernel granularity, the userspace analog of the
 //!   driver's time-sliced TSG scheduling.
+//! - `PriorityQueue`: all tasks submit freely; the server itself is the
+//!   arbiter, serving the highest-priority pending request (RT before
+//!   best-effort, FIFO among equals) — the live analog of the
+//!   server-based approach of Kim et al. (arXiv 1709.06613) and of the
+//!   DES `Policy::Server`.
 
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::time::Duration;
@@ -19,6 +24,12 @@ use crate::runtime::Runtime;
 /// One kernel-launch request.
 pub struct LaunchReq {
     pub task: usize,
+    /// GPU priority of the submitting task (higher = more urgent);
+    /// consulted only under [`ServiceMode::PriorityQueue`].
+    pub prio: u32,
+    /// Real-time task? RT requests always precede best-effort ones
+    /// under [`ServiceMode::PriorityQueue`].
+    pub rt: bool,
     pub workload: String,
     /// Reply channel: launch wall time.
     pub reply: SyncSender<Duration>,
@@ -31,14 +42,38 @@ pub enum ServiceMode {
     Fifo,
     /// Round-robin across requesting tasks (default-driver analog).
     RoundRobin,
+    /// Priority-ordered service at the server (Kim et al. analog):
+    /// RT before best-effort, then GPU priority, then arrival order.
+    PriorityQueue,
 }
 
 /// Run the GPU server until the request channel closes.
 /// Returns the number of launches served.
 pub fn serve(runtime: &Runtime, rx: Receiver<LaunchReq>, mode: ServiceMode) -> u64 {
+    serve_with(rx, mode, |workload| {
+        runtime
+            .exec(workload)
+            .unwrap_or_else(|e| panic!("launch {workload} failed: {e}"))
+    })
+}
+
+/// [`serve`] with the kernel-execution step injected, so the service
+/// disciplines are unit-testable without a PJRT runtime.
+pub fn serve_with(
+    rx: Receiver<LaunchReq>,
+    mode: ServiceMode,
+    mut exec: impl FnMut(&str) -> Duration,
+) -> u64 {
     let mut served = 0u64;
+    // Pending requests in arrival order (index order IS arrival order:
+    // `Vec::remove` preserves the relative order of the rest).
     let mut queue: Vec<LaunchReq> = Vec::new();
-    let mut last_task: Option<usize> = None;
+    // RoundRobin: persistent cursor — the smallest task id eligible for
+    // the next dispatch. Restarting the scan from task 0 each dispatch
+    // would let low-index requesters starve high-index ones under
+    // sustained load; instead the cursor advances past each served task
+    // and wraps only when no pending task id is at or above it.
+    let mut cursor = 0usize;
     loop {
         // Block for at least one request (unless draining the queue).
         if queue.is_empty() {
@@ -54,23 +89,32 @@ pub fn serve(runtime: &Runtime, rx: Receiver<LaunchReq>, mode: ServiceMode) -> u
         let idx = match mode {
             ServiceMode::Fifo => 0,
             ServiceMode::RoundRobin => {
-                // Next task id strictly after last_task, wrapping.
-                let pick = |min_excl: Option<usize>| {
+                // Smallest pending task id at or above the cursor; wrap
+                // to the smallest overall when the tail is exhausted.
+                let pick = |min: usize| {
                     queue
                         .iter()
                         .enumerate()
-                        .filter(|(_, r)| min_excl.map_or(true, |m| r.task > m))
+                        .filter(|(_, r)| r.task >= min)
                         .min_by_key(|(_, r)| r.task)
                         .map(|(i, _)| i)
                 };
-                pick(last_task).or_else(|| pick(None)).unwrap_or(0)
+                pick(cursor).or_else(|| pick(0)).unwrap()
+            }
+            ServiceMode::PriorityQueue => {
+                // RT before best-effort, then priority, then FIFO
+                // (earliest arrival = lowest index wins ties).
+                queue
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(i, r)| (r.rt, r.prio, std::cmp::Reverse(i)))
+                    .map(|(i, _)| i)
+                    .unwrap()
             }
         };
         let req = queue.remove(idx);
-        last_task = Some(req.task);
-        let dt = runtime
-            .exec(&req.workload)
-            .unwrap_or_else(|e| panic!("launch {} failed: {e}", req.workload));
+        cursor = req.task + 1;
+        let dt = exec(&req.workload);
         served += 1;
         // Receiver may have given up (executive shutting down).
         let _ = req.reply.send(dt);
@@ -85,11 +129,106 @@ pub struct GpuClient {
 
 impl GpuClient {
     /// Submit one launch and wait for completion; returns the exec time.
-    pub fn launch(&self, task: usize, workload: &str) -> Option<Duration> {
+    /// The blocking wait is the live self-suspension: the submitting
+    /// thread sleeps until the server has run its kernel.
+    pub fn launch(&self, task: usize, prio: u32, rt: bool, workload: &str) -> Option<Duration> {
         let (reply, rx) = std::sync::mpsc::sync_channel(1);
         self.tx
-            .send(LaunchReq { task, workload: workload.to_string(), reply })
+            .send(LaunchReq { task, prio, rt, workload: workload.to_string(), reply })
             .ok()?;
         rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    /// Pre-load requests, run the server to drain, return service order
+    /// as workload names.
+    fn service_order(mode: ServiceMode, reqs: Vec<(usize, u32, bool, &str)>) -> Vec<String> {
+        let (tx, rx) = channel();
+        for (task, prio, rt, workload) in reqs {
+            let (reply, _keep) = std::sync::mpsc::sync_channel(1);
+            // Nobody awaits the reply; the server tolerates that.
+            tx.send(LaunchReq { task, prio, rt, workload: workload.to_string(), reply })
+                .unwrap();
+        }
+        drop(tx);
+        let mut order = Vec::new();
+        let served = serve_with(rx, mode, |w| {
+            order.push(w.to_string());
+            Duration::ZERO
+        });
+        assert_eq!(served as usize, order.len());
+        order
+    }
+
+    #[test]
+    fn fifo_serves_in_arrival_order() {
+        let order = service_order(
+            ServiceMode::Fifo,
+            vec![(2, 0, true, "a"), (0, 9, true, "b"), (1, 5, false, "c")],
+        );
+        assert_eq!(order, ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn round_robin_rotates_a_persistent_cursor() {
+        // Three requesters, three requests each, submitted bursty
+        // (all of task 0 first). A scan restarting at index/task 0
+        // every dispatch would serve 0,0,0 before touching 1 or 2;
+        // the rotating cursor interleaves them.
+        let order = service_order(
+            ServiceMode::RoundRobin,
+            vec![
+                (0, 0, true, "t0"),
+                (0, 0, true, "t0"),
+                (0, 0, true, "t0"),
+                (1, 0, true, "t1"),
+                (1, 0, true, "t1"),
+                (1, 0, true, "t1"),
+                (2, 0, true, "t2"),
+                (2, 0, true, "t2"),
+                (2, 0, true, "t2"),
+            ],
+        );
+        assert_eq!(
+            order,
+            ["t0", "t1", "t2", "t0", "t1", "t2", "t0", "t1", "t2"],
+            "round-robin must rotate across requesters, not drain task 0 first"
+        );
+    }
+
+    #[test]
+    fn round_robin_wraps_past_missing_task_ids() {
+        // Sparse ids {1, 4, 7}: the cursor must skip gaps and wrap.
+        let order = service_order(
+            ServiceMode::RoundRobin,
+            vec![
+                (4, 0, true, "t4"),
+                (4, 0, true, "t4"),
+                (1, 0, true, "t1"),
+                (7, 0, true, "t7"),
+            ],
+        );
+        assert_eq!(order, ["t1", "t4", "t7", "t4"]);
+    }
+
+    #[test]
+    fn priority_queue_orders_rt_prio_then_fifo() {
+        let order = service_order(
+            ServiceMode::PriorityQueue,
+            vec![
+                (0, 1, true, "rt_lo"),
+                (1, 9, false, "be_hi"),
+                (2, 5, true, "rt_mid_first"),
+                (3, 5, true, "rt_mid_second"),
+            ],
+        );
+        // RT before best-effort (even at higher prio); among equal
+        // (rt, prio) the earlier arrival wins.
+        assert_eq!(order, ["rt_mid_first", "rt_mid_second", "rt_lo", "be_hi"]);
     }
 }

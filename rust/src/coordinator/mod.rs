@@ -3,9 +3,11 @@
 //! - [`arbiter`] — Alg. 1 (the GCAPS driver patch) in userspace, with
 //!   ε measurement (Fig. 12).
 //! - [`gpu_server`] — the single-GPU device thread executing AOT
-//!   kernels via PJRT, FIFO or round-robin service.
+//!   kernels via PJRT; FIFO, round-robin, or priority-queue service
+//!   (the latter is the Kim et al. server-based approach, live).
 //! - [`executor`] — the periodic executive driving the case-study
-//!   taskset (Table 4 analog) under gcaps / tsg_rr / fmlp+ / mpcp.
+//!   taskset (Table 4 analog) under gcaps / tsg_rr / fmlp+ / mpcp /
+//!   server.
 //! - [`workload`] — the Table 4 taskset builder, calibrated against the
 //!   profiled artifact launch times.
 

@@ -4,10 +4,10 @@
 //! deps) and writes machine-readable artifacts:
 //!
 //! - **RTA panel** (`BENCH_rta.json`): the Fig. 8b utilization panel —
-//!   6 sweep points × N tasksets × 8 analyses plus the Audsley retry —
+//!   6 sweep points × N tasksets × 9 analyses plus the Audsley retry —
 //!   at `--jobs 1`, i.e. the raw single-thread analysis kernel cost
 //!   that PR 1's sharding multiplies across workers.
-//! - **DES panel** (`BENCH_des.json`): all 5 simulator policies over N
+//! - **DES panel** (`BENCH_des.json`): all 6 simulator policies over N
 //!   pinned Table 3 tasksets at a fixed horizon — the event-calendar
 //!   engine's cost.
 //!
@@ -112,18 +112,24 @@ pub fn run_rta(quick: bool) -> BenchResult {
     let panel = Panel::UtilPerCpu;
     let start = Instant::now();
     let (xticks, series) = run_panel(panel, &cfg);
-    let units = (xticks.len() * tasksets) as u64; // cells (8 analyses each)
+    let units = (xticks.len() * tasksets) as u64; // cells (9 analyses each)
     let checksum: f64 = series.iter().flat_map(|(_, ys)| ys.iter()).sum();
     finish("rta_fig8_panel_b", quick, 1, units, start, checksum)
 }
 
-/// Time the pinned DES panel: all 5 policies over N Table 3 tasksets.
+/// Time the pinned DES panel: all 6 policies over N Table 3 tasksets.
 pub fn run_des(quick: bool) -> BenchResult {
     let (n_sets, horizon) = if quick { (4, ms(300.0)) } else { (16, ms(2000.0)) };
     let mut rng = Pcg32::seeded(BENCH_SEED);
     let sets: Vec<_> = (0..n_sets).map(|_| generate(&mut rng, &GenParams::default())).collect();
-    const POLICIES: [Policy; 5] =
-        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+    const POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
     let start = Instant::now();
     let mut units = 0u64;
     let mut checksum = 0.0f64;
@@ -177,7 +183,7 @@ mod tests {
     #[test]
     fn quick_des_bench_counts_all_policy_runs() {
         let r = run_des(true);
-        assert_eq!(r.units, 4 * 5);
+        assert_eq!(r.units, 4 * 6);
         assert!(r.checksum > 0.0, "simulations ran no jobs?");
     }
 

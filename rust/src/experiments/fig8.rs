@@ -1,4 +1,4 @@
-//! Fig. 8: schedulability of the eight approaches under six parameter
+//! Fig. 8: schedulability of the nine approaches under six parameter
 //! sweeps (paper §7.1.1). Each point = fraction of random tasksets
 //! (Table 3 parameters, one knob swept) that pass the respective
 //! response-time test. The GCAPS curves use the §7.1.1 procedure:
@@ -169,8 +169,8 @@ pub fn schedulability(
 ///
 /// The grid is (sweep point × taskset index); each cell generates its
 /// taskset once (suspend + busy variants of the same draws) and
-/// evaluates all 8 approaches on it, so a panel costs one generation —
-/// not eight — per (point, index) regardless of worker count.
+/// evaluates every approach on it, so a panel costs one generation —
+/// not one per approach — per (point, index) regardless of worker count.
 pub fn run_panel(panel: Panel, cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
     let points = panel.points();
     let xticks: Vec<String> = points.iter().map(|(l, _)| l.clone()).collect();
@@ -186,9 +186,10 @@ pub fn run_panel(panel: Panel, cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Ve
     // Canonical cell order: point-major, taskset-index-minor.
     let cells = sweep::grid2(points.len(), cfg.tasksets);
     let seed = cfg.seed;
-    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
-        crate::experiments::eight_approaches(seed, &params[pi], ti)
-    });
+    let per_cell: Vec<[bool; Approach::ALL.len()]> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            crate::experiments::approaches(seed, &params[pi], ti)
+        });
 
     let mut series: Vec<(String, Vec<f64>)> = Approach::ALL
         .iter()
@@ -254,7 +255,7 @@ impl Experiment for Fig8Exp {
     }
 
     fn about(&self) -> &'static str {
-        "Schedulability of 8 approaches over six parameter sweeps"
+        "Schedulability of 9 approaches over six parameter sweeps"
     }
 
     fn flags(&self) -> &'static [FlagSpec] {

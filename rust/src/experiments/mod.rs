@@ -24,18 +24,20 @@ use crate::model::WaitMode;
 use crate::sweep::memo;
 use crate::taskgen::GenParams;
 
-/// Evaluate the eight Fig. 8 approaches on taskset `index` of `p`:
+/// Evaluate all analysis approaches on taskset `index` of `p`:
 /// suspend + busy variants of the same memoized draws, with the §7.1.1
 /// Audsley GPU-priority retry for the GCAPS rows. The shared per-cell
 /// recipe of the Fig. 8 panels, the multi-GPU sweep and the scenario
 /// sweeps — one definition so the harnesses cannot silently diverge.
-/// Results are in `Approach::ALL` order.
-pub fn eight_approaches(seed: u64, p: &GenParams, index: usize) -> [bool; 8] {
+/// Results are in `Approach::ALL` order; the array length tracks
+/// `Approach::ALL` (new approaches are appended at the end, keeping
+/// every CSV's leading columns byte-stable across releases).
+pub fn approaches(seed: u64, p: &GenParams, index: usize) -> [bool; Approach::ALL.len()] {
     let susp = GenParams { mode: WaitMode::SelfSuspend, ..p.clone() };
     let busy = GenParams { mode: WaitMode::BusyWait, ..p.clone() };
     let suspend_ts = memo::taskset(seed, &susp, index);
     let busy_ts = memo::taskset(seed, &busy, index);
-    let mut out = [false; 8];
+    let mut out = [false; Approach::ALL.len()];
     for (k, a) in Approach::ALL.iter().enumerate() {
         let ts = if a.is_busy() { &busy_ts } else { &suspend_ts };
         out[k] = approach_schedulable(ts, *a);

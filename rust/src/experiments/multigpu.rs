@@ -1,5 +1,5 @@
 //! Multi-GPU platform sweep (Fig. 8-style, beyond the paper): the
-//! schedulability of all eight approaches as the platform grows from
+//! schedulability of all nine approaches as the platform grows from
 //! the paper's single GPU engine to g ∈ {1, 2, 4} engines, at Table 3
 //! defaults. Tasks are spread over engines by the generator's WFD
 //! assignment; per-engine interference sets mean every approach — not
@@ -40,15 +40,16 @@ fn params_for(num_gpus: usize, mode: WaitMode) -> GenParams {
 /// The grid is (GPU-count point × taskset index), sharded across the
 /// sweep worker pool; each cell generates its suspend/busy taskset pair
 /// once (memoized per engine count — see `memo::params_hash`) and
-/// evaluates all 8 approaches on it.
+/// evaluates every approach on it.
 pub fn run_sweep(cfg: &ExpConfig) -> (Vec<String>, Vec<(String, Vec<f64>)>) {
     let xticks: Vec<String> = GPU_COUNTS.iter().map(|g| g.to_string()).collect();
     let cells = sweep::grid2(GPU_COUNTS.len(), cfg.tasksets);
     let seed = cfg.seed;
-    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(gi, ti)| {
-        let p = params_for(GPU_COUNTS[gi], WaitMode::SelfSuspend);
-        crate::experiments::eight_approaches(seed, &p, ti)
-    });
+    let per_cell: Vec<[bool; Approach::ALL.len()]> =
+        sweep::run(&cfg.sweep(), cells, |_, &(gi, ti)| {
+            let p = params_for(GPU_COUNTS[gi], WaitMode::SelfSuspend);
+            crate::experiments::approaches(seed, &p, ti)
+        });
 
     let mut series: Vec<(String, Vec<f64>)> = Approach::ALL
         .iter()
@@ -93,7 +94,7 @@ impl Experiment for MultigpuExp {
     }
 
     fn about(&self) -> &'static str {
-        "Schedulability of 8 approaches over 1/2/4 GPU engines"
+        "Schedulability of 9 approaches over 1/2/4 GPU engines"
     }
 
     fn run(&self, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<()> {
@@ -127,7 +128,7 @@ mod tests {
     fn sweep_shape_and_ranges() {
         let (xticks, series) = run_sweep(&tiny());
         assert_eq!(xticks, vec!["1", "2", "4"]);
-        assert_eq!(series.len(), 8);
+        assert_eq!(series.len(), Approach::ALL.len());
         for (label, ys) in &series {
             assert_eq!(ys.len(), 3, "{label}");
             for &y in ys {

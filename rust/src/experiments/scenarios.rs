@@ -3,7 +3,7 @@
 //! fixes a single board's ε/θ and a single GPU engine.
 //!
 //! 1. **ε×θ overhead grids per board** (`scenarios_epstheta.csv`):
-//!    schedulability of all 8 approaches at every cell of an ε×θ grid
+//!    schedulability of all 9 approaches at every cell of an ε×θ grid
 //!    scaled around each registered board profile
 //!    ([`crate::model::config::GPU_PROFILES`]). Overhead constants
 //!    dominate schedulability comparisons between preemptive and
@@ -35,7 +35,7 @@
 use crate::analysis::{approach_schedulable, Approach};
 use crate::experiments::registry::{Experiment, FlagSpec};
 use crate::experiments::sink::Sink;
-use crate::experiments::{eight_approaches, ExpConfig};
+use crate::experiments::{approaches, ExpConfig};
 use crate::model::{config, ms, GpuContext, Platform, Time};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep::{self, memo};
@@ -79,9 +79,14 @@ fn rt_misses(ts: &crate::model::TaskSet, policy: Policy) -> (u64, u64) {
 pub const EPS_FACTORS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
 pub const THETA_FACTORS: [f64; 3] = [0.5, 1.0, 2.0];
 
+/// Number of analysis approaches in every per-approach result array
+/// (tracks `Approach::ALL` — appended-at-end, so CSV prefixes stay
+/// byte-stable).
+pub const N_APPROACHES: usize = Approach::ALL.len();
+
 /// One ε×θ result row: (board, scaled engine context, per-approach
 /// schedulable ratios in `Approach::ALL` order).
-pub type EpsThetaRow = ((&'static str, GpuContext), [f64; 8]);
+pub type EpsThetaRow = ((&'static str, GpuContext), [f64; N_APPROACHES]);
 
 fn scale(base: Time, f: f64) -> Time {
     (base as f64 * f).round() as Time
@@ -108,26 +113,27 @@ pub fn epstheta_points() -> Vec<(&'static str, GpuContext)> {
     pts
 }
 
-/// Sweep (a): all 8 approaches at every (board, ε, θ) grid cell.
+/// Sweep (a): all 9 approaches at every (board, ε, θ) grid cell.
 pub fn epstheta_sweep(cfg: &ExpConfig) -> Vec<EpsThetaRow> {
     let points = epstheta_points();
     let cells = sweep::grid2(points.len(), cfg.tasksets);
     let seed = cfg.seed;
-    let per_cell: Vec<[bool; 8]> = sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
-        let (_, ctx) = points[pi];
-        let p = GenParams {
-            platform: Platform::default().with_gpu(0, ctx),
-            ..GenParams::default()
-        };
-        eight_approaches(seed, &p, ti)
-    });
+    let per_cell: Vec<[bool; N_APPROACHES]> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            let (_, ctx) = points[pi];
+            let p = GenParams {
+                platform: Platform::default().with_gpu(0, ctx),
+                ..GenParams::default()
+            };
+            approaches(seed, &p, ti)
+        });
     let n = cfg.tasksets;
     points
         .iter()
         .enumerate()
         .map(|(pi, &point)| {
             let slice = &per_cell[pi * n..(pi + 1) * n];
-            let mut ys = [0.0f64; 8];
+            let mut ys = [0.0f64; N_APPROACHES];
             for oks in slice {
                 for (k, &ok) in oks.iter().enumerate() {
                     ys[k] += ok as usize as f64;
@@ -172,7 +178,7 @@ fn epstheta_report(rows: &[EpsThetaRow]) -> String {
         .unwrap();
     let mut out = String::from(
         "== Scenarios (a): ε×θ overhead grids (gcaps_suspend ratio shown; \
-         all 8 approaches in the CSV) ==\n",
+         all 9 approaches in the CSV) ==\n",
     );
     for (board, _) in config::GPU_PROFILES {
         let mut thetas: Vec<Time> = rows
@@ -374,7 +380,7 @@ pub fn hetero_platforms() -> Vec<(&'static str, Platform)> {
 
 /// One hetero sweep row: (platform name, utilization, per-approach
 /// ratios in `Approach::ALL` order, simulated gcaps DES miss ratio).
-pub type HeteroRow = (&'static str, f64, [f64; 8], f64);
+pub type HeteroRow = (&'static str, f64, [f64; N_APPROACHES], f64);
 
 /// The generator knobs for one (platform, utilization) point (shared
 /// with the test anchors; see [`edfvfp_params`]).
@@ -386,7 +392,7 @@ pub fn hetero_params(platform: &Platform, util: f64) -> GenParams {
     }
 }
 
-/// Sweep (c): all 8 approaches + the gcaps DES at every (platform,
+/// Sweep (c): all 9 approaches + the gcaps DES at every (platform,
 /// utilization) point. Heterogeneous platforms hash to their own memo
 /// keys (`memo::params_hash` folds the per-engine contexts when the
 /// engines differ), so every point draws its own tasksets.
@@ -398,11 +404,11 @@ pub fn hetero_sweep(cfg: &ExpConfig) -> Vec<HeteroRow> {
     let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
     let cells = sweep::grid2(points.len(), cfg.tasksets);
     let seed = cfg.seed;
-    let per_cell: Vec<([bool; 8], Option<(u64, u64)>)> =
+    let per_cell: Vec<([bool; N_APPROACHES], Option<(u64, u64)>)> =
         sweep::run(&cfg.sweep(), cells, |_, &(pt, ti)| {
             let (pi, util) = points[pt];
             let p = hetero_params(&platforms[pi].1, util);
-            let oks = eight_approaches(seed, &p, ti);
+            let oks = approaches(seed, &p, ti);
             let sim = (ti < n_sim).then(|| {
                 let ts = memo::taskset(seed, &p, ti);
                 rt_misses(&ts, Policy::Gcaps)
@@ -415,7 +421,7 @@ pub fn hetero_sweep(cfg: &ExpConfig) -> Vec<HeteroRow> {
         .enumerate()
         .map(|(pt, &(pi, util))| {
             let slice = &per_cell[pt * n..(pt + 1) * n];
-            let mut ys = [0.0f64; 8];
+            let mut ys = [0.0f64; N_APPROACHES];
             for (oks, _) in slice {
                 for (k, &ok) in oks.iter().enumerate() {
                     ys[k] += ok as usize as f64;

@@ -4,10 +4,10 @@
 //! gcaps exp <name|all> [--tasksets N] [--seed N] [--jobs N]
 //!           [--format csv|jsonl|all] [per-experiment flags]
 //! gcaps exp --list                    names, descriptions, per-experiment flags
-//! gcaps analyze [--seed N]            one random taskset through all 8 analyses
-//! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+> [--seed N] [--ms N]
+//! gcaps analyze [--seed N]            one random taskset through all 9 analyses
+//! gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|server> [--seed N] [--ms N]
 //! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
-//! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]
+//! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp|server] [--busy]
 //! gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N] [--no-timing]
 //! ```
 //!
@@ -117,7 +117,7 @@ fn cmd_sim(args: &Args) {
         None => Policy::Gcaps,
         Some(l) => Policy::from_label(l).unwrap_or_else(|| {
             fail(&format!(
-                "invalid value {l:?} for --policy (expected gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf)"
+                "invalid value {l:?} for --policy (expected gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf|server)"
             ))
         }),
     };
@@ -183,8 +183,9 @@ fn live_mode(args: &Args) -> LiveMode {
         "tsg_rr" => LiveMode::TsgRr,
         "fmlp" | "fmlp+" => LiveMode::FmlpPlus,
         "mpcp" => LiveMode::Mpcp,
+        "server" => LiveMode::Server,
         other => fail(&format!(
-            "invalid value {other:?} for --mode (expected gcaps|tsg_rr|fmlp|mpcp)"
+            "invalid value {other:?} for --mode (expected gcaps|tsg_rr|fmlp|mpcp|server)"
         )),
     }
 }
@@ -369,7 +370,7 @@ fn main() {
                  \n\
                  gcaps analyze [--seed N | --taskset FILE]\n\
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
-                 gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf> [--seed N | --taskset FILE]\n\
+                 gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf|server> [--seed N | --taskset FILE]\n\
                  \x20         [--ms N] [--trace-out trace.json]\n\
                  gcaps exp <name|all> [--tasksets N] [--seed N] [--jobs N]\n\
                  \x20         [--format csv|jsonl|all] [per-experiment flags]\n\
@@ -380,7 +381,7 @@ fn main() {
                  \x20          workers with byte-identical results for every worker count)\n\
                  gcaps bench [--quick] [--out DIR]       # pinned RTA/DES wall-clock baseline\n\
                  \x20         (writes BENCH_rta.json / BENCH_des.json; --quick for CI smoke)\n\
-                 gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp] [--busy]\n\
+                 gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp|server] [--busy]\n\
                  gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N]\n\
                  \x20         [--no-timing]             # admission-control server (newline-JSON;\n\
                  \x20          ops: admit/remove/check/headroom/stats/shutdown; incremental RTA\n\

@@ -10,9 +10,14 @@
 //! bit-equal to a cold rebuild by `tests/kernel_equivalence.rs`.
 //!
 //! Front-ends share one [`Session`]: `--stdin` serves the standard
-//! streams; `--tcp ADDR` accepts connections sequentially (an
-//! admission server is a serializer by design — concurrent admits
-//! against one platform would race the committed state).
+//! streams; `--tcp ADDR` accepts connections sequentially. Commits are
+//! serialized by design — concurrent admits against one platform would
+//! race the committed state — but pipelined *read-only* queries
+//! (`check` / `headroom`) that are already buffered on the stream fan
+//! out concurrently through the sharded sweep worker pool
+//! ([`Session::answer_reads`]) and answer in submission order, so a
+//! client may keep many probes in flight without changing the
+//! transcript bytes.
 //!
 //! Failure policy: malformed JSON, unknown ops, invalid task specs and
 //! oversized request lines all produce an `{"ok":false,...}` response
@@ -65,17 +70,27 @@ enum LineStatus {
 /// bytes. An overlong line is consumed to its newline but not stored,
 /// so one hostile or corrupt writer cannot balloon server memory or
 /// desynchronize subsequent requests.
-fn read_line_capped(r: &mut impl BufRead, buf: &mut Vec<u8>) -> io::Result<LineStatus> {
+///
+/// The second element of the pair reports whether a *complete* next
+/// line is already sitting in the reader's buffer — i.e. whether the
+/// next call is guaranteed not to block. That is what lets [`run`]
+/// batch pipelined read queries without ever stalling a pending
+/// response on a quiet stream (`false` is conservative: a next line
+/// split across the buffer boundary reads as "might block").
+fn read_line_capped(r: &mut impl BufRead, buf: &mut Vec<u8>) -> io::Result<(LineStatus, bool)> {
     buf.clear();
     let mut overlong = false;
     loop {
         let chunk = r.fill_buf()?;
         if chunk.is_empty() {
-            return Ok(match (overlong, buf.is_empty()) {
-                (true, _) => LineStatus::Overlong,
-                (false, true) => LineStatus::Eof,
-                (false, false) => LineStatus::Line,
-            });
+            return Ok((
+                match (overlong, buf.is_empty()) {
+                    (true, _) => LineStatus::Overlong,
+                    (false, true) => LineStatus::Eof,
+                    (false, false) => LineStatus::Line,
+                },
+                false,
+            ));
         }
         let newline = chunk.iter().position(|&b| b == b'\n');
         let take = newline.unwrap_or(chunk.len());
@@ -86,41 +101,93 @@ fn read_line_capped(r: &mut impl BufRead, buf: &mut Vec<u8>) -> io::Result<LineS
                 overlong = true;
             }
         }
-        r.consume(take + usize::from(newline.is_some()));
         if newline.is_some() {
-            return Ok(if overlong { LineStatus::Overlong } else { LineStatus::Line });
+            let more = chunk[take + 1..].contains(&b'\n');
+            r.consume(take + 1);
+            return Ok((if overlong { LineStatus::Overlong } else { LineStatus::Line }, more));
         }
+        r.consume(take);
     }
 }
 
 /// Serve one request stream to completion. Returns `true` when the
 /// client asked for shutdown (as opposed to just closing the stream).
+///
+/// Pipelined read-only queries batch up while further complete lines
+/// are already buffered; the batch fans out through
+/// [`Session::answer_reads`] and flushes — in submission order — before
+/// anything that would block or commit.
 pub fn run(session: &mut Session, mut input: impl BufRead, mut out: impl Write) -> io::Result<bool> {
     let mut buf = Vec::new();
+    let mut reads: Vec<String> = Vec::new();
     loop {
-        let resp = match read_line_capped(&mut input, &mut buf)? {
-            LineStatus::Eof => return Ok(false),
+        let (status, more) = read_line_capped(&mut input, &mut buf)?;
+        match status {
+            LineStatus::Eof => {
+                flush_reads(session, &mut reads, &mut out)?;
+                return Ok(false);
+            }
             LineStatus::Overlong => {
-                session.transport_error(&format!("request line exceeds {MAX_LINE} bytes"))
+                flush_reads(session, &mut reads, &mut out)?;
+                let resp =
+                    session.transport_error(&format!("request line exceeds {MAX_LINE} bytes"));
+                writeln!(out, "{}", resp.to_json())?;
+                out.flush()?;
             }
             LineStatus::Line => {
                 let text = String::from_utf8_lossy(&buf);
                 let text = text.trim_end_matches('\r');
                 if text.trim().is_empty() {
-                    continue; // blank lines are keep-alive noise, not queries
+                    // Blank lines are keep-alive noise, not queries —
+                    // but never block on the next line with answers
+                    // still pending.
+                    if !more {
+                        flush_reads(session, &mut reads, &mut out)?;
+                    }
+                    continue;
                 }
+                if Session::is_read_query(text) {
+                    reads.push(text.to_string());
+                    if !more {
+                        flush_reads(session, &mut reads, &mut out)?;
+                    }
+                    continue;
+                }
+                // Commits (and anything unrecognized) serialize: drain
+                // the pending reads first so responses keep submission
+                // order.
+                flush_reads(session, &mut reads, &mut out)?;
                 let (resp, quit) = session.handle_line(text);
+                writeln!(out, "{}", resp.to_json())?;
+                out.flush()?;
                 if quit {
-                    writeln!(out, "{}", resp.to_json())?;
-                    out.flush()?;
                     return Ok(true);
                 }
-                resp
             }
-        };
-        writeln!(out, "{}", resp.to_json())?;
-        out.flush()?;
+        }
     }
+}
+
+/// Drain the pending read-query batch: a single query answers inline on
+/// the live session; two or more fan out through the sweep pool.
+fn flush_reads(
+    session: &mut Session,
+    reads: &mut Vec<String>,
+    out: &mut impl Write,
+) -> io::Result<()> {
+    if reads.is_empty() {
+        return Ok(());
+    }
+    let lines = std::mem::take(reads);
+    let answers = if lines.len() == 1 {
+        vec![session.handle_line(&lines[0]).0]
+    } else {
+        session.answer_reads(&lines)
+    };
+    for resp in answers {
+        writeln!(out, "{}", resp.to_json())?;
+    }
+    out.flush()
 }
 
 /// Serve stdin→stdout until EOF or a `shutdown` request.

@@ -14,12 +14,13 @@
 //! one); after a removal the maps shrink and the analysis restarts
 //! cold before re-committing.
 
-use crate::analysis::{fmlp, gcaps, mpcp, rr, Approach};
+use crate::analysis::{fmlp, gcaps, mpcp, rr, server, Approach};
 use crate::analysis::{AnalysisResult, Prepared};
 use crate::model::{to_ms, Platform, Task, TaskSet, Time};
 use crate::serve::counters::Counters;
 use crate::serve::json::{obj, parse, Value};
 use crate::serve::proto::{parse_request, Param, Request, TaskSpec};
+use crate::sweep::{self, SweepConfig};
 
 /// One admission-control session (shared by stdin and TCP front-ends).
 pub struct Session {
@@ -62,6 +63,56 @@ impl Session {
         (resp, quit)
     }
 
+    /// True when `line` parses to a query that only *reads* the
+    /// committed admission state (`check` / `headroom`). Such queries
+    /// are safe to answer from a snapshot, concurrently with other
+    /// in-flight reads; everything else (commits, stats, shutdown,
+    /// malformed lines) must stay serialized on the live session.
+    pub fn is_read_query(line: &str) -> bool {
+        matches!(
+            parse(line).and_then(|v| parse_request(&v)),
+            Ok(Request::Check | Request::Headroom { .. })
+        )
+    }
+
+    /// Clone of the committed analysis state with fresh counters — the
+    /// shadow one concurrent read query runs against. `headroom` probes
+    /// mutate-then-restore their session, so every in-flight read needs
+    /// its own shadow; `self` is never touched.
+    fn read_snapshot(&self) -> Session {
+        Session {
+            approach: self.approach,
+            ts: self.ts.clone(),
+            prep: self.prep.clone(),
+            warm: self.warm.clone(),
+            counters: Counters::new(false),
+        }
+    }
+
+    /// Answer a batch of pipelined read-only queries (each vetted by
+    /// [`Session::is_read_query`]) concurrently through the sharded
+    /// sweep worker pool, returning responses in submission order —
+    /// [`sweep::run`] reassembles worker results into input order, so
+    /// the response bytes are identical to serving the lines one by
+    /// one. Only the service counters are folded back into `self`.
+    pub fn answer_reads(&mut self, lines: &[String]) -> Vec<Value> {
+        let base = self.read_snapshot();
+        let answers = sweep::run(&SweepConfig::default(), lines.to_vec(), |_, line| {
+            let mut shadow = base.read_snapshot();
+            let (v, _) = shadow.handle_line(line);
+            (v, shadow.counters.errors)
+        });
+        answers
+            .into_iter()
+            .map(|(v, errors)| {
+                let started = self.counters.start();
+                self.counters.errors += errors;
+                self.counters.finish(started);
+                v
+            })
+            .collect()
+    }
+
     fn dispatch(&mut self, req: Request) -> Value {
         match req {
             Request::Admit(spec) => self.admit(spec),
@@ -97,6 +148,7 @@ impl Session {
             Approach::FmlpBusy | Approach::FmlpSuspend => {
                 fmlp::analyze_prepared(&self.ts, &self.prep, busy)
             }
+            Approach::ServerSuspend => server::analyze_prepared(&self.ts, &self.prep),
         }
     }
 

@@ -12,12 +12,19 @@
 //! release → Cpu(0) → for k in 0..η_g:
 //!     [gcaps]      DrvBegin(k): runlist-update call, α on CPU
 //!     [mpcp/fmlp+] LockWait(k): queue per protocol
+//!     [server]     LockWait(k): request queued to the engine's server
+//!                   (priority-ordered, RT before BE, FIFO tiebreak)
 //!     GpuActive(k): G^m on CPU ∥ G^e on GPU (async mode, §4 of the
 //!                   paper: misc launch work and kernel execution
 //!                   overlap); busy-wait keeps the CPU through G^e,
-//!                   self-suspension yields it once G^m is done
+//!                   self-suspension yields it once G^m is done.
+//!                   Under [server] the segment is instead executed
+//!                   serially BY the server on the engine row (G^m then
+//!                   G^e, non-preemptively) while the requester
+//!                   self-suspends (or spins, in busy-wait mode).
 //!     [gcaps]      DrvEnd(k)
 //!     [mpcp/fmlp+] release lock
+//!     [server]     server completes the request
 //!     → Cpu(k+1)
 //! → complete
 //! ```
@@ -293,7 +300,7 @@ impl<'a> Engine<'a> {
                     self.st[i].cpu_rem = self.alpha_of(i);
                     self.st[i].drv_started = self.now;
                 }
-                Policy::Mpcp | Policy::FmlpPlus => {
+                Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                     let g = self.gpu_of(i);
                     self.st[i].phase = Phase::LockWait;
                     self.gpus[g].ticket_counter += 1;
@@ -330,7 +337,7 @@ impl<'a> Engine<'a> {
                 self.st[i].cpu_rem = self.alpha_of(i);
                 self.st[i].drv_started = self.now;
             }
-            Policy::Mpcp | Policy::FmlpPlus => {
+            Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                 let g = self.gpu_of(i);
                 debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
                 self.gpus[g].lock_holder = None;
@@ -464,6 +471,21 @@ impl<'a> Engine<'a> {
                 .min_by_key(|(_, &(_, tk))| tk)
                 .map(|(j, _)| j)
                 .unwrap(),
+            // Server: RT requests before best-effort, then by CPU
+            // priority, FIFO within a priority level (Kim et al.).
+            Policy::Server => self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(t, tk))| {
+                    (
+                        !self.ts.tasks[t].best_effort,
+                        self.ts.tasks[t].cpu_prio,
+                        std::cmp::Reverse(tk),
+                    )
+                })
+                .map(|(j, _)| j)
+                .unwrap(),
             _ => unreachable!(),
         };
         let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
@@ -479,7 +501,14 @@ impl<'a> Engine<'a> {
         match self.st[i].phase {
             Phase::Cpu | Phase::DrvCall { .. } => true,
             Phase::GpuActive => {
-                self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+                // Server: the server executes G^m on the requester's
+                // behalf (on its own dedicated core, modelled on the
+                // engine row) — the requester holds a CPU only to spin.
+                if self.cfg.policy == Policy::Server {
+                    self.ts.tasks[i].mode == WaitMode::BusyWait
+                } else {
+                    self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+                }
             }
             Phase::LockWait => self.ts.tasks[i].mode == WaitMode::BusyWait,
             Phase::Idle => false,
@@ -494,7 +523,11 @@ impl<'a> Engine<'a> {
     /// cannot be preempted, so ε-blocking stays within Lemma 8's bound.
     fn eff_prio(&self, i: usize) -> u64 {
         let base = self.ts.tasks[i].cpu_prio as u64;
-        let boosted = self.gpus[self.gpu_of(i)].lock_holder == Some(i)
+        // Boosting is a lock-protocol mechanism only: the server model
+        // has no critical-section CPU work on the requester's core (the
+        // server owns a dedicated core), so nothing to boost.
+        let boosted = matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus)
+            && self.gpus[self.gpu_of(i)].lock_holder == Some(i)
             && matches!(self.st[i].phase, Phase::GpuActive)
             && self.st[i].cpu_rem > 0;
         if boosted {
@@ -586,6 +619,13 @@ impl<'a> Engine<'a> {
             Policy::Mpcp | Policy::FmlpPlus => {
                 self.gpus[g].lock_holder.filter(|&i| execing(i))
             }
+            // Server: the engine row models the server's service of the
+            // whole request — it stays occupied through the G^m part
+            // too, not just while a kernel executes.
+            Policy::Server => self.gpus[g].lock_holder.filter(|&i| {
+                matches!(self.st[i].phase, Phase::GpuActive)
+                    && (self.st[i].cpu_rem > 0 || self.st[i].gpu_rem > 0)
+            }),
         }
     }
 
@@ -604,10 +644,11 @@ impl<'a> Engine<'a> {
             Some(i) => {
                 // θ per context switch for the driver-level policies
                 // (GCAPS folds it into ε = α + θ; TSG RR pays it per
-                // rotation). The sync baselines are modelled
-                // overhead-free, as the paper's analysis assumes.
+                // rotation). The sync baselines and the server are
+                // modelled overhead-free, as their analyses assume (the
+                // server RTA's 2ε per request is pure safety margin).
                 let charge = match self.cfg.policy {
-                    Policy::Mpcp | Policy::FmlpPlus => 0,
+                    Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
                     Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
                         self.ts.platform.gpus[g].theta
                     }
@@ -674,6 +715,14 @@ impl<'a> Engine<'a> {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
+                } else if self.cfg.policy == Policy::Server
+                    && matches!(self.st[i].phase, Phase::GpuActive)
+                    && self.st[i].cpu_rem > 0
+                {
+                    // Server serving the request's G^m part on the
+                    // engine row (the requester may be suspended, so no
+                    // CPU slot covers this work).
+                    h = h.min(self.now.saturating_add(self.st[i].cpu_rem));
                 } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
                 {
                     h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
@@ -696,7 +745,12 @@ impl<'a> Engine<'a> {
                     Phase::Cpu => (Activity::CpuSeg, true),
                     Phase::DrvCall { .. } => (Activity::DriverCall, true),
                     Phase::GpuActive => {
-                        if self.st[i].cpu_rem > 0 {
+                        // Server: the requester never executes G^m
+                        // itself — it only spins here (busy-wait mode);
+                        // the engine row drains cpu_rem.
+                        if self.cfg.policy == Policy::Server {
+                            (Activity::BusyWait, false)
+                        } else if self.st[i].cpu_rem > 0 {
                             (Activity::GpuMisc, true)
                         } else {
                             (Activity::BusyWait, false)
@@ -738,6 +792,29 @@ impl<'a> Engine<'a> {
                         resource: Resource::Gpu(g),
                         task: i,
                         activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            } else if self.cfg.policy == Policy::Server
+                && matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].cpu_rem > 0
+            {
+                // Server service, part 1: the server executes the
+                // request's G^m on the requester's behalf. Serialized
+                // before G^e (the server is a single thread driving the
+                // engine), and not counted as gpu_busy — it is the
+                // server's CPU work, rendered on the engine row.
+                let d = dt.min(self.st[i].cpu_rem);
+                self.st[i].cpu_rem -= d;
+                if self.st[i].cpu_rem == 0 && self.st[i].gpu_rem == 0 {
+                    self.gpu_done.push(i);
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::ServerMisc,
                         start: self.now,
                         end: self.now + d,
                     });
@@ -820,8 +897,9 @@ impl<'a> Engine<'a> {
                 }
             }
 
-            // Lock grants (one lock per engine).
-            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
+            // Lock/server grants (one lock, or one serving request, per
+            // engine).
+            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
                 for g in 0..self.gpus.len() {
                     changed |= self.try_grant_lock(g);
                 }
@@ -1152,8 +1230,14 @@ mod tests {
     // -- edge cases: all must settle without tripping the quiescence
     //    panic, across every policy ------------------------------------
 
-    const ALL_POLICIES: [Policy; 5] =
-        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+    const ALL_POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
 
     #[test]
     fn zero_length_cpu_segments_settle() {
@@ -1247,6 +1331,8 @@ mod tests {
                 Policy::Gcaps | Policy::GcapsEdf => ms(8.8),
                 // Lock policies are overhead-free when uncontended.
                 Policy::Mpcp | Policy::FmlpPlus => ms(7.0),
+                // Server service serializes G^m and G^e: R = C + G^m + G^e.
+                Policy::Server => ms(8.0),
             };
             let res = simulate(&ts, &SimConfig::new(policy, ms(1000.0)));
             for i in [0, 1] {
@@ -1301,5 +1387,95 @@ mod tests {
         for &d in &res.per_task[0].runlist_updates {
             assert!(d <= 2 * eps, "hp runlist update took {d} µs");
         }
+    }
+
+    // -- server-based GPU access (Policy::Server) ----------------------
+
+    #[test]
+    fn lone_task_server_serializes_segment() {
+        // The server executes G^m then G^e back to back on the engine,
+        // overhead-free: R = C + G^m + G^e (no async overlap — the
+        // server is a single thread driving the engine).
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Server, ms(1000.0)));
+        assert_eq!(res.per_task[0].jobs, 10);
+        assert_eq!(res.per_task[0].mort(), Some(ms(8.0)));
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn server_frees_requester_cpu_during_service() {
+        // While the server executes hp's whole segment (G^m included),
+        // the self-suspended requester's core is free for lp CPU work —
+        // the structural advantage over MPCP-style boost blocking.
+        let hp = gpu_task(0, 0, 2, 1.0, 0.5, 20.0, 100.0);
+        let lp = Task::cpu_only(1, 0, 1, ms(5.0), ms(100.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::Server, ms(500.0)));
+        // lp only contends with hp's two 0.5 ms CPU halves.
+        let r = res.per_task[1].mort().unwrap();
+        assert!(r <= ms(6.0), "lp MORT = {r} µs");
+        // hp itself: C + G^m + G^e serialized.
+        assert_eq!(res.per_task[0].mort(), Some(ms(21.5)));
+    }
+
+    #[test]
+    fn server_orders_queued_requests_by_priority() {
+        // lo's request is in service when mid then hi arrive; on
+        // completion the server must pick hi (priority order), not mid
+        // (FIFO order).
+        let lo = gpu_task(0, 0, 1, 1.0, 0.5, 10.0, 100.0);
+        let mid = gpu_task(1, 1, 2, 1.0, 0.5, 4.0, 100.0);
+        let hi = gpu_task(2, 1, 3, 1.0, 0.5, 4.0, 100.0);
+        let ts = TaskSet::new(vec![lo, mid, hi], platform());
+        let cfg = SimConfig::new(Policy::Server, ms(100.0))
+            .with_offsets(vec![0, ms(1.0), ms(2.0)]);
+        let res = simulate(&ts, &cfg);
+        // lo: 0.5 C + (0.5 + 10) service + 0.5 C = 11.5 ms.
+        assert_eq!(res.per_task[0].mort(), Some(ms(11.5)));
+        // hi requests at 2.5, served 11.0-15.5, final C to 16.0.
+        assert_eq!(res.per_task[2].mort(), Some(ms(14.0)));
+        // mid requests at 1.5 but is served after hi: done at 20.5.
+        assert_eq!(res.per_task[1].mort(), Some(ms(19.5)));
+    }
+
+    #[test]
+    fn server_trace_tags_service_on_engine_row() {
+        // G^m served by the server shows up on the engine row as
+        // ServerMisc — distinguishable from direct-execution GpuMisc —
+        // and never on the requester's core.
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let res =
+            simulate(&ts, &SimConfig::new(Policy::Server, ms(100.0)).with_trace());
+        let tr = res.trace.unwrap();
+        let misc: Time = tr
+            .events
+            .iter()
+            .filter(|e| e.activity == Activity::ServerMisc)
+            .map(|e| e.end - e.start)
+            .sum();
+        assert_eq!(misc, ms(1.0));
+        assert!(tr.events.iter().all(|e| e.activity != Activity::GpuMisc));
+        // Engine row carries the full serialized service; the core only
+        // the task's own CPU segments.
+        assert_eq!(tr.occupancy(Resource::Gpu(0), 0, 0, ms(100.0)), ms(6.0));
+        assert_eq!(tr.occupancy(Resource::Core(0), 0, 0, ms(100.0)), ms(2.0));
+    }
+
+    #[test]
+    fn server_rt_requests_precede_best_effort() {
+        // A queued best-effort request must wait for a later-arriving
+        // RT request, regardless of raw priority values.
+        let lo = gpu_task(0, 0, 5, 1.0, 0.5, 10.0, 100.0);
+        let mut be = gpu_task(1, 1, 9, 1.0, 0.5, 4.0, 100.0);
+        be.best_effort = true;
+        let rt = gpu_task(2, 1, 1, 1.0, 0.5, 4.0, 100.0);
+        let ts = TaskSet::new(vec![lo, be, rt], platform());
+        let cfg = SimConfig::new(Policy::Server, ms(100.0))
+            .with_offsets(vec![0, ms(1.0), ms(2.0)]);
+        let res = simulate(&ts, &cfg);
+        // rt (arrived last, lowest prio, but RT) is served before be.
+        assert_eq!(res.per_task[2].mort(), Some(ms(14.0)));
+        assert_eq!(res.per_task[1].mort(), Some(ms(19.5)));
     }
 }

@@ -13,7 +13,11 @@
 //!     serialized driver calls issued by `gcapsGpuSegBegin/End`;
 //!   - [`Policy::Mpcp`] — GPU as a priority-queued mutex with priority
 //!     boosting (zero protocol overhead, as the paper's analysis assumes);
-//!   - [`Policy::FmlpPlus`] — same but FIFO-ordered.
+//!   - [`Policy::FmlpPlus`] — same but FIFO-ordered;
+//!   - [`Policy::Server`] — server-based GPU access (Kim et al.): GPU
+//!     segments are enqueued to a per-engine priority-ordered server
+//!     queue, the requester self-suspends, and the server executes the
+//!     whole segment (G^m + G^e) non-preemptively on its behalf.
 //! - busy-waiting and self-suspension during pure GPU execution
 //!   (per-task [`crate::model::WaitMode`]).
 //!
@@ -47,6 +51,10 @@ pub enum Policy {
     Mpcp,
     /// Synchronization baseline: FMLP+ (FIFO-ordered GPU mutex).
     FmlpPlus,
+    /// Server-based baseline (Kim et al.): a dedicated server executes
+    /// whole GPU segments on requesters' behalf, priority-ordered per
+    /// engine, non-preemptive per request; requesters self-suspend.
+    Server,
 }
 
 impl Policy {
@@ -57,6 +65,7 @@ impl Policy {
             Policy::GcapsEdf => "gcaps_edf",
             Policy::Mpcp => "mpcp",
             Policy::FmlpPlus => "fmlp+",
+            Policy::Server => "server",
         }
     }
 
@@ -67,6 +76,7 @@ impl Policy {
             "gcaps_edf" => Some(Policy::GcapsEdf),
             "mpcp" => Some(Policy::Mpcp),
             "fmlp+" | "fmlp" => Some(Policy::FmlpPlus),
+            "server" => Some(Policy::Server),
             _ => None,
         }
     }

@@ -20,6 +20,7 @@ fn activity_name(a: Activity) -> &'static str {
         Activity::DriverCall => "runlist_update (ε)",
         Activity::GpuExec => "gpu_exec (G^e)",
         Activity::CtxSwitch => "ctx_switch (θ)",
+        Activity::ServerMisc => "server_misc (G^m via server)",
     }
 }
 

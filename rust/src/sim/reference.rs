@@ -142,7 +142,7 @@ impl<'a> Engine<'a> {
                     self.st[i].cpu_rem = self.alpha_of(i);
                     self.st[i].drv_started = self.now;
                 }
-                Policy::Mpcp | Policy::FmlpPlus => {
+                Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                     let g = self.gpu_of(i);
                     self.st[i].phase = Phase::LockWait;
                     self.gpus[g].ticket_counter += 1;
@@ -172,7 +172,7 @@ impl<'a> Engine<'a> {
                 self.st[i].cpu_rem = self.alpha_of(i);
                 self.st[i].drv_started = self.now;
             }
-            Policy::Mpcp | Policy::FmlpPlus => {
+            Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                 let g = self.gpu_of(i);
                 debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
                 self.gpus[g].lock_holder = None;
@@ -284,6 +284,19 @@ impl<'a> Engine<'a> {
                 .min_by_key(|(_, &(_, tk))| tk)
                 .map(|(j, _)| j)
                 .unwrap(),
+            Policy::Server => self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(t, tk))| {
+                    (
+                        !self.ts.tasks[t].best_effort,
+                        self.ts.tasks[t].cpu_prio,
+                        std::cmp::Reverse(tk),
+                    )
+                })
+                .map(|(j, _)| j)
+                .unwrap(),
             _ => unreachable!(),
         };
         let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
@@ -295,7 +308,11 @@ impl<'a> Engine<'a> {
         match self.st[i].phase {
             Phase::Cpu | Phase::DrvCall { .. } => true,
             Phase::GpuActive => {
-                self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+                if self.cfg.policy == Policy::Server {
+                    self.ts.tasks[i].mode == WaitMode::BusyWait
+                } else {
+                    self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
+                }
             }
             Phase::LockWait => self.ts.tasks[i].mode == WaitMode::BusyWait,
             Phase::Idle => false,
@@ -304,7 +321,8 @@ impl<'a> Engine<'a> {
 
     fn eff_prio(&self, i: usize) -> u64 {
         let base = self.ts.tasks[i].cpu_prio as u64;
-        let boosted = self.gpus[self.gpu_of(i)].lock_holder == Some(i)
+        let boosted = matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus)
+            && self.gpus[self.gpu_of(i)].lock_holder == Some(i)
             && matches!(self.st[i].phase, Phase::GpuActive)
             && self.st[i].cpu_rem > 0;
         if boosted {
@@ -382,6 +400,10 @@ impl<'a> Engine<'a> {
             Policy::Mpcp | Policy::FmlpPlus => {
                 self.gpus[g].lock_holder.filter(|&i| execing(i))
             }
+            Policy::Server => self.gpus[g].lock_holder.filter(|&i| {
+                matches!(self.st[i].phase, Phase::GpuActive)
+                    && (self.st[i].cpu_rem > 0 || self.st[i].gpu_rem > 0)
+            }),
         }
     }
 
@@ -397,7 +419,7 @@ impl<'a> Engine<'a> {
             }
             Some(i) => {
                 let charge = match self.cfg.policy {
-                    Policy::Mpcp | Policy::FmlpPlus => 0,
+                    Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
                     Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
                         self.ts.platform.gpus[g].theta
                     }
@@ -451,6 +473,11 @@ impl<'a> Engine<'a> {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
+                } else if self.cfg.policy == Policy::Server
+                    && matches!(self.st[i].phase, Phase::GpuActive)
+                    && self.st[i].cpu_rem > 0
+                {
+                    h = h.min(self.now.saturating_add(self.st[i].cpu_rem));
                 } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
                 {
                     h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
@@ -473,7 +500,9 @@ impl<'a> Engine<'a> {
                     Phase::Cpu => (Activity::CpuSeg, true),
                     Phase::DrvCall { .. } => (Activity::DriverCall, true),
                     Phase::GpuActive => {
-                        if self.st[i].cpu_rem > 0 {
+                        if self.cfg.policy == Policy::Server {
+                            (Activity::BusyWait, false)
+                        } else if self.st[i].cpu_rem > 0 {
                             (Activity::GpuMisc, true)
                         } else {
                             (Activity::BusyWait, false)
@@ -507,6 +536,21 @@ impl<'a> Engine<'a> {
                         resource: Resource::Gpu(g),
                         task: i,
                         activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now + d,
+                    });
+                }
+            } else if self.cfg.policy == Policy::Server
+                && matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].cpu_rem > 0
+            {
+                let d = dt.min(self.st[i].cpu_rem);
+                self.st[i].cpu_rem -= d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::ServerMisc,
                         start: self.now,
                         end: self.now + d,
                     });
@@ -590,7 +634,7 @@ impl<'a> Engine<'a> {
                 }
             }
 
-            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus) {
+            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
                 for g in 0..self.gpus.len() {
                     self.try_grant_lock(g);
                 }

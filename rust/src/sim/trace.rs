@@ -29,6 +29,10 @@ pub enum Activity {
     GpuExec,
     /// GPU context switch (θ) — occupant is the incoming task.
     CtxSwitch,
+    /// GPU-segment misc work (G^m) executed by the GPU server on the
+    /// requester's behalf (`Policy::Server`) — occupant is the
+    /// requester, resource is the engine the server drives.
+    ServerMisc,
 }
 
 impl Activity {
@@ -40,6 +44,7 @@ impl Activity {
             Activity::DriverCall => 'e',
             Activity::GpuExec => 'G',
             Activity::CtxSwitch => 's',
+            Activity::ServerMisc => 'S',
         }
     }
 }
@@ -140,7 +145,7 @@ impl Trace {
             }
         }
         out.push_str(&format!(
-            "time: {:.1} .. {:.1} ms   (# cpu, m misc, w busy-wait, e driver, G gpu, s ctx-switch)\n",
+            "time: {:.1} .. {:.1} ms   (# cpu, m misc, w busy-wait, e driver, G gpu, s ctx-switch, S server-misc)\n",
             to_ms(t0),
             to_ms(t1)
         ));

@@ -1,7 +1,7 @@
 //! Sharded parallel sweep engine for the experiment harnesses.
 //!
 //! The paper's evaluation (§7, Figs. 8–9) runs ~1000 random tasksets per
-//! utilization point across 8 analysis approaches plus DES replicas.
+//! utilization point across 9 analysis approaches plus DES replicas.
 //! Every harness in `experiments/` expresses that work as a flat grid of
 //! **cells** (e.g. sweep-point × taskset-index) and hands it to
 //! [`run`], which shards the cells across a worker pool and merges the

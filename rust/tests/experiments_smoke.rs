@@ -42,8 +42,8 @@ fn fig8_all_panels_produce_csv() {
     for panel in Panel::ALL {
         let path = results_dir().join(format!("fig8{}.csv", panel.letter()));
         let csv = std::fs::read_to_string(&path).expect("csv written");
-        // Header + 8 approaches × #points rows.
-        assert!(csv.lines().count() > 8, "{path:?} too small");
+        // Header + 9 approaches × #points rows.
+        assert!(csv.lines().count() > 9, "{path:?} too small");
     }
 }
 
@@ -123,10 +123,10 @@ fn multigpu_harness_runs() {
     assert!(report.ascii.contains("Multi-GPU"));
     let path = results_dir().join("multigpu.csv");
     let csv = std::fs::read_to_string(&path).expect("csv written");
-    // Header + 8 approaches × 3 GPU counts.
-    assert_eq!(csv.lines().count(), 1 + 8 * 3, "unexpected row count:\n{csv}");
+    // Header + 9 approaches × 3 GPU counts.
+    assert_eq!(csv.lines().count(), 1 + 9 * 3, "unexpected row count:\n{csv}");
     assert!(csv.lines().next().unwrap().contains("num_gpus"));
-    assert_eq!(report.tables[0].rows, 8 * 3);
+    assert_eq!(report.tables[0].rows, 9 * 3);
 }
 
 #[test]

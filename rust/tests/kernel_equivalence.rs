@@ -5,11 +5,11 @@
 //!    bit-identical responses through the precomputed `Prepared` kernel
 //!    and through the retained iterator-chain reference path, over
 //!    hundreds of random tasksets spanning 1/2/4 GPU engines, both wait
-//!    modes and all 8 approaches.
+//!    modes and all 9 approaches.
 //! 2. **Event-calendar DES ≡ seed engine** — the heap-calendar engine
 //!    must reproduce the seed engine's runs event-for-event: identical
 //!    trace intervals, releases, completions, per-task metrics and run
-//!    aggregates, across all 5 policies and random offset patterns.
+//!    aggregates, across all 6 policies and random offset patterns.
 //!
 //! Together these pin every experiment CSV byte across the perf
 //! refactor: the sweeps consume exactly the outputs compared here.
@@ -32,9 +32,9 @@ fn params(num_gpus: usize, mode: WaitMode) -> GenParams {
 }
 
 #[test]
-fn kernel_matches_naive_reference_for_all_8_approaches() {
+fn kernel_matches_naive_reference_for_all_9_approaches() {
     // ≥ 200 random tasksets: 204 cases cycling the engine count, each
-    // generating a suspend and a busy variant and running all 8
+    // generating a suspend and a busy variant and running all 9
     // approaches through both paths.
     let mut case = 0usize;
     forall("RTA kernel = naive reference", 204, |rng| {
@@ -56,6 +56,37 @@ fn kernel_matches_naive_reference_for_all_8_approaches() {
             }
             if kernel.schedulable != naive.schedulable {
                 return Err(format!("{} (g = {g}): schedulable bit diverged", a.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn server_kernel_matches_naive_reference() {
+    // Dedicated sweep for the server-based family (Kim et al.): the
+    // prepared-kernel path must be bit-equal to the naive spec over
+    // ≥ 200 random tasksets × 1/2/4 GPU engines × both generated wait
+    // modes (the analysis itself is suspension-based regardless of the
+    // taskset's wait mode — CPU-only tasks see zero request blocking).
+    let mut case = 0usize;
+    forall("server RTA kernel = naive reference", 204, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        for mode in [WaitMode::SelfSuspend, WaitMode::BusyWait] {
+            let ts = generate(rng, &params(g, mode));
+            let kernel = analyze(&ts, Approach::ServerSuspend);
+            let naive = reference::analyze(&ts, Approach::ServerSuspend);
+            if kernel.response != naive.response {
+                return Err(format!(
+                    "server (g = {g}, mode = {mode:?}): kernel {:?} != naive {:?}",
+                    kernel.response, naive.response
+                ));
+            }
+            if kernel.schedulable != naive.schedulable {
+                return Err(format!(
+                    "server (g = {g}, mode = {mode:?}): schedulable bit diverged"
+                ));
             }
         }
         Ok(())
@@ -94,8 +125,14 @@ fn full_gcaps_procedure_matches_reference_incl_audsley() {
 
 #[test]
 fn calendar_engine_matches_seed_engine_traces() {
-    const POLICIES: [Policy; 5] =
-        [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus];
+    const POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
     let mut case = 0usize;
     forall("calendar DES = seed DES", 30, |rng| {
         let g = GPU_COUNTS[case % GPU_COUNTS.len()];
@@ -159,8 +196,14 @@ fn calendar_engine_handles_zero_length_edges_like_seed() {
     zero_gpu.gpu_segments = vec![GpuSegment::new(0, 0)];
     zero_gpu.cpu_segments = vec![ms(1.0), 0];
     let ts = TaskSet::new(vec![mk(0, 0, 2), zero_gpu], Platform::single(2, 1024, 200, 1000));
-    for policy in [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus]
-    {
+    for policy in [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ] {
         let cfg = SimConfig::new(policy, ms(200.0)).with_trace();
         let new = simulate(&ts, &cfg);
         let old = simulate_reference(&ts, &cfg);
@@ -180,7 +223,7 @@ fn incremental_kernel_matches_cold_rebuild_over_random_admit_remove_sequences() 
     // wait modes; every step cross-checks GCAPS (incremental + warm vs
     // cold) plus one of the other three families over the delta kernel.
     use gcaps::analysis::gcaps::{analyze_prepared, analyze_prepared_warm, Options};
-    use gcaps::analysis::{fmlp, mpcp, rr};
+    use gcaps::analysis::{fmlp, mpcp, rr, server};
 
     let mut case = 0usize;
     forall("incremental prep + warm = cold rebuild", 204, |rng| {
@@ -254,7 +297,7 @@ fn incremental_kernel_matches_cold_rebuild_over_random_admit_remove_sequences() 
 
             // The other families run cold over the shared delta kernel;
             // rotate one per step to keep the sweep fast.
-            let (label, a, b) = match step % 3 {
+            let (label, a, b) = match step % 4 {
                 0 => (
                     "rr",
                     rr::analyze_prepared(&ts, &prep, busy),
@@ -265,10 +308,15 @@ fn incremental_kernel_matches_cold_rebuild_over_random_admit_remove_sequences() 
                     mpcp::analyze_prepared(&ts, &prep, busy),
                     mpcp::analyze_prepared(&ts, &cold, busy),
                 ),
-                _ => (
+                2 => (
                     "fmlp",
                     fmlp::analyze_prepared(&ts, &prep, busy),
                     fmlp::analyze_prepared(&ts, &cold, busy),
+                ),
+                _ => (
+                    "server",
+                    server::analyze_prepared(&ts, &prep),
+                    server::analyze_prepared(&ts, &cold),
                 ),
             };
             if a.response != b.response {

@@ -37,6 +37,7 @@ fn live_stack_end_to_end() {
     runtime_phase();
     executive_phase();
     gcaps_phase();
+    server_phase();
 }
 
 fn runtime_phase() {
@@ -59,7 +60,13 @@ fn executive_phase() {
         mk_task(1, "lp", "projection", 200, 1, true),
         mk_task(2, "be", "mmul_large", 250, 0, false),
     ];
-    for mode in [LiveMode::Gcaps, LiveMode::TsgRr, LiveMode::FmlpPlus, LiveMode::Mpcp] {
+    for mode in [
+        LiveMode::Gcaps,
+        LiveMode::TsgRr,
+        LiveMode::FmlpPlus,
+        LiveMode::Mpcp,
+        LiveMode::Server,
+    ] {
         let res = run(&tasks, &rt, mode, Duration::from_secs(2));
         for (t, m) in tasks.iter().zip(&res.per_task) {
             assert!(
@@ -104,5 +111,32 @@ fn gcaps_phase() {
     assert!(
         hp_mort < Duration::from_millis(40),
         "hp MORT {hp_mort:?} suggests no GPU preemption"
+    );
+}
+
+fn server_phase() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // Same hp-vs-hog shape as gcaps_phase, but under the server-based
+    // mode: the priority-queue server serves hp's pending launch ahead
+    // of the hog's queued ones, so hp waits at most one in-flight
+    // kernel per launch, not a whole hog segment.
+    let tasks = vec![
+        mk_task(0, "hp", "mmul_small", 80, 2, true),
+        LiveTask {
+            name: "hog".into(),
+            period: Duration::from_millis(400),
+            cpu_segments: vec![Duration::from_micros(200); 2],
+            gpu_segments: vec![LiveGpuSegment { workload: "mmul_large".into(), launches: 40 }],
+            gpu_prio: 1,
+            rt: true,
+            busy: false,
+        },
+    ];
+    let res = run(&tasks, &rt, LiveMode::Server, Duration::from_secs(3));
+    assert!(res.launches > 0, "server: no kernel launches");
+    let hp_mort = res.per_task[0].mort().unwrap();
+    assert!(
+        hp_mort < Duration::from_millis(40),
+        "server mode: hp MORT {hp_mort:?} suggests requests were not priority-ordered"
     );
 }

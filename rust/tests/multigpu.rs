@@ -2,7 +2,7 @@
 //!
 //! 1. **Per-engine isolation** — two tasks on different cores AND
 //!    different GPU engines must show zero mutual GPU blocking under
-//!    all 8 analysis approaches and all DES policies: each one's
+//!    all 9 analysis approaches and all DES policies: each one's
 //!    response equals its response when analysed/simulated alone.
 //! 2. **Single-GPU golden anchors** — with num_gpus = 1 the redesigned
 //!    pipeline must be indistinguishable from the pre-redesign code:
@@ -44,7 +44,7 @@ fn alone(t: &Task, platform: Platform) -> TaskSet {
 }
 
 #[test]
-fn cross_engine_pairs_have_zero_mutual_blocking_in_all_8_approaches() {
+fn cross_engine_pairs_have_zero_mutual_blocking_in_all_9_approaches() {
     for approach in Approach::ALL {
         let mode = approach.wait_mode();
         let p2 = Platform::default().with_num_gpus(2);
@@ -73,8 +73,14 @@ fn cross_engine_pairs_have_zero_mutual_blocking_in_all_8_approaches() {
 
 #[test]
 fn cross_engine_pairs_have_zero_mutual_blocking_in_the_des() {
-    for policy in [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus]
-    {
+    for policy in [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ] {
         let p2 = Platform::default().with_num_gpus(2);
         let a = gpu_task(0, 0, 0, 2, WaitMode::SelfSuspend);
         let b = gpu_task(1, 1, 1, 1, WaitMode::SelfSuspend);

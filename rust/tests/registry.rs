@@ -267,7 +267,7 @@ fn report_carries_rows_outputs_and_wall_clock() {
     let dir = tmp("report");
     let cfg = ExpConfig { tasksets: 2, seed: 3, ..ExpConfig::default() };
     let report = api::run("multigpu", &cfg, &SinkSpec::csv_jsonl(&dir).with_ascii()).unwrap();
-    assert_eq!(report.rows(), 24, "8 approaches x 3 GPU counts");
+    assert_eq!(report.rows(), 27, "9 approaches x 3 GPU counts");
     assert_eq!(report.outputs, vec![dir.join("multigpu.csv"), dir.join("multigpu.jsonl")]);
     assert!(report.ascii.contains("Multi-GPU"));
     assert_eq!(report.tables[0].columns, vec!["approach", "num_gpus", "schedulable_ratio"]);

@@ -185,6 +185,62 @@ fn shutdown_is_honored_mid_stream_for_every_approach() {
 }
 
 #[test]
+fn pipelined_read_queries_answer_in_submission_order() {
+    // A burst of buffered check/headroom queries fans out through the
+    // sharded sweep pool, yet the transcript must be byte-identical to
+    // serving the same lines one at a time on the live session —
+    // answers in submission order, counters included.
+    let script = [
+        r#"{"op":"admit","task":{"name":"a","period_ms":100,"cpu_ms":[1,1],"gpu_ms":[[0.5,2]],"core":0,"prio":1}}"#,
+        r#"{"op":"admit","task":{"name":"b","period_ms":50,"cpu_ms":[2],"core":1,"prio":2}}"#,
+        // Interleaved read burst: all buffered before the server acts,
+        // so they batch through Session::answer_reads.
+        r#"{"op":"check"}"#,
+        r#"{"op":"headroom","task":"a","param":"c"}"#,
+        r#"{"op":"headroom","task":"a","param":"ge"}"#,
+        r#"{"op":"headroom","task":"b","param":"c"}"#,
+        r#"{"op":"headroom","task":"ghost","param":"c"}"#,
+        r#"{"op":"headroom","task":"b","param":"ge"}"#,
+        r#"{"op":"check"}"#,
+        // A commit serializes, then a second burst.
+        r#"{"op":"remove","task":"a"}"#,
+        r#"{"op":"check"}"#,
+        r#"{"op":"headroom","task":"b","param":"c"}"#,
+        r#"{"op":"stats"}"#,
+    ];
+    let input = script.join("\n") + "\n";
+    let batched = serve_bytes(&default_config(), input.as_bytes());
+
+    // Serial oracle: one handle_line per request, no batching.
+    let mut session = default_config().session();
+    let mut serial = String::new();
+    for line in script {
+        let (v, _) = session.handle_line(line);
+        serial.push_str(&v.to_json());
+        serial.push('\n');
+    }
+    assert_eq!(batched, serial, "batched reads drifted from serial service");
+
+    // Submission order is visible in the response tags themselves.
+    let resp: Vec<&str> = batched.lines().collect();
+    assert_eq!(resp.len(), script.len());
+    assert!(resp[2].contains(r#""op":"check""#), "{}", resp[2]);
+    for (i, task, param) in [(3, "a", "c"), (4, "a", "ge"), (5, "b", "c")] {
+        assert!(
+            resp[i].contains(&format!(r#""task":"{task}""#))
+                && resp[i].contains(&format!(r#""param":"{param}""#)),
+            "response {i} out of order: {}",
+            resp[i]
+        );
+    }
+    assert!(resp[6].starts_with(r#"{"ok":false"#) && resp[6].contains("ghost"), "{}", resp[6]);
+    assert!(resp[7].starts_with(r#"{"ok":false"#) && resp[7].contains("no GPU"), "{}", resp[7]);
+    assert!(resp[9].contains(r#""removed":true"#), "{}", resp[9]);
+    // The in-batch errors were folded back into the shared counters.
+    assert!(resp[12].contains(r#""errors":2"#), "{}", resp[12]);
+}
+
+#[test]
 fn session_survives_a_panicking_sibling_thread() {
     // The server is long-running: a panic on another thread (e.g. a
     // background sweep poisoning the memo cache) must not take future

@@ -21,7 +21,8 @@ fn gpu_busy_matches_executed_demand() {
     forall("gpu busy accounting", 25, |rng| {
         let ts = generate(rng, &GenParams { util_per_cpu: (0.2, 0.35), ..Default::default() });
         let horizon = ms(10_000.0);
-        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus] {
+        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus, Policy::Server]
+        {
             let sim = simulate(&ts, &SimConfig::new(policy, horizon));
             let completed_ge: Time = ts
                 .tasks
@@ -185,7 +186,7 @@ fn simulation_is_deterministic() {
     forall("determinism", 10, |rng| {
         let ts = generate(rng, &GenParams::default());
         let offsets = random_offsets(&ts, rng);
-        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::FmlpPlus] {
+        for policy in [Policy::Gcaps, Policy::TsgRr, Policy::FmlpPlus, Policy::Server] {
             let cfg = SimConfig::new(policy, ms(5_000.0)).with_offsets(offsets.clone());
             let a = simulate(&ts, &cfg);
             let b = simulate(&ts, &cfg);
@@ -222,6 +223,77 @@ fn gcaps_two_updates_per_segment() {
     });
 }
 
+/// The server policy's engine-vs-reference contract over random
+/// tasksets and release patterns: per-task metrics, run aggregates and
+/// full traces (intervals, releases, completions) must match event for
+/// event — including the `ServerMisc` intervals the server policy adds
+/// to the engine rows.
+#[test]
+fn server_policy_engines_match_event_for_event() {
+    forall("server DES engine = reference", 15, |rng| {
+        let ts = generate(rng, &GenParams::default());
+        let offsets = random_offsets(&ts, rng);
+        let cfg =
+            SimConfig::new(Policy::Server, ms(5_000.0)).with_offsets(offsets).with_trace();
+        let fast = simulate(&ts, &cfg);
+        let seed = gcaps::sim::simulate_reference(&ts, &cfg);
+        if fast.per_task != seed.per_task {
+            return Err("server: per-task metrics diverged".into());
+        }
+        if fast.run != seed.run {
+            return Err("server: run aggregates diverged".into());
+        }
+        if fast.trace != seed.trace {
+            return Err("server: traces diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Server-policy edges: zero-length G^m/G^e segments chained through
+/// the server queue, and releases near u64::MAX — both engines must
+/// stay bit-equal and make progress.
+#[test]
+fn server_policy_zero_length_and_near_max_edges_stay_bit_equal() {
+    let mk = |id: usize, core: usize, prio: u32| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(20.0),
+        deadline: ms(20.0),
+        cpu_segments: vec![0, 0],
+        gpu_segments: vec![GpuSegment::new(0, ms(2.0))],
+        core,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    // τ1: a fully zero-length request (G^m = G^e = 0) competing with
+    // τ0's real requests on the same engine.
+    let mut zero_req = mk(1, 1, 1);
+    zero_req.gpu_segments = vec![GpuSegment::new(0, 0)];
+    zero_req.cpu_segments = vec![ms(1.0), 0];
+    let ts = TaskSet::new(vec![mk(0, 0, 2), zero_req], Platform::single(2, 1024, 200, 1000));
+    ts.validate().unwrap();
+    let patterns: [Vec<Time>; 2] = [
+        vec![0, 0],
+        vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)],
+    ];
+    for offsets in patterns {
+        let near_max = offsets[0] > 0;
+        let horizon = if near_max { u64::MAX } else { ms(200.0) };
+        let cfg = SimConfig::new(Policy::Server, horizon).with_offsets(offsets).with_trace();
+        let fast = simulate(&ts, &cfg);
+        let seed = gcaps::sim::simulate_reference(&ts, &cfg);
+        assert_eq!(fast.per_task, seed.per_task, "near_max={near_max}: metrics diverged");
+        assert_eq!(fast.trace, seed.trace, "near_max={near_max}: traces diverged");
+        for i in [0, 1] {
+            assert!(fast.per_task[i].jobs > 0, "near_max={near_max}: tau{i} never completed");
+        }
+    }
+}
+
 /// Regression (wrap-around audit): jobs released near u64::MAX keep the
 /// two engines bit-equal and never flag wrap-around deadline misses —
 /// `abs_deadline = release + deadline` used to overflow there, inverting
@@ -248,8 +320,14 @@ fn near_max_release_offsets_stay_wrap_free_and_bit_equal() {
     );
     ts.validate().unwrap();
     let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
-    for policy in [Policy::GcapsEdf, Policy::Gcaps, Policy::TsgRr, Policy::Mpcp, Policy::FmlpPlus]
-    {
+    for policy in [
+        Policy::GcapsEdf,
+        Policy::Gcaps,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ] {
         let cfg = SimConfig::new(policy, u64::MAX).with_offsets(offsets.clone());
         let fast = simulate(&ts, &cfg);
         let seed = gcaps::sim::simulate_reference(&ts, &cfg);
