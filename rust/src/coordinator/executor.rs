@@ -80,6 +80,9 @@ impl LiveMode {
 pub struct LiveMetrics {
     pub responses: Vec<Duration>,
     pub misses: u64,
+    /// Launches abandoned by the watchdog (GPU server did not answer
+    /// within the task's period) — unarbitrated modes only.
+    pub hangs: u64,
 }
 
 impl LiveMetrics {
@@ -217,9 +220,22 @@ pub fn run(
                             LiveMode::TsgRr | LiveMode::Server => {
                                 // No upstream arbitration: under Server
                                 // the priority-queue service picks the
-                                // winner; each launch self-suspends.
+                                // winner; each launch self-suspends,
+                                // but never past the task's own period
+                                // — a hung GPU server must not wedge
+                                // the executive (DES θ-bound analog).
                                 for _ in 0..seg.launches {
-                                    client.launch(id, task.gpu_prio, task.rt, &seg.workload);
+                                    let served = client.launch_bounded(
+                                        id,
+                                        task.gpu_prio,
+                                        task.rt,
+                                        &seg.workload,
+                                        task.period,
+                                    );
+                                    if served.is_none() {
+                                        metrics.lock().unwrap().hangs += 1;
+                                        break; // abandon the rest of the segment
+                                    }
                                 }
                             }
                             LiveMode::FmlpPlus | LiveMode::Mpcp => {

@@ -138,6 +138,29 @@ impl GpuClient {
             .ok()?;
         rx.recv().ok()
     }
+
+    /// [`launch`] with a watchdog: wait at most `timeout` for the server
+    /// to run the kernel. Returns `None` when the deadline passes (hung
+    /// or wedged GPU server) instead of blocking the executive forever —
+    /// the live analog of the DES θ hang-detection bound. The abandoned
+    /// reply is dropped harmlessly: the server's eventual `send` fails
+    /// and it moves on.
+    ///
+    /// [`launch`]: GpuClient::launch
+    pub fn launch_bounded(
+        &self,
+        task: usize,
+        prio: u32,
+        rt: bool,
+        workload: &str,
+        timeout: Duration,
+    ) -> Option<Duration> {
+        let (reply, rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(LaunchReq { task, prio, rt, workload: workload.to_string(), reply })
+            .ok()?;
+        rx.recv_timeout(timeout).ok()
+    }
 }
 
 #[cfg(test)]
@@ -214,6 +237,37 @@ mod tests {
             ],
         );
         assert_eq!(order, ["t1", "t4", "t7", "t4"]);
+    }
+
+    #[test]
+    fn bounded_launch_times_out_on_a_hung_server() {
+        // A server whose kernel hangs (sleeps far past the watchdog
+        // bound) must not wedge the client: launch_bounded returns None
+        // within the timeout, and the server survives the dropped reply.
+        let (tx, rx) = channel();
+        let client = GpuClient { tx };
+        std::thread::scope(|s| {
+            let server = s.spawn(move || {
+                serve_with(rx, ServiceMode::Fifo, |w| {
+                    if w == "hang" {
+                        std::thread::sleep(Duration::from_millis(200));
+                    }
+                    Duration::from_micros(1)
+                })
+            });
+            let t0 = std::time::Instant::now();
+            let r = client.launch_bounded(0, 1, true, "hang", Duration::from_millis(10));
+            assert!(r.is_none(), "watchdog must fire on a hung kernel");
+            assert!(
+                t0.elapsed() < Duration::from_millis(150),
+                "watchdog returned only after the hang finished"
+            );
+            // The server keeps serving after the abandoned reply.
+            let r = client.launch_bounded(0, 1, true, "ok", Duration::from_secs(5));
+            assert_eq!(r, Some(Duration::from_micros(1)));
+            drop(client);
+            assert_eq!(server.join().unwrap(), 2);
+        });
     }
 
     #[test]

@@ -23,8 +23,16 @@
 //!    overheads, across utilization. Exercises the first-class
 //!    heterogeneous-platform path end-to-end: `Platform::heterogeneous`
 //!    → taskgen (WFD over engines) → per-engine analysis sets → DES.
+//! 4. **Overload survival** (`scenarios_overload.csv`): a deterministic
+//!    WCET-overrun ramp ([`FaultPlan::ramp`]) over the middle third of
+//!    the horizon, crossed with every [`DeadlineMissAction`] — miss
+//!    ratio, pooled tardiness p50/p99, abort ratio, and recovery time
+//!    (how long past the ramp's end the last miss/abort lands).
+//! 5. **Load-adaptive policy switching** (`scenarios_adaptive.csv`):
+//!    fixed RR, fixed EDF, and the windowed-miss-ratio RR↔EDF governor
+//!    ([`AdaptivePolicy`]) under the same overrun ramp.
 //!
-//! All three run through the sharded `sweep/` worker pool; results and
+//! All five run through the sharded `sweep/` worker pool; results and
 //! CSV bytes are identical for every `--jobs` value
 //! (`rust/tests/scenarios.rs` pins it, plus per-sub-sweep anchors).
 //!
@@ -36,15 +44,18 @@ use crate::analysis::{approach_schedulable, Approach};
 use crate::experiments::registry::{Experiment, FlagSpec};
 use crate::experiments::sink::Sink;
 use crate::experiments::{approaches, ExpConfig};
-use crate::model::{config, ms, GpuContext, Platform, Time};
+use crate::model::{
+    config, ms, AdaptivePolicy, DeadlineMissAction, FaultPlan, GpuContext, Platform, Time,
+};
 use crate::sim::{simulate, Policy, SimConfig};
 use crate::sweep::{self, memo};
 use crate::taskgen::GenParams;
 use crate::util::csv::CsvTable;
 use crate::util::error::Result;
+use crate::util::stats::percentile;
 
 /// The sub-sweep names accepted by `gcaps exp scenarios --only <name>`.
-pub const SCENARIOS: [&str; 3] = ["epstheta", "edfvfp", "hetero"];
+pub const SCENARIOS: [&str; 5] = ["epstheta", "edfvfp", "hetero", "overload", "adaptive"];
 
 /// DES horizon per replica (µs as ms input): 6–100 jobs per task at
 /// Table 3 periods (30–500 ms) — enough for aggregate miss ratios
@@ -484,6 +495,290 @@ fn hetero_report(rows: &[HeteroRow]) -> String {
 }
 
 // ---------------------------------------------------------------------
+// (d) overload survival: overrun ramp × deadline-miss action
+// ---------------------------------------------------------------------
+
+/// WCET multipliers (percent) of the injected ramp; 100 is the
+/// fault-free control row.
+pub const OVERRUN_PCTS: [u32; 3] = [100, 200, 300];
+
+/// The generator knobs for the overload and adaptive sweeps — the same
+/// expression as the edfvfp (0.6, 0.4) point, so the memoized tasksets
+/// are shared with that sweep.
+pub fn overload_params() -> GenParams {
+    edfvfp_params(0.6, 0.4)
+}
+
+/// The ramp window: the middle third of the DES horizon, so every run
+/// has a clean pre-fault prefix and a post-fault recovery suffix.
+pub fn ramp_window() -> (Time, Time) {
+    let third = ms(DES_HORIZON_MS) / 3;
+    (third, 2 * third)
+}
+
+/// Pooled per-run overload observations (RT tasks only).
+#[derive(Debug, Clone, Default)]
+struct OverloadCell {
+    misses: u64,
+    jobs: u64,
+    aborted: u64,
+    /// Tardiness (ms) of every completed RT job.
+    tardy_ms: Vec<f64>,
+    /// µs past the ramp's end of the last miss/abort (0 = quiet or
+    /// recovered before the ramp ended).
+    recovery_us: Time,
+    /// Adaptive RR↔EDF switches performed.
+    switches: u64,
+}
+
+/// One DES run under an overrun ramp; `pct == 100` runs with an empty
+/// fault plan (pinned bit-identical to the no-fault baseline).
+fn overload_run(
+    ts: &crate::model::TaskSet,
+    policy: Policy,
+    action: DeadlineMissAction,
+    pct: u32,
+    adaptive: Option<AdaptivePolicy>,
+) -> OverloadCell {
+    let (start, end) = ramp_window();
+    let mut cfg = SimConfig::new(policy, ms(DES_HORIZON_MS));
+    if pct != 100 {
+        cfg = cfg.with_faults(FaultPlan::ramp(ts, start, end, pct, pct));
+    }
+    if action != DeadlineMissAction::Log {
+        cfg = cfg.with_miss_actions(vec![action; ts.tasks.len()]);
+    }
+    if let Some(a) = adaptive {
+        cfg = cfg.with_adaptive(a);
+    }
+    let res = simulate(ts, &cfg);
+    let mut cell = OverloadCell::default();
+    for t in ts.rt_tasks() {
+        let m = &res.per_task[t.id];
+        cell.misses += m.deadline_misses;
+        cell.jobs += m.jobs;
+        cell.aborted += m.aborted;
+        cell.tardy_ms.extend(m.tardiness(t.deadline).iter().map(|&x| x as f64 / 1000.0));
+    }
+    cell.recovery_us = res.run.last_tardy.saturating_sub(end);
+    cell.switches = res.run.policy_switches;
+    cell
+}
+
+/// One overload result row (policy fixed at GCAPS — the preemptive
+/// core the miss actions are designed around).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadRow {
+    pub overrun_pct: u32,
+    pub action: DeadlineMissAction,
+    /// (misses + aborts) / (completed + aborted) over RT jobs.
+    pub miss_ratio: f64,
+    pub tardy_p50_ms: f64,
+    pub tardy_p99_ms: f64,
+    /// aborted / (completed + aborted) over RT jobs.
+    pub abort_ratio: f64,
+    /// Worst per-replica time past the ramp's end of the last
+    /// miss/abort (ms).
+    pub recovery_ms: f64,
+}
+
+fn fold_cells(
+    slice: &[Option<OverloadCell>],
+) -> (u64, u64, u64, Vec<f64>, Time, u64) {
+    let (mut m, mut j, mut a, mut rec, mut sw) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut tardy = Vec::new();
+    for cell in slice.iter().flatten() {
+        m += cell.misses;
+        j += cell.jobs;
+        a += cell.aborted;
+        tardy.extend_from_slice(&cell.tardy_ms);
+        rec = rec.max(cell.recovery_us);
+        sw += cell.switches;
+    }
+    (m, j, a, tardy, rec, sw)
+}
+
+/// Sweep (d): GCAPS DES under the overrun ramp, every overrun level ×
+/// every miss action. DES replicas are capped at [`MAX_SIM_TASKSETS`].
+pub fn overload_sweep(cfg: &ExpConfig) -> Vec<OverloadRow> {
+    let points: Vec<(u32, DeadlineMissAction)> = OVERRUN_PCTS
+        .iter()
+        .flat_map(|&pct| DeadlineMissAction::ALL.iter().map(move |&a| (pct, a)))
+        .collect();
+    let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<Option<OverloadCell>> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            let (pct, action) = points[pi];
+            (ti < n_sim).then(|| {
+                let ts = memo::taskset(seed, &overload_params(), ti);
+                overload_run(&ts, Policy::Gcaps, action, pct, None)
+            })
+        });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pi, &(pct, action))| {
+            let (m, j, a, mut tardy, rec, _) = fold_cells(&per_cell[pi * n..(pi + 1) * n]);
+            let done = (j + a).max(1) as f64;
+            OverloadRow {
+                overrun_pct: pct,
+                action,
+                miss_ratio: (m + a) as f64 / done,
+                tardy_p50_ms: percentile(&mut tardy, 50.0).unwrap_or(0.0),
+                tardy_p99_ms: percentile(&mut tardy, 99.0).unwrap_or(0.0),
+                abort_ratio: a as f64 / done,
+                recovery_ms: rec as f64 / 1000.0,
+            }
+        })
+        .collect()
+}
+
+/// Format sweep (d) as its CSV.
+pub fn overload_csv(rows: &[OverloadRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "overrun_pct",
+        "miss_action",
+        "miss_ratio",
+        "tardiness_p50_ms",
+        "tardiness_p99_ms",
+        "abort_ratio",
+        "recovery_ms",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.overrun_pct.to_string(),
+            r.action.label().to_string(),
+            format!("{:.5}", r.miss_ratio),
+            format!("{:.3}", r.tardy_p50_ms),
+            format!("{:.3}", r.tardy_p99_ms),
+            format!("{:.5}", r.abort_ratio),
+            format!("{:.3}", r.recovery_ms),
+        ]);
+    }
+    csv
+}
+
+fn overload_report(rows: &[OverloadRow]) -> String {
+    let mut out = String::from(
+        "== Scenarios (d): overload survival (gcaps DES, WCET ramp over the \
+         middle third) ==\n\
+         \x20   wcet%  action   miss    tardy p99   abort    recovery\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "    {:>4}%  {:<6}  {:>6.4}  {:>8.2}ms  {:>6.4}  {:>8.2}ms\n",
+            r.overrun_pct,
+            r.action.label(),
+            r.miss_ratio,
+            r.tardy_p99_ms,
+            r.abort_ratio,
+            r.recovery_ms
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// (e) load-adaptive RR↔EDF switching under the same ramp
+// ---------------------------------------------------------------------
+
+/// The compared execution modes: both fixed endpoints plus the governor.
+pub const ADAPTIVE_MODES: [&str; 3] = ["rr_fixed", "edf_fixed", "adaptive"];
+
+/// One adaptive result row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveRow {
+    pub mode: &'static str,
+    pub overrun_pct: u32,
+    pub miss_ratio: f64,
+    pub tardy_p99_ms: f64,
+    /// Total governor switches across the point's replicas (always 0
+    /// for the fixed modes).
+    pub policy_switches: u64,
+    pub recovery_ms: f64,
+}
+
+/// Sweep (e): fixed RR vs fixed EDF vs the adaptive governor at every
+/// overrun level of the ramp.
+pub fn adaptive_sweep(cfg: &ExpConfig) -> Vec<AdaptiveRow> {
+    let points: Vec<(usize, u32)> = (0..ADAPTIVE_MODES.len())
+        .flat_map(|mi| OVERRUN_PCTS.iter().map(move |&pct| (mi, pct)))
+        .collect();
+    let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<Option<OverloadCell>> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            let (mi, pct) = points[pi];
+            (ti < n_sim).then(|| {
+                let ts = memo::taskset(seed, &overload_params(), ti);
+                let (policy, adaptive) = match ADAPTIVE_MODES[mi] {
+                    "rr_fixed" => (Policy::TsgRr, None),
+                    "edf_fixed" => (Policy::GcapsEdf, None),
+                    _ => (Policy::TsgRr, Some(AdaptivePolicy::default())),
+                };
+                overload_run(&ts, policy, DeadlineMissAction::Log, pct, adaptive)
+            })
+        });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pi, &(mi, pct))| {
+            let (m, j, a, mut tardy, rec, sw) = fold_cells(&per_cell[pi * n..(pi + 1) * n]);
+            AdaptiveRow {
+                mode: ADAPTIVE_MODES[mi],
+                overrun_pct: pct,
+                miss_ratio: (m + a) as f64 / (j + a).max(1) as f64,
+                tardy_p99_ms: percentile(&mut tardy, 99.0).unwrap_or(0.0),
+                policy_switches: sw,
+                recovery_ms: rec as f64 / 1000.0,
+            }
+        })
+        .collect()
+}
+
+/// Format sweep (e) as its CSV.
+pub fn adaptive_csv(rows: &[AdaptiveRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "mode",
+        "overrun_pct",
+        "miss_ratio",
+        "tardiness_p99_ms",
+        "policy_switches",
+        "recovery_ms",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.mode.to_string(),
+            r.overrun_pct.to_string(),
+            format!("{:.5}", r.miss_ratio),
+            format!("{:.3}", r.tardy_p99_ms),
+            r.policy_switches.to_string(),
+            format!("{:.3}", r.recovery_ms),
+        ]);
+    }
+    csv
+}
+
+fn adaptive_report(rows: &[AdaptiveRow]) -> String {
+    let mut out = String::from(
+        "== Scenarios (e): load-adaptive RR<->EDF governor under the ramp ==\n\
+         \x20   mode       wcet%   miss    tardy p99   switches   recovery\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "    {:<9}  {:>4}%  {:>6.4}  {:>8.2}ms  {:>8}  {:>8.2}ms\n",
+            r.mode, r.overrun_pct, r.miss_ratio, r.tardy_p99_ms, r.policy_switches, r.recovery_ms
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
 // driver
 // ---------------------------------------------------------------------
 
@@ -491,9 +786,9 @@ fn only_value_ok(v: &str) -> bool {
     SCENARIOS.contains(&v)
 }
 
-/// Registry face: `gcaps exp scenarios [--only epstheta|edfvfp|hetero]`
-/// — all three sub-sweeps when none is selected, one table each
-/// (`scenarios_<name>`).
+/// Registry face: `gcaps exp scenarios [--only <sub-sweep>]` — all
+/// five sub-sweeps (see [`SCENARIOS`]) when none is selected, one
+/// table each (`scenarios_<name>`).
 pub struct ScenariosExp;
 
 impl Experiment for ScenariosExp {
@@ -502,13 +797,13 @@ impl Experiment for ScenariosExp {
     }
 
     fn about(&self) -> &'static str {
-        "Beyond-the-paper sweeps: eps x theta grids, EDF vs FP, hetero GPUs"
+        "Beyond-the-paper sweeps: eps x theta, EDF vs FP, hetero GPUs, overload"
     }
 
     fn flags(&self) -> &'static [FlagSpec] {
         static FLAGS: [FlagSpec; 1] = [FlagSpec {
             name: "only",
-            values: "epstheta|edfvfp|hetero",
+            values: "epstheta|edfvfp|hetero|overload|adaptive",
             check: only_value_ok,
         }];
         &FLAGS
@@ -531,6 +826,16 @@ impl Experiment for ScenariosExp {
             let rows = hetero_sweep(cfg);
             sink.table("scenarios_hetero", &hetero_csv(&rows));
             sink.text(&hetero_report(&rows));
+        }
+        if selected("overload") {
+            let rows = overload_sweep(cfg);
+            sink.table("scenarios_overload", &overload_csv(&rows));
+            sink.text(&overload_report(&rows));
+        }
+        if selected("adaptive") {
+            let rows = adaptive_sweep(cfg);
+            sink.table("scenarios_adaptive", &adaptive_csv(&rows));
+            sink.text(&adaptive_report(&rows));
         }
         Ok(())
     }
@@ -624,6 +929,46 @@ mod tests {
                 assert!((0.0..=1.0).contains(&y));
             }
             assert!((0.0..=1.0).contains(miss));
+        }
+    }
+
+    #[test]
+    fn overload_rows_cover_the_grid_and_stress_shows() {
+        let rows = overload_sweep(&tiny());
+        assert_eq!(rows.len(), OVERRUN_PCTS.len() * DeadlineMissAction::ALL.len());
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.miss_ratio), "{r:?}");
+            assert!((0.0..=1.0).contains(&r.abort_ratio), "{r:?}");
+            assert!(r.tardy_p99_ms >= r.tardy_p50_ms, "{r:?}");
+            assert!(r.recovery_ms >= 0.0 && r.recovery_ms.is_finite(), "{r:?}");
+        }
+        let at = |pct: u32, a: DeadlineMissAction| {
+            rows.iter().find(|r| r.overrun_pct == pct && r.action == a).unwrap()
+        };
+        // A 3x WCET ramp on ~0.6 utilization must hurt: some overload
+        // symptom (late or aborted jobs) appears at 300%, and the Log
+        // rows degrade monotonically with the overrun level.
+        let worst = at(300, DeadlineMissAction::Log);
+        assert!(
+            worst.miss_ratio >= at(100, DeadlineMissAction::Log).miss_ratio,
+            "ramp reduced the miss ratio"
+        );
+        assert!(rows.iter().any(|r| r.miss_ratio > 0.0), "no overload symptom at any cell");
+        // Aborting actions are the only source of aborts; Log never aborts.
+        assert_eq!(at(300, DeadlineMissAction::Log).abort_ratio, 0.0);
+        assert_eq!(at(100, DeadlineMissAction::Boost).abort_ratio, 0.0);
+    }
+
+    #[test]
+    fn adaptive_rows_cover_the_grid_and_fixed_modes_never_switch() {
+        let rows = adaptive_sweep(&tiny());
+        assert_eq!(rows.len(), ADAPTIVE_MODES.len() * OVERRUN_PCTS.len());
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.miss_ratio), "{r:?}");
+            assert!(r.tardy_p99_ms >= 0.0 && r.tardy_p99_ms.is_finite(), "{r:?}");
+            if r.mode != "adaptive" {
+                assert_eq!(r.policy_switches, 0, "{r:?}: fixed mode switched policy");
+            }
         }
     }
 

@@ -112,7 +112,10 @@ fn cmd_analyze(args: &Args) {
 }
 
 fn cmd_sim(args: &Args) {
-    args.reject_unknown("gcaps sim", &["policy", "seed", "taskset", "ms", "trace-out"]);
+    args.reject_unknown(
+        "gcaps sim",
+        &["policy", "seed", "taskset", "ms", "trace-out", "miss-action"],
+    );
     let policy = match args.flag("policy") {
         None => Policy::Gcaps,
         Some(l) => Policy::from_label(l).unwrap_or_else(|| {
@@ -128,6 +131,14 @@ fn cmd_sim(args: &Args) {
     if args.flag("trace-out").is_some() {
         cfg = cfg.with_trace();
     }
+    if let Some(l) = args.flag("miss-action") {
+        let action = gcaps::model::DeadlineMissAction::from_label(l).unwrap_or_else(|| {
+            fail(&format!(
+                "invalid value {l:?} for --miss-action (expected log|boost|abort|drop)"
+            ))
+        });
+        cfg = cfg.with_miss_actions(vec![action; ts.tasks.len()]);
+    }
     let res = simulate(&ts, &cfg);
     if let (Some(path), Some(trace)) = (args.flag("trace-out"), &res.trace) {
         let names: Vec<String> = ts.tasks.iter().map(|t| t.name.clone()).collect();
@@ -139,14 +150,15 @@ fn cmd_sim(args: &Args) {
     for t in &ts.tasks {
         let m = &res.per_task[t.id];
         println!(
-            "  tau{:<2} core {} prio {:>2}{} jobs {:>4} MORT {:>9} misses {}",
+            "  tau{:<2} core {} prio {:>2}{} jobs {:>4} MORT {:>9} misses {}{}",
             t.id,
             t.core,
             t.cpu_prio,
             if t.best_effort { " BE" } else { "   " },
             m.jobs,
             m.mort().map(|v| format!("{:.2} ms", to_ms(v))).unwrap_or_else(|| "-".into()),
-            m.deadline_misses
+            m.deadline_misses,
+            if m.aborted > 0 { format!(" aborted {}", m.aborted) } else { String::new() }
         );
     }
     println!(
@@ -371,7 +383,7 @@ fn main() {
                  gcaps analyze [--seed N | --taskset FILE]\n\
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
                  gcaps sim --policy <gcaps|tsg_rr|mpcp|fmlp+|gcaps_edf|server> [--seed N | --taskset FILE]\n\
-                 \x20         [--ms N] [--trace-out trace.json]\n\
+                 \x20         [--ms N] [--trace-out trace.json] [--miss-action log|boost|abort|drop]\n\
                  gcaps exp <name|all> [--tasksets N] [--seed N] [--jobs N]\n\
                  \x20         [--format csv|jsonl|all] [per-experiment flags]\n\
                  gcaps exp --list                        # registered experiments + their flags\n\
@@ -384,9 +396,10 @@ fn main() {
                  gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp|server] [--busy]\n\
                  gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N]\n\
                  \x20         [--no-timing]             # admission-control server (newline-JSON;\n\
-                 \x20          ops: admit/remove/check/headroom/stats/shutdown; incremental RTA\n\
-                 \x20          with warm-started fixed points; --no-timing zeroes latency stats\n\
-                 \x20          for byte-stable transcripts)"
+                 \x20          ops: admit/admit_best_effort/remove/check/headroom/stats/\n\
+                 \x20          report_overload/shutdown; incremental RTA with warm-started fixed\n\
+                 \x20          points; admit sheds best-effort tasks under overload; --no-timing\n\
+                 \x20          zeroes latency stats for byte-stable transcripts)"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,267 @@
+//! Fault injection and overload-response model (ROADMAP "overload &
+//! adaptive-policy" family): deterministic, seed-free fault *plans*
+//! applied by the DES engines, per-task deadline-miss actions (cf.
+//! Exo-OS `DeadlineMissAction`), and the windowed-miss-ratio policy
+//! switch behind the hybrid RR↔EDF adaptive mode (cf. scx_gamer).
+//!
+//! Everything here is plain data: a [`FaultPlan`] names the exact
+//! (task, job) pairs it perturbs, so two runs with the same plan are
+//! bit-identical regardless of worker count — the same determinism
+//! contract every sweep in this crate is pinned to.
+
+use crate::model::task::{ms, Time};
+use crate::model::TaskSet;
+
+/// What the engine does the instant a job is observed past its
+/// absolute deadline (checked at every settle round, so the reaction
+/// lands at the first event timestamp ≥ the deadline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeadlineMissAction {
+    /// Count the miss (in `deadline_misses` at completion) and keep
+    /// running — the behavior of every PR before this one.
+    #[default]
+    Log,
+    /// Keep running, but boost the job: it preempts everything on its
+    /// core and ranks first for its GPU engine until it completes.
+    Boost,
+    /// Abort the running job immediately (partial work is discarded;
+    /// the job counts in `aborted`, not `jobs`) and start the next
+    /// backlogged release, if any.
+    AbortJob,
+    /// Abort the job *and* drop the task: future releases are
+    /// discarded until a mode change re-enables it.
+    DropTask,
+}
+
+impl DeadlineMissAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeadlineMissAction::Log => "log",
+            DeadlineMissAction::Boost => "boost",
+            DeadlineMissAction::AbortJob => "abort",
+            DeadlineMissAction::DropTask => "drop",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<DeadlineMissAction> {
+        match s {
+            "log" => Some(DeadlineMissAction::Log),
+            "boost" => Some(DeadlineMissAction::Boost),
+            "abort" => Some(DeadlineMissAction::AbortJob),
+            "drop" => Some(DeadlineMissAction::DropTask),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [DeadlineMissAction; 4] = [
+        DeadlineMissAction::Log,
+        DeadlineMissAction::Boost,
+        DeadlineMissAction::AbortJob,
+        DeadlineMissAction::DropTask,
+    ];
+}
+
+/// One injected fault. Job indices are 0-based per task (the k-th
+/// release since t = 0, counting every release — including backlogged
+/// and dropped ones).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Scale job `job` of task `task`: every CPU segment runs at
+    /// `cpu_pct`% of its nominal C, every GPU segment's G^e at
+    /// `gpu_pct`% (G^m is CPU-side launch work and stays nominal).
+    /// 100 means unchanged; 200 doubles the demand.
+    WcetOverrun { task: usize, job: u64, cpu_pct: u32, gpu_pct: u32 },
+    /// GPU segment `seg` of job `job` never completes: the engine runs
+    /// it until the hang timeout elapses, then detects and aborts the
+    /// job (counted in `hangs` and `aborted`).
+    GpuHang { task: usize, job: u64, seg: usize },
+    /// Taskset hot-swap at time `at`: tasks in `disable` stop (their
+    /// in-flight job is aborted, future releases are dropped), tasks
+    /// in `enable` resume at their next periodic release.
+    ModeChange { at: Time, disable: Vec<usize>, enable: Vec<usize> },
+}
+
+/// A deterministic schedule of faults plus the hang-detection bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// How long a hung GPU segment occupies its engine before the
+    /// watchdog aborts the job (the live-path analog is the
+    /// `launch_bounded` timeout in `coordinator/gpu_server.rs`).
+    pub hang_timeout: Time,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { faults: Vec::new(), hang_timeout: ms(10.0) }
+    }
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The (cpu_pct, gpu_pct) scaling for job `job` of task `task`
+    /// ((100, 100) when unperturbed; the last matching fault wins).
+    pub fn overrun(&self, task: usize, job: u64) -> (u32, u32) {
+        let mut out = (100, 100);
+        for f in &self.faults {
+            if let Fault::WcetOverrun { task: t, job: j, cpu_pct, gpu_pct } = f {
+                if *t == task && *j == job {
+                    out = (*cpu_pct, *gpu_pct);
+                }
+            }
+        }
+        out
+    }
+
+    /// The hung GPU segment of job `job` of task `task`, if any.
+    pub fn hang(&self, task: usize, job: u64) -> Option<usize> {
+        let mut out = None;
+        for f in &self.faults {
+            if let Fault::GpuHang { task: t, job: j, seg } = f {
+                if *t == task && *j == job {
+                    out = Some(*seg);
+                }
+            }
+        }
+        out
+    }
+
+    /// A utilization-ramp plan: scale every job of every task whose
+    /// release falls in `[start, end)` by (`cpu_pct`, `gpu_pct`).
+    /// Assumes zero release offsets (release k of task i is at
+    /// `k * period` — the default for all scenario sweeps).
+    pub fn ramp(ts: &TaskSet, start: Time, end: Time, cpu_pct: u32, gpu_pct: u32) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        for t in &ts.tasks {
+            if t.period == 0 {
+                continue;
+            }
+            let first = start.div_ceil(t.period);
+            let mut k = first;
+            while k.saturating_mul(t.period) < end {
+                plan.faults.push(Fault::WcetOverrun {
+                    task: t.id,
+                    job: k,
+                    cpu_pct,
+                    gpu_pct,
+                });
+                k += 1;
+            }
+        }
+        plan
+    }
+}
+
+/// Scale a duration by an integer percentage without overflow
+/// (saturating at `Time::MAX`); `pct == 100` is an exact identity.
+pub fn scale(t: Time, pct: u32) -> Time {
+    if pct == 100 {
+        return t;
+    }
+    ((t as u128 * pct as u128) / 100).min(Time::MAX as u128) as Time
+}
+
+/// Load-adaptive policy switching: the engine starts under its
+/// configured policy and flips RR→EDF when the windowed RT miss ratio
+/// crosses `up_pct`%, back when it falls to `down_pct`% (hysteresis
+/// requires `down_pct < up_pct` to avoid flapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptivePolicy {
+    /// Sliding-window length (µs) over job completions/aborts.
+    pub window: Time,
+    /// Switch RR→EDF when `misses * 100 >= up_pct * jobs` in window.
+    pub up_pct: u32,
+    /// Switch EDF→RR when `misses * 100 <= down_pct * jobs` (or the
+    /// window empties).
+    pub down_pct: u32,
+    /// Minimum windowed jobs before either switch fires.
+    pub min_jobs: u64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy { window: ms(200.0), up_pct: 10, down_pct: 2, min_jobs: 5 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GpuSegment, Platform, Task, WaitMode};
+
+    #[test]
+    fn overrun_defaults_to_identity() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert_eq!(plan.overrun(3, 7), (100, 100));
+        assert_eq!(plan.hang(3, 7), None);
+    }
+
+    #[test]
+    fn last_matching_fault_wins() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::WcetOverrun { task: 1, job: 2, cpu_pct: 150, gpu_pct: 100 },
+                Fault::WcetOverrun { task: 1, job: 2, cpu_pct: 300, gpu_pct: 200 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(plan.overrun(1, 2), (300, 200));
+        assert_eq!(plan.overrun(1, 3), (100, 100));
+        assert_eq!(plan.overrun(0, 2), (100, 100));
+    }
+
+    #[test]
+    fn scale_is_exact_at_100_and_saturates() {
+        assert_eq!(scale(12345, 100), 12345);
+        assert_eq!(scale(1000, 150), 1500);
+        assert_eq!(scale(1000, 50), 500);
+        assert_eq!(scale(Time::MAX, 100), Time::MAX);
+        assert_eq!(scale(Time::MAX, 300), Time::MAX);
+        assert_eq!(scale(0, 300), 0);
+    }
+
+    #[test]
+    fn ramp_covers_releases_in_window() {
+        let t = Task {
+            id: 0,
+            name: "a".into(),
+            period: ms(10.0),
+            deadline: ms(10.0),
+            cpu_segments: vec![ms(1.0)],
+            gpu_segments: vec![GpuSegment::new(ms(0.1), ms(1.0))],
+            core: 0,
+            gpu: 0,
+            cpu_prio: 1,
+            gpu_prio: 1,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        };
+        let ts = TaskSet::new(vec![t], Platform::default());
+        let plan = FaultPlan::ramp(&ts, ms(25.0), ms(55.0), 200, 150);
+        // Releases at 30, 40, 50 ms → jobs 3, 4, 5.
+        let jobs: Vec<u64> = plan
+            .faults
+            .iter()
+            .map(|f| match f {
+                Fault::WcetOverrun { job, .. } => *job,
+                _ => panic!("unexpected fault kind"),
+            })
+            .collect();
+        assert_eq!(jobs, vec![3, 4, 5]);
+        assert_eq!(plan.overrun(0, 4), (200, 150));
+        assert_eq!(plan.overrun(0, 2), (100, 100));
+    }
+
+    #[test]
+    fn miss_action_labels_roundtrip() {
+        for a in DeadlineMissAction::ALL {
+            assert_eq!(DeadlineMissAction::from_label(a.label()), Some(a));
+        }
+        assert_eq!(DeadlineMissAction::from_label("bogus"), None);
+        assert_eq!(DeadlineMissAction::default(), DeadlineMissAction::Log);
+    }
+}

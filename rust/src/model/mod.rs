@@ -3,8 +3,10 @@
 //! GPU context queues (g = 1 reproduces the paper's platform).
 
 pub mod config;
+pub mod fault;
 pub mod task;
 pub mod taskset;
 
+pub use fault::{AdaptivePolicy, DeadlineMissAction, Fault, FaultPlan};
 pub use task::{ms, to_ms, GpuSegment, Task, Time, WaitMode};
 pub use taskset::{GpuContext, Platform, TaskSet};

@@ -18,6 +18,16 @@ pub struct Counters {
     pub rejects: u64,
     pub removes: u64,
     pub errors: u64,
+    /// Degraded-mode admissions (`admit_best_effort`).
+    pub be_admits: u64,
+    /// Best-effort tasks shed to make room for an RT admission.
+    pub sheds: u64,
+    /// Deadline misses reported by a live executive (`report_overload`).
+    pub misses: u64,
+    /// Job aborts reported by a live executive.
+    pub aborts: u64,
+    /// Priority boosts reported by a live executive.
+    pub boosts: u64,
     timing: bool,
     ring: Vec<f64>,
     next: usize,
@@ -39,10 +49,22 @@ impl Counters {
             rejects: 0,
             removes: 0,
             errors: 0,
+            be_admits: 0,
+            sheds: 0,
+            misses: 0,
+            aborts: 0,
+            boosts: 0,
             timing,
             ring: Vec::new(),
             next: 0,
         }
+    }
+
+    /// Sum of the overload-related counters. `stats` appends the
+    /// overload block only when this is nonzero, keeping legacy
+    /// transcripts byte-stable.
+    pub fn overload_total(&self) -> u64 {
+        self.be_admits + self.sheds + self.misses + self.aborts + self.boosts
     }
 
     /// Start timing one query; pass the returned token to [`finish`].

@@ -11,7 +11,17 @@
 //! {"op":"headroom","task":"cam","param":"c"}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
+//! {"op":"admit_best_effort","task":{...}}
+//! {"op":"report_overload","misses":3,"aborts":1,"boosts":0}
 //! ```
+//!
+//! `admit_best_effort` is the degraded-mode admission verb: the task is
+//! forced best-effort (no response-time guarantee, exempt from the RT
+//! priority-uniqueness rule) and accepted whenever the committed RT set
+//! stays schedulable alongside it. `report_overload` lets a live
+//! executive feed observed deadline misses / job aborts / priority
+//! boosts back into the session's overload counters (surfaced by
+//! `stats` once nonzero).
 //!
 //! Task spec fields: `name` (unique handle), `period_ms`, optional
 //! `deadline_ms` (default: period), `cpu_ms` (CPU segment WCETs, ms),
@@ -32,10 +42,16 @@ use crate::serve::json::Value;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Admit(TaskSpec),
+    /// Degraded-mode admission: force the spec best-effort and accept
+    /// it without a response-time guarantee (sheddable on overload).
+    AdmitBestEffort(TaskSpec),
     Remove(String),
     Check,
     Headroom { task: String, param: Param },
     Stats,
+    /// Overload telemetry from a live executive: counts accumulate into
+    /// the session counters and surface through `stats`.
+    ReportOverload { misses: u64, aborts: u64, boosts: u64 },
     Shutdown,
 }
 
@@ -226,7 +242,39 @@ pub fn parse_request(v: &Value) -> Result<Request, String> {
             Ok(Request::Headroom { task, param })
         }
         "stats" => Ok(Request::Stats),
+        "admit_best_effort" => {
+            let spec = v.get("task").ok_or("admit_best_effort: missing field \"task\"")?;
+            Ok(Request::AdmitBestEffort(
+                parse_task_spec(spec).map_err(|e| format!("admit_best_effort: {e}"))?,
+            ))
+        }
+        "report_overload" => {
+            let count = |key: &str| -> Result<u64, String> {
+                match v.get(key) {
+                    None => Ok(0),
+                    Some(f) => {
+                        let n = f.as_f64().ok_or_else(|| {
+                            format!("report_overload: non-numeric field {key:?}")
+                        })?;
+                        if n < 0.0 || n.fract() != 0.0 || n >= u64::MAX as f64 {
+                            return Err(format!(
+                                "report_overload: field {key:?} must be a non-negative integer"
+                            ));
+                        }
+                        Ok(n as u64)
+                    }
+                }
+            };
+            Ok(Request::ReportOverload {
+                misses: count("misses")?,
+                aborts: count("aborts")?,
+                boosts: count("boosts")?,
+            })
+        }
         "shutdown" => Ok(Request::Shutdown),
+        // NOTE: the unknown-op message below is pinned byte-for-byte by
+        // tests/data/serve_golden.jsonl — new verbs get arms above, the
+        // string stays as shipped.
         other => Err(format!(
             "unknown op {other:?} (expected admit|remove|check|headroom|stats|shutdown)"
         )),
@@ -287,6 +335,32 @@ mod tests {
             req(r#"{"op":"headroom","task":"cam","param":"ge"}"#),
             Ok(Request::Headroom { task: "cam".into(), param: Param::Ge })
         );
+    }
+
+    #[test]
+    fn overload_ops_parse() {
+        let r = req(
+            r#"{"op":"admit_best_effort","task":{"name":"bg","period_ms":50,"cpu_ms":[2],"prio":1}}"#,
+        )
+        .unwrap();
+        let Request::AdmitBestEffort(spec) = r else { panic!("not admit_best_effort") };
+        assert_eq!(spec.name, "bg");
+        assert_eq!(
+            req(r#"{"op":"report_overload","misses":3,"aborts":1}"#),
+            Ok(Request::ReportOverload { misses: 3, aborts: 1, boosts: 0 })
+        );
+        assert_eq!(
+            req(r#"{"op":"report_overload"}"#),
+            Ok(Request::ReportOverload { misses: 0, aborts: 0, boosts: 0 })
+        );
+        for bad in [
+            r#"{"op":"admit_best_effort"}"#,
+            r#"{"op":"report_overload","misses":-1}"#,
+            r#"{"op":"report_overload","misses":1.5}"#,
+            r#"{"op":"report_overload","misses":"many"}"#,
+        ] {
+            assert!(req(bad).is_err(), "{bad} should fail");
+        }
     }
 
     #[test]

@@ -116,10 +116,14 @@ impl Session {
     fn dispatch(&mut self, req: Request) -> Value {
         match req {
             Request::Admit(spec) => self.admit(spec),
+            Request::AdmitBestEffort(spec) => self.admit_best_effort(spec),
             Request::Remove(name) => self.remove(&name),
             Request::Check => self.check(),
             Request::Headroom { task, param } => self.headroom(&task, param),
             Request::Stats => self.stats(),
+            Request::ReportOverload { misses, aborts, boosts } => {
+                self.report_overload(misses, aborts, boosts)
+            }
             Request::Shutdown => unreachable!("handled in handle_line"),
         }
     }
@@ -181,6 +185,65 @@ impl Session {
                 ("response_ms", r.map_or(Value::Null, |t| Value::Num(to_ms(t)))),
             ])
         } else {
+            // Graceful degradation: before rejecting an RT admission,
+            // try shedding admitted best-effort tasks (oldest first) to
+            // make room. Committed only when the shed set analyses
+            // schedulable; otherwise every structure is restored and the
+            // legacy reject path runs unchanged. The loop is skipped
+            // entirely when no BE task is admitted, so non-degraded
+            // sessions keep their exact historical behavior.
+            if !spec.best_effort
+                && self.ts.tasks.iter().any(|t| t.best_effort && t.name != spec.name)
+            {
+                let saved_ts = self.ts.clone();
+                let saved_prep = self.prep.clone();
+                let mut shed: Vec<String> = Vec::new();
+                while let Some(k) = self
+                    .ts
+                    .tasks
+                    .iter()
+                    .position(|t| t.best_effort && t.name != spec.name)
+                {
+                    shed.push(self.ts.tasks[k].name.clone());
+                    self.ts.tasks.remove(k);
+                    for i in k..self.ts.tasks.len() {
+                        self.ts.tasks[i].id = i;
+                    }
+                    self.prep.remove_task(k);
+                    // Cold: the maps shrank, warm hints are invalid.
+                    let r = self.analyze(&[]);
+                    if r.schedulable {
+                        self.counters.admits += 1;
+                        self.counters.sheds += shed.len() as u64;
+                        let id = self
+                            .ts
+                            .tasks
+                            .iter()
+                            .position(|t| t.name == spec.name)
+                            .expect("candidate survives shedding");
+                        let resp = r.response[id];
+                        self.warm = r.response;
+                        return obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("op", Value::Str("admit".into())),
+                            ("admitted", Value::Bool(true)),
+                            ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+                            (
+                                "response_ms",
+                                resp.map_or(Value::Null, |t| Value::Num(to_ms(t))),
+                            ),
+                            (
+                                "shed",
+                                Value::Arr(
+                                    shed.into_iter().map(Value::Str).collect(),
+                                ),
+                            ),
+                        ]);
+                    }
+                }
+                self.ts = saved_ts;
+                self.prep = saved_prep;
+            }
             // Roll the delta back; the roundtrip is pinned bit-equal to
             // never having admitted (tests/kernel_equivalence.rs).
             self.prep.remove_task(n);
@@ -205,6 +268,72 @@ impl Session {
                 ("tasks", Value::Num(self.ts.tasks.len() as f64)),
             ])
         }
+    }
+
+    /// Degraded-mode admission: force the spec best-effort and accept
+    /// it whenever the committed RT set stays schedulable alongside it
+    /// (the BE task itself gets no response bound and is first in line
+    /// to be shed by a later RT admission under overload).
+    fn admit_best_effort(&mut self, mut spec: TaskSpec) -> Value {
+        spec.best_effort = true;
+        if self.ts.tasks.iter().any(|t| t.name == spec.name) {
+            self.counters.rejects += 1;
+            return rejected(
+                "admit_best_effort",
+                &format!("duplicate task name {:?}", spec.name),
+            );
+        }
+        let n = self.ts.tasks.len();
+        let task = spec.to_task(n, self.approach.wait_mode());
+        self.ts.tasks.push(task);
+        if let Err(e) = self.ts.validate() {
+            self.ts.tasks.pop();
+            self.counters.rejects += 1;
+            return rejected("admit_best_effort", &e);
+        }
+        self.prep.admit_task(&self.ts);
+        let mut warm = self.warm.clone();
+        warm.push(None);
+        let res = self.analyze(&warm);
+        if res.schedulable {
+            self.counters.be_admits += 1;
+            self.warm = res.response;
+            obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", Value::Str("admit_best_effort".into())),
+                ("admitted", Value::Bool(true)),
+                ("best_effort", Value::Bool(true)),
+                ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+            ])
+        } else {
+            // Even as pure best-effort load the newcomer's blocking
+            // breaks an admitted RT bound — roll back and reject.
+            self.prep.remove_task(n);
+            self.ts.tasks.pop();
+            self.counters.rejects += 1;
+            obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", Value::Str("admit_best_effort".into())),
+                ("admitted", Value::Bool(false)),
+                ("reason", Value::Str("breaks admitted RT guarantees".into())),
+                ("tasks", Value::Num(self.ts.tasks.len() as f64)),
+            ])
+        }
+    }
+
+    /// Fold a live executive's overload telemetry into the session
+    /// counters and echo the running totals.
+    fn report_overload(&mut self, misses: u64, aborts: u64, boosts: u64) -> Value {
+        self.counters.misses = self.counters.misses.saturating_add(misses);
+        self.counters.aborts = self.counters.aborts.saturating_add(aborts);
+        self.counters.boosts = self.counters.boosts.saturating_add(boosts);
+        obj(vec![
+            ("ok", Value::Bool(true)),
+            ("op", Value::Str("report_overload".into())),
+            ("misses", Value::Num(self.counters.misses as f64)),
+            ("aborts", Value::Num(self.counters.aborts as f64)),
+            ("boosts", Value::Num(self.counters.boosts as f64)),
+        ])
     }
 
     fn remove(&mut self, name: &str) -> Value {
@@ -329,7 +458,7 @@ impl Session {
 
     fn stats(&mut self) -> Value {
         let lat = self.counters.latency();
-        obj(vec![
+        let mut fields = vec![
             ("ok", Value::Bool(true)),
             ("op", Value::Str("stats".into())),
             ("approach", Value::Str(self.approach.label().into())),
@@ -342,7 +471,20 @@ impl Session {
             ("latency_samples", Value::Num(lat.samples as f64)),
             ("latency_p50_us", Value::Num(lat.p50_us)),
             ("latency_p99_us", Value::Num(lat.p99_us)),
-        ])
+        ];
+        // Overload block: appended only once any overload counter is
+        // nonzero, so legacy transcripts (serve_golden.jsonl) stay
+        // byte-identical for sessions that never degrade.
+        if self.counters.overload_total() > 0 {
+            fields.extend([
+                ("be_admits", Value::Num(self.counters.be_admits as f64)),
+                ("sheds", Value::Num(self.counters.sheds as f64)),
+                ("misses", Value::Num(self.counters.misses as f64)),
+                ("aborts", Value::Num(self.counters.aborts as f64)),
+                ("boosts", Value::Num(self.counters.boosts as f64)),
+            ]);
+        }
+        obj(fields)
     }
 }
 
@@ -485,6 +627,103 @@ mod tests {
         );
         let r = line(&mut s, r#"{"op":"headroom","task":"cpu","param":"ge"}"#);
         assert!(r.contains(r#""ok":false"#) && r.contains("no GPU segments"), "{r}");
+    }
+
+    #[test]
+    fn admit_best_effort_accepts_without_guarantee() {
+        let mut s = session();
+        line(&mut s, &admit_line("cam", 100.0, 10, 0));
+        // CPU-only BE task whose priority collides with cam's: BE tasks
+        // are exempt from RT priority uniqueness and get no bound.
+        let r = line(
+            &mut s,
+            r#"{"op":"admit_best_effort","task":{"name":"bg","period_ms":50,"cpu_ms":[5],"core":1,"prio":10}}"#,
+        );
+        assert!(r.contains(r#""op":"admit_best_effort""#), "{r}");
+        assert!(r.contains(r#""admitted":true"#) && r.contains(r#""best_effort":true"#), "{r}");
+        assert_eq!(s.num_tasks(), 2);
+        assert!(s.ts.tasks[1].best_effort);
+        let r = line(
+            &mut s,
+            r#"{"op":"admit_best_effort","task":{"name":"bg","period_ms":50,"cpu_ms":[1],"prio":3}}"#,
+        );
+        assert!(r.contains(r#""admitted":false"#) && r.contains("duplicate"), "{r}");
+        let r = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(r.contains(r#""be_admits":1"#) && r.contains(r#""sheds":0"#), "{r}");
+    }
+
+    #[test]
+    fn rt_admission_sheds_best_effort_load() {
+        // TSG RR: best-effort kernels count toward every task's
+        // interleaving term, so a huge BE kernel breaks tight RT
+        // deadlines — exactly the shape shedding must rescue.
+        let mut s = Session::new(Platform::default(), Approach::TsgRrSuspend, false);
+        line(&mut s, &admit_line("a", 1000.0, 10, 0));
+        let r = line(
+            &mut s,
+            r#"{"op":"admit_best_effort","task":{"name":"bg","period_ms":1000,"cpu_ms":[1,1],"gpu_ms":[[0.5,400]],"core":1,"prio":1}}"#,
+        );
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+        // A 50 ms deadline cannot absorb bg's 400 ms interleave share;
+        // admission succeeds only by shedding bg.
+        let r = line(
+            &mut s,
+            r#"{"op":"admit","task":{"name":"rt2","period_ms":50,"cpu_ms":[1,1],"gpu_ms":[[0.5,10]],"core":2,"prio":20}}"#,
+        );
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+        assert!(r.contains(r#""shed":["bg"]"#), "{r}");
+        assert_eq!(s.num_tasks(), 2);
+        assert!(s.ts.tasks.iter().all(|t| t.name != "bg"));
+        let chk = line(&mut s, r#"{"op":"check"}"#);
+        assert!(chk.contains(r#""schedulable":true"#), "{chk}");
+        let st = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(st.contains(r#""sheds":1"#), "{st}");
+    }
+
+    #[test]
+    fn failed_shed_restores_best_effort_tasks() {
+        let mut s = Session::new(Platform::default(), Approach::TsgRrSuspend, false);
+        line(&mut s, &admit_line("a", 10.0, 10, 0));
+        let r = line(
+            &mut s,
+            r#"{"op":"admit_best_effort","task":{"name":"bg","period_ms":100,"cpu_ms":[1],"core":1,"prio":1}}"#,
+        );
+        assert!(r.contains(r#""admitted":true"#), "{r}");
+        // 9.7 ms of CPU inside a 10 ms period on core 0 cannot fit no
+        // matter how many BE tasks are shed — bg must survive intact.
+        let r = line(
+            &mut s,
+            r#"{"op":"admit","task":{"name":"hog","period_ms":10,"cpu_ms":[9.7],"core":0,"prio":5}}"#,
+        );
+        assert!(r.contains(r#""admitted":false"#) && !r.contains(r#""shed""#), "{r}");
+        assert_eq!(s.num_tasks(), 2);
+        assert!(s.ts.tasks.iter().any(|t| t.name == "bg"), "bg restored after failed shed");
+        let chk = line(&mut s, r#"{"op":"check"}"#);
+        assert!(chk.contains(r#""schedulable":true"#), "{chk}");
+        let st = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(st.contains(r#""sheds":0"#) && st.contains(r#""rejects":1"#), "{st}");
+    }
+
+    #[test]
+    fn report_overload_accumulates_and_surfaces_in_stats() {
+        let mut s = session();
+        let r = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(!r.contains("be_admits"), "clean session hides the overload block: {r}");
+        let r = line(&mut s, r#"{"op":"report_overload","misses":3,"aborts":1}"#);
+        assert!(
+            r.contains(r#""misses":3"#) && r.contains(r#""aborts":1"#) && r.contains(r#""boosts":0"#),
+            "{r}"
+        );
+        let r = line(&mut s, r#"{"op":"report_overload","misses":2,"boosts":4}"#);
+        assert!(r.contains(r#""misses":5"#) && r.contains(r#""boosts":4"#), "{r}");
+        let r = line(&mut s, r#"{"op":"stats"}"#);
+        assert!(
+            r.contains(r#""be_admits":0"#)
+                && r.contains(r#""misses":5"#)
+                && r.contains(r#""aborts":1"#)
+                && r.contains(r#""boosts":4"#),
+            "{r}"
+        );
     }
 
     #[test]

@@ -70,6 +70,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::model::fault::{self, AdaptivePolicy, DeadlineMissAction, Fault, FaultPlan};
 use crate::model::{TaskSet, Time, WaitMode};
 use crate::sim::metrics::{RunMetrics, TaskMetrics};
 use crate::sim::trace::{Activity, Resource, Trace, TraceEvent};
@@ -86,11 +87,31 @@ pub struct SimConfig {
     pub offsets: Vec<Time>,
     /// Capture a trace (Gantt) — costs memory, off for sweeps.
     pub trace: bool,
+    /// Injected faults (WCET overruns, GPU hangs, mode changes).
+    /// Empty by default: steady-state behavior is bit-identical to
+    /// pre-fault engines.
+    pub faults: FaultPlan,
+    /// Per-task deadline-miss actions (indexed by task id; missing
+    /// entries default to [`DeadlineMissAction::Log`], the legacy
+    /// count-only behavior).
+    pub miss_actions: Vec<DeadlineMissAction>,
+    /// Load-adaptive RR↔EDF policy switching (None = fixed policy).
+    /// Only meaningful when `policy` is `TsgRr` or `GcapsEdf`; other
+    /// start policies never switch.
+    pub adaptive: Option<AdaptivePolicy>,
 }
 
 impl SimConfig {
     pub fn new(policy: Policy, duration: Time) -> SimConfig {
-        SimConfig { policy, duration, offsets: vec![], trace: false }
+        SimConfig {
+            policy,
+            duration,
+            offsets: vec![],
+            trace: false,
+            faults: FaultPlan::default(),
+            miss_actions: vec![],
+            adaptive: None,
+        }
     }
 
     pub fn with_offsets(mut self, offsets: Vec<Time>) -> SimConfig {
@@ -101,6 +122,26 @@ impl SimConfig {
     pub fn with_trace(mut self) -> SimConfig {
         self.trace = true;
         self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> SimConfig {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_miss_actions(mut self, actions: Vec<DeadlineMissAction>) -> SimConfig {
+        self.miss_actions = actions;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: AdaptivePolicy) -> SimConfig {
+        self.adaptive = Some(adaptive);
+        self
+    }
+
+    /// The miss action for task `i` (`Log` when unspecified).
+    pub fn action(&self, i: usize) -> DeadlineMissAction {
+        self.miss_actions.get(i).copied().unwrap_or_default()
     }
 }
 
@@ -159,6 +200,22 @@ struct TState {
     drv_started: Time,
     /// Lock-policy FIFO ticket (FMLP+ ordering).
     ticket: u64,
+    /// Index of the NEXT job to start (0-based; the current job's
+    /// index is `job - 1`). Keys `FaultPlan` lookups.
+    job: u64,
+    /// WCET scaling of the current job (percent; 100 = nominal).
+    cpu_pct: u32,
+    gpu_pct: u32,
+    /// The current job's hung GPU segment, if one is injected.
+    hang_seg: Option<usize>,
+    /// The currently-running GPU segment is the hung one (its
+    /// `gpu_rem` counts down the hang timeout, not real work).
+    hanging: bool,
+    /// `DeadlineMissAction::Boost` applied to the current job.
+    boosted: bool,
+    /// The current job's deadline miss has been acted on (non-Log
+    /// actions fire at most once per job).
+    miss_handled: bool,
 }
 
 /// GCAPS driver state (Alg. 1) + the device state of ONE GPU engine.
@@ -207,6 +264,24 @@ struct Engine<'a> {
     run: RunMetrics,
     trace: Option<Trace>,
     cpu_alloc: Vec<Option<usize>>,
+    /// The ACTIVE policy — equals `cfg.policy` unless the
+    /// load-adaptive governor has switched it (RR↔EDF).
+    pol: Policy,
+    /// Dropped tasks (`DropTask` miss action / mode-change disable):
+    /// releases are discarded while set.
+    paused: Vec<bool>,
+    /// Injected mode changes, sorted by time (stable, so equal-time
+    /// changes apply in plan order): (at, disable, enable).
+    mode_changes: Vec<(Time, Vec<usize>, Vec<usize>)>,
+    mode_idx: usize,
+    /// Sliding miss-ratio window for the adaptive governor:
+    /// (completion/abort time, missed).
+    mwin: VecDeque<(Time, bool)>,
+    win_jobs: u64,
+    win_misses: u64,
+    /// Any non-Log deadline-miss action configured? (Gates the
+    /// per-round miss scan so Log-only runs skip it entirely.)
+    has_miss_actions: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -223,6 +298,13 @@ impl<'a> Engine<'a> {
                 backlog: Default::default(),
                 drv_started: 0,
                 ticket: 0,
+                job: 0,
+                cpu_pct: 100,
+                gpu_pct: 100,
+                hang_seg: None,
+                hanging: false,
+                boosted: false,
+                miss_handled: false,
             })
             .collect();
         let mut calendar = BinaryHeap::with_capacity(n);
@@ -233,6 +315,20 @@ impl<'a> Engine<'a> {
         for (i, t) in ts.tasks.iter().enumerate() {
             on_engine[t.gpu].push(i);
         }
+        let mut mode_changes: Vec<(Time, Vec<usize>, Vec<usize>)> = cfg
+            .faults
+            .faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::ModeChange { at, disable, enable } => {
+                    Some((*at, disable.clone(), enable.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        mode_changes.sort_by_key(|m| m.0);
+        let has_miss_actions =
+            cfg.miss_actions.iter().any(|a| *a != DeadlineMissAction::Log);
         Engine {
             ts,
             cfg,
@@ -246,6 +342,14 @@ impl<'a> Engine<'a> {
             run: RunMetrics::default(),
             trace: cfg.trace.then(Trace::default),
             cpu_alloc: vec![None; ts.platform.num_cpus],
+            pol: cfg.policy,
+            paused: vec![false; n],
+            mode_changes,
+            mode_idx: 0,
+            mwin: VecDeque::new(),
+            win_jobs: 0,
+            win_misses: 0,
+            has_miss_actions,
         }
     }
 
@@ -263,8 +367,12 @@ impl<'a> Engine<'a> {
 
     /// GPU urgency ranking: fixed π^g under GCAPS, earliest absolute job
     /// deadline under the EDF extension (higher rank = more urgent).
+    /// A `Boost`-ed job outranks everything.
     fn gpu_rank(&self, i: usize) -> u64 {
-        match self.cfg.policy {
+        if self.st[i].boosted {
+            return u64::MAX;
+        }
+        match self.pol {
             Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
             _ => self.ts.tasks[i].gpu_prio as u64,
         }
@@ -274,7 +382,17 @@ impl<'a> Engine<'a> {
 
     fn start_job(&mut self, i: usize, release: Time) {
         let t = &self.ts.tasks[i];
+        let job = self.st[i].job;
+        let (cpu_pct, gpu_pct) = self.cfg.faults.overrun(i, job);
+        let hang_seg = self.cfg.faults.hang(i, job);
         let s = &mut self.st[i];
+        s.job = job + 1;
+        s.cpu_pct = cpu_pct;
+        s.gpu_pct = gpu_pct;
+        s.hang_seg = hang_seg;
+        s.hanging = false;
+        s.boosted = false;
+        s.miss_handled = false;
         s.release = release;
         // Saturating: at long horizons (or near-MAX release offsets) the
         // unchecked sum wraps, silently inverting the EDF rank
@@ -283,7 +401,7 @@ impl<'a> Engine<'a> {
         s.abs_deadline = release.saturating_add(t.deadline);
         s.seg = 0;
         s.phase = Phase::Cpu;
-        s.cpu_rem = t.cpu_segments[0];
+        s.cpu_rem = fault::scale(t.cpu_segments[0], cpu_pct);
         if let Some(tr) = &mut self.trace {
             tr.releases.push((i, release));
         }
@@ -294,7 +412,7 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         let seg = self.st[i].seg;
         if seg < t.eta_g() {
-            match self.cfg.policy {
+            match self.pol {
                 Policy::Gcaps | Policy::GcapsEdf => {
                     self.st[i].phase = Phase::DrvCall { ending: false };
                     self.st[i].cpu_rem = self.alpha_of(i);
@@ -316,13 +434,21 @@ impl<'a> Engine<'a> {
     }
 
     /// Start GPU segment `seg`: G^m on the CPU in parallel with G^e on
-    /// the GPU (asynchronous launch model, paper §4).
+    /// the GPU (asynchronous launch model, paper §4). An injected hang
+    /// replaces G^e with the hang timeout: the segment occupies the
+    /// engine until the watchdog detects and aborts it. G^m stays
+    /// nominal (CPU-side launch work); G^e scales with the overrun.
     fn begin_gpu_segment(&mut self, i: usize) {
         let t = &self.ts.tasks[i];
         let seg = self.st[i].seg;
         self.st[i].phase = Phase::GpuActive;
         self.st[i].cpu_rem = t.gpu_segments[seg].misc;
-        self.st[i].gpu_rem = t.gpu_segments[seg].exec;
+        self.st[i].gpu_rem = if self.st[i].hang_seg == Some(seg) {
+            self.st[i].hanging = true;
+            self.cfg.faults.hang_timeout
+        } else {
+            fault::scale(t.gpu_segments[seg].exec, self.st[i].gpu_pct)
+        };
         // Zero-length segment: completion-ready the instant it starts.
         if self.st[i].cpu_rem == 0 && self.st[i].gpu_rem == 0 {
             self.gpu_done.push(i);
@@ -331,7 +457,7 @@ impl<'a> Engine<'a> {
 
     /// Both halves of the GPU segment are done.
     fn finish_gpu_segment(&mut self, i: usize) {
-        match self.cfg.policy {
+        match self.pol {
             Policy::Gcaps | Policy::GcapsEdf => {
                 self.st[i].phase = Phase::DrvCall { ending: true };
                 self.st[i].cpu_rem = self.alpha_of(i);
@@ -351,7 +477,8 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         self.st[i].seg += 1;
         self.st[i].phase = Phase::Cpu;
-        self.st[i].cpu_rem = t.cpu_segments[self.st[i].seg];
+        self.st[i].cpu_rem =
+            fault::scale(t.cpu_segments[self.st[i].seg], self.st[i].cpu_pct);
     }
 
     fn complete_job(&mut self, i: usize) {
@@ -362,12 +489,54 @@ impl<'a> Engine<'a> {
         self.metrics[i].jobs += 1;
         if missed {
             self.metrics[i].deadline_misses += 1;
+            self.run.last_tardy = self.now;
+        }
+        if self.cfg.adaptive.is_some() {
+            self.mwin.push_back((self.now, missed));
+            self.win_jobs += 1;
+            if missed {
+                self.win_misses += 1;
+            }
         }
         if let Some(tr) = &mut self.trace {
             tr.completions.push((i, self.now));
         }
+        let s = &mut self.st[i];
         s.phase = Phase::Idle;
         if let Some(next) = s.backlog.pop_front() {
+            self.start_job(i, next);
+        }
+    }
+
+    /// Abort task `i`'s in-flight job: discard partial work, release
+    /// every engine/lock structure it occupies, count it in `aborted`,
+    /// and start the next backlogged release (unless the task is
+    /// paused). Used by `AbortJob`/`DropTask` miss actions, the GPU
+    /// hang watchdog, and mode-change disables.
+    fn abort_job(&mut self, i: usize) {
+        let g = self.gpu_of(i);
+        self.gpus[g].running.retain(|&k| k != i);
+        self.gpus[g].pending.retain(|&k| k != i);
+        self.gpus[g].ring.retain(|&k| k != i);
+        self.gpus[g].lock_queue.retain(|&(k, _)| k != i);
+        if self.gpus[g].lock_holder == Some(i) {
+            self.gpus[g].lock_holder = None;
+        }
+        self.metrics[i].aborted += 1;
+        self.run.last_tardy = self.now;
+        if self.cfg.adaptive.is_some() {
+            self.mwin.push_back((self.now, true));
+            self.win_jobs += 1;
+            self.win_misses += 1;
+        }
+        let s = &mut self.st[i];
+        s.phase = Phase::Idle;
+        s.cpu_rem = 0;
+        s.gpu_rem = 0;
+        s.hanging = false;
+        if self.paused[i] {
+            self.st[i].backlog.clear();
+        } else if let Some(next) = self.st[i].backlog.pop_front() {
             self.start_job(i, next);
         }
     }
@@ -454,7 +623,7 @@ impl<'a> Engine<'a> {
         if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
             return false;
         }
-        let idx = match self.cfg.policy {
+        let idx = match self.pol {
             Policy::Mpcp => self.gpus[g]
                 .lock_queue
                 .iter()
@@ -504,7 +673,7 @@ impl<'a> Engine<'a> {
                 // Server: the server executes G^m on the requester's
                 // behalf (on its own dedicated core, modelled on the
                 // engine row) — the requester holds a CPU only to spin.
-                if self.cfg.policy == Policy::Server {
+                if self.pol == Policy::Server {
                     self.ts.tasks[i].mode == WaitMode::BusyWait
                 } else {
                     self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
@@ -526,7 +695,7 @@ impl<'a> Engine<'a> {
         // Boosting is a lock-protocol mechanism only: the server model
         // has no critical-section CPU work on the requester's core (the
         // server owns a dedicated core), so nothing to boost.
-        let boosted = matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus)
+        let boosted = matches!(self.pol, Policy::Mpcp | Policy::FmlpPlus)
             && self.gpus[self.gpu_of(i)].lock_holder == Some(i)
             && matches!(self.st[i].phase, Phase::GpuActive)
             && self.st[i].cpu_rem > 0;
@@ -540,6 +709,12 @@ impl<'a> Engine<'a> {
             && self.st[i].cpu_rem < self.alpha_of(i)
         {
             return (1 << 41) | base;
+        }
+        // Deadline-miss Boost: the late job preempts everything on its
+        // core (below kernel sections and lock boosts, which model
+        // non-preemptible hardware/protocol state).
+        if self.st[i].boosted {
+            return (1 << 39) | base;
         }
         base
     }
@@ -569,7 +744,7 @@ impl<'a> Engine<'a> {
         if !(matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0) {
             return false;
         }
-        match self.cfg.policy {
+        match self.pol {
             Policy::TsgRr => true,
             Policy::Gcaps | Policy::GcapsEdf => {
                 self.ts.tasks[i].best_effort
@@ -603,7 +778,7 @@ impl<'a> Engine<'a> {
         let execing = |i: usize| {
             matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
         };
-        match self.cfg.policy {
+        match self.pol {
             Policy::Gcaps | Policy::GcapsEdf => {
                 // At most one RT task occupies the runlist; it runs
                 // exclusively. Otherwise the BE ring time-shares.
@@ -647,7 +822,7 @@ impl<'a> Engine<'a> {
                 // rotation). The sync baselines and the server are
                 // modelled overhead-free, as their analyses assume (the
                 // server RTA's 2ε per request is pure safety margin).
-                let charge = match self.cfg.policy {
+                let charge = match self.pol {
                     Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
                     Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
                         self.ts.platform.gpus[g].theta
@@ -679,6 +854,12 @@ impl<'a> Engine<'a> {
             // Saturating: a next-release past u64::MAX means "never"
             // (now can only reach it after the run loop has exited).
             self.calendar.push(Reverse((t.saturating_add(self.ts.tasks[i].period), i)));
+            if self.paused[i] {
+                // Dropped task: discard the release (the calendar still
+                // advances, so a later mode-change re-enable resumes on
+                // the task's own period grid).
+                continue;
+            }
             if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
                 self.start_job(i, t);
             } else {
@@ -687,6 +868,88 @@ impl<'a> Engine<'a> {
             any = true;
         }
         any
+    }
+
+    /// Apply due mode changes and evaluate the load-adaptive policy
+    /// governor. Runs once per event timestamp, before `settle()` —
+    /// mirrored at the same sequence point in the reference engine.
+    fn fault_tick(&mut self) {
+        while self.mode_idx < self.mode_changes.len()
+            && self.mode_changes[self.mode_idx].0 <= self.now
+        {
+            let (_, disable, enable) = self.mode_changes[self.mode_idx].clone();
+            for &i in &disable {
+                if i >= self.st.len() {
+                    continue;
+                }
+                self.paused[i] = true;
+                if self.st[i].phase != Phase::Idle {
+                    self.abort_job(i);
+                } else {
+                    self.st[i].backlog.clear();
+                }
+            }
+            for &i in &enable {
+                if i < self.st.len() {
+                    self.paused[i] = false;
+                }
+            }
+            self.mode_idx += 1;
+        }
+        if let Some(ap) = self.cfg.adaptive {
+            // Evict window entries older than `window`.
+            while let Some(&(t, missed)) = self.mwin.front() {
+                if t.saturating_add(ap.window) < self.now {
+                    self.mwin.pop_front();
+                    self.win_jobs -= 1;
+                    if missed {
+                        self.win_misses -= 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            // RR→EDF when the windowed miss ratio crosses up_pct;
+            // EDF→RR when it falls to down_pct (or the window empties).
+            // Start policies other than TsgRr/GcapsEdf never switch.
+            if self.pol == Policy::TsgRr
+                && self.win_jobs >= ap.min_jobs
+                && self.win_misses * 100 >= ap.up_pct as u64 * self.win_jobs
+            {
+                self.switch_policy(Policy::GcapsEdf);
+            } else if self.pol == Policy::GcapsEdf
+                && (self.win_jobs == 0
+                    || (self.win_jobs >= ap.min_jobs
+                        && self.win_misses * 100 <= ap.down_pct as u64 * self.win_jobs))
+            {
+                self.switch_policy(Policy::TsgRr);
+            }
+        }
+    }
+
+    /// Switch the active GPU policy, migrating per-engine structures:
+    /// to EDF every in-flight GPU segment joins the runlist (the next
+    /// settle round picks the earliest deadline); to RR the runlists
+    /// clear (the ring, refreshed every round, takes over — stale
+    /// driver-call pushes into `running` are inert under RR).
+    fn switch_policy(&mut self, to: Policy) {
+        if self.pol == to {
+            return;
+        }
+        self.pol = to;
+        self.run.policy_switches += 1;
+        for g in 0..self.gpus.len() {
+            self.gpus[g].running.clear();
+            self.gpus[g].pending.clear();
+            if to == Policy::GcapsEdf {
+                for idx in 0..self.on_engine[g].len() {
+                    let i = self.on_engine[g][idx];
+                    if matches!(self.st[i].phase, Phase::GpuActive) {
+                        self.gpus[g].running.push(i);
+                    }
+                }
+            }
+        }
     }
 
     fn next_horizon(&self) -> Time {
@@ -715,7 +978,7 @@ impl<'a> Engine<'a> {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
-                } else if self.cfg.policy == Policy::Server
+                } else if self.pol == Policy::Server
                     && matches!(self.st[i].phase, Phase::GpuActive)
                     && self.st[i].cpu_rem > 0
                 {
@@ -730,6 +993,28 @@ impl<'a> Engine<'a> {
                         h = h.min(self.now.saturating_add(gs.slice_rem));
                     }
                 }
+            }
+        }
+        // Fault/overload horizons: the next mode change, the first
+        // actionable deadline miss (detected at D + 1, the first
+        // instant strictly past the deadline), and the next adaptive-
+        // window eviction.
+        if self.mode_idx < self.mode_changes.len() {
+            h = h.min(self.mode_changes[self.mode_idx].0);
+        }
+        if self.has_miss_actions {
+            for i in 0..self.st.len() {
+                if self.st[i].phase != Phase::Idle
+                    && !self.st[i].miss_handled
+                    && self.cfg.action(i) != DeadlineMissAction::Log
+                {
+                    h = h.min(self.st[i].abs_deadline.saturating_add(1));
+                }
+            }
+        }
+        if let Some(ap) = self.cfg.adaptive {
+            if let Some(&(t, _)) = self.mwin.front() {
+                h = h.min(t.saturating_add(ap.window).saturating_add(1));
             }
         }
         h.max(self.now)
@@ -748,7 +1033,7 @@ impl<'a> Engine<'a> {
                         // Server: the requester never executes G^m
                         // itself — it only spins here (busy-wait mode);
                         // the engine row drains cpu_rem.
-                        if self.cfg.policy == Policy::Server {
+                        if self.pol == Policy::Server {
                             (Activity::BusyWait, false)
                         } else if self.st[i].cpu_rem > 0 {
                             (Activity::GpuMisc, true)
@@ -796,7 +1081,7 @@ impl<'a> Engine<'a> {
                         end: self.now + d,
                     });
                 }
-            } else if self.cfg.policy == Policy::Server
+            } else if self.pol == Policy::Server
                 && matches!(self.st[i].phase, Phase::GpuActive)
                 && self.st[i].cpu_rem > 0
             {
@@ -832,7 +1117,11 @@ impl<'a> Engine<'a> {
                     tr.push(TraceEvent {
                         resource: Resource::Gpu(g),
                         task: i,
-                        activity: Activity::GpuExec,
+                        activity: if self.st[i].hanging {
+                            Activity::GpuHang
+                        } else {
+                            Activity::GpuExec
+                        },
                         start: self.now,
                         end: self.now + d,
                     });
@@ -856,6 +1145,42 @@ impl<'a> Engine<'a> {
     fn settle(&mut self) {
         for _round in 0..10_000 {
             let mut changed = self.release_due();
+
+            // Deadline-miss actions: react to any active job past its
+            // absolute deadline. Log-only configurations skip the scan
+            // entirely (misses stay count-at-completion, the legacy
+            // path). Non-Log actions fire at most once per job
+            // (`miss_handled`).
+            if self.has_miss_actions {
+                for i in 0..self.st.len() {
+                    if self.st[i].phase == Phase::Idle
+                        || self.st[i].miss_handled
+                        || self.now <= self.st[i].abs_deadline
+                    {
+                        continue;
+                    }
+                    match self.cfg.action(i) {
+                        DeadlineMissAction::Log => {}
+                        DeadlineMissAction::Boost => {
+                            self.st[i].miss_handled = true;
+                            self.st[i].boosted = true;
+                            self.metrics[i].boosts += 1;
+                            changed = true;
+                        }
+                        DeadlineMissAction::AbortJob => {
+                            self.st[i].miss_handled = true;
+                            self.abort_job(i);
+                            changed = true;
+                        }
+                        DeadlineMissAction::DropTask => {
+                            self.st[i].miss_handled = true;
+                            self.paused[i] = true;
+                            self.abort_job(i);
+                            changed = true;
+                        }
+                    }
+                }
+            }
 
             // CPU-side completions (task must hold its CPU to finish
             // CPU-bound work).
@@ -891,7 +1216,15 @@ impl<'a> Engine<'a> {
                         && self.st[i].cpu_rem == 0
                         && self.st[i].gpu_rem == 0
                     {
-                        self.finish_gpu_segment(i);
+                        if self.st[i].hanging {
+                            // Hang watchdog: the timeout elapsed with
+                            // the segment still "running" — detect and
+                            // abort the job instead of completing it.
+                            self.metrics[i].hangs += 1;
+                            self.abort_job(i);
+                        } else {
+                            self.finish_gpu_segment(i);
+                        }
                         changed = true;
                     }
                 }
@@ -899,7 +1232,7 @@ impl<'a> Engine<'a> {
 
             // Lock/server grants (one lock, or one serving request, per
             // engine).
-            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
+            if matches!(self.pol, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
                 for g in 0..self.gpus.len() {
                     changed |= self.try_grant_lock(g);
                 }
@@ -914,7 +1247,7 @@ impl<'a> Engine<'a> {
             // is required for Lemma 10/13's G^e*-only preemption charge
             // to hold (see DESIGN.md §1: the printed Alg. 1 would let a
             // CPU-starved holder idle the GPU unboundedly).
-            if matches!(self.cfg.policy, Policy::Gcaps | Policy::GcapsEdf) {
+            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
                 let execing = |st: &TState| {
                     matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
                 };
@@ -970,6 +1303,7 @@ impl<'a> Engine<'a> {
 
     fn run(mut self) -> SimResult {
         while self.now < self.cfg.duration {
+            self.fault_tick();
             self.settle();
             let h = self.next_horizon();
             let dt = h.saturating_sub(self.now);
@@ -1477,5 +1811,221 @@ mod tests {
         // rt (arrived last, lowest prio, but RT) is served before be.
         assert_eq!(res.per_task[2].mort(), Some(ms(14.0)));
         assert_eq!(res.per_task[1].mort(), Some(ms(19.5)));
+    }
+
+    // -- fault injection, miss actions, adaptive switching --------------
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_baseline() {
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 8.0, 40.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 60.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        for policy in ALL_POLICIES {
+            let plain = simulate(&ts, &SimConfig::new(policy, ms(500.0)).with_trace());
+            let cfg = SimConfig::new(policy, ms(500.0))
+                .with_trace()
+                .with_faults(FaultPlan::default())
+                .with_miss_actions(vec![DeadlineMissAction::Log; 2]);
+            let faulted = simulate(&ts, &cfg);
+            assert_eq!(plain.per_task, faulted.per_task, "{policy:?}");
+            assert_eq!(plain.run, faulted.run, "{policy:?}");
+            assert_eq!(plain.trace, faulted.trace, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn wcet_overrun_scales_the_faulted_job_exactly() {
+        // Nominal: R = C + max(G^m, θ + G^e) = 2 + 5.2 = 7.2 ms. Job 1
+        // at 200%/200%: C = 4, G^e = 10 (G^m stays 1) → R = 4 + 10.2.
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let plan = FaultPlan {
+            faults: vec![Fault::WcetOverrun { task: 0, job: 1, cpu_pct: 200, gpu_pct: 200 }],
+            ..Default::default()
+        };
+        let cfg = SimConfig::new(Policy::TsgRr, ms(1000.0)).with_faults(plan);
+        let res = simulate(&ts, &cfg);
+        assert_eq!(res.per_task[0].jobs, 10);
+        assert_eq!(res.per_task[0].response_times[1], ms(14.2));
+        assert_eq!(res.per_task[0].response_times[0], ms(7.2));
+        assert_eq!(res.per_task[0].response_times[2], ms(7.2));
+        assert_eq!(res.per_task[0].mort(), Some(ms(14.2)));
+    }
+
+    #[test]
+    fn gpu_hang_is_detected_and_aborted() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let plan = FaultPlan {
+            faults: vec![Fault::GpuHang { task: 0, job: 0, seg: 0 }],
+            ..Default::default() // 10 ms hang timeout
+        };
+        let cfg = SimConfig::new(Policy::Gcaps, ms(1000.0)).with_faults(plan).with_trace();
+        let res = simulate(&ts, &cfg);
+        // Job 0 aborts at the watchdog bound; jobs 1..9 run clean.
+        assert_eq!(res.per_task[0].hangs, 1);
+        assert_eq!(res.per_task[0].aborted, 1);
+        assert_eq!(res.per_task[0].jobs, 9);
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+        assert_eq!(res.per_task[0].mort(), Some(ms(8.8)));
+        // The hang renders as GpuHang on the engine row, for exactly
+        // the timeout.
+        let tr = res.trace.unwrap();
+        let hang: Time = tr
+            .events
+            .iter()
+            .filter(|e| e.activity == Activity::GpuHang)
+            .map(|e| e.end - e.start)
+            .sum();
+        assert_eq!(hang, ms(10.0));
+    }
+
+    #[test]
+    fn abort_job_miss_action_discards_the_late_job() {
+        // Persistent CPU overload on lp: every lp job misses. AbortJob
+        // caps the damage per job instead of letting backlog snowball.
+        let hp = Task::cpu_only(0, 0, 2, ms(7.0), ms(10.0));
+        let lp = Task::cpu_only(1, 0, 1, ms(8.0), ms(20.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let log = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
+        let cfg = SimConfig::new(Policy::Gcaps, ms(2000.0)).with_miss_actions(vec![
+            DeadlineMissAction::Log,
+            DeadlineMissAction::AbortJob,
+        ]);
+        let res = simulate(&ts, &cfg);
+        assert!(res.per_task[1].aborted > 10, "aborted {}", res.per_task[1].aborted);
+        assert_eq!(res.per_task[1].jobs + res.per_task[1].aborted, 100);
+        // Log alone lets responses grow without bound under overload.
+        assert!(log.per_task[1].mort().unwrap() > ms(100.0));
+        // hp is untouched in both runs.
+        assert_eq!(res.per_task[0].jobs, log.per_task[0].jobs);
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn boost_miss_action_rescues_the_late_job() {
+        let hp = Task::cpu_only(0, 0, 2, ms(7.0), ms(10.0));
+        let lp = Task::cpu_only(1, 0, 1, ms(8.0), ms(20.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let log = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(2000.0)));
+        let cfg = SimConfig::new(Policy::Gcaps, ms(2000.0)).with_miss_actions(vec![
+            DeadlineMissAction::Log,
+            DeadlineMissAction::Boost,
+        ]);
+        let res = simulate(&ts, &cfg);
+        assert!(res.per_task[1].boosts > 0);
+        // Boosted late jobs preempt hp and finish promptly: the MORT
+        // stays bounded where Log's grows with the backlog.
+        assert!(
+            res.per_task[1].mort().unwrap() < log.per_task[1].mort().unwrap(),
+            "boost {} vs log {}",
+            res.per_task[1].mort().unwrap(),
+            log.per_task[1].mort().unwrap()
+        );
+    }
+
+    #[test]
+    fn drop_task_miss_action_stops_future_releases() {
+        let hp = Task::cpu_only(0, 0, 2, ms(7.0), ms(10.0));
+        let lp = Task::cpu_only(1, 0, 1, ms(8.0), ms(20.0));
+        let ts = TaskSet::new(vec![hp, lp], platform());
+        let cfg = SimConfig::new(Policy::Gcaps, ms(2000.0)).with_miss_actions(vec![
+            DeadlineMissAction::Log,
+            DeadlineMissAction::DropTask,
+        ]);
+        let res = simulate(&ts, &cfg);
+        // First lp job misses, aborts, and the task is dropped for the
+        // rest of the run.
+        assert_eq!(res.per_task[1].aborted, 1);
+        assert_eq!(res.per_task[1].jobs, 0);
+        // hp owns the core afterwards: all 200 jobs, no misses.
+        assert_eq!(res.per_task[0].jobs, 200);
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn mode_change_disables_and_reenables_a_task() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::ModeChange { at: ms(250.0), disable: vec![0], enable: vec![] },
+                Fault::ModeChange { at: ms(650.0), disable: vec![], enable: vec![0] },
+            ],
+            ..Default::default()
+        };
+        let cfg = SimConfig::new(Policy::TsgRr, ms(1000.0)).with_faults(plan);
+        let res = simulate(&ts, &cfg);
+        // Releases at 0,100,200 ran; 300..600 dropped; 700,800,900 ran.
+        assert_eq!(res.per_task[0].jobs, 6);
+        assert_eq!(res.per_task[0].aborted, 0); // idle at 250 ms
+        assert_eq!(res.per_task[0].mort(), Some(ms(7.2)));
+    }
+
+    #[test]
+    fn mode_change_mid_job_aborts_it() {
+        let ts = TaskSet::new(vec![gpu_task(0, 0, 1, 2.0, 1.0, 5.0, 100.0)], platform());
+        let plan = FaultPlan {
+            faults: vec![Fault::ModeChange { at: ms(103.0), disable: vec![0], enable: vec![] }],
+            ..Default::default()
+        };
+        let cfg = SimConfig::new(Policy::TsgRr, ms(1000.0)).with_faults(plan);
+        let res = simulate(&ts, &cfg);
+        // The job released at 100 ms is 3 ms in when disabled.
+        assert_eq!(res.per_task[0].jobs, 1);
+        assert_eq!(res.per_task[0].aborted, 1);
+    }
+
+    #[test]
+    fn adaptive_governor_switches_up_and_back() {
+        // Two RR-interleaved 10 ms kernels at T = 30 ms: fine nominally,
+        // overloaded at 200% G^e during the ramp. The governor must flip
+        // RR→EDF when misses cross 10% of the window and return once
+        // the overload clears.
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 30.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 30.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        let plan = FaultPlan::ramp(&ts, ms(300.0), ms(600.0), 100, 200);
+        assert!(!plan.is_empty());
+        let cfg = SimConfig::new(Policy::TsgRr, ms(3000.0))
+            .with_faults(plan.clone())
+            .with_adaptive(AdaptivePolicy::default());
+        let res = simulate(&ts, &cfg);
+        assert!(
+            res.run.policy_switches >= 2,
+            "expected up+down switches, got {}",
+            res.run.policy_switches
+        );
+        let total_misses: u64 =
+            res.per_task.iter().map(|m| m.deadline_misses).sum();
+        assert!(total_misses > 0, "the ramp never overloaded the engine");
+        // Fixed-policy run with the same plan: no governor, no switches.
+        let fixed =
+            simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(3000.0)).with_faults(plan));
+        assert_eq!(fixed.run.policy_switches, 0);
+        // Recovery is recorded: the last tardy instant precedes the
+        // horizon by a healthy margin (the system settled again).
+        assert!(res.run.last_tardy > 0);
+        assert!(res.run.last_tardy < ms(2500.0), "never recovered: {}", res.run.last_tardy);
+    }
+
+    #[test]
+    fn near_max_deadlines_with_miss_actions_stay_wrap_free() {
+        // Companion to near_max_deadlines_saturate_instead_of_wrapping:
+        // the miss-action scan and its D + 1 horizon must also saturate
+        // rather than firing on wrapped deadlines.
+        let a = gpu_task(0, 0, 2, 2.0, 0.5, 5.0, 100.0);
+        let b = gpu_task(1, 0, 1, 2.0, 0.5, 5.0, 120.0);
+        let ts = TaskSet::new(vec![a, b], platform());
+        let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
+        for action in [DeadlineMissAction::Boost, DeadlineMissAction::AbortJob] {
+            let cfg = SimConfig::new(Policy::GcapsEdf, u64::MAX)
+                .with_offsets(offsets.clone())
+                .with_miss_actions(vec![action; 2]);
+            let res = simulate(&ts, &cfg);
+            for i in [0, 1] {
+                assert!(res.per_task[i].jobs >= 1, "{action:?}: tau{i} never ran");
+                assert_eq!(res.per_task[i].aborted, 0, "{action:?}: bogus abort");
+                assert_eq!(res.per_task[i].boosts, 0, "{action:?}: bogus boost");
+                assert_eq!(res.per_task[i].deadline_misses, 0, "{action:?}");
+            }
+        }
     }
 }

@@ -17,12 +17,27 @@ pub struct TaskMetrics {
     /// Measured runlist-update delays (GCAPS driver calls: wait + α + θ),
     /// two per GPU segment (begin/end). Empty under other policies.
     pub runlist_updates: Vec<Time>,
+    /// Jobs aborted before completion (`AbortJob`/`DropTask` miss
+    /// actions, GPU-hang watchdog aborts, mode-change disables). Not
+    /// counted in `jobs` or `deadline_misses`.
+    pub aborted: u64,
+    /// Jobs that received the `Boost` miss action.
+    pub boosts: u64,
+    /// Injected GPU hangs detected (and aborted) for this task.
+    pub hangs: u64,
 }
 
 impl TaskMetrics {
     /// Maximum observed response time (the paper's MORT metric).
     pub fn mort(&self) -> Option<Time> {
         self.response_times.iter().copied().max()
+    }
+
+    /// Per-job tardiness against a relative deadline: `max(0, R − D)`
+    /// for every completed job. Saturating — a near-`u64::MAX` response
+    /// or deadline must clamp to 0/finite instead of wrapping.
+    pub fn tardiness(&self, deadline: Time) -> Vec<Time> {
+        self.response_times.iter().map(|&r| r.saturating_sub(deadline)).collect()
     }
 
     pub fn summary_ms(&self) -> Option<Summary> {
@@ -43,6 +58,11 @@ pub struct RunMetrics {
     pub gpu_switch_time: Time,
     /// Simulated horizon (µs).
     pub horizon: Time,
+    /// Load-adaptive RR↔EDF policy switches performed.
+    pub policy_switches: u64,
+    /// Timestamp of the last deadline miss or job abort (µs; 0 when
+    /// none) — the recovery-time metric's raw material.
+    pub last_tardy: Time,
 }
 
 #[cfg(test)]
@@ -63,6 +83,18 @@ mod tests {
         let m = TaskMetrics::default();
         assert_eq!(m.mort(), None);
         assert!(m.summary_ms().is_none());
+    }
+
+    #[test]
+    fn tardiness_saturates_instead_of_wrapping() {
+        let m = TaskMetrics {
+            response_times: vec![5, 1000, Time::MAX - 3],
+            ..Default::default()
+        };
+        assert_eq!(m.tardiness(100), vec![0, 900, Time::MAX - 103]);
+        // Near-MAX deadline (wrapped absolute deadlines in saturating
+        // engines): every job clamps to 0, never to a huge wrapped value.
+        assert_eq!(m.tardiness(Time::MAX), vec![0, 0, 0]);
     }
 
     #[test]

@@ -21,6 +21,7 @@ fn activity_name(a: Activity) -> &'static str {
         Activity::GpuExec => "gpu_exec (G^e)",
         Activity::CtxSwitch => "ctx_switch (θ)",
         Activity::ServerMisc => "server_misc (G^m via server)",
+        Activity::GpuHang => "gpu_hang (injected)",
     }
 }
 

@@ -14,9 +14,18 @@
 //! could wrap (absolute deadlines, release advance, horizon sums) are
 //! saturating here exactly as in `sim::engine` — correctness fixes are
 //! applied to both engines so the bit-equality contract keeps holding.
+//! The fault-injection/overload features (WCET overruns, GPU hangs,
+//! mode changes, deadline-miss actions, the adaptive RR↔EDF governor)
+//! are likewise mirrored at the exact same sequence points, keeping
+//! the contract intact for faulted runs too. The only fingerprint
+//! extension is the per-task `boosted` bit: `Boost` changes the CPU
+//! allocation without touching any hashed field, so leaving it out
+//! could quiesce a round early; hashing it is invisible to no-fault
+//! runs (a constant bit perturbs `prev` and `cur` identically).
 
 use std::collections::VecDeque;
 
+use crate::model::fault::{self, DeadlineMissAction, Fault};
 use crate::model::{TaskSet, Time, WaitMode};
 use crate::sim::engine::{SimConfig, SimResult};
 use crate::sim::metrics::{RunMetrics, TaskMetrics};
@@ -44,6 +53,13 @@ struct TState {
     next_release: Time,
     drv_started: Time,
     ticket: u64,
+    job: u64,
+    cpu_pct: u32,
+    gpu_pct: u32,
+    hang_seg: Option<usize>,
+    hanging: bool,
+    boosted: bool,
+    miss_handled: bool,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -69,6 +85,14 @@ struct Engine<'a> {
     run: RunMetrics,
     trace: Option<Trace>,
     cpu_alloc: Vec<Option<usize>>,
+    pol: Policy,
+    paused: Vec<bool>,
+    mode_changes: Vec<(Time, Vec<usize>, Vec<usize>)>,
+    mode_idx: usize,
+    mwin: VecDeque<(Time, bool)>,
+    win_jobs: u64,
+    win_misses: u64,
+    has_miss_actions: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -86,8 +110,29 @@ impl<'a> Engine<'a> {
                 next_release: cfg.offsets.get(i).copied().unwrap_or(0),
                 drv_started: 0,
                 ticket: 0,
+                job: 0,
+                cpu_pct: 100,
+                gpu_pct: 100,
+                hang_seg: None,
+                hanging: false,
+                boosted: false,
+                miss_handled: false,
             })
             .collect();
+        let mut mode_changes: Vec<(Time, Vec<usize>, Vec<usize>)> = cfg
+            .faults
+            .faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::ModeChange { at, disable, enable } => {
+                    Some((*at, disable.clone(), enable.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        mode_changes.sort_by_key(|m| m.0);
+        let has_miss_actions =
+            cfg.miss_actions.iter().any(|a| *a != DeadlineMissAction::Log);
         Engine {
             ts,
             cfg,
@@ -98,6 +143,14 @@ impl<'a> Engine<'a> {
             run: RunMetrics::default(),
             trace: cfg.trace.then(Trace::default),
             cpu_alloc: vec![None; ts.platform.num_cpus],
+            pol: cfg.policy,
+            paused: vec![false; n],
+            mode_changes,
+            mode_idx: 0,
+            mwin: VecDeque::new(),
+            win_jobs: 0,
+            win_misses: 0,
+            has_miss_actions,
         }
     }
 
@@ -111,7 +164,10 @@ impl<'a> Engine<'a> {
     }
 
     fn gpu_rank(&self, i: usize) -> u64 {
-        match self.cfg.policy {
+        if self.st[i].boosted {
+            return u64::MAX;
+        }
+        match self.pol {
             Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
             _ => self.ts.tasks[i].gpu_prio as u64,
         }
@@ -119,14 +175,24 @@ impl<'a> Engine<'a> {
 
     fn start_job(&mut self, i: usize, release: Time) {
         let t = &self.ts.tasks[i];
+        let job = self.st[i].job;
+        let (cpu_pct, gpu_pct) = self.cfg.faults.overrun(i, job);
+        let hang_seg = self.cfg.faults.hang(i, job);
         let s = &mut self.st[i];
+        s.job = job + 1;
+        s.cpu_pct = cpu_pct;
+        s.gpu_pct = gpu_pct;
+        s.hang_seg = hang_seg;
+        s.hanging = false;
+        s.boosted = false;
+        s.miss_handled = false;
         s.release = release;
         // Saturating, mirroring sim::engine bit-for-bit: a wrapped sum
         // inverts the EDF rank and miss detection.
         s.abs_deadline = release.saturating_add(t.deadline);
         s.seg = 0;
         s.phase = Phase::Cpu;
-        s.cpu_rem = t.cpu_segments[0];
+        s.cpu_rem = fault::scale(t.cpu_segments[0], cpu_pct);
         if let Some(tr) = &mut self.trace {
             tr.releases.push((i, release));
         }
@@ -136,7 +202,7 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         let seg = self.st[i].seg;
         if seg < t.eta_g() {
-            match self.cfg.policy {
+            match self.pol {
                 Policy::Gcaps | Policy::GcapsEdf => {
                     self.st[i].phase = Phase::DrvCall { ending: false };
                     self.st[i].cpu_rem = self.alpha_of(i);
@@ -162,11 +228,16 @@ impl<'a> Engine<'a> {
         let seg = self.st[i].seg;
         self.st[i].phase = Phase::GpuActive;
         self.st[i].cpu_rem = t.gpu_segments[seg].misc;
-        self.st[i].gpu_rem = t.gpu_segments[seg].exec;
+        self.st[i].gpu_rem = if self.st[i].hang_seg == Some(seg) {
+            self.st[i].hanging = true;
+            self.cfg.faults.hang_timeout
+        } else {
+            fault::scale(t.gpu_segments[seg].exec, self.st[i].gpu_pct)
+        };
     }
 
     fn finish_gpu_segment(&mut self, i: usize) {
-        match self.cfg.policy {
+        match self.pol {
             Policy::Gcaps | Policy::GcapsEdf => {
                 self.st[i].phase = Phase::DrvCall { ending: true };
                 self.st[i].cpu_rem = self.alpha_of(i);
@@ -186,7 +257,8 @@ impl<'a> Engine<'a> {
         let t = &self.ts.tasks[i];
         self.st[i].seg += 1;
         self.st[i].phase = Phase::Cpu;
-        self.st[i].cpu_rem = t.cpu_segments[self.st[i].seg];
+        self.st[i].cpu_rem =
+            fault::scale(t.cpu_segments[self.st[i].seg], self.st[i].cpu_pct);
     }
 
     fn complete_job(&mut self, i: usize) {
@@ -197,12 +269,49 @@ impl<'a> Engine<'a> {
         self.metrics[i].jobs += 1;
         if missed {
             self.metrics[i].deadline_misses += 1;
+            self.run.last_tardy = self.now;
+        }
+        if self.cfg.adaptive.is_some() {
+            self.mwin.push_back((self.now, missed));
+            self.win_jobs += 1;
+            if missed {
+                self.win_misses += 1;
+            }
         }
         if let Some(tr) = &mut self.trace {
             tr.completions.push((i, self.now));
         }
+        let s = &mut self.st[i];
         s.phase = Phase::Idle;
         if let Some(next) = s.backlog.pop_front() {
+            self.start_job(i, next);
+        }
+    }
+
+    fn abort_job(&mut self, i: usize) {
+        let g = self.gpu_of(i);
+        self.gpus[g].running.retain(|&k| k != i);
+        self.gpus[g].pending.retain(|&k| k != i);
+        self.gpus[g].ring.retain(|&k| k != i);
+        self.gpus[g].lock_queue.retain(|&(k, _)| k != i);
+        if self.gpus[g].lock_holder == Some(i) {
+            self.gpus[g].lock_holder = None;
+        }
+        self.metrics[i].aborted += 1;
+        self.run.last_tardy = self.now;
+        if self.cfg.adaptive.is_some() {
+            self.mwin.push_back((self.now, true));
+            self.win_jobs += 1;
+            self.win_misses += 1;
+        }
+        let s = &mut self.st[i];
+        s.phase = Phase::Idle;
+        s.cpu_rem = 0;
+        s.gpu_rem = 0;
+        s.hanging = false;
+        if self.paused[i] {
+            self.st[i].backlog.clear();
+        } else if let Some(next) = self.st[i].backlog.pop_front() {
             self.start_job(i, next);
         }
     }
@@ -267,7 +376,7 @@ impl<'a> Engine<'a> {
         if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
             return;
         }
-        let idx = match self.cfg.policy {
+        let idx = match self.pol {
             Policy::Mpcp => self.gpus[g]
                 .lock_queue
                 .iter()
@@ -308,7 +417,7 @@ impl<'a> Engine<'a> {
         match self.st[i].phase {
             Phase::Cpu | Phase::DrvCall { .. } => true,
             Phase::GpuActive => {
-                if self.cfg.policy == Policy::Server {
+                if self.pol == Policy::Server {
                     self.ts.tasks[i].mode == WaitMode::BusyWait
                 } else {
                     self.st[i].cpu_rem > 0 || self.ts.tasks[i].mode == WaitMode::BusyWait
@@ -321,7 +430,7 @@ impl<'a> Engine<'a> {
 
     fn eff_prio(&self, i: usize) -> u64 {
         let base = self.ts.tasks[i].cpu_prio as u64;
-        let boosted = matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus)
+        let boosted = matches!(self.pol, Policy::Mpcp | Policy::FmlpPlus)
             && self.gpus[self.gpu_of(i)].lock_holder == Some(i)
             && matches!(self.st[i].phase, Phase::GpuActive)
             && self.st[i].cpu_rem > 0;
@@ -332,6 +441,9 @@ impl<'a> Engine<'a> {
             && self.st[i].cpu_rem < self.alpha_of(i)
         {
             return (1 << 41) | base;
+        }
+        if self.st[i].boosted {
+            return (1 << 39) | base;
         }
         base
     }
@@ -360,7 +472,7 @@ impl<'a> Engine<'a> {
         if !(matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0) {
             return false;
         }
-        match self.cfg.policy {
+        match self.pol {
             Policy::TsgRr => true,
             Policy::Gcaps | Policy::GcapsEdf => {
                 self.ts.tasks[i].best_effort
@@ -386,7 +498,7 @@ impl<'a> Engine<'a> {
         let execing = |i: usize| {
             matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
         };
-        match self.cfg.policy {
+        match self.pol {
             Policy::Gcaps | Policy::GcapsEdf => {
                 let rt = self.gpus[g]
                     .running
@@ -418,7 +530,7 @@ impl<'a> Engine<'a> {
                 self.gpus[g].switch_rem = 0;
             }
             Some(i) => {
-                let charge = match self.cfg.policy {
+                let charge = match self.pol {
                     Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
                     Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
                         self.ts.platform.gpus[g].theta
@@ -442,10 +554,84 @@ impl<'a> Engine<'a> {
                 // wrapped, the next release lands in the past and this
                 // loop releases forever.
                 self.st[i].next_release = rel.saturating_add(self.ts.tasks[i].period);
+                if self.paused[i] {
+                    continue;
+                }
                 if self.st[i].phase == Phase::Idle && self.st[i].backlog.is_empty() {
                     self.start_job(i, rel);
                 } else {
                     self.st[i].backlog.push_back(rel);
+                }
+            }
+        }
+    }
+
+    fn fault_tick(&mut self) {
+        while self.mode_idx < self.mode_changes.len()
+            && self.mode_changes[self.mode_idx].0 <= self.now
+        {
+            let (_, disable, enable) = self.mode_changes[self.mode_idx].clone();
+            for &i in &disable {
+                if i >= self.st.len() {
+                    continue;
+                }
+                self.paused[i] = true;
+                if self.st[i].phase != Phase::Idle {
+                    self.abort_job(i);
+                } else {
+                    self.st[i].backlog.clear();
+                }
+            }
+            for &i in &enable {
+                if i < self.st.len() {
+                    self.paused[i] = false;
+                }
+            }
+            self.mode_idx += 1;
+        }
+        if let Some(ap) = self.cfg.adaptive {
+            while let Some(&(t, missed)) = self.mwin.front() {
+                if t.saturating_add(ap.window) < self.now {
+                    self.mwin.pop_front();
+                    self.win_jobs -= 1;
+                    if missed {
+                        self.win_misses -= 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            if self.pol == Policy::TsgRr
+                && self.win_jobs >= ap.min_jobs
+                && self.win_misses * 100 >= ap.up_pct as u64 * self.win_jobs
+            {
+                self.switch_policy(Policy::GcapsEdf);
+            } else if self.pol == Policy::GcapsEdf
+                && (self.win_jobs == 0
+                    || (self.win_jobs >= ap.min_jobs
+                        && self.win_misses * 100 <= ap.down_pct as u64 * self.win_jobs))
+            {
+                self.switch_policy(Policy::TsgRr);
+            }
+        }
+    }
+
+    fn switch_policy(&mut self, to: Policy) {
+        if self.pol == to {
+            return;
+        }
+        self.pol = to;
+        self.run.policy_switches += 1;
+        for g in 0..self.gpus.len() {
+            self.gpus[g].running.clear();
+            self.gpus[g].pending.clear();
+            if to == Policy::GcapsEdf {
+                // Ascending task order, matching sim::engine's
+                // per-engine task list.
+                for i in 0..self.st.len() {
+                    if self.gpu_of(i) == g && matches!(self.st[i].phase, Phase::GpuActive) {
+                        self.gpus[g].running.push(i);
+                    }
                 }
             }
         }
@@ -473,7 +659,7 @@ impl<'a> Engine<'a> {
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
-                } else if self.cfg.policy == Policy::Server
+                } else if self.pol == Policy::Server
                     && matches!(self.st[i].phase, Phase::GpuActive)
                     && self.st[i].cpu_rem > 0
                 {
@@ -485,6 +671,24 @@ impl<'a> Engine<'a> {
                         h = h.min(self.now.saturating_add(gs.slice_rem));
                     }
                 }
+            }
+        }
+        if self.mode_idx < self.mode_changes.len() {
+            h = h.min(self.mode_changes[self.mode_idx].0);
+        }
+        if self.has_miss_actions {
+            for i in 0..self.st.len() {
+                if self.st[i].phase != Phase::Idle
+                    && !self.st[i].miss_handled
+                    && self.cfg.action(i) != DeadlineMissAction::Log
+                {
+                    h = h.min(self.st[i].abs_deadline.saturating_add(1));
+                }
+            }
+        }
+        if let Some(ap) = self.cfg.adaptive {
+            if let Some(&(t, _)) = self.mwin.front() {
+                h = h.min(t.saturating_add(ap.window).saturating_add(1));
             }
         }
         h.max(self.now)
@@ -500,7 +704,7 @@ impl<'a> Engine<'a> {
                     Phase::Cpu => (Activity::CpuSeg, true),
                     Phase::DrvCall { .. } => (Activity::DriverCall, true),
                     Phase::GpuActive => {
-                        if self.cfg.policy == Policy::Server {
+                        if self.pol == Policy::Server {
                             (Activity::BusyWait, false)
                         } else if self.st[i].cpu_rem > 0 {
                             (Activity::GpuMisc, true)
@@ -540,7 +744,7 @@ impl<'a> Engine<'a> {
                         end: self.now + d,
                     });
                 }
-            } else if self.cfg.policy == Policy::Server
+            } else if self.pol == Policy::Server
                 && matches!(self.st[i].phase, Phase::GpuActive)
                 && self.st[i].cpu_rem > 0
             {
@@ -564,7 +768,11 @@ impl<'a> Engine<'a> {
                     tr.push(TraceEvent {
                         resource: Resource::Gpu(g),
                         task: i,
-                        activity: Activity::GpuExec,
+                        activity: if self.st[i].hanging {
+                            Activity::GpuHang
+                        } else {
+                            Activity::GpuExec
+                        },
                         start: self.now,
                         end: self.now + d,
                     });
@@ -594,6 +802,12 @@ impl<'a> Engine<'a> {
             mix(s.seg as u64);
             mix(s.cpu_rem);
             mix(s.gpu_rem);
+            // The one post-seed fingerprint extension: Boost changes the
+            // CPU allocation (eff_prio) without touching any field above,
+            // so it must be hashed for quiescence to track it. Constant
+            // `false` in unfaulted runs — prev and cur shift identically,
+            // leaving the equality check (all this hash feeds) unchanged.
+            mix(s.boosted as u64);
         }
         for gs in &self.gpus {
             mix(gs.context.map_or(u64::MAX, |c| c as u64));
@@ -611,6 +825,34 @@ impl<'a> Engine<'a> {
         let mut prev = self.fingerprint();
         for _round in 0..10_000 {
             self.release_due();
+
+            if self.has_miss_actions {
+                for i in 0..self.st.len() {
+                    if self.st[i].phase == Phase::Idle
+                        || self.st[i].miss_handled
+                        || self.now <= self.st[i].abs_deadline
+                    {
+                        continue;
+                    }
+                    match self.cfg.action(i) {
+                        DeadlineMissAction::Log => {}
+                        DeadlineMissAction::Boost => {
+                            self.st[i].miss_handled = true;
+                            self.st[i].boosted = true;
+                            self.metrics[i].boosts += 1;
+                        }
+                        DeadlineMissAction::AbortJob => {
+                            self.st[i].miss_handled = true;
+                            self.abort_job(i);
+                        }
+                        DeadlineMissAction::DropTask => {
+                            self.st[i].miss_handled = true;
+                            self.paused[i] = true;
+                            self.abort_job(i);
+                        }
+                    }
+                }
+            }
 
             self.cpu_alloc = self.compute_cpu_alloc();
             for core in 0..self.cpu_alloc.len() {
@@ -630,17 +872,22 @@ impl<'a> Engine<'a> {
                     && self.st[i].cpu_rem == 0
                     && self.st[i].gpu_rem == 0
                 {
-                    self.finish_gpu_segment(i);
+                    if self.st[i].hanging {
+                        self.metrics[i].hangs += 1;
+                        self.abort_job(i);
+                    } else {
+                        self.finish_gpu_segment(i);
+                    }
                 }
             }
 
-            if matches!(self.cfg.policy, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
+            if matches!(self.pol, Policy::Mpcp | Policy::FmlpPlus | Policy::Server) {
                 for g in 0..self.gpus.len() {
                     self.try_grant_lock(g);
                 }
             }
 
-            if matches!(self.cfg.policy, Policy::Gcaps | Policy::GcapsEdf) {
+            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
                 let execing = |st: &TState| {
                     matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
                 };
@@ -692,6 +939,7 @@ impl<'a> Engine<'a> {
 
     fn run(mut self) -> SimResult {
         while self.now < self.cfg.duration {
+            self.fault_tick();
             self.settle();
             let h = self.next_horizon();
             let dt = h.saturating_sub(self.now);

@@ -33,6 +33,9 @@ pub enum Activity {
     /// requester's behalf (`Policy::Server`) — occupant is the
     /// requester, resource is the engine the server drives.
     ServerMisc,
+    /// A hung GPU segment (injected fault) occupying its engine until
+    /// the hang-timeout watchdog aborts the job.
+    GpuHang,
 }
 
 impl Activity {
@@ -45,6 +48,7 @@ impl Activity {
             Activity::GpuExec => 'G',
             Activity::CtxSwitch => 's',
             Activity::ServerMisc => 'S',
+            Activity::GpuHang => 'x',
         }
     }
 }
@@ -145,7 +149,7 @@ impl Trace {
             }
         }
         out.push_str(&format!(
-            "time: {:.1} .. {:.1} ms   (# cpu, m misc, w busy-wait, e driver, G gpu, s ctx-switch, S server-misc)\n",
+            "time: {:.1} .. {:.1} ms   (# cpu, m misc, w busy-wait, e driver, G gpu, s ctx-switch, S server-misc, x hang)\n",
             to_ms(t0),
             to_ms(t1)
         ));

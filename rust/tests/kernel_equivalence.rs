@@ -173,6 +173,68 @@ fn calendar_engine_matches_seed_engine_traces() {
 }
 
 #[test]
+fn calendar_engine_matches_seed_engine_under_faults() {
+    // The overload stack end-to-end: WCET-overrun ramps, an injected
+    // GPU hang, a disable/re-enable mode change, every deadline-miss
+    // action, and (under TsgRr) the adaptive RR↔EDF governor — the two
+    // engines must stay bit-equal through all of it, traces included.
+    use gcaps::model::{AdaptivePolicy, DeadlineMissAction, Fault, FaultPlan};
+    const POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
+    let mut case = 0usize;
+    forall("faulted DES = seed DES", 20, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        let ts = generate(rng, &params(g, WaitMode::SelfSuspend));
+        let horizon = ts.tasks.iter().map(|t| t.period).max().unwrap() * 4;
+        let mut plan = FaultPlan::ramp(&ts, horizon / 4, horizon / 2, 250, 300);
+        let victim = rng.range_usize(0, ts.len() - 1);
+        if ts.tasks[victim].uses_gpu() {
+            plan.faults.push(Fault::GpuHang { task: victim, job: 1, seg: 0 });
+        }
+        let flip = rng.range_usize(0, ts.len() - 1);
+        plan.faults.push(Fault::ModeChange {
+            at: horizon / 3,
+            disable: vec![flip],
+            enable: vec![],
+        });
+        plan.faults.push(Fault::ModeChange {
+            at: 2 * (horizon / 3),
+            disable: vec![],
+            enable: vec![flip],
+        });
+        for (k, policy) in POLICIES.iter().enumerate() {
+            let action = DeadlineMissAction::ALL[k % DeadlineMissAction::ALL.len()];
+            let mut cfg = SimConfig::new(*policy, horizon)
+                .with_faults(plan.clone())
+                .with_miss_actions(vec![action; ts.len()])
+                .with_trace();
+            if *policy == Policy::TsgRr {
+                cfg = cfg.with_adaptive(AdaptivePolicy::default());
+            }
+            let new = simulate(&ts, &cfg);
+            let old = simulate_reference(&ts, &cfg);
+            if new.per_task != old.per_task {
+                return Err(format!("{policy:?}/{action:?}: per-task metrics diverged"));
+            }
+            if new.run != old.run {
+                return Err(format!("{policy:?}/{action:?}: run aggregates diverged"));
+            }
+            if new.trace != old.trace {
+                return Err(format!("{policy:?}/{action:?}: traces diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn calendar_engine_handles_zero_length_edges_like_seed() {
     // The dirty completion list's hardest inputs: zero-length CPU and
     // GPU segments chain zero-time transitions. Both engines must agree

@@ -7,18 +7,23 @@
 //!    an independent recomputation: the ε×θ cell against a from-scratch
 //!    serial pass through the documented memo seeding recipe (no cache
 //!    path, no worker pool), the EDF-vs-FP point against direct
-//!    simulation calls, and the heterogeneous platform against a
+//!    simulation calls, the heterogeneous platform against a
 //!    handcrafted taskset with *exact* per-engine response times
 //!    (distinct ε/θ/L end-to-end, optimised engine bit-equal to the
-//!    seed reference).
+//!    seed reference), and the overload (300 %, abort) cell against a
+//!    serial pass with a hand-built `FaultPlan` ramp.
 
 use gcaps::analysis::{analyze, approach_schedulable, Approach};
 use gcaps::experiments::scenarios::{
-    edfvfp_csv, edfvfp_params, edfvfp_sweep, epstheta_csv, epstheta_sweep, hetero_csv,
-    hetero_params, hetero_platforms, hetero_sweep,
+    adaptive_csv, adaptive_sweep, edfvfp_csv, edfvfp_params, edfvfp_sweep, epstheta_csv,
+    epstheta_sweep, hetero_csv, hetero_params, hetero_platforms, hetero_sweep, overload_csv,
+    overload_params, overload_sweep, ramp_window,
 };
 use gcaps::experiments::ExpConfig;
-use gcaps::model::{config, ms, GpuContext, GpuSegment, Platform, Task, TaskSet, WaitMode};
+use gcaps::model::{
+    config, ms, DeadlineMissAction, FaultPlan, GpuContext, GpuSegment, Platform, Task, TaskSet,
+    WaitMode,
+};
 use gcaps::sim::{simulate, simulate_reference, Policy, SimConfig};
 use gcaps::sweep::{cell_hash, cell_rng, memo};
 use gcaps::taskgen::{generate, GenParams};
@@ -61,9 +66,72 @@ fn hetero_csv_identical_across_worker_counts() {
     assert!(b1.lines().count() > 27, "hetero CSV suspiciously small:\n{b1}");
 }
 
+#[test]
+fn overload_csv_identical_across_worker_counts_and_shows_overload() {
+    let b1 = overload_csv(&overload_sweep(&cfg(4, 1))).to_string();
+    let b2 = overload_csv(&overload_sweep(&cfg(4, 2))).to_string();
+    let b8 = overload_csv(&overload_sweep(&cfg(4, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "overload CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "overload CSV diverged at jobs = 8");
+    assert!(b1.lines().count() == 13, "overload CSV wrong shape:\n{b1}");
+    // Acceptance: the ramp produces real overload — some row carries a
+    // nonzero miss ratio and nonzero pooled tardiness.
+    let rows = overload_sweep(&cfg(4, 2));
+    assert!(
+        rows.iter().any(|r| r.miss_ratio > 0.0),
+        "no cell shows misses under a 3x WCET ramp:\n{b1}"
+    );
+    assert!(
+        rows.iter().any(|r| r.tardy_p99_ms > 0.0),
+        "no cell shows tardiness under a 3x WCET ramp:\n{b1}"
+    );
+}
+
+#[test]
+fn adaptive_csv_identical_across_worker_counts() {
+    let b1 = adaptive_csv(&adaptive_sweep(&cfg(4, 1))).to_string();
+    let b2 = adaptive_csv(&adaptive_sweep(&cfg(4, 2))).to_string();
+    let b8 = adaptive_csv(&adaptive_sweep(&cfg(4, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "adaptive CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "adaptive CSV diverged at jobs = 8");
+    assert!(b1.lines().count() == 10, "adaptive CSV wrong shape:\n{b1}");
+}
+
 // ---------------------------------------------------------------------
 // anchors
 // ---------------------------------------------------------------------
+
+#[test]
+fn overload_anchor_point_matches_direct_simulation() {
+    // The (300%, abort) cell against a from-scratch serial pass: same
+    // memoized tasksets, a hand-built ramp plan, direct simulate calls.
+    let c = cfg(4, 2);
+    let rows = overload_sweep(&c);
+    let row = rows
+        .iter()
+        .find(|r| r.overrun_pct == 300 && r.action == DeadlineMissAction::AbortJob)
+        .expect("the (300, abort) cell exists");
+    let (start, end) = ramp_window();
+    let (mut m, mut j, mut a) = (0u64, 0u64, 0u64);
+    let mut rec = 0u64;
+    for i in 0..c.tasksets {
+        let ts = memo::taskset(c.seed, &overload_params(), i);
+        let sim_cfg = SimConfig::new(Policy::Gcaps, ms(3_000.0))
+            .with_faults(FaultPlan::ramp(&ts, start, end, 300, 300))
+            .with_miss_actions(vec![DeadlineMissAction::AbortJob; ts.len()]);
+        let res = simulate(&ts, &sim_cfg);
+        for t in ts.rt_tasks() {
+            m += res.per_task[t.id].deadline_misses;
+            j += res.per_task[t.id].jobs;
+            a += res.per_task[t.id].aborted;
+        }
+        rec = rec.max(res.run.last_tardy.saturating_sub(end));
+    }
+    let done = (j + a).max(1) as f64;
+    assert_eq!(row.miss_ratio, (m + a) as f64 / done);
+    assert_eq!(row.abort_ratio, a as f64 / done);
+    assert_eq!(row.recovery_ms, rec as f64 / 1000.0);
+}
 
 #[test]
 fn epstheta_anchor_cell_matches_manual_generation_recipe() {

@@ -20,6 +20,8 @@ use std::io::Cursor;
 
 const SCRIPT: &str = include_str!("data/serve_script.jsonl");
 const GOLDEN: &str = include_str!("data/serve_golden.jsonl");
+const OVERLOAD_SCRIPT: &str = include_str!("data/serve_overload_script.jsonl");
+const OVERLOAD_GOLDEN: &str = include_str!("data/serve_overload_golden.jsonl");
 
 fn default_config() -> ServeConfig {
     ServeConfig {
@@ -46,6 +48,18 @@ fn golden_transcript_is_byte_stable() {
         assert_eq!(got, want, "transcript line {} diverged", i + 1);
     }
     assert_eq!(out, GOLDEN);
+}
+
+#[test]
+fn overload_golden_transcript_is_byte_stable() {
+    // Degraded-mode ops (admit_best_effort, report_overload) and the
+    // conditional overload stats block, pinned the same way the CI
+    // overload-smoke job pins them against the release binary.
+    let out = serve_bytes(&default_config(), OVERLOAD_SCRIPT.as_bytes());
+    for (i, (got, want)) in out.lines().zip(OVERLOAD_GOLDEN.lines()).enumerate() {
+        assert_eq!(got, want, "overload transcript line {} diverged", i + 1);
+    }
+    assert_eq!(out, OVERLOAD_GOLDEN);
 }
 
 #[test]

@@ -3,7 +3,9 @@
 //! under the default driver, and job-accounting sanity — all checked
 //! over random tasksets and release patterns.
 
-use gcaps::model::{ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
+use gcaps::model::{
+    ms, DeadlineMissAction, FaultPlan, GpuSegment, Platform, Task, TaskSet, Time, WaitMode,
+};
 use gcaps::sim::trace::{Activity, Resource};
 use gcaps::sim::{simulate, Policy, SimConfig};
 use gcaps::taskgen::{generate, GenParams};
@@ -294,6 +296,30 @@ fn server_policy_zero_length_and_near_max_edges_stay_bit_equal() {
     }
 }
 
+/// Fault injection stays deterministic: the same `FaultPlan` and miss
+/// action give bit-identical metrics, aggregates and traces on rerun —
+/// the same contract the sweep workers rely on for `--jobs` invariance.
+#[test]
+fn fault_plans_are_deterministic_across_reruns() {
+    forall("fault determinism", 10, |rng| {
+        let ts = generate(rng, &GenParams::default());
+        let horizon = ms(3_000.0);
+        let plan = FaultPlan::ramp(&ts, ms(1_000.0), ms(2_000.0), 300, 300);
+        for action in DeadlineMissAction::ALL {
+            let cfg = SimConfig::new(Policy::Gcaps, horizon)
+                .with_faults(plan.clone())
+                .with_miss_actions(vec![action; ts.len()])
+                .with_trace();
+            let a = simulate(&ts, &cfg);
+            let b = simulate(&ts, &cfg);
+            if a.per_task != b.per_task || a.run != b.run || a.trace != b.trace {
+                return Err(format!("{action:?}: faulted rerun diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Regression (wrap-around audit): jobs released near u64::MAX keep the
 /// two engines bit-equal and never flag wrap-around deadline misses —
 /// `abs_deadline = release + deadline` used to overflow there, inverting
@@ -338,6 +364,51 @@ fn near_max_release_offsets_stay_wrap_free_and_bit_equal() {
                 fast.per_task[i].deadline_misses, 0,
                 "{policy:?}: tau{i} flagged a bogus wrap-around miss"
             );
+        }
+    }
+}
+
+/// Regression (overload audit): saturating absolute deadlines near
+/// u64::MAX with active miss actions must not wrap into bogus reactions
+/// — no aborts, no boosts, and `last_tardy` stays 0 — and the two
+/// engines stay bit-equal with the actions armed.
+#[test]
+fn near_max_offsets_with_miss_actions_stay_wrap_free_and_bit_equal() {
+    let mk = |id: usize, prio: u32, t: f64| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(t),
+        deadline: ms(t),
+        cpu_segments: vec![ms(1.0), ms(1.0)],
+        gpu_segments: vec![GpuSegment::new(ms(0.5), ms(5.0))],
+        core: 0,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let ts = TaskSet::new(
+        vec![mk(0, 2, 100.0), mk(1, 1, 120.0)],
+        Platform::single(2, 1024, 200, 1000),
+    );
+    ts.validate().unwrap();
+    let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
+    for action in [DeadlineMissAction::Boost, DeadlineMissAction::AbortJob] {
+        for policy in [Policy::GcapsEdf, Policy::Gcaps, Policy::TsgRr] {
+            let cfg = SimConfig::new(policy, u64::MAX)
+                .with_offsets(offsets.clone())
+                .with_miss_actions(vec![action; 2]);
+            let fast = simulate(&ts, &cfg);
+            let seed = gcaps::sim::simulate_reference(&ts, &cfg);
+            assert_eq!(fast.per_task, seed.per_task, "{policy:?}/{action:?}: diverged");
+            assert_eq!(fast.run, seed.run, "{policy:?}/{action:?}: aggregates diverged");
+            assert_eq!(fast.run.last_tardy, 0, "{policy:?}/{action:?}: phantom tardiness");
+            for i in [0, 1] {
+                assert!(fast.per_task[i].jobs >= 1, "{policy:?}/{action:?}: tau{i} never ran");
+                assert_eq!(fast.per_task[i].aborted, 0, "{policy:?}/{action:?}: bogus abort");
+                assert_eq!(fast.per_task[i].boosts, 0, "{policy:?}/{action:?}: bogus boost");
+            }
         }
     }
 }
