@@ -125,7 +125,7 @@ fn build_terms(
             }
         } else if p.uses_gpu {
             // Lemma 15, GPU-using τ_h: jittered, starred misc demand.
-            scratch.push(jc(prep, h, resp, opts), p.period, p.c + p.gm_star);
+            scratch.push(jc(prep, h, resp, opts), p.period, p.c.saturating_add(p.gm_star));
         } else {
             // Lemma 15, CPU-only τ_h.
             scratch.push(0, p.period, p.c);
@@ -198,7 +198,7 @@ fn blocking(prep: &Prepared, i: usize) -> Time {
                 cross_alpha = cross_alpha.max(p.alpha);
             }
         }
-        (me.eta_g + 1).saturating_mul(same_engine.max(cross_alpha))
+        me.eta_g.saturating_add(1).saturating_mul(same_engine.max(cross_alpha))
     } else {
         // CPU-only τ_i: a single stall by an in-flight update on any
         // engine (conservative, core-agnostic).

@@ -56,7 +56,7 @@ fn request_blocking(prep: &Prepared, i: usize, scratch: &mut Scratch) -> Option<
             lp_max = lp_max.max(p.max_gcs);
         } else if p.cpu_prio > me.cpu_prio {
             // (Best-effort sharers were all consumed by the lp branch.)
-            hp_const += p.gcs_total;
+            hp_const = hp_const.saturating_add(p.gcs_total);
             scratch.push(0, p.period, p.gcs_total);
         }
     }

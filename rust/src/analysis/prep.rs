@@ -295,7 +295,7 @@ fn prep_task(ts: &TaskSet, task: &crate::model::Task) -> PrepTask {
         gm: task.gm(),
         ge: task.ge(),
         g: task.g(),
-        c_gm: task.c() + task.gm(),
+        c_gm: task.c().saturating_add(task.gm()),
         eps,
         alpha: ctx.epsilon.saturating_sub(ctx.theta),
         theta: ctx.theta,

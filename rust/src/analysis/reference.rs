@@ -74,14 +74,15 @@ fn gcaps_i_dp(
     }
     let mut total = 0;
     for h in ts.hpp(i).filter(|h| h.uses_gpu() && h.gpu == me.gpu) {
-        total += if busy {
-            njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h))
+        total = total.saturating_add(if busy {
+            njobs_jitter(r, jg(h, resp, opts), h.period).saturating_mul(ge_star(h, eps_of(ts, h)))
         } else {
-            njobs_jitter(r, jg(h, resp, opts), h.period) * h.ge()
-        };
+            njobs_jitter(r, jg(h, resp, opts), h.period).saturating_mul(h.ge())
+        });
     }
     for h in hp_gpu_cross(ts, i, opts).filter(|h| h.gpu == me.gpu) {
-        total += njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h));
+        let n = njobs_jitter(r, jg(h, resp, opts), h.period);
+        total = total.saturating_add(n.saturating_mul(ge_star(h, eps_of(ts, h))));
     }
     total
 }
@@ -106,8 +107,11 @@ fn gcaps_i_id_busy(
     }
     hp_gpu_cross(ts, i, opts)
         .filter(|h| carrier_mask & (1 << (h.gpu & 63)) != 0)
-        .map(|h| njobs_jitter(r, jg(h, resp, opts), h.period) * ge_star(h, eps_of(ts, h)))
-        .sum()
+        .map(|h| {
+            let n = njobs_jitter(r, jg(h, resp, opts), h.period);
+            n.saturating_mul(ge_star(h, eps_of(ts, h)))
+        })
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn gcaps_p_c(
@@ -121,22 +125,23 @@ fn gcaps_p_c(
     let me = &ts.tasks[i];
     let mut total = 0;
     for h in ts.hpp(i) {
-        total += if busy {
-            let mut demand = h.c() + h.gm();
+        total = total.saturating_add(if busy {
+            let mut demand = h.c().saturating_add(h.gm());
             let charged_by_lemma10 = me.uses_gpu() && h.gpu == me.gpu;
             if h.uses_gpu() && !charged_by_lemma10 && !opts.paper_exact_lemma12 {
-                demand += ge_star(h, eps_of(ts, h));
+                demand = demand.saturating_add(ge_star(h, eps_of(ts, h)));
             }
             if h.uses_gpu() {
-                njobs_jitter(r, jc(h, resp, opts), h.period) * demand
+                njobs_jitter(r, jc(h, resp, opts), h.period).saturating_mul(demand)
             } else {
-                njobs(r, h.period) * demand
+                njobs(r, h.period).saturating_mul(demand)
             }
         } else if h.uses_gpu() {
-            njobs_jitter(r, jc(h, resp, opts), h.period) * (h.c() + gm_star(h, eps_of(ts, h)))
+            njobs_jitter(r, jc(h, resp, opts), h.period)
+                .saturating_mul(h.c().saturating_add(gm_star(h, eps_of(ts, h))))
         } else {
-            njobs(r, h.period) * h.c()
-        };
+            njobs(r, h.period).saturating_mul(h.c())
+        });
     }
     total
 }
@@ -151,7 +156,10 @@ pub fn gcaps_response_time(
 ) -> Rta {
     let me = &ts.tasks[i];
     let eps = eps_of(ts, me);
-    let own = me.c() + me.g() + 2 * eps * me.eta_g() as Time;
+    let own = me
+        .c()
+        .saturating_add(me.g())
+        .saturating_add(eps.saturating_mul(2).saturating_mul(me.eta_g() as Time));
     let lp_gpu = |t: &&Task| {
         t.id != me.id && t.uses_gpu() && (t.best_effort || t.cpu_prio < me.cpu_prio)
     };
@@ -172,15 +180,15 @@ pub fn gcaps_response_time(
             })
             .max()
             .unwrap_or(0);
-        (me.eta_g() as Time + 1) * same_engine.max(cross_alpha)
+        (me.eta_g() as Time).saturating_add(1).saturating_mul(same_engine.max(cross_alpha))
     } else {
         ts.tasks.iter().filter(lp_gpu).map(|t| eps_of(ts, t)).max().unwrap_or(0)
     };
-    fixed_point(me.deadline, own + blocking, |r| {
-        own + blocking
-            + gcaps_p_c(ts, i, r, busy, resp, opts)
-            + gcaps_i_dp(ts, i, r, busy, resp, opts)
-            + if busy { gcaps_i_id_busy(ts, i, r, resp, opts) } else { 0 }
+    fixed_point(me.deadline, own.saturating_add(blocking), |r| {
+        own.saturating_add(blocking)
+            .saturating_add(gcaps_p_c(ts, i, r, busy, resp, opts))
+            .saturating_add(gcaps_i_dp(ts, i, r, busy, resp, opts))
+            .saturating_add(if busy { gcaps_i_id_busy(ts, i, r, resp, opts) } else { 0 })
     })
 }
 
@@ -225,7 +233,8 @@ fn rr_i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time 
             .iter()
             .map(|g| interleave(nu, g.exec, ctx.tsg_slice, ctx.theta))
             .sum();
-        total += njobs_jitter(r, jitter_g(h, resp[h.id]), h.period) * per_job;
+        let n = njobs_jitter(r, jitter_g(h, resp[h.id]), h.period);
+        total = total.saturating_add(n.saturating_mul(per_job));
     }
     total
 }
@@ -233,25 +242,25 @@ fn rr_i_id_busy(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time 
 fn rr_p_c(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
     ts.hpp(i)
         .map(|h: &Task| {
-            let demand = h.c() + h.gm();
+            let demand = h.c().saturating_add(h.gm());
             let n = if h.uses_gpu() {
                 njobs_jitter(r, jitter_c(h, resp[h.id]), h.period)
             } else {
                 njobs(r, h.period)
             };
-            n * demand
+            n.saturating_mul(demand)
         })
-        .sum()
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 /// Reference default-driver response time (Eq. 1 with the §6.2 terms).
 pub fn rr_response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
     let me = &ts.tasks[i];
-    let own = me.c() + me.g();
+    let own = me.c().saturating_add(me.g());
     let iie = rr_i_ie(ts, i);
-    fixed_point(me.deadline, own + iie, |r| {
+    fixed_point(me.deadline, own.saturating_add(iie), |r| {
         let idle = if busy { rr_i_id_busy(ts, i, r, resp) } else { 0 };
-        own + iie + idle + rr_p_c(ts, i, r, resp)
+        own.saturating_add(iie).saturating_add(idle).saturating_add(rr_p_c(ts, i, r, resp))
     })
 }
 
@@ -285,13 +294,14 @@ fn mpcp_request_blocking(ts: &TaskSet, i: usize) -> Option<Time> {
         .collect();
     let mut w = lp_max;
     for _ in 0..10_000 {
-        let next = lp_max
-            + hp.iter()
+        let next = lp_max.saturating_add(
+            hp.iter()
                 .map(|h| {
                     let gcs_total: Time = h.gpu_segments.iter().map(|g| g.total()).sum();
-                    (njobs(w, h.period) + 1) * gcs_total
+                    njobs(w, h.period).saturating_add(1).saturating_mul(gcs_total)
                 })
-                .sum::<Time>();
+                .fold(0, |acc: Time, x| acc.saturating_add(x)),
+        );
         if next == w {
             return Some(w);
         }
@@ -313,8 +323,8 @@ fn mpcp_boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
                 && t.uses_gpu()
                 && (t.best_effort || t.cpu_prio < me.cpu_prio)
         })
-        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
-        .sum()
+        .map(|t| njobs_jitter(r, t.deadline, t.period).saturating_mul(t.gm()))
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn mpcp_p_c(
@@ -333,12 +343,16 @@ fn mpcp_p_c(
                 njobs(r, h.period)
             };
             if busy {
-                n * (h.c() + h.g() + w_h[h.id] * h.eta_g() as Time)
+                n.saturating_mul(
+                    h.c()
+                        .saturating_add(h.g())
+                        .saturating_add(w_h[h.id].saturating_mul(h.eta_g() as Time)),
+                )
             } else {
-                n * (h.c() + h.gm())
+                n.saturating_mul(h.c().saturating_add(h.gm()))
             }
         })
-        .sum()
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn mpcp_response_time(
@@ -349,10 +363,11 @@ fn mpcp_response_time(
     w_all: &[Time],
 ) -> Rta {
     let me = &ts.tasks[i];
-    let remote = w_all[i] * me.eta_g() as Time;
-    let own = me.c() + me.g() + remote;
+    let remote = w_all[i].saturating_mul(me.eta_g() as Time);
+    let own = me.c().saturating_add(me.g()).saturating_add(remote);
     fixed_point(me.deadline, own, |r| {
-        own + mpcp_boost_blocking(ts, i, r) + mpcp_p_c(ts, i, r, busy, resp, w_all)
+        own.saturating_add(mpcp_boost_blocking(ts, i, r))
+            .saturating_add(mpcp_p_c(ts, i, r, busy, resp, w_all))
     })
 }
 
@@ -402,8 +417,8 @@ fn fmlp_boost_blocking(ts: &TaskSet, i: usize, r: Time) -> Time {
                 && t.uses_gpu()
                 && (t.best_effort || t.cpu_prio < me.cpu_prio)
         })
-        .map(|t| njobs_jitter(r, t.deadline, t.period) * t.gm())
-        .sum()
+        .map(|t| njobs_jitter(r, t.deadline, t.period).saturating_mul(t.gm()))
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn fmlp_p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>]) -> Time {
@@ -415,20 +430,26 @@ fn fmlp_p_c(ts: &TaskSet, i: usize, r: Time, busy: bool, resp: &[Option<Time>]) 
                 njobs(r, h.period)
             };
             if busy {
-                n * (h.c() + h.g() + fmlp_request_blocking(ts, h.id) * h.eta_g() as Time)
+                let per_req = fmlp_request_blocking(ts, h.id);
+                n.saturating_mul(
+                    h.c()
+                        .saturating_add(h.g())
+                        .saturating_add(per_req.saturating_mul(h.eta_g() as Time)),
+                )
             } else {
-                n * (h.c() + h.gm())
+                n.saturating_mul(h.c().saturating_add(h.gm()))
             }
         })
-        .sum()
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn fmlp_response_time(ts: &TaskSet, i: usize, busy: bool, resp: &[Option<Time>]) -> Rta {
     let me = &ts.tasks[i];
-    let remote = fmlp_request_blocking(ts, i) * me.eta_g() as Time;
-    let own = me.c() + me.g() + remote;
+    let remote = fmlp_request_blocking(ts, i).saturating_mul(me.eta_g() as Time);
+    let own = me.c().saturating_add(me.g()).saturating_add(remote);
     fixed_point(me.deadline, own, |r| {
-        own + fmlp_boost_blocking(ts, i, r) + fmlp_p_c(ts, i, r, busy, resp)
+        own.saturating_add(fmlp_boost_blocking(ts, i, r))
+            .saturating_add(fmlp_p_c(ts, i, r, busy, resp))
     })
 }
 
@@ -448,7 +469,7 @@ pub fn fmlp_analyze(ts: &TaskSet, busy: bool) -> AnalysisResult {
 /// S_j = Σ gcs + 2ε·η: the server's service demand for one job of τ_j.
 fn server_service(ts: &TaskSet, j: &Task) -> Time {
     let gcs_total: Time = j.gpu_segments.iter().map(|g| g.total()).sum();
-    gcs_total + 2 * eps_of(ts, j) * j.eta_g() as Time
+    gcs_total.saturating_add(eps_of(ts, j).saturating_mul(2).saturating_mul(j.eta_g() as Time))
 }
 
 /// Cumulative request-handling window B_i (the improved bound: hp
@@ -461,20 +482,21 @@ fn server_request_window(ts: &TaskSet, i: usize) -> Option<Time> {
     let lp_max: Time = ts
         .sharing_gpu(i)
         .filter(|t| t.best_effort || t.cpu_prio < me.cpu_prio)
-        .map(|t| t.max_gpu_segment() + 2 * eps_of(ts, t))
+        .map(|t| t.max_gpu_segment().saturating_add(eps_of(ts, t).saturating_mul(2)))
         .max()
         .unwrap_or(0);
     let hp: Vec<&Task> = ts
         .sharing_gpu(i)
         .filter(|t| !t.best_effort && t.cpu_prio > me.cpu_prio)
         .collect();
-    let own = server_service(ts, me) + me.eta_g() as Time * lp_max;
+    let own = server_service(ts, me).saturating_add((me.eta_g() as Time).saturating_mul(lp_max));
     let mut b = own;
     for _ in 0..10_000 {
-        let next = own
-            + hp.iter()
-                .map(|h| (njobs(b, h.period) + 1) * server_service(ts, h))
-                .sum::<Time>();
+        let next = own.saturating_add(
+            hp.iter()
+                .map(|h| njobs(b, h.period).saturating_add(1).saturating_mul(server_service(ts, h)))
+                .fold(0, |acc: Time, x| acc.saturating_add(x)),
+        );
         if next == b {
             return Some(b);
         }
@@ -497,9 +519,9 @@ fn server_p_c(ts: &TaskSet, i: usize, r: Time, resp: &[Option<Time>]) -> Time {
             } else {
                 njobs(r, h.period)
             };
-            n * h.c()
+            n.saturating_mul(h.c())
         })
-        .sum()
+        .fold(0, |acc: Time, x| acc.saturating_add(x))
 }
 
 fn server_response_time(
@@ -509,8 +531,8 @@ fn server_response_time(
     b_all: &[Time],
 ) -> Rta {
     let me = &ts.tasks[i];
-    let own = me.c() + b_all[i];
-    fixed_point(me.deadline, own, |r| own + server_p_c(ts, i, r, resp))
+    let own = me.c().saturating_add(b_all[i]);
+    fixed_point(me.deadline, own, |r| own.saturating_add(server_p_c(ts, i, r, resp)))
 }
 
 /// Reference server-based analysis (suspension-only by construction:

@@ -132,7 +132,7 @@ pub fn fixed_point(deadline: Time, init: Time, f: impl Fn(Time) -> Time) -> Rta 
     // µs-scale hp periods could make convergence take ~deadline/T_min
     // iterations instead of being cut off. Generated tasksets (Table 3
     // periods ≤ 500 ms ⇒ span ≤ 5·10^5) sit at the old cap's scale.
-    let span = deadline - init;
+    let span = deadline.saturating_sub(init);
     for _ in 0..=span {
         let next = f(r);
         if next == r {
@@ -176,7 +176,7 @@ pub fn jitter_g(t: &Task, r_h: Option<Time>) -> Time {
 /// Jitter of a higher-priority task's CPU demand under self-suspension:
 /// J^c = R_h − (C_h + G_h^m) (Lemma 7), D_h-based fallback.
 pub fn jitter_c(t: &Task, r_h: Option<Time>) -> Time {
-    r_h.unwrap_or(t.deadline).saturating_sub(t.c() + t.gm())
+    r_h.unwrap_or(t.deadline).saturating_sub(t.c().saturating_add(t.gm()))
 }
 
 #[cfg(test)]

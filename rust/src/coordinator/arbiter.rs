@@ -15,6 +15,8 @@
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::lock_or_recover;
+
 /// Static per-task registration.
 #[derive(Debug, Clone)]
 pub struct TaskReg {
@@ -33,6 +35,13 @@ struct DrvState {
 }
 
 /// The arbiter (one per "GPU").
+///
+/// Locking goes through [`lock_or_recover`]: a panicking executive
+/// thread must not wedge every other task's `seg_begin`/`seg_end`
+/// (poison cascade). Recovery is sound here — `running`/`pending` are
+/// plain id lists with no cross-field invariant a torn critical
+/// section could break; at worst a crashed task's id lingers until its
+/// next `seg_end`, which `retain`s it out.
 pub struct Arbiter {
     tasks: Vec<TaskReg>,
     state: Mutex<DrvState>,
@@ -58,9 +67,9 @@ impl Arbiter {
     /// update is performed (the task may still be pending — launches must
     /// go through [`Arbiter::wait_admitted`]).
     pub fn seg_begin(&self, id: usize) {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // gcaps-lint: allow(wall-clock) -- real arbiter overhead (fig12)
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             debug_assert!(!st.running.contains(&id) && !st.pending.contains(&id));
             if !self.tasks[id].rt {
                 let rt_running = st.running.iter().any(|&k| self.tasks[k].rt);
@@ -89,14 +98,14 @@ impl Arbiter {
             }
             self.cv.notify_all();
         }
-        self.eps.lock().unwrap().push(t0.elapsed());
+        lock_or_recover(&self.eps).push(t0.elapsed());
     }
 
     /// Alg. 1, remove path (`gcapsGpuSegEnd`).
     pub fn seg_end(&self, id: usize) {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // gcaps-lint: allow(wall-clock) -- real arbiter overhead (fig12)
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             st.running.retain(|&k| k != id);
             st.pending.retain(|&k| k != id);
             let tau_k = st
@@ -115,12 +124,12 @@ impl Arbiter {
             }
             self.cv.notify_all();
         }
-        self.eps.lock().unwrap().push(t0.elapsed());
+        lock_or_recover(&self.eps).push(t0.elapsed());
     }
 
     /// Is `id`'s TSG currently on the runlist?
     pub fn admitted(&self, id: usize) -> bool {
-        self.state.lock().unwrap().running.contains(&id)
+        lock_or_recover(&self.state).running.contains(&id)
     }
 
     /// Block (condvar; self-suspension mode) or spin (busy-wait mode)
@@ -131,21 +140,21 @@ impl Arbiter {
                 std::hint::spin_loop();
             }
         } else {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             while !st.running.contains(&id) {
-                st = self.cv.wait(st).unwrap();
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         }
     }
 
     /// Drain the measured runlist-update delays (Fig. 12 ε samples).
     pub fn take_eps_samples(&self) -> Vec<Duration> {
-        std::mem::take(&mut *self.eps.lock().unwrap())
+        std::mem::take(&mut *lock_or_recover(&self.eps))
     }
 
     /// Invariant check (tests): running ∩ pending = ∅, ≤ 1 RT running.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         for r in &st.running {
             if st.pending.contains(r) {
                 return Err(format!("task {r} in both running and pending"));

@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::arbiter::{Arbiter, TaskReg};
 use crate::coordinator::gpu_server::{serve, GpuClient, ServiceMode};
 use crate::runtime::Runtime;
+use crate::util::sync::lock_or_recover;
 
 /// One GPU segment of a live task: `launches` kernel launches of the
 /// named artifact workload.
@@ -122,7 +123,7 @@ impl SegmentLock {
     }
 
     fn acquire(&self, task: usize, prio: u32, fifo: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         let ticket = st.next_ticket;
         st.next_ticket += 1;
         st.queue.push((task, prio, ticket));
@@ -141,12 +142,12 @@ impl SegmentLock {
                     }
                 }
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn release(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         st.held = false;
         self.cv.notify_all();
     }
@@ -154,8 +155,8 @@ impl SegmentLock {
 
 /// Calibrated spin: burn wall-clock time without syscalls.
 pub fn spin_for(d: Duration) {
-    let end = Instant::now() + d;
-    while Instant::now() < end {
+    let end = Instant::now() + d; // gcaps-lint: allow(wall-clock) -- spin burns real time
+    while Instant::now() < end { // gcaps-lint: allow(wall-clock) -- spin burns real time
         std::hint::spin_loop();
     }
 }
@@ -188,6 +189,7 @@ pub fn run(
     // runs on THIS thread — it owns the Runtime — while the periodic
     // tasks run on spawned threads and submit launches over the channel.
     let launches = std::thread::scope(|scope| {
+        // gcaps-lint: allow(wall-clock) -- one real-time release anchor shared by all tasks
         let t0 = Instant::now() + Duration::from_millis(50); // sync release
         for (id, task) in tasks.iter().enumerate() {
             let arbiter = Arc::clone(&arbiter);
@@ -198,6 +200,7 @@ pub fn run(
                 let mut k = 0u64;
                 loop {
                     let release = t0 + task.period.mul_f64(k as f64);
+                    // gcaps-lint: allow(wall-clock) -- live release timing
                     let now = Instant::now();
                     if now + Duration::from_micros(50) >= t0 + duration {
                         break;
@@ -233,7 +236,7 @@ pub fn run(
                                         task.period,
                                     );
                                     if served.is_none() {
-                                        metrics.lock().unwrap().hangs += 1;
+                                        lock_or_recover(metrics).hangs += 1;
                                         break; // abandon the rest of the segment
                                     }
                                 }
@@ -248,9 +251,10 @@ pub fn run(
                         }
                         spin_for(task.cpu_segments[s + 1]);
                     }
+                    // gcaps-lint: allow(wall-clock) -- measures real response time
                     let resp = Instant::now().duration_since(release.min(Instant::now()));
                     {
-                        let mut m = metrics.lock().unwrap();
+                        let mut m = lock_or_recover(metrics);
                         if resp > task.period {
                             m.misses += 1;
                         }
@@ -265,7 +269,10 @@ pub fn run(
     });
 
     LiveResult {
-        per_task: metrics.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        per_task: metrics
+            .into_iter()
+            .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
+            .collect(),
         eps_samples: arbiter.take_eps_samples(),
         launches,
     }

@@ -110,7 +110,7 @@ pub fn run_rta(quick: bool) -> BenchResult {
     let tasksets = if quick { 8 } else { 100 };
     let cfg = ExpConfig { tasksets, seed: BENCH_SEED, jobs: 1, ..ExpConfig::default() };
     let panel = Panel::UtilPerCpu;
-    let start = Instant::now();
+    let start = Instant::now(); // gcaps-lint: allow(wall-clock) -- bench measures wall time
     let (xticks, series) = run_panel(panel, &cfg);
     let units = (xticks.len() * tasksets) as u64; // cells (9 analyses each)
     let checksum: f64 = series.iter().flat_map(|(_, ys)| ys.iter()).sum();
@@ -130,7 +130,7 @@ pub fn run_des(quick: bool) -> BenchResult {
         Policy::FmlpPlus,
         Policy::Server,
     ];
-    let start = Instant::now();
+    let start = Instant::now(); // gcaps-lint: allow(wall-clock) -- bench measures wall time
     let mut units = 0u64;
     let mut checksum = 0.0f64;
     for ts in &sets {

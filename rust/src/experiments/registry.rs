@@ -193,7 +193,7 @@ impl Sink for Recorder<'_> {
 /// `sink`, finish the sink, and return the structured report.
 pub fn run(exp: &dyn Experiment, cfg: &ExpConfig, sink: &mut dyn Sink) -> Result<ExpReport> {
     validate(exp, cfg)?;
-    let start = Instant::now();
+    let start = Instant::now(); // gcaps-lint: allow(wall-clock) -- report wall time
     let mut rec = Recorder { inner: &mut *sink, tables: Vec::new() };
     exp.run(cfg, &mut rec)?;
     let tables = rec.tables;

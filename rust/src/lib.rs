@@ -37,10 +37,15 @@
 //! println!("{} rows in {:?}; wrote {:?}", report.rows(), report.wall, report.outputs);
 //! ```
 
+// The whole stack is safe Rust — raw FFI stays inside the vendored
+// `xla` crate behind the `pjrt` feature, never in this tree.
+#![forbid(unsafe_code)]
+
 pub mod analysis;
 pub mod api;
 pub mod coordinator;
 pub mod experiments;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod serve;

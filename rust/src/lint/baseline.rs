@@ -1,0 +1,106 @@
+//! Exact-match finding baselines.
+//!
+//! A baseline is the set of findings the repo has consciously decided
+//! to live with (e.g. `panic-path` hits in code whose invariants make
+//! the index provably in-bounds). `gcaps lint` fails only on findings
+//! *not* in the baseline, so new violations cannot ride in silently,
+//! while `--write-baseline` regenerates the file deterministically and
+//! CI compares it byte-for-byte against the committed copy — a stale
+//! baseline (fixed findings still listed, or new ones absorbed without
+//! review) is itself a failure.
+//!
+//! Matching is exact on the rendered finding line
+//! (`file:line:col: rule: snippet`). That is intentionally brittle:
+//! editing a baselined line — even reindenting it — evicts it from the
+//! baseline and forces a fresh look.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::Finding;
+
+const HEADER: &str = "\
+# gcaps lint baseline -- accepted findings, exact-match by line.
+# Regenerate with `gcaps lint --write-baseline`; CI diffs this file
+# byte-for-byte against a fresh run. See README.md#lint.
+";
+
+/// Load a baseline file into a set of rendered finding lines.
+/// A missing file is an empty baseline, not an error.
+pub fn load(path: &Path) -> io::Result<BTreeSet<String>> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(BTreeSet::new()),
+        Err(e) => return Err(e),
+    };
+    Ok(text
+        .lines()
+        .map(str::trim_end)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect())
+}
+
+/// Render the canonical baseline file contents for `findings`
+/// (assumed already sorted by the driver).
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::from(HEADER);
+    for f in findings {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    out
+}
+
+pub fn write(path: &Path, findings: &[Finding]) -> io::Result<()> {
+    fs::write(path, render(findings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(file: &str, line: u32) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            col: 7,
+            rule: "panic-path",
+            snippet: "let x = v[0];".to_string(),
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_every_finding() {
+        let findings = vec![f("a.rs", 1), f("b.rs", 2)];
+        let dir = std::env::temp_dir().join("gcaps_lint_baseline_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.txt");
+        write(&path, &findings).unwrap();
+        let set = load(&path).unwrap();
+        assert_eq!(set.len(), 2);
+        for x in &findings {
+            assert!(set.contains(&x.render()), "{} missing", x.render());
+        }
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_empty_baseline() {
+        let set = load(Path::new("/nonexistent/gcaps/baseline.txt")).unwrap();
+        assert!(set.is_empty());
+    }
+
+    #[test]
+    fn header_and_blank_lines_are_skipped() {
+        let dir = std::env::temp_dir().join("gcaps_lint_baseline_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.txt");
+        fs::write(&path, "# comment\n\na.rs:1:7: panic-path: let x = v[0];\n").unwrap();
+        let set = load(&path).unwrap();
+        assert_eq!(set.len(), 1);
+        fs::remove_file(&path).unwrap();
+    }
+}

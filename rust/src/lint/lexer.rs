@@ -1,0 +1,561 @@
+//! A lightweight Rust lexer for `gcaps lint`: just enough tokenization
+//! to run source-level invariant rules — comments, string/char/byte
+//! literals and lifetimes are stripped (they can never trigger a
+//! rule), every surviving token carries its `line:column`, and a
+//! post-pass marks the token ranges gated by `#[cfg(test)]`/`#[test]`
+//! so rules can skip test code.
+//!
+//! This is deliberately NOT a full Rust lexer: no token trees, no
+//! nested-generics disambiguation, no edition awareness. The rules
+//! only need token adjacency plus three properties the quick-and-dirty
+//! approaches get wrong — raw strings (`r"\"` would desynchronize an
+//! escape-aware scanner), nested block comments, and `'a` lifetimes vs
+//! `'a'` char literals.
+
+/// Token class. Punctuation keeps multi-character operators (`+=`,
+/// `::`, `->`, …) as single tokens so rules can tell `+` from `+=`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Punct,
+}
+
+/// One token: kind, verbatim text, 1-based position of its first
+/// character, and whether it sits inside `#[cfg(test)]`-gated code.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+    pub in_test: bool,
+}
+
+/// A lexed source file, ready for the rules: the raw lines (for
+/// snippets), the token stream, and the `// gcaps-lint: allow(rule) --
+/// reason` escapes collected from comments.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the linted source root, `/`-separated.
+    pub rel_path: String,
+    pub lines: Vec<String>,
+    pub tokens: Vec<Tok>,
+    /// `(line, rule)` pairs suppressed by an allow comment. A trailing
+    /// comment covers its own line; a whole-line comment covers the
+    /// next line too.
+    pub allows: Vec<(u32, String)>,
+}
+
+impl SourceFile {
+    pub fn allows(&self, line: u32, rule: &str) -> bool {
+        self.allows.iter().any(|(l, r)| *l == line && r == rule)
+    }
+}
+
+/// Reserved words: an identifier position check must not mistake
+/// `in [0, 1]` or `return [..]` for slice indexing.
+pub const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type",
+    "union", "unsafe", "use", "where", "while",
+];
+
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+/// Multi-character operators, longest first (the lexer tries each
+/// prefix in order).
+const OPS3: &[&str] = &["..=", "<<=", ">>=", "..."];
+const OPS2: &[&str] = &[
+    "::", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=", "==", "!=", "<=", ">=", "&&", "||",
+    "<<", ">>", "|=", "&=", "^=",
+];
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+    toks: Vec<Tok>,
+    allows: Vec<(u32, String)>,
+    /// Line number of the last emitted token (to tell whole-line
+    /// comments from trailing ones).
+    last_tok_line: u32,
+}
+
+impl Lexer {
+    fn new(text: &str) -> Lexer {
+        Lexer {
+            chars: text.chars().collect(),
+            pos: 0,
+            line: 1,
+            col: 1,
+            toks: Vec::new(),
+            allows: Vec::new(),
+            last_tok_line: 0,
+        }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Consume one char, updating line/col.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn emit(&mut self, kind: TokKind, text: String, line: u32, col: u32) {
+        self.last_tok_line = line;
+        self.toks.push(Tok { kind, text, line, col, in_test: false });
+    }
+
+    /// Consume a `//` line comment (both slashes already peeked, not
+    /// consumed) and record any allow escape it carries.
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let whole_line = self.last_tok_line != line;
+        let mut body = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            body.push(c);
+            self.bump();
+        }
+        for rule in parse_allow(&body) {
+            self.allows.push((line, rule.clone()));
+            if whole_line {
+                self.allows.push((line + 1, rule));
+            }
+        }
+    }
+
+    /// Consume a (nested) block comment; `/*` not yet consumed.
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some('*'), Some('/')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    /// Consume a normal (escape-aware) string; opening quote not yet
+    /// consumed.
+    fn string(&mut self) {
+        self.bump();
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => break,
+                _ => {}
+            }
+        }
+    }
+
+    /// Consume a raw string `r"…"` / `r#"…"#…`; the `r`/`br` ident is
+    /// already consumed, `#`s and quote are not.
+    fn raw_string(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some('"') {
+            return; // not actually a raw string; nothing consumed but #s
+        }
+        self.bump();
+        loop {
+            match self.bump() {
+                None => break,
+                Some('"') => {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if self.peek(k) != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        break;
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// At a `'`: char literal (consumed, no token) or lifetime
+    /// (consumed, no token).
+    fn quote(&mut self) {
+        if self.peek(1) == Some('\\') {
+            // Escaped char literal: consume to the closing quote.
+            self.bump(); // '
+            self.bump(); // \
+            self.bump(); // the escaped char
+            while let Some(c) = self.bump() {
+                if c == '\'' {
+                    break;
+                }
+            }
+        } else if self.peek(2) == Some('\'') && self.peek(1).is_some() {
+            self.bump();
+            self.bump();
+            self.bump();
+        } else {
+            // Lifetime: ' plus ident chars, no closing quote.
+            self.bump();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let (line, col) = (self.line, self.col);
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // Raw / byte string or byte char prefixes swallow the literal.
+        let next = self.peek(0);
+        if (text == "r" || text == "br") && (next == Some('"') || next == Some('#')) {
+            self.raw_string();
+            return;
+        }
+        if text == "b" && next == Some('"') {
+            self.string();
+            return;
+        }
+        if text == "b" && next == Some('\'') {
+            self.quote();
+            return;
+        }
+        self.emit(TokKind::Ident, text, line, col);
+    }
+
+    fn number(&mut self) {
+        let (line, col) = (self.line, self.col);
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                // Exponent sign: 1e-9 / 2.5E+3 stays one number token.
+                if (c == 'e' || c == 'E')
+                    && !text.starts_with("0x")
+                    && matches!(self.peek(1), Some('+') | Some('-'))
+                    && self.peek(2).is_some_and(|d| d.is_ascii_digit())
+                {
+                    text.push(c);
+                    self.bump();
+                    text.push(self.peek(0).expect("sign peeked above"));
+                    self.bump();
+                    continue;
+                }
+                text.push(c);
+                self.bump();
+            } else if c == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.emit(TokKind::Number, text, line, col);
+    }
+
+    fn punct(&mut self) {
+        let (line, col) = (self.line, self.col);
+        let mut probe = String::new();
+        for k in 0..3 {
+            match self.peek(k) {
+                Some(c) => probe.push(c),
+                None => break,
+            }
+        }
+        for op in OPS3 {
+            if probe.starts_with(op) {
+                for _ in 0..3 {
+                    self.bump();
+                }
+                self.emit(TokKind::Punct, op.to_string(), line, col);
+                return;
+            }
+        }
+        for op in OPS2 {
+            if probe.starts_with(op) {
+                self.bump();
+                self.bump();
+                self.emit(TokKind::Punct, op.to_string(), line, col);
+                return;
+            }
+        }
+        let c = self.bump().expect("punct present");
+        self.emit(TokKind::Punct, c.to_string(), line, col);
+    }
+
+    fn run(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.string();
+            } else if c == '\'' {
+                self.quote();
+            } else if c.is_alphabetic() || c == '_' {
+                self.ident();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if c.is_whitespace() {
+                self.bump();
+            } else {
+                self.punct();
+            }
+        }
+    }
+}
+
+/// Parse the rule list out of a `gcaps-lint: allow(a, b) -- reason`
+/// comment body. The ` -- reason` part is mandatory: an allow without
+/// a recorded justification does not suppress anything.
+fn parse_allow(comment: &str) -> Vec<String> {
+    let Some(at) = comment.find("gcaps-lint: allow(") else {
+        return Vec::new();
+    };
+    let rest = &comment[at + "gcaps-lint: allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Vec::new();
+    };
+    if !rest[close..].contains("--") {
+        return Vec::new();
+    }
+    rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Mark every token gated by `#[cfg(test)]` / `#[test]` (attribute,
+/// any stacked attributes, and the item's body through its closing
+/// brace or terminating semicolon) as `in_test`.
+fn mark_test_code(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && i + 1 < toks.len() && toks[i + 1].text == "[" {
+            // Find the attribute's closing bracket.
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= toks.len() {
+                return;
+            }
+            let has = |name: &str| {
+                toks[i..=j].iter().any(|t| t.kind == TokKind::Ident && t.text == name)
+            };
+            if has("test") && !has("not") {
+                // Skip stacked attributes after this one.
+                let mut k = j + 1;
+                while k + 1 < toks.len() && toks[k].text == "#" && toks[k + 1].text == "[" {
+                    let mut d = 0i32;
+                    let mut m = k + 1;
+                    while m < toks.len() {
+                        match toks[m].text.as_str() {
+                            "[" => d += 1,
+                            "]" => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    k = m + 1;
+                }
+                // Mark through the item's body: first `{…}` block, or a
+                // `;` that arrives before any brace (e.g. `mod tests;`).
+                let mut end = toks.len() - 1;
+                let mut brace = 0i32;
+                let mut seen_brace = false;
+                let mut m = k;
+                while m < toks.len() {
+                    match toks[m].text.as_str() {
+                        "{" => {
+                            brace += 1;
+                            seen_brace = true;
+                        }
+                        "}" => {
+                            brace -= 1;
+                            if seen_brace && brace == 0 {
+                                end = m;
+                                break;
+                            }
+                        }
+                        ";" if !seen_brace => {
+                            end = m;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                for t in toks[i..=end.min(toks.len() - 1)].iter_mut() {
+                    t.in_test = true;
+                }
+                i = end + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Lex one file into a [`SourceFile`].
+pub fn lex(rel_path: &str, text: &str) -> SourceFile {
+    let mut lx = Lexer::new(text);
+    lx.run();
+    let mut tokens = lx.toks;
+    mark_test_code(&mut tokens);
+    SourceFile {
+        rel_path: rel_path.to_string(),
+        lines: text.lines().map(|l| l.to_string()).collect(),
+        tokens,
+        allows: lx.allows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex("x.rs", src).tokens.iter().map(|t| t.text.clone()).collect()
+    }
+
+    #[test]
+    fn strings_chars_comments_stripped() {
+        let toks = texts("let a = \"x + y\"; // c + d\n let b = 'z'; /* e * f */ b");
+        assert_eq!(toks, vec!["let", "a", "=", ";", "let", "b", "=", ";", "b"]);
+    }
+
+    #[test]
+    fn raw_string_with_backslash_does_not_desync() {
+        let toks = texts("let re = r\"\\\"; after");
+        assert_eq!(toks, vec!["let", "re", "=", ";", "after"]);
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let toks = texts("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(toks.contains(&"str".to_string()));
+        assert!(toks.contains(&"->".to_string()));
+    }
+
+    #[test]
+    fn multichar_ops_stay_single_tokens() {
+        let toks = texts("a += b; c => d; e..=f; g::h");
+        assert!(toks.contains(&"+=".to_string()));
+        assert!(toks.contains(&"=>".to_string()));
+        assert!(toks.contains(&"..=".to_string()));
+        assert!(toks.contains(&"::".to_string()));
+    }
+
+    #[test]
+    fn positions_are_one_based_line_col() {
+        let f = lex("x.rs", "ab\n  cd + e");
+        assert_eq!((f.tokens[0].line, f.tokens[0].col), (1, 1));
+        assert_eq!((f.tokens[1].line, f.tokens[1].col), (2, 3));
+        assert_eq!(f.tokens[2].text, "+");
+        assert_eq!((f.tokens[2].line, f.tokens[2].col), (2, 6));
+    }
+
+    #[test]
+    fn cfg_test_block_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { a + b }\n}\nfn after() {}";
+        let f = lex("x.rs", src);
+        let live = f.tokens.iter().find(|t| t.text == "live").unwrap();
+        let plus = f.tokens.iter().find(|t| t.text == "+").unwrap();
+        let after = f.tokens.iter().find(|t| t.text == "after").unwrap();
+        assert!(!live.in_test);
+        assert!(plus.in_test);
+        assert!(!after.in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_gated() {
+        let f = lex("x.rs", "#[cfg(not(test))]\nfn real() { x + y }");
+        assert!(f.tokens.iter().all(|t| !t.in_test));
+    }
+
+    #[test]
+    fn allow_comment_requires_reason_and_covers_next_line() {
+        let f = lex(
+            "x.rs",
+            "// gcaps-lint: allow(time-arith) -- bounded by duration\nlet a = b + c;\n\
+             let d = e + f; // gcaps-lint: allow(det-iter) -- keyed\nlet g = h; // gcaps-lint: allow(wall-clock)\n",
+        );
+        assert!(f.allows(1, "time-arith"));
+        assert!(f.allows(2, "time-arith"), "whole-line comment covers the next line");
+        assert!(f.allows(3, "det-iter"));
+        assert!(!f.allows(4, "det-iter"), "trailing comment does not leak downward");
+        assert!(!f.allows(4, "wall-clock"), "allow without a -- reason is ignored");
+    }
+}

@@ -1,0 +1,186 @@
+//! `gcaps lint`: a zero-dependency invariant lint pass over this
+//! crate's own sources.
+//!
+//! The repo's correctness story rests on a handful of source-level
+//! invariants that `rustc` cannot see — saturating `Time` arithmetic,
+//! panic-free always-on paths, deterministic iteration in anything
+//! that writes results, poison-recovering lock access, and no wall
+//! clocks outside the measurement modules. Each was established by an
+//! earlier change and then re-broken (or nearly) by later ones; this
+//! module mechanizes them so the build, not review vigilance, holds
+//! the line.
+//!
+//! Pipeline: [`lexer`] turns each `.rs` file into a comment- and
+//! literal-stripped token stream with `line:col` positions and
+//! `#[cfg(test)]` gating; the [`rules`] run over that stream; the
+//! driver here filters `// gcaps-lint: allow(rule) -- reason` escapes,
+//! sorts findings, and diffs them against the committed exact-match
+//! [`baseline`]. `gcaps lint` exits nonzero on any finding not in the
+//! baseline.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{all_rules, rule_ids, Rule};
+
+/// One lint finding, anchored to a root-relative file and a 1-based
+/// `line:col`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    /// The trimmed source line (tabs flattened, capped at 120 chars).
+    pub snippet: String,
+}
+
+impl Finding {
+    /// Canonical one-line rendering; also the baseline match key and
+    /// the `--format text` output line.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {}: {}",
+            self.file, self.line, self.col, self.rule, self.snippet
+        )
+    }
+
+    /// One JSON object per line for `--format jsonl`.
+    pub fn render_jsonl(&self) -> String {
+        format!(
+            "{{\"file\":\"{}\",\"line\":{},\"col\":{},\"rule\":\"{}\",\"snippet\":\"{}\"}}",
+            json_escape(&self.file),
+            self.line,
+            self.col,
+            self.rule,
+            json_escape(&self.snippet)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, as root-relative
+/// `/`-separated paths, sorted so every run (and every platform)
+/// visits files in the same order.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().and_then(|x| x.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    Ok(files)
+}
+
+fn rel_slash(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Lint every `.rs` file under `root` with the given rules, returning
+/// allow-filtered findings sorted by `(file, line, col, rule)`.
+pub fn lint_tree(root: &Path, rules: &[Box<dyn Rule>]) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in collect_sources(root)? {
+        let text = fs::read_to_string(&path)?;
+        let rel = rel_slash(root, &path);
+        let file = lexer::lex(&rel, &text);
+        for rule in rules {
+            if !rule.applies(&rel) {
+                continue;
+            }
+            let mut out = Vec::new();
+            rule.check(&file, &mut out);
+            out.retain(|f| !file.allows(f.line, f.rule));
+            findings.extend(out);
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+    Ok(findings)
+}
+
+/// Lint with every rule. The entry point for the CLI and the
+/// self-clean test.
+pub fn lint_all(root: &Path) -> io::Result<Vec<Finding>> {
+    lint_tree(root, &all_rules())
+}
+
+/// Split `findings` against a baseline: `(new, stale)` where `new` is
+/// findings absent from the baseline (these fail the lint) and `stale`
+/// is baseline lines no current finding matches (these mean the
+/// baseline needs regenerating).
+pub fn diff_baseline(
+    findings: &[Finding],
+    base: &std::collections::BTreeSet<String>,
+) -> (Vec<Finding>, Vec<String>) {
+    let rendered: std::collections::BTreeSet<String> =
+        findings.iter().map(|f| f.render()).collect();
+    let new = findings.iter().filter(|f| !base.contains(&f.render())).cloned().collect();
+    let stale = base.iter().filter(|l| !rendered.contains(*l)).cloned().collect();
+    (new, stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_escapes_quotes_and_backslashes() {
+        let f = Finding {
+            file: "a.rs".to_string(),
+            line: 3,
+            col: 9,
+            rule: "panic-path",
+            snippet: "let s = \"x\\n\";".to_string(),
+        };
+        let j = f.render_jsonl();
+        assert!(j.contains("\\\"x\\\\n\\\""), "{j}");
+    }
+
+    #[test]
+    fn diff_baseline_splits_new_and_stale() {
+        let f = Finding {
+            file: "a.rs".to_string(),
+            line: 1,
+            col: 1,
+            rule: "wall-clock",
+            snippet: "Instant::now();".to_string(),
+        };
+        let mut base = std::collections::BTreeSet::new();
+        base.insert("gone.rs:9:9: panic-path: old".to_string());
+        let (new, stale) = diff_baseline(&[f.clone()], &base);
+        assert_eq!(new, vec![f]);
+        assert_eq!(stale, vec!["gone.rs:9:9: panic-path: old".to_string()]);
+    }
+}

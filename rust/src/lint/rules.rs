@@ -1,0 +1,596 @@
+//! The five invariant rules. Each rule is a pure function over one
+//! file's token stream; the driver in [`crate::lint`] handles the
+//! walk, allow-comment filtering, baseline matching, and output.
+//!
+//! Every rule mechanizes a soundness invariant this repo has already
+//! paid for the hard way (see EXPERIMENTS.md §Invariants for the
+//! per-rule history):
+//!
+//! - `time-arith`: bare `+`/`-`/`*` on `Time` wraps at `u64::MAX` and
+//!   a wrapped response time is a *tiny* (unsound) bound.
+//! - `panic-path`: a panic in `serve/` or `coordinator/` poisons locks
+//!   and takes down the admission server or the live executive.
+//! - `det-iter`: HashMap iteration order leaks into result CSVs and
+//!   breaks run-to-run determinism.
+//! - `lock-hygiene`: `.lock().unwrap()` turns one panicked holder into
+//!   a crash cascade; `lock_or_recover` is the sanctioned form.
+//! - `wall-clock`: `Instant::now` outside the measurement modules
+//!   smuggles nondeterminism into what must be a pure function of the
+//!   taskset.
+
+use super::lexer::{is_keyword, SourceFile, Tok, TokKind};
+use super::Finding;
+
+/// A lint rule over one lexed file.
+pub trait Rule {
+    /// Stable rule id, used in output, baselines and allow comments.
+    fn id(&self) -> &'static str;
+    /// One-line description for `gcaps lint --help`-style listings.
+    fn about(&self) -> &'static str;
+    /// Whether this rule runs on the given root-relative path.
+    fn applies(&self, rel_path: &str) -> bool;
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>);
+}
+
+/// All rules, in id order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(DetIter),
+        Box::new(LockHygiene),
+        Box::new(PanicPath),
+        Box::new(TimeArith),
+        Box::new(WallClock),
+    ]
+}
+
+pub fn rule_ids() -> Vec<&'static str> {
+    all_rules().iter().map(|r| r.id()).collect()
+}
+
+fn finding(file: &SourceFile, rule: &'static str, tok: &Tok) -> Finding {
+    let raw = file
+        .lines
+        .get(tok.line as usize - 1)
+        .map(|s| s.as_str())
+        .unwrap_or("");
+    let mut snippet: String = raw.trim().replace('\t', " ");
+    if snippet.chars().count() > 120 {
+        snippet = snippet.chars().take(117).collect::<String>() + "...";
+    }
+    Finding {
+        file: file.rel_path.clone(),
+        line: tok.line,
+        col: tok.col,
+        rule,
+        snippet,
+    }
+}
+
+/// Operand-shaped token: something a *binary* operator could follow.
+/// Excludes keywords so `in [`, `return [` or `match x { _ =>` never
+/// read as indexing/arithmetic.
+fn operand_like(t: &Tok) -> bool {
+    match t.kind {
+        TokKind::Ident => !is_keyword(&t.text),
+        TokKind::Number => true,
+        TokKind::Punct => t.text == ")" || t.text == "]",
+    }
+}
+
+// ---------------------------------------------------------------- time-arith
+
+/// Identifiers that carry `Time` (µs) values in `sim/` and
+/// `analysis/`. Curated, not inferred: the lexer has no types, so the
+/// rule keys on the domain vocabulary these modules already use. Kept
+/// sorted for the reader; membership is a linear scan (streams are
+/// short).
+const TIME_VOCAB: &[&str] = &[
+    "abs_deadline",
+    "base",
+    "blocking",
+    "budget",
+    "c_gm",
+    "cpu_rem",
+    "deadline",
+    "demand",
+    "drv_started",
+    "dt",
+    "duration",
+    "elapsed_us",
+    "eps",
+    "epsilon",
+    "gpu_rem",
+    "horizon",
+    "hp_const",
+    "jitter",
+    "lp_max",
+    "makespan",
+    "own",
+    "period",
+    "release",
+    "resp",
+    "response",
+    "slack",
+    "slice_rem",
+    "span",
+    "switch_rem",
+    "theta",
+    "wcet",
+];
+
+fn is_time_word(s: &str) -> bool {
+    TIME_VOCAB.contains(&s)
+}
+
+/// How far (in tokens) the operand scan walks away from the operator.
+const ARITH_SCAN: usize = 12;
+
+struct TimeArith;
+
+impl TimeArith {
+    /// Scan left from the operator for a Time-vocabulary identifier,
+    /// staying inside the current expression.
+    fn timeish_left(toks: &[Tok], op: usize) -> bool {
+        let mut depth = 0i32;
+        let mut steps = 0usize;
+        let mut j = op;
+        while j > 0 && steps < ARITH_SCAN {
+            j -= 1;
+            steps += 1;
+            let t = &toks[j];
+            match t.text.as_str() {
+                ")" | "]" => depth += 1,
+                "(" | "[" => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return false;
+                    }
+                }
+                ";" | "{" | "}" | "=" | "=>" | "return" | "let" => return false,
+                "," if depth == 0 => return false,
+                _ => {}
+            }
+            if t.kind == TokKind::Ident && is_time_word(&t.text) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mirror-image scan to the right of the operator.
+    fn timeish_right(toks: &[Tok], op: usize) -> bool {
+        let mut depth = 0i32;
+        let mut steps = 0usize;
+        let mut j = op;
+        while j + 1 < toks.len() && steps < ARITH_SCAN {
+            j += 1;
+            steps += 1;
+            let t = &toks[j];
+            match t.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return false;
+                    }
+                }
+                ";" | "{" | "}" | "=" => return false,
+                "," if depth == 0 => return false,
+                _ => {}
+            }
+            if t.kind == TokKind::Ident && is_time_word(&t.text) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl Rule for TimeArith {
+    fn id(&self) -> &'static str {
+        "time-arith"
+    }
+    fn about(&self) -> &'static str {
+        "bare +/-/* on Time-carrying expressions (use saturating_* so overflow pins, not wraps)"
+    }
+    fn applies(&self, rel_path: &str) -> bool {
+        rel_path.starts_with("sim/") || rel_path.starts_with("analysis/")
+    }
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let toks = &file.tokens;
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Punct {
+                continue;
+            }
+            match t.text.as_str() {
+                "+" | "-" | "*" => {
+                    // Binary position only: `-x`, `*ptr`, `&*g` have a
+                    // non-operand (or nothing) on the left.
+                    if i == 0 || !operand_like(&toks[i - 1]) {
+                        continue;
+                    }
+                }
+                "+=" | "-=" | "*=" => {}
+                _ => continue,
+            }
+            if Self::timeish_left(toks, i) || Self::timeish_right(toks, i) {
+                out.push(finding(file, self.id(), t));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- panic-path
+
+struct PanicPath;
+
+impl Rule for PanicPath {
+    fn id(&self) -> &'static str {
+        "panic-path"
+    }
+    fn about(&self) -> &'static str {
+        "unwrap/expect/panic!/slice-indexing in always-on code (serve/, coordinator/)"
+    }
+    fn applies(&self, rel_path: &str) -> bool {
+        rel_path.starts_with("serve/") || rel_path.starts_with("coordinator/")
+    }
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let toks = &file.tokens;
+        let text = |k: usize| toks.get(k).map(|t| t.text.as_str()).unwrap_or("");
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test {
+                continue;
+            }
+            match t.kind {
+                TokKind::Ident => {
+                    let prev_dot = i > 0 && toks[i - 1].text == ".";
+                    if t.text == "unwrap" && prev_dot && text(i + 1) == "(" && text(i + 2) == ")"
+                    {
+                        out.push(finding(file, self.id(), t));
+                    } else if t.text == "expect" && prev_dot && text(i + 1) == "(" {
+                        out.push(finding(file, self.id(), t));
+                    } else if matches!(
+                        t.text.as_str(),
+                        "panic" | "unreachable" | "todo" | "unimplemented"
+                    ) && text(i + 1) == "!"
+                    {
+                        out.push(finding(file, self.id(), t));
+                    }
+                }
+                TokKind::Punct if t.text == "[" => {
+                    // Indexing: `expr[`, i.e. an operand directly left.
+                    // Attribute `#[`, macro `vec![`, types and slice
+                    // patterns all fail the operand test.
+                    if i > 0 && operand_like(&toks[i - 1]) && toks[i - 1].text != "]" {
+                        // `x[0][1]`: flag once per index chain start is
+                        // enough noise-wise, but a second `[` after `]`
+                        // IS another index — keep it simple and flag
+                        // only ident/paren-based heads.
+                        out.push(finding(file, self.id(), t));
+                    } else if i > 0 && toks[i - 1].text == "]" {
+                        out.push(finding(file, self.id(), t));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ det-iter
+
+/// Methods whose results depend on hash iteration order.
+const ORDER_DEPENDENT: &[&str] = &[
+    "drain", "into_iter", "into_keys", "into_values", "iter", "iter_mut", "keys", "values",
+    "values_mut",
+];
+
+/// Identifiers within the forward window that signal the order is
+/// re-established before use.
+const SORTED_NEARBY: &[&str] = &[
+    "BTreeMap",
+    "BTreeSet",
+    "BinaryHeap",
+    "sort",
+    "sort_by",
+    "sort_by_key",
+    "sort_unstable",
+    "sort_unstable_by",
+    "sort_unstable_by_key",
+    "sorted",
+];
+
+/// How far forward to look for a sort after an order-dependent call.
+const SORT_SCAN: usize = 40;
+
+struct DetIter;
+
+impl DetIter {
+    /// Collect the names bound to HashMap/HashSet values in this file,
+    /// from `let [mut] NAME = … HashMap::new()`-style initializers and
+    /// `NAME: [&][mut] [std::collections::] HashMap<…>` ascriptions.
+    fn hash_names(toks: &[Tok]) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+                continue;
+            }
+            // (a) `let [mut] NAME` somewhere left, same statement.
+            let mut j = i;
+            let mut steps = 0usize;
+            while j > 0 && steps < 25 {
+                j -= 1;
+                steps += 1;
+                let u = &toks[j];
+                if matches!(u.text.as_str(), ";" | "{" | "}") {
+                    break;
+                }
+                if u.kind == TokKind::Ident && u.text == "let" {
+                    let mut k = j + 1;
+                    if toks.get(k).is_some_and(|t| t.text == "mut") {
+                        k += 1;
+                    }
+                    if let Some(name) = toks.get(k) {
+                        if name.kind == TokKind::Ident && !is_keyword(&name.text) {
+                            names.push(name.text.clone());
+                        }
+                    }
+                    break;
+                }
+            }
+            // (b) `NAME : [&] [mut] [std :: collections ::] HashMap`.
+            let mut j = i;
+            loop {
+                if j == 0 {
+                    break;
+                }
+                let u = &toks[j - 1];
+                let skippable = u.text == "::"
+                    || u.text == "&"
+                    || u.text == "mut"
+                    || (u.kind == TokKind::Ident
+                        && matches!(u.text.as_str(), "std" | "collections"));
+                if skippable {
+                    j -= 1;
+                    continue;
+                }
+                if u.text == ":" && j >= 2 {
+                    let name = &toks[j - 2];
+                    if name.kind == TokKind::Ident && !is_keyword(&name.text) {
+                        names.push(name.text.clone());
+                    }
+                }
+                break;
+            }
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    fn sorted_nearby(toks: &[Tok], from: usize) -> bool {
+        for t in toks.iter().skip(from).take(SORT_SCAN) {
+            if t.kind == TokKind::Ident && SORTED_NEARBY.contains(&t.text.as_str()) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl Rule for DetIter {
+    fn id(&self) -> &'static str {
+        "det-iter"
+    }
+    fn about(&self) -> &'static str {
+        "HashMap/HashSet iteration in result-producing modules without a nearby sort"
+    }
+    fn applies(&self, rel_path: &str) -> bool {
+        rel_path.starts_with("sim/")
+            || rel_path.starts_with("analysis/")
+            || rel_path.starts_with("sweep/")
+            || rel_path.starts_with("experiments/")
+    }
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let toks = &file.tokens;
+        let names = Self::hash_names(toks);
+        if names.is_empty() {
+            return;
+        }
+        let text = |k: usize| toks.get(k).map(|t| t.text.as_str()).unwrap_or("");
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident || !names.contains(&t.text) {
+                continue;
+            }
+            // `name.iter()` and friends.
+            if text(i + 1) == "."
+                && toks
+                    .get(i + 2)
+                    .is_some_and(|m| ORDER_DEPENDENT.contains(&m.text.as_str()))
+                && !Self::sorted_nearby(toks, i + 3)
+            {
+                out.push(finding(file, self.id(), t));
+                continue;
+            }
+            // `for k in [&[mut]] name` implicit iteration.
+            let mut j = i;
+            if j > 0 && toks[j - 1].text == "mut" {
+                j -= 1;
+            }
+            if j > 0 && toks[j - 1].text == "&" {
+                j -= 1;
+            }
+            if j > 0 && toks[j - 1].text == "in" && !Self::sorted_nearby(toks, i + 1) {
+                out.push(finding(file, self.id(), t));
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- lock-hygiene
+
+struct LockHygiene;
+
+impl Rule for LockHygiene {
+    fn id(&self) -> &'static str {
+        "lock-hygiene"
+    }
+    fn about(&self) -> &'static str {
+        "bare .lock().unwrap()/.expect(); use sweep::memo::lock_or_recover"
+    }
+    fn applies(&self, _rel_path: &str) -> bool {
+        true
+    }
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let toks = &file.tokens;
+        let text = |k: usize| toks.get(k).map(|t| t.text.as_str()).unwrap_or("");
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident || t.text != "lock" {
+                continue;
+            }
+            if i == 0 || toks[i - 1].text != "." {
+                continue;
+            }
+            if text(i + 1) == "(" && text(i + 2) == ")" && text(i + 3) == "." {
+                let m = text(i + 4);
+                if (m == "unwrap" || m == "expect") && text(i + 5) == "(" {
+                    out.push(finding(file, self.id(), t));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- wall-clock
+
+/// Files whose whole purpose is timing the host.
+const CLOCK_OK: &[&str] = &["serve/counters.rs", "util/bench.rs"];
+
+struct WallClock;
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "wall-clock"
+    }
+    fn about(&self) -> &'static str {
+        "Instant::now/SystemTime::now outside util/bench and serve/counters"
+    }
+    fn applies(&self, rel_path: &str) -> bool {
+        !CLOCK_OK.contains(&rel_path)
+    }
+    fn check(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let toks = &file.tokens;
+        let text = |k: usize| toks.get(k).map(|t| t.text.as_str()).unwrap_or("");
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            if (t.text == "Instant" || t.text == "SystemTime")
+                && text(i + 1) == "::"
+                && text(i + 2) == "now"
+            {
+                out.push(finding(file, self.id(), t));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run_rule(rule: &dyn Rule, rel: &str, src: &str) -> Vec<Finding> {
+        let file = lex(rel, src);
+        let mut out = Vec::new();
+        if rule.applies(rel) {
+            rule.check(&file, &mut out);
+        }
+        out.retain(|f| !file.allows(f.line, f.rule));
+        out
+    }
+
+    #[test]
+    fn time_arith_catches_release_plus_deadline() {
+        let out = run_rule(
+            &TimeArith,
+            "sim/engine.rs",
+            "fn f(release: Time, deadline: Time) -> Time { release + deadline }",
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "time-arith");
+    }
+
+    #[test]
+    fn time_arith_ignores_unary_and_saturating() {
+        let out = run_rule(
+            &TimeArith,
+            "analysis/terms.rs",
+            "fn f(deadline: Time) -> Time { deadline.saturating_add(deadline) }",
+        );
+        assert!(out.is_empty());
+        let out = run_rule(&TimeArith, "sim/engine.rs", "let x = -(1i64); let y = *ptr;");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn time_arith_out_of_scope_path_is_ignored() {
+        let out = run_rule(&TimeArith, "serve/server.rs", "let x = release + deadline;");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panic_path_catches_unwrap_and_indexing() {
+        let src = "fn f(v: &[u32]) -> u32 { let x = g().unwrap(); v[0] + x }";
+        let out = run_rule(&PanicPath, "serve/server.rs", src);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn panic_path_skips_macros_attrs_and_tests() {
+        let src = "#[derive(Debug)]\nstruct S;\nfn f() { let v = vec![1]; }\n\
+                   #[cfg(test)]\nmod t { fn g() { h().unwrap(); } }";
+        let out = run_rule(&PanicPath, "coordinator/arbiter.rs", src);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn det_iter_catches_unsorted_map_iteration() {
+        let src = "fn f() { let mut m = HashMap::new(); for (k, v) in &m { use_it(k, v); } }";
+        let out = run_rule(&DetIter, "sweep/mod.rs", src);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn det_iter_accepts_sorted_collect() {
+        let src =
+            "fn f() { let m = HashMap::new(); let mut v: Vec<_> = m.iter().collect(); v.sort(); }";
+        let out = run_rule(&DetIter, "experiments/mod.rs", src);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn lock_hygiene_catches_bare_lock_unwrap() {
+        let out = run_rule(&LockHygiene, "runtime/mod.rs", "let g = m.lock().unwrap();");
+        assert_eq!(out.len(), 1);
+        let out = run_rule(
+            &LockHygiene,
+            "runtime/mod.rs",
+            "let g = m.lock().unwrap_or_else(|e| e.into_inner());",
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scoped_to_measurement_files() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(run_rule(&WallClock, "sim/engine.rs", src).len(), 1);
+        assert!(run_rule(&WallClock, "util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_suppresses() {
+        let src = "fn f() { let t = Instant::now(); // gcaps-lint: allow(wall-clock) -- timing\n }";
+        assert!(run_rule(&WallClock, "sim/engine.rs", src).is_empty());
+    }
+}

@@ -9,6 +9,7 @@
 //! gcaps bench [--quick] [--out DIR]   pinned RTA/DES wall-clock baseline
 //! gcaps live <case|fig12|profile> [--seconds N] [--mode gcaps|tsg_rr|fmlp|mpcp|server] [--busy]
 //! gcaps serve [--stdin | --tcp ADDR] [--approach LABEL] [--cpus N] [--gpus N] [--no-timing]
+//! gcaps lint [--write-baseline] [--rule NAME] [--format text|jsonl] [--src DIR] [--baseline FILE]
 //! ```
 //!
 //! The `exp` subcommand dispatches through the [`Experiment`] registry
@@ -35,6 +36,7 @@ use gcaps::experiments::bench as perfbench;
 use gcaps::experiments::overhead::fig12_histogram;
 use gcaps::experiments::registry::Experiment;
 use gcaps::experiments::{ExpConfig, Opts};
+use gcaps::lint;
 use gcaps::model::{config, ms, to_ms, TaskSet, WaitMode};
 use gcaps::runtime::{artifacts_dir, Runtime};
 use gcaps::serve;
@@ -366,6 +368,94 @@ fn cmd_exp(args: &Args) {
     }
 }
 
+/// `gcaps lint`: run the invariant rules over this crate's sources
+/// and diff against the committed baseline. Exit 0 when clean, 1 on
+/// findings outside the baseline, 2 on usage errors.
+fn cmd_lint(args: &Args) {
+    args.reject_unknown(
+        "gcaps lint",
+        &["src", "baseline", "rule", "format", "write-baseline"],
+    );
+    let src = match args.flag("src") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        // Default: whichever of rust/src (repo root) or src (crate
+        // root) exists from here.
+        None => ["rust/src", "src"]
+            .into_iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .unwrap_or_else(|| fail("no rust/src or src directory here; pass --src DIR")),
+    };
+    let baseline_path = match (args.flag("baseline"), src.parent()) {
+        (Some(p), _) => std::path::PathBuf::from(p),
+        (None, Some(dir)) => dir.join("lint_baseline.txt"),
+        (None, None) => std::path::PathBuf::from("lint_baseline.txt"),
+    };
+    let rules: Vec<Box<dyn lint::Rule>> = match args.flag("rule") {
+        None => lint::all_rules(),
+        Some(id) => {
+            let picked: Vec<_> =
+                lint::all_rules().into_iter().filter(|r| r.id() == id).collect();
+            if picked.is_empty() {
+                fail(&format!(
+                    "unknown rule {id:?} (expected one of: {})",
+                    lint::rule_ids().join("|")
+                ));
+            }
+            picked
+        }
+    };
+    let jsonl = match args.flag("format").unwrap_or("text") {
+        "text" => false,
+        "jsonl" => true,
+        other => fail(&format!("invalid value {other:?} for --format (expected text|jsonl)")),
+    };
+
+    let findings = lint::lint_tree(&src, &rules)
+        .unwrap_or_else(|e| fail(&format!("lint {}: {e}", src.display())));
+
+    if args.flag("write-baseline").is_some() {
+        lint::baseline::write(&baseline_path, &findings)
+            .unwrap_or_else(|e| fail(&format!("write {}: {e}", baseline_path.display())));
+        eprintln!(
+            "wrote {} ({} finding{})",
+            baseline_path.display(),
+            findings.len(),
+            if findings.len() == 1 { "" } else { "s" }
+        );
+        return;
+    }
+
+    let base = lint::baseline::load(&baseline_path)
+        .unwrap_or_else(|e| fail(&format!("read {}: {e}", baseline_path.display())));
+    let (new, stale) = lint::diff_baseline(&findings, &base);
+    for f in &new {
+        if jsonl {
+            println!("{}", f.render_jsonl());
+        } else {
+            println!("{}", f.render());
+        }
+    }
+    for line in &stale {
+        eprintln!("stale baseline entry (fixed? run --write-baseline): {line}");
+    }
+    if new.is_empty() {
+        eprintln!(
+            "lint clean: {} finding{} total, all baselined",
+            findings.len(),
+            if findings.len() == 1 { "" } else { "s" }
+        );
+    } else {
+        eprintln!(
+            "lint: {} new finding{} (fix, add `// gcaps-lint: allow(rule) -- reason`, \
+             or --write-baseline)",
+            new.len(),
+            if new.len() == 1 { "" } else { "s" }
+        );
+        std::process::exit(1);
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
@@ -376,9 +466,10 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("live") => cmd_live(&args),
         Some("serve") => cmd_serve(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: gcaps <analyze|sim|exp|bench|live|serve> [...]\n\
+                "usage: gcaps <analyze|sim|exp|bench|live|serve|lint> [...]\n\
                  \n\
                  gcaps analyze [--seed N | --taskset FILE]\n\
                  gcaps export [--seed N]                 # dump a generated taskset file\n\
@@ -399,7 +490,11 @@ fn main() {
                  \x20          ops: admit/admit_best_effort/remove/check/headroom/stats/\n\
                  \x20          report_overload/shutdown; incremental RTA with warm-started fixed\n\
                  \x20          points; admit sheds best-effort tasks under overload; --no-timing\n\
-                 \x20          zeroes latency stats for byte-stable transcripts)"
+                 \x20          zeroes latency stats for byte-stable transcripts)\n\
+                 gcaps lint [--write-baseline] [--rule NAME] [--format text|jsonl]\n\
+                 \x20         [--src DIR] [--baseline FILE]  # invariant lint over the sources\n\
+                 \x20          (rules: det-iter|lock-hygiene|panic-path|time-arith|wall-clock;\n\
+                 \x20          exits 1 on findings not in rust/lint_baseline.txt)"
             );
             std::process::exit(2);
         }

@@ -114,7 +114,7 @@ mod pjrt_impl {
                 .loaded
                 .get(name)
                 .ok_or_else(|| err!("unknown workload {name}"))?;
-            let start = Instant::now();
+            let start = Instant::now(); // gcaps-lint: allow(wall-clock) -- real launch latency
             let result = l.exe.execute::<xla::Literal>(&l.inputs).map_err(xe)?;
             // Block until the output is materialised (the launch is async).
             let _out = result[0][0].to_literal_sync().map_err(xe)?;

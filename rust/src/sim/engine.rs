@@ -373,7 +373,7 @@ impl<'a> Engine<'a> {
             return u64::MAX;
         }
         match self.pol {
-            Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
+            Policy::GcapsEdf => u64::MAX.saturating_sub(self.st[i].abs_deadline),
             _ => self.ts.tasks[i].gpu_prio as u64,
         }
     }
@@ -483,7 +483,7 @@ impl<'a> Engine<'a> {
 
     fn complete_job(&mut self, i: usize) {
         let s = &mut self.st[i];
-        let resp = self.now - s.release;
+        let resp = self.now.saturating_sub(s.release);
         let missed = self.now > s.abs_deadline;
         self.metrics[i].response_times.push(resp);
         self.metrics[i].jobs += 1;
@@ -563,7 +563,7 @@ impl<'a> Engine<'a> {
         let theta = self.ts.platform.gpus[g].theta;
         self.metrics[i]
             .runlist_updates
-            .push((self.now - self.st[i].drv_started).saturating_add(theta));
+            .push(self.now.saturating_sub(self.st[i].drv_started).saturating_add(theta));
         let me = &self.ts.tasks[i];
         if !ending {
             // --- TSG_SCHEDULER(τ_i, add) ---
@@ -1045,7 +1045,7 @@ impl<'a> Engine<'a> {
                     Phase::Idle => (Activity::CpuSeg, false),
                 };
                 if progresses {
-                    self.st[i].cpu_rem -= dt.min(self.st[i].cpu_rem);
+                    self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(dt);
                     // G^m drained with the kernel already done: the
                     // segment is completion-ready.
                     if self.st[i].cpu_rem == 0
@@ -1061,7 +1061,7 @@ impl<'a> Engine<'a> {
                         task: i,
                         activity: act,
                         start: self.now,
-                        end: self.now + dt,
+                        end: self.now.saturating_add(dt),
                     });
                 }
             }
@@ -1070,7 +1070,7 @@ impl<'a> Engine<'a> {
             let Some(i) = self.gpus[g].context else { continue };
             if self.gpus[g].switch_rem > 0 {
                 let d = dt.min(self.gpus[g].switch_rem);
-                self.gpus[g].switch_rem -= d;
+                self.gpus[g].switch_rem = self.gpus[g].switch_rem.saturating_sub(d);
                 self.run.gpu_switch_time += d;
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
@@ -1078,7 +1078,7 @@ impl<'a> Engine<'a> {
                         task: i,
                         activity: Activity::CtxSwitch,
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             } else if self.pol == Policy::Server
@@ -1091,7 +1091,7 @@ impl<'a> Engine<'a> {
                 // engine), and not counted as gpu_busy — it is the
                 // server's CPU work, rendered on the engine row.
                 let d = dt.min(self.st[i].cpu_rem);
-                self.st[i].cpu_rem -= d;
+                self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(d);
                 if self.st[i].cpu_rem == 0 && self.st[i].gpu_rem == 0 {
                     self.gpu_done.push(i);
                 }
@@ -1101,12 +1101,12 @@ impl<'a> Engine<'a> {
                         task: i,
                         activity: Activity::ServerMisc,
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
                 let d = dt.min(self.st[i].gpu_rem);
-                self.st[i].gpu_rem -= d;
+                self.st[i].gpu_rem = self.st[i].gpu_rem.saturating_sub(d);
                 self.gpus[g].slice_rem = self.gpus[g].slice_rem.saturating_sub(dt);
                 self.run.gpu_busy += d;
                 // Kernel drained with G^m already done.
@@ -1123,12 +1123,12 @@ impl<'a> Engine<'a> {
                             Activity::GpuExec
                         },
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             }
         }
-        self.now += dt;
+        self.now = self.now.saturating_add(dt);
     }
 
     /// Handle all zero-time transitions at `now` until quiescent.
@@ -1316,7 +1316,7 @@ impl<'a> Engine<'a> {
                 if next <= self.now {
                     break; // safety: nothing can advance
                 }
-                self.advance(next.min(self.cfg.duration) - self.now);
+                self.advance(next.min(self.cfg.duration).saturating_sub(self.now));
             } else {
                 self.advance(dt);
             }

@@ -168,7 +168,7 @@ impl<'a> Engine<'a> {
             return u64::MAX;
         }
         match self.pol {
-            Policy::GcapsEdf => u64::MAX - self.st[i].abs_deadline,
+            Policy::GcapsEdf => u64::MAX.saturating_sub(self.st[i].abs_deadline),
             _ => self.ts.tasks[i].gpu_prio as u64,
         }
     }
@@ -263,7 +263,7 @@ impl<'a> Engine<'a> {
 
     fn complete_job(&mut self, i: usize) {
         let s = &mut self.st[i];
-        let resp = self.now - s.release;
+        let resp = self.now.saturating_sub(s.release);
         let missed = self.now > s.abs_deadline;
         self.metrics[i].response_times.push(resp);
         self.metrics[i].jobs += 1;
@@ -322,7 +322,7 @@ impl<'a> Engine<'a> {
         let theta = self.ts.platform.gpus[g].theta;
         self.metrics[i]
             .runlist_updates
-            .push((self.now - self.st[i].drv_started).saturating_add(theta));
+            .push(self.now.saturating_sub(self.st[i].drv_started).saturating_add(theta));
         let me = &self.ts.tasks[i];
         if !ending {
             if me.best_effort {
@@ -716,7 +716,7 @@ impl<'a> Engine<'a> {
                     Phase::Idle => (Activity::CpuSeg, false),
                 };
                 if progresses {
-                    self.st[i].cpu_rem -= dt.min(self.st[i].cpu_rem);
+                    self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(dt);
                 }
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
@@ -724,7 +724,7 @@ impl<'a> Engine<'a> {
                         task: i,
                         activity: act,
                         start: self.now,
-                        end: self.now + dt,
+                        end: self.now.saturating_add(dt),
                     });
                 }
             }
@@ -733,7 +733,7 @@ impl<'a> Engine<'a> {
             let Some(i) = self.gpus[g].context else { continue };
             if self.gpus[g].switch_rem > 0 {
                 let d = dt.min(self.gpus[g].switch_rem);
-                self.gpus[g].switch_rem -= d;
+                self.gpus[g].switch_rem = self.gpus[g].switch_rem.saturating_sub(d);
                 self.run.gpu_switch_time += d;
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
@@ -741,7 +741,7 @@ impl<'a> Engine<'a> {
                         task: i,
                         activity: Activity::CtxSwitch,
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             } else if self.pol == Policy::Server
@@ -749,19 +749,19 @@ impl<'a> Engine<'a> {
                 && self.st[i].cpu_rem > 0
             {
                 let d = dt.min(self.st[i].cpu_rem);
-                self.st[i].cpu_rem -= d;
+                self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(d);
                 if let Some(tr) = &mut self.trace {
                     tr.push(TraceEvent {
                         resource: Resource::Gpu(g),
                         task: i,
                         activity: Activity::ServerMisc,
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             } else if matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0 {
                 let d = dt.min(self.st[i].gpu_rem);
-                self.st[i].gpu_rem -= d;
+                self.st[i].gpu_rem = self.st[i].gpu_rem.saturating_sub(d);
                 self.gpus[g].slice_rem = self.gpus[g].slice_rem.saturating_sub(dt);
                 self.run.gpu_busy += d;
                 if let Some(tr) = &mut self.trace {
@@ -774,12 +774,12 @@ impl<'a> Engine<'a> {
                             Activity::GpuExec
                         },
                         start: self.now,
-                        end: self.now + d,
+                        end: self.now.saturating_add(d),
                     });
                 }
             }
         }
-        self.now += dt;
+        self.now = self.now.saturating_add(dt);
     }
 
     fn fingerprint(&self) -> u64 {
@@ -953,7 +953,7 @@ impl<'a> Engine<'a> {
                 if next <= self.now {
                     break;
                 }
-                self.advance(next.min(self.cfg.duration) - self.now);
+                self.advance(next.min(self.cfg.duration).saturating_sub(self.now));
             } else {
                 self.advance(dt);
             }

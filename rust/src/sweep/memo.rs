@@ -24,6 +24,10 @@ use crate::model::{Platform, TaskSet, WaitMode};
 use crate::sweep::{cell_hash, cell_rng};
 use crate::taskgen::{generate, GenParams};
 
+/// Re-exported so callers outside `sweep` reach the shared
+/// poison-recovery helper through the module that pioneered it.
+pub use crate::util::sync::lock_or_recover;
+
 type Key = (u64, u64, usize);
 
 /// Process-wide cache. `Mutex<Option<..>>` rather than a lazy cell so a
@@ -51,7 +55,7 @@ const CACHE_CAP: usize = 8192;
 /// the map can be observed in is a valid cache, at worst missing or
 /// still holding some entries.
 fn lock() -> MutexGuard<'static, Option<HashMap<Key, Arc<TaskSet>>>> {
-    CACHE.lock().unwrap_or_else(|e| e.into_inner())
+    lock_or_recover(&CACHE)
 }
 
 /// Stable hash of every [`GenParams`] field that influences the

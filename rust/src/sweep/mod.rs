@@ -118,7 +118,7 @@ where
 {
     let n = cells.len();
     let jobs = cfg.jobs.max(1).min(n.max(1));
-    let start = Instant::now();
+    let start = Instant::now(); // gcaps-lint: allow(wall-clock) -- progress reporting only
     if jobs <= 1 {
         let out: Vec<R> = cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
         if cfg.progress {
@@ -152,6 +152,7 @@ where
         drop(tx); // collectors below hold the only receiver
 
         let mut done = 0usize;
+        // gcaps-lint: allow(wall-clock) -- progress reporting only
         let mut last_report = Instant::now();
         for (i, r) in rx {
             slots[i] = Some(r);
@@ -160,6 +161,7 @@ where
                 && (done == n || last_report.elapsed().as_millis() >= 500)
             {
                 report_progress(done, n, start, done == n);
+                // gcaps-lint: allow(wall-clock) -- progress reporting only
                 last_report = Instant::now();
             }
         }

@@ -9,3 +9,4 @@ pub mod csv;
 pub mod error;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,50 @@
+//! Poison-recovering mutex access shared by every long-running path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking sibling thread into a
+//! cascade: the poisoned mutex makes every later locker panic too,
+//! which is fatal for `gcaps serve` and for the sharded sweep pool
+//! (PR 6 postmortem — a panicking sweep worker wedged every subsequent
+//! `gcaps exp` in the process). [`lock_or_recover`] takes the guard out
+//! of the [`PoisonError`] instead.
+//!
+//! Recovery is only sound when the protected state carries no
+//! cross-field invariant a partially-completed critical section could
+//! break — i.e. when any observable state is a *valid* (if stale or
+//! partial) state. Every call site documents why that holds; the sweep
+//! memo cache is the canonical example (`sweep/memo.rs`). The
+//! `lock-hygiene` rule of `gcaps lint` flags bare `.lock().unwrap()`
+//! so new sites opt in deliberately rather than by default.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn plain_lock_works() {
+        let m = Mutex::new(41);
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 42);
+    }
+
+    #[test]
+    fn recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().expect("not yet poisoned");
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let guard = lock_or_recover(&m);
+        assert_eq!(*guard, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,222 @@
+//! `gcaps lint` end-to-end: fixture trees through `lint_tree`, the
+//! allow-comment and `#[cfg(test)]` escape hatches, baseline round-
+//! tripping, and — the teeth — the self-clean check: linting this
+//! crate's own `src/` must reproduce the committed
+//! `lint_baseline.txt` byte-for-byte. A new violation anywhere in the
+//! tree fails `cargo test` before it ever reaches CI's lint job.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use gcaps::lint::{self, baseline, diff_baseline, Finding};
+
+/// Build a throwaway source tree under the OS temp dir.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Fixture {
+        let root = std::env::temp_dir().join(format!("gcaps_lint_{name}_{}", std::process::id()));
+        if root.exists() {
+            fs::remove_dir_all(&root).unwrap();
+        }
+        fs::create_dir_all(&root).unwrap();
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, text: &str) -> &Self {
+        let path = self.root.join(rel);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, text).unwrap();
+        self
+    }
+
+    fn lint(&self) -> Vec<Finding> {
+        lint::lint_all(&self.root).unwrap()
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn keys(findings: &[Finding]) -> Vec<(String, u32, &'static str)> {
+    findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect()
+}
+
+#[test]
+fn each_rule_catches_its_fixture() {
+    let fx = Fixture::new("catch");
+    // The exact regression that motivated time-arith: PR 4's bare
+    // `release + deadline` back in sim/engine.rs.
+    fx.write(
+        "sim/engine.rs",
+        "fn f(release: Time, deadline: Time) -> Time {\n    release + deadline\n}\n",
+    );
+    fx.write("serve/server.rs", "fn g(v: &[u32]) -> u32 {\n    v[0]\n}\n");
+    fx.write(
+        "sweep/cells.rs",
+        "fn h() {\n    let mut m = HashMap::new();\n    for (k, v) in &m {\n        use_it(k, v);\n    }\n}\n",
+    );
+    fx.write("runtime/pjrt.rs", "fn i() {\n    let g = m.lock().unwrap();\n}\n");
+    fx.write("experiments/sweeps.rs", "fn j() {\n    let t = Instant::now();\n}\n");
+    let found = keys(&fx.lint());
+    assert_eq!(
+        found,
+        vec![
+            ("experiments/sweeps.rs".to_string(), 2, "wall-clock"),
+            ("runtime/pjrt.rs".to_string(), 2, "lock-hygiene"),
+            ("serve/server.rs".to_string(), 2, "panic-path"),
+            ("sim/engine.rs".to_string(), 2, "time-arith"),
+            ("sweep/cells.rs".to_string(), 3, "det-iter"),
+        ]
+    );
+}
+
+#[test]
+fn allow_comment_suppresses_each_rule() {
+    let fx = Fixture::new("allow");
+    fx.write(
+        "sim/engine.rs",
+        "fn f(release: Time, deadline: Time) -> Time {\n    \
+         // gcaps-lint: allow(time-arith) -- proven bounded by validate()\n    \
+         release + deadline\n}\n",
+    );
+    fx.write(
+        "serve/server.rs",
+        "fn g(v: &[u32]) -> u32 {\n    v[0] // gcaps-lint: allow(panic-path) -- len checked above\n}\n",
+    );
+    fx.write(
+        "sweep/cells.rs",
+        "fn h() {\n    let mut m = HashMap::new();\n    \
+         // gcaps-lint: allow(det-iter) -- order folded through a commutative sum\n    \
+         for (k, v) in &m {\n        use_it(k, v);\n    }\n}\n",
+    );
+    fx.write(
+        "runtime/pjrt.rs",
+        "fn i() {\n    let g = m.lock().unwrap(); // gcaps-lint: allow(lock-hygiene) -- single-threaded\n}\n",
+    );
+    fx.write(
+        "experiments/sweeps.rs",
+        "fn j() {\n    let t = Instant::now(); // gcaps-lint: allow(wall-clock) -- progress only\n}\n",
+    );
+    assert_eq!(keys(&fx.lint()), Vec::<(String, u32, &str)>::new());
+}
+
+#[test]
+fn allow_comment_without_reason_does_not_suppress() {
+    let fx = Fixture::new("noreason");
+    fx.write(
+        "experiments/sweeps.rs",
+        "fn j() {\n    let t = Instant::now(); // gcaps-lint: allow(wall-clock)\n}\n",
+    );
+    let found = fx.lint();
+    assert_eq!(found.len(), 1, "an allow without `-- reason` must not count");
+    assert_eq!(found[0].rule, "wall-clock");
+}
+
+#[test]
+fn cfg_test_code_is_exempt() {
+    let fx = Fixture::new("cfgtest");
+    fx.write(
+        "serve/server.rs",
+        "fn live() -> u32 { 0 }\n\
+         #[cfg(test)]\n\
+         mod tests {\n    \
+         fn g(v: &[u32]) -> u32 {\n        v[0] + h().unwrap() + i().lock().unwrap()\n    }\n\
+         }\n",
+    );
+    fx.write(
+        "sim/engine.rs",
+        "fn live() -> u32 { 0 }\n\
+         #[test]\n\
+         fn t(release: Time, deadline: Time) -> Time {\n    release + deadline\n}\n",
+    );
+    assert_eq!(keys(&fx.lint()), Vec::<(String, u32, &str)>::new());
+}
+
+#[test]
+fn rule_filter_runs_only_the_selected_rule() {
+    let fx = Fixture::new("filter");
+    fx.write(
+        "sim/engine.rs",
+        "fn f(release: Time, deadline: Time) {\n    let x = release + deadline;\n    let t = Instant::now();\n}\n",
+    );
+    let only: Vec<Box<dyn lint::Rule>> = lint::all_rules()
+        .into_iter()
+        .filter(|r| r.id() == "wall-clock")
+        .collect();
+    let found = lint::lint_tree(&fx.root, &only).unwrap();
+    assert_eq!(keys(&found), vec![("sim/engine.rs".to_string(), 3, "wall-clock")]);
+}
+
+#[test]
+fn baseline_round_trip_is_exact() {
+    let fx = Fixture::new("baseline");
+    fx.write("serve/server.rs", "fn g(v: &[u32]) -> u32 {\n    v[0]\n}\n");
+    fx.write(
+        "sim/engine.rs",
+        "fn f(release: Time, deadline: Time) -> Time {\n    release + deadline\n}\n",
+    );
+    let findings = fx.lint();
+    assert_eq!(findings.len(), 2);
+
+    let path = fx.root.join("lint_baseline.txt");
+    baseline::write(&path, &findings).unwrap();
+    let loaded = baseline::load(&path).unwrap();
+    let (new, stale) = diff_baseline(&findings, &loaded);
+    assert!(new.is_empty(), "round-tripped baseline missed {new:?}");
+    assert!(stale.is_empty(), "round-tripped baseline grew {stale:?}");
+
+    // Byte-level: rendering the same findings reproduces the file.
+    assert_eq!(fs::read_to_string(&path).unwrap(), baseline::render(&findings));
+
+    // A brand-new finding is NOT absorbed...
+    fx.write("serve/extra.rs", "fn h() { boom().unwrap(); }\n");
+    let (new, stale) = diff_baseline(&fx.lint(), &loaded);
+    assert_eq!(new.len(), 1);
+    assert_eq!(new[0].file, "serve/extra.rs");
+    assert!(stale.is_empty());
+
+    // ...and a fixed finding turns stale instead of lingering silently.
+    fx.write("serve/server.rs", "fn g(v: &[u32]) -> Option<u32> {\n    v.first().copied()\n}\n");
+    fx.write("serve/extra.rs", "fn h() {}\n");
+    let (new, stale) = diff_baseline(&fx.lint(), &loaded);
+    assert!(new.is_empty());
+    assert_eq!(stale.len(), 1, "{stale:?}");
+    assert!(stale[0].starts_with("serve/server.rs:"));
+}
+
+/// The tentpole contract: this crate's own sources lint clean against
+/// the committed baseline, and the baseline is exactly what
+/// `--write-baseline` would regenerate — no drift in either direction.
+#[test]
+fn src_tree_is_lint_clean_and_baseline_is_current() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint::lint_all(&manifest.join("src")).unwrap();
+    let committed_path = manifest.join("lint_baseline.txt");
+    let committed = baseline::load(&committed_path).unwrap();
+
+    let (new, stale) = diff_baseline(&findings, &committed);
+    assert!(
+        new.is_empty(),
+        "new lint findings not in lint_baseline.txt — fix them, add a \
+         `// gcaps-lint: allow(rule) -- reason`, or regenerate with \
+         `gcaps lint --write-baseline`:\n{}",
+        new.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+    assert!(
+        stale.is_empty(),
+        "stale lint_baseline.txt entries (already fixed — regenerate with \
+         `gcaps lint --write-baseline`):\n{}",
+        stale.join("\n")
+    );
+    assert_eq!(
+        fs::read_to_string(&committed_path).unwrap(),
+        baseline::render(&findings),
+        "lint_baseline.txt is not byte-identical to a fresh --write-baseline run"
+    );
+}

@@ -1,0 +1,127 @@
+//! Near-`u64::MAX` saturation regression: the `time-arith` lint rule
+//! exists because bare `Time` arithmetic *wraps* at the extremes, and
+//! a wrapped response time is a tiny — and therefore unsound — bound.
+//! These tests drive both the RTA and the DES through the pathological
+//! corner and pin three properties:
+//!
+//! 1. the analysis kernel and the naive reference stay bit-equal even
+//!    when every ε-carrying term saturates,
+//! 2. saturation lands on the *sound* side: `Time::MAX` fails the
+//!    deadline check, so the set reports unschedulable instead of
+//!    schedulable-by-wraparound,
+//! 3. the event engine and the seed reference engine agree
+//!    event-for-event when jobs are released near `u64::MAX`.
+//!
+//! `gcaps lint --rule time-arith` is the static half of this contract;
+//! this file is the dynamic half.
+
+use gcaps::analysis::{analyze, reference, Approach};
+use gcaps::model::{ms, GpuSegment, Platform, Task, TaskSet, Time, WaitMode};
+use gcaps::sim::{simulate, simulate_reference, Policy, SimConfig};
+use gcaps::taskgen::{generate, GenParams};
+use gcaps::util::rng::Pcg32;
+
+/// ε so large that the GCAPS own-term `C + G + 2ε·η` overflows u64
+/// for every GPU-using task.
+const HUGE_EPS: Time = Time::MAX / 2 + 1_000;
+
+#[test]
+fn huge_epsilon_saturates_identically_in_kernel_and_reference() {
+    let mut rng = Pcg32::seeded(7);
+    let mut ts = generate(&mut rng, &GenParams::default());
+    assert!(
+        ts.rt_tasks().any(|t| t.uses_gpu()),
+        "generator produced no real-time GPU task; the corner would be vacuous"
+    );
+    for g in &mut ts.platform.gpus {
+        g.epsilon = HUGE_EPS;
+    }
+    for a in Approach::ALL {
+        let kernel = analyze(&ts, a);
+        let naive = reference::analyze(&ts, a);
+        assert_eq!(
+            kernel.response,
+            naive.response,
+            "{}: kernel and reference diverged at the saturation corner",
+            a.label()
+        );
+        assert_eq!(kernel.schedulable, naive.schedulable, "{}", a.label());
+    }
+}
+
+#[test]
+fn huge_epsilon_is_unschedulable_not_schedulable_by_wraparound() {
+    // A wrapping build computed `own = C + G + 2ε·η` modulo 2^64 here,
+    // got a tiny bound, and declared the set schedulable. Saturating
+    // arithmetic pins `own` at Time::MAX, the fixed point starts above
+    // the deadline, and the analysis soundly reports unschedulable.
+    let mut rng = Pcg32::seeded(7);
+    let mut ts = generate(&mut rng, &GenParams::default());
+    for g in &mut ts.platform.gpus {
+        g.epsilon = HUGE_EPS;
+    }
+    for a in [Approach::GcapsSuspend, Approach::GcapsBusy] {
+        let res = analyze(&ts, a);
+        assert!(
+            !res.schedulable,
+            "{}: huge ε must fail the deadline check, not wrap into range",
+            a.label()
+        );
+        for t in ts.rt_tasks().filter(|t| t.uses_gpu()) {
+            assert_eq!(
+                res.response[t.id],
+                None,
+                "{}: GPU task {} got a finite bound from an overflowed own-term",
+                a.label(),
+                t.name
+            );
+        }
+    }
+}
+
+fn gpu_task(id: usize, prio: u32, t_ms: f64) -> Task {
+    Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(t_ms),
+        deadline: ms(t_ms),
+        cpu_segments: vec![ms(1.0), ms(1.0)],
+        gpu_segments: vec![GpuSegment::new(ms(0.5), ms(5.0))],
+        core: 0,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    }
+}
+
+#[test]
+fn near_max_release_offsets_keep_engine_and_reference_bit_equal() {
+    // Companion to engine.rs::near_max_deadlines_saturate_instead_of_
+    // wrapping: releases near u64::MAX exercise every saturating site
+    // in the advance loop (abs_deadline, EDF rank, response, horizon).
+    // Both engines must clamp the same way — the equivalence contract
+    // holds at the extremes, not just in the comfortable range.
+    let ts = TaskSet::new(
+        vec![gpu_task(0, 2, 100.0), gpu_task(1, 1, 120.0)],
+        Platform::single(2, 1024, 200, 1000),
+    );
+    let offsets = vec![u64::MAX - ms(30.0), u64::MAX - ms(29.0)];
+    for policy in [Policy::Gcaps, Policy::GcapsEdf, Policy::TsgRr] {
+        let cfg = SimConfig::new(policy, u64::MAX).with_offsets(offsets.clone());
+        let fast = simulate(&ts, &cfg);
+        let seed = simulate_reference(&ts, &cfg);
+        assert_eq!(
+            fast.per_task, seed.per_task,
+            "{policy:?}: engines diverged on near-MAX releases"
+        );
+        for i in [0, 1] {
+            assert!(fast.per_task[i].jobs >= 1, "{policy:?}: tau{i} never ran");
+            assert_eq!(
+                fast.per_task[i].deadline_misses, 0,
+                "{policy:?}: tau{i} flagged a bogus wrap-around miss"
+            );
+        }
+    }
+}
