@@ -61,6 +61,45 @@ pub struct Options {
     /// Reproduce Lemma 12 exactly as printed (drops same-core busy-wait
     /// G^e* for CPU-only tasks) — ablation only, unsound.
     pub paper_exact_lemma12: bool,
+    /// Fine-grain co-running (RTGPU-style fractional SM utilization):
+    /// charge a co-runnable same-engine hp segment as inflated demand
+    /// instead of full serialization. See [`fine_demand`] for the rule
+    /// and its soundness argument. Off by default — with every fraction
+    /// at the serial 100% the charge is bit-identical either way, so
+    /// enabling it on a serial taskset is unobservable.
+    pub fine_grain: bool,
+}
+
+/// Fine-grain charge for one same-engine hp GPU demand `ge` (the pure
+/// execution part, no ε overhead): if τ_h can co-run with τ_i, τ_i's
+/// segment is only delayed while the engine lacks `fmax_i` free
+/// capacity, and each unit of that delay consumes at least
+/// `100 − fmax_i` percent-capacity from co-resident hp work: the DES
+/// packs in rank order *with bypass* (non-fitting entries are skipped,
+/// never block), so while an RT segment is pending the higher-ranked
+/// residents alone jointly exceed `100 − fmax_i` — τ_i was rejected
+/// against exactly their sum. Bypassed lower-ranked residents occupy
+/// only capacity τ_i could not use anyway and are demoted the instant
+/// τ_i fits, so they never extend the wait and the hp charge alone
+/// covers it. A job of τ_h supplies at most `fmax_h · ge_h`
+/// percent-capacity-work in total (capacity-partitioned SMs progress
+/// each resident at full rate, so a resident fraction f occupies f for
+/// exactly its ge). Charging `ceil(fmax_h · ge_h / (100 − fmax_i))`
+/// per hp job therefore covers every unit of delay τ_h can contribute
+/// — sound by pessimism: it assumes every co-resident instant is spent
+/// at the *minimum* capacity that still blocks τ_i.
+///
+/// Co-runnable means `fmax_h ≤ 100 − fmax_i` (τ_h fits next to τ_i
+/// even in both tasks' widest segments); then the charge is ≤ `ge_h`,
+/// never optimistic past full serialization. Otherwise τ_h may occupy
+/// the engine outright and the caller keeps the serial charge.
+#[inline]
+fn fine_demand(me: &PrepTask, p: &PrepTask, ge: Time) -> Option<Time> {
+    let free = (100 as Time).saturating_sub(me.fmax);
+    if p.fmax > free {
+        return None; // not co-runnable (includes every serial pair)
+    }
+    Some(crate::analysis::terms::ceil_div(p.fmax.saturating_mul(ge), free))
 }
 
 /// J^g_h (Lemma 10), D_h-based under §6.4 (responses unknown during
@@ -140,8 +179,16 @@ fn build_terms(
             if p.uses_gpu && p.gpu == me.gpu {
                 // Busy: Lemma 10 + carry-in amendment (J^g jitter);
                 // suspend: Lemma 13 (plain G^e_h, runlist update
-                // overlaps the CPU-side terms).
-                let demand = if busy { p.ge_star } else { p.ge };
+                // overlaps the CPU-side terms). Fine-grain: only the
+                // pure G^e part deflates — the 2ε·η^g runlist-update
+                // overhead inside G^e* is serial CPU/driver work.
+                let serial = if busy { p.ge_star } else { p.ge };
+                let demand = match opts.fine_grain {
+                    true => fine_demand(&me, p, p.ge)
+                        .map(|d| d.saturating_add(serial.saturating_sub(p.ge)))
+                        .unwrap_or(serial),
+                    false => serial,
+                };
                 scratch.push(jg(prep, h, resp, opts), p.period, demand);
             }
         }
@@ -149,7 +196,13 @@ fn build_terms(
             let h = h32 as usize;
             let p = &prep.t[h];
             if p.gpu == me.gpu && cross_higher(ts, prep, i, h, opts) {
-                scratch.push(jg(prep, h, resp, opts), p.period, p.ge_star);
+                let demand = match opts.fine_grain {
+                    true => fine_demand(&me, p, p.ge)
+                        .map(|d| d.saturating_add(p.ge_star.saturating_sub(p.ge)))
+                        .unwrap_or(p.ge_star),
+                    false => p.ge_star,
+                };
+                scratch.push(jg(prep, h, resp, opts), p.period, demand);
             }
         }
     } else if busy {
@@ -316,6 +369,14 @@ pub fn analyze_prepared_warm(
 pub fn analyze(ts: &TaskSet, busy: bool, opts: &Options) -> AnalysisResult {
     let prep = Prepared::new(ts);
     analyze_prepared(ts, &prep, busy, opts)
+}
+
+/// GCAPS analysis with the fine-grain co-running charge enabled —
+/// the serial-vs-fine comparison entry used by
+/// `gcaps exp scenarios --only finegrain`. On an all-serial taskset
+/// this is bit-identical to [`analyze`] with default options.
+pub fn analyze_fine(ts: &TaskSet, busy: bool) -> AnalysisResult {
+    analyze(ts, busy, &Options { fine_grain: true, ..Options::default() })
 }
 
 /// [`Analysis`] implementation: GCAPS with paper-default options (RM
@@ -568,6 +629,57 @@ mod tests {
         out.tasks[0].gpu_prio = p0;
         out.tasks[1].gpu_prio = p1;
         out
+    }
+
+    #[test]
+    fn fine_grain_on_serial_taskset_is_unobservable() {
+        // All fractions at 100%: no pair is co-runnable, so the fine
+        // charge degenerates to the serial one bit-for-bit.
+        let ts = TaskSet::new(
+            vec![
+                gpu_task(0, 0, 2, 2.0, 1.0, 20.0, 100.0),
+                gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0),
+            ],
+            platform(),
+        );
+        for busy in [false, true] {
+            let serial = analyze(&ts, busy, &Options::default());
+            let fine = analyze_fine(&ts, busy);
+            assert_eq!(serial.response, fine.response, "busy = {busy}");
+            assert_eq!(serial.schedulable, fine.schedulable);
+        }
+    }
+
+    #[test]
+    fn fine_grain_deflates_co_runnable_interference() {
+        // hp at 40%, analysed task at 50%: co-runnable (40 ≤ 100−50),
+        // so the per-job charge drops from G^e* to
+        // ceil(40·G^e/50) + 2ε·η = 0.8·G^e + overhead.
+        let mut hp = gpu_task(0, 0, 2, 2.0, 1.0, 20.0, 100.0);
+        let mut lo = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        hp.gpu_segments[0] = hp.gpu_segments[0].with_par(40);
+        lo.gpu_segments[0] = lo.gpu_segments[0].with_par(50);
+        let ts = TaskSet::new(vec![hp, lo], platform());
+        let serial = analyze(&ts, false, &Options::default()).response[1].unwrap();
+        let fine = analyze_fine(&ts, false).response[1].unwrap();
+        // Serial charges the full 22 ms G^e* per hp job; fine charges
+        // 0.8·20 + 2 = 18 ms. One hp job in the window → exactly 4 ms
+        // less.
+        assert_eq!(serial - fine, ms(4.0), "serial {serial} fine {fine}");
+    }
+
+    #[test]
+    fn fine_grain_never_optimistic_past_serial() {
+        // The charge is capped at the serial one: a non-co-runnable
+        // pair (70% vs 50%) keeps full serialization.
+        let mut hp = gpu_task(0, 0, 2, 2.0, 1.0, 20.0, 100.0);
+        let mut lo = gpu_task(1, 1, 1, 2.0, 1.0, 5.0, 100.0);
+        hp.gpu_segments[0] = hp.gpu_segments[0].with_par(70);
+        lo.gpu_segments[0] = lo.gpu_segments[0].with_par(50);
+        let ts = TaskSet::new(vec![hp, lo], platform());
+        let serial = analyze(&ts, false, &Options::default());
+        let fine = analyze_fine(&ts, false);
+        assert_eq!(serial.response, fine.response);
     }
 
     #[test]

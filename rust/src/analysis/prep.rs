@@ -240,6 +240,12 @@ pub struct PrepTask {
     /// G^m* = G^m + 2ε·η^g.
     pub gm_star: Time,
     pub eta_g: Time,
+    /// max_j par_j: the task's largest per-segment SM fraction in
+    /// percent (100 for serial / CPU-only tasks). The fine-grain charge
+    /// (gcaps `Options::fine_grain`) treats a job as needing this much
+    /// engine capacity whenever any of its segments is resident — the
+    /// per-job worst case, so one constant covers all segments.
+    pub fmax: Time,
     pub period: Time,
     pub deadline: Time,
     pub uses_gpu: bool,
@@ -303,6 +309,7 @@ fn prep_task(ts: &TaskSet, task: &crate::model::Task) -> PrepTask {
         ge_star: ge_star(task, eps),
         gm_star: gm_star(task, eps),
         eta_g: task.eta_g() as Time,
+        fmax: task.fmax_pct() as Time,
         period: task.period,
         deadline: task.deadline,
         uses_gpu: task.uses_gpu(),
@@ -591,6 +598,7 @@ mod tests {
                 (b.c, b.gm, b.ge, b.ge_star, b.gm_star, b.rounds_sum, b.max_gcs, b.gcs_total),
                 "{ctx}: constants({i})"
             );
+            assert_eq!(a.fmax, b.fmax, "{ctx}: fmax({i})");
             assert_eq!(
                 (a.core, a.gpu, a.cpu_prio, a.best_effort, a.uses_gpu, a.period, a.deadline),
                 (b.core, b.gpu, b.cpu_prio, b.best_effort, b.uses_gpu, b.period, b.deadline),

@@ -60,6 +60,22 @@ fn hp_gpu_cross<'a>(
     }
 }
 
+/// Naive spec of the fine-grain co-running charge (the kernel's
+/// `gcaps::fine_demand`, re-derived from the tasks): a co-runnable hp
+/// job's pure G^e deflates to `ceil(fmax_h · G^e_h / (100 − fmax_i))`,
+/// the serial ε overhead (`serial − G^e`) rides on top unscaled.
+/// Not co-runnable (fmax_h > 100 − fmax_i, which covers every serial
+/// pair) keeps the full serial charge.
+fn gcaps_fine_demand(me: &Task, h: &Task, serial: Time) -> Time {
+    let free = (100 as Time).saturating_sub(me.fmax_pct() as Time);
+    if (h.fmax_pct() as Time) > free {
+        return serial;
+    }
+    crate::analysis::terms::ceil_div((h.fmax_pct() as Time).saturating_mul(h.ge()), free)
+        .saturating_add(serial.saturating_sub(h.ge()))
+        .saturating_add(serial.saturating_sub(h.ge()))
+}
+
 fn gcaps_i_dp(
     ts: &TaskSet,
     i: usize,
@@ -74,15 +90,18 @@ fn gcaps_i_dp(
     }
     let mut total = 0;
     for h in ts.hpp(i).filter(|h| h.uses_gpu() && h.gpu == me.gpu) {
-        total = total.saturating_add(if busy {
-            njobs_jitter(r, jg(h, resp, opts), h.period).saturating_mul(ge_star(h, eps_of(ts, h)))
-        } else {
-            njobs_jitter(r, jg(h, resp, opts), h.period).saturating_mul(h.ge())
-        });
+        let serial = if busy { ge_star(h, eps_of(ts, h)) } else { h.ge() };
+        let demand =
+            if opts.fine_grain { gcaps_fine_demand(me, h, serial) } else { serial };
+        total = total
+            .saturating_add(njobs_jitter(r, jg(h, resp, opts), h.period).saturating_mul(demand));
     }
     for h in hp_gpu_cross(ts, i, opts).filter(|h| h.gpu == me.gpu) {
+        let serial = ge_star(h, eps_of(ts, h));
+        let demand =
+            if opts.fine_grain { gcaps_fine_demand(me, h, serial) } else { serial };
         let n = njobs_jitter(r, jg(h, resp, opts), h.period);
-        total = total.saturating_add(n.saturating_mul(ge_star(h, eps_of(ts, h))));
+        total = total.saturating_add(n.saturating_mul(demand));
     }
     total
 }

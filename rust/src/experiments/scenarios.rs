@@ -31,8 +31,12 @@
 //! 5. **Load-adaptive policy switching** (`scenarios_adaptive.csv`):
 //!    fixed RR, fixed EDF, and the windowed-miss-ratio RR↔EDF governor
 //!    ([`AdaptivePolicy`]) under the same overrun ramp.
+//! 6. **Fine-grain co-running** (`scenarios_finegrain.csv`): per-segment
+//!    SM-fraction bands (serial control, wide, small) × utilization ×
+//!    GPU-task ratio — paired serial-vs-fine GCAPS acceptance on the
+//!    same tasksets plus the co-running gcaps DES miss ratio.
 //!
-//! All five run through the sharded `sweep/` worker pool; results and
+//! All six run through the sharded `sweep/` worker pool; results and
 //! CSV bytes are identical for every `--jobs` value
 //! (`rust/tests/scenarios.rs` pins it, plus per-sub-sweep anchors).
 //!
@@ -55,7 +59,8 @@ use crate::util::error::Result;
 use crate::util::stats::percentile;
 
 /// The sub-sweep names accepted by `gcaps exp scenarios --only <name>`.
-pub const SCENARIOS: [&str; 5] = ["epstheta", "edfvfp", "hetero", "overload", "adaptive"];
+pub const SCENARIOS: [&str; 6] =
+    ["epstheta", "edfvfp", "hetero", "overload", "adaptive", "finegrain"];
 
 /// DES horizon per replica (µs as ms input): 6–100 jobs per task at
 /// Table 3 periods (30–500 ms) — enough for aggregate miss ratios
@@ -779,6 +784,156 @@ fn adaptive_report(rows: &[AdaptiveRow]) -> String {
 }
 
 // ---------------------------------------------------------------------
+// (f) fine-grain co-running: serial vs fractional SM model
+// ---------------------------------------------------------------------
+
+pub const FINEGRAIN_UTILS: [f64; 3] = [0.4, 0.5, 0.6];
+pub const FINEGRAIN_GPU_RATIOS: [f64; 2] = [0.4, 0.6];
+
+/// The compared per-segment SM-fraction bands. `serial` is the control
+/// (the whole-context model — the fine analysis and DES are pinned
+/// bit-identical to the serial ones there); the others draw each GPU
+/// segment's fraction uniformly from the band, so `small` makes most
+/// hp/lp pairs co-runnable while `wide` mixes co-runnable and
+/// engine-filling segments.
+pub const FINEGRAIN_BANDS: [(&str, (u32, u32)); 3] =
+    [("serial", (100, 100)), ("wide", (25, 75)), ("small", (20, 45))];
+
+/// One fine-grain result row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FineGrainRow {
+    pub band: &'static str,
+    pub util: f64,
+    pub gpu_ratio: f64,
+    /// GCAPS (self-suspending) acceptance with the serial whole-context
+    /// charge — fractions present but charged as full serialization.
+    pub sched_serial: f64,
+    /// Acceptance with the fine-grain inflation charge
+    /// ([`crate::analysis::gcaps::analyze_fine`]) on the same tasksets.
+    pub sched_fine: f64,
+    /// Simulated RT deadline-miss ratio under the gcaps DES (which
+    /// co-runs fractional segments whenever they fit).
+    pub miss_des: f64,
+}
+
+/// The generator knobs for one (band, utilization, GPU-ratio) point
+/// (shared with the test anchors; see [`edfvfp_params`]).
+pub fn finegrain_params(util: f64, gpu_ratio: f64, par: (u32, u32)) -> GenParams {
+    GenParams {
+        util_per_cpu: (util - 0.05, util + 0.05),
+        gpu_task_ratio: (gpu_ratio, gpu_ratio),
+        par_range: par,
+        ..GenParams::default()
+    }
+}
+
+/// Sweep (f): serial vs fine-grain acceptance plus the gcaps DES miss
+/// ratio at every band × utilization × GPU-ratio point. The serial and
+/// fine analyses run on the *same* memoized tasksets, so the acceptance
+/// delta is paired; DES replicas are capped at [`MAX_SIM_TASKSETS`].
+pub fn finegrain_sweep(cfg: &ExpConfig) -> Vec<FineGrainRow> {
+    use crate::analysis::gcaps;
+    let points: Vec<(usize, f64, f64)> = (0..FINEGRAIN_BANDS.len())
+        .flat_map(|bi| {
+            FINEGRAIN_UTILS.iter().flat_map(move |&u| {
+                FINEGRAIN_GPU_RATIOS.iter().map(move |&r| (bi, u, r))
+            })
+        })
+        .collect();
+    let n_sim = cfg.tasksets.min(MAX_SIM_TASKSETS);
+    let cells = sweep::grid2(points.len(), cfg.tasksets);
+    let seed = cfg.seed;
+    let per_cell: Vec<(bool, bool, Option<(u64, u64)>)> =
+        sweep::run(&cfg.sweep(), cells, |_, &(pi, ti)| {
+            let (bi, util, ratio) = points[pi];
+            let p = finegrain_params(util, ratio, FINEGRAIN_BANDS[bi].1);
+            let ts = memo::taskset(seed, &p, ti);
+            let serial = gcaps::analyze(&ts, false, &gcaps::Options::default());
+            let fine = gcaps::analyze_fine(&ts, false);
+            let sim = (ti < n_sim).then(|| rt_misses(&ts, Policy::Gcaps));
+            (serial.schedulable, fine.schedulable, sim)
+        });
+    let n = cfg.tasksets;
+    points
+        .iter()
+        .enumerate()
+        .map(|(pi, &(bi, util, gpu_ratio))| {
+            let slice = &per_cell[pi * n..(pi + 1) * n];
+            let sched_serial =
+                slice.iter().filter(|&&(s, _, _)| s).count() as f64 / n.max(1) as f64;
+            let sched_fine =
+                slice.iter().filter(|&&(_, f, _)| f).count() as f64 / n.max(1) as f64;
+            let (mut misses, mut jobs) = (0u64, 0u64);
+            for &(_, _, sim) in slice {
+                if let Some((m, j)) = sim {
+                    misses += m;
+                    jobs += j;
+                }
+            }
+            FineGrainRow {
+                band: FINEGRAIN_BANDS[bi].0,
+                util,
+                gpu_ratio,
+                sched_serial,
+                sched_fine,
+                miss_des: misses as f64 / jobs.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Format sweep (f) as its CSV.
+pub fn finegrain_csv(rows: &[FineGrainRow]) -> CsvTable {
+    let mut csv = CsvTable::new(vec![
+        "par_band",
+        "par_lo",
+        "par_hi",
+        "util_per_cpu",
+        "gpu_task_ratio",
+        "gcaps_serial_sched_ratio",
+        "gcaps_fine_sched_ratio",
+        "miss_ratio_gcaps_des",
+    ]);
+    for r in rows {
+        let (lo, hi) = FINEGRAIN_BANDS
+            .iter()
+            .find(|(name, _)| *name == r.band)
+            .map(|&(_, band)| band)
+            .unwrap();
+        csv.row(vec![
+            r.band.to_string(),
+            lo.to_string(),
+            hi.to_string(),
+            format!("{:.1}", r.util),
+            format!("{:.1}", r.gpu_ratio),
+            format!("{:.4}", r.sched_serial),
+            format!("{:.4}", r.sched_fine),
+            format!("{:.5}", r.miss_des),
+        ]);
+    }
+    csv
+}
+
+fn finegrain_report(rows: &[FineGrainRow]) -> String {
+    let mut out = String::from(
+        "== Scenarios (f): fine-grain co-running vs serial whole-context ==\n\
+         \x20   band     util  gpu%   sched(serial)  sched(fine)   miss(DES)\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "    {:<7}  {:>4.1}  {:>3.0}%       {:>6.2}       {:>6.2}     {:>7.4}\n",
+            r.band,
+            r.util,
+            r.gpu_ratio * 100.0,
+            r.sched_serial,
+            r.sched_fine,
+            r.miss_des
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
 // driver
 // ---------------------------------------------------------------------
 
@@ -803,7 +958,7 @@ impl Experiment for ScenariosExp {
     fn flags(&self) -> &'static [FlagSpec] {
         static FLAGS: [FlagSpec; 1] = [FlagSpec {
             name: "only",
-            values: "epstheta|edfvfp|hetero|overload|adaptive",
+            values: "epstheta|edfvfp|hetero|overload|adaptive|finegrain",
             check: only_value_ok,
         }];
         &FLAGS
@@ -836,6 +991,11 @@ impl Experiment for ScenariosExp {
             let rows = adaptive_sweep(cfg);
             sink.table("scenarios_adaptive", &adaptive_csv(&rows));
             sink.text(&adaptive_report(&rows));
+        }
+        if selected("finegrain") {
+            let rows = finegrain_sweep(cfg);
+            sink.table("scenarios_finegrain", &finegrain_csv(&rows));
+            sink.text(&finegrain_report(&rows));
         }
         Ok(())
     }
@@ -968,6 +1128,28 @@ mod tests {
             assert!(r.tardy_p99_ms >= 0.0 && r.tardy_p99_ms.is_finite(), "{r:?}");
             if r.mode != "adaptive" {
                 assert_eq!(r.policy_switches, 0, "{r:?}: fixed mode switched policy");
+            }
+        }
+    }
+
+    #[test]
+    fn finegrain_rows_cover_the_grid_and_serial_band_pairs_exactly() {
+        let rows = finegrain_sweep(&ExpConfig { tasksets: 3, ..tiny() });
+        assert_eq!(
+            rows.len(),
+            FINEGRAIN_BANDS.len() * FINEGRAIN_UTILS.len() * FINEGRAIN_GPU_RATIOS.len()
+        );
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.sched_serial), "{r:?}");
+            assert!((0.0..=1.0).contains(&r.sched_fine), "{r:?}");
+            assert!((0.0..=1.0).contains(&r.miss_des), "{r:?}");
+            // The fine charge never exceeds the serial one, so paired
+            // acceptance can only gain tasksets.
+            assert!(r.sched_fine >= r.sched_serial, "{r:?}");
+            // On the serial control band the two analyses are pinned
+            // bit-identical — the acceptance ratios must agree exactly.
+            if r.band == "serial" {
+                assert_eq!(r.sched_serial, r.sched_fine, "{r:?}");
             }
         }
     }

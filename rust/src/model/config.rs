@@ -27,6 +27,9 @@
 //! deadline_ms = 50          # optional, defaults to period
 //! cpu_ms = 1, 1             # η_g + 1 CPU segments
 //! gpu_ms = 0.5:8            # η_g segments as G^m:G^e pairs
+//! par = 40                  # optional per-segment SM fraction (percent,
+//!                           # 1..=100; one value per gpu_ms segment;
+//!                           # must FOLLOW gpu_ms; default 100 = serial)
 //! mode = suspend            # suspend | busy
 //! best_effort = false
 //! ```
@@ -229,6 +232,39 @@ pub fn parse(text: &str) -> Result<TaskSet, String> {
                             })
                             .collect::<Result<_, String>>()?;
                     }
+                    "par" => {
+                        // Per-segment SM fractions (RTGPU-style fine-grain
+                        // parallelism). The list aligns positionally with
+                        // gpu_ms, so it must FOLLOW it and match its
+                        // length — anything else is a silent misalignment
+                        // waiting to happen, so reject strictly.
+                        if t.gpu_segments.is_empty() {
+                            return Err(err("par requires a preceding gpu_ms line"));
+                        }
+                        let fracs: Vec<u32> = value
+                            .split(',')
+                            .map(|v| {
+                                v.trim().parse::<u32>().map_err(|_| {
+                                    err(&format!(
+                                        "bad par value {:?} (integer percent expected)",
+                                        v.trim()
+                                    ))
+                                })
+                            })
+                            .collect::<Result<_, _>>()?;
+                        if fracs.len() != t.gpu_segments.len() {
+                            return Err(err(&format!(
+                                "par lists {} fractions but gpu_ms has {} segments",
+                                fracs.len(),
+                                t.gpu_segments.len()
+                            )));
+                        }
+                        for (seg, p) in t.gpu_segments.iter_mut().zip(fracs) {
+                            // Range (1..=100) is enforced by
+                            // TaskSet::validate at end of parse.
+                            seg.par = crate::model::SmFraction::new(p);
+                        }
+                    }
                     "mode" => {
                         t.mode = match value {
                             "suspend" => WaitMode::SelfSuspend,
@@ -322,6 +358,18 @@ pub fn to_text(ts: &TaskSet) -> String {
                     .collect::<Vec<_>>()
                     .join(", ")
             ));
+            // Emitted only when some fraction is < 100% so legacy
+            // (serial) tasksets keep their exact pre-fine-grain bytes.
+            if t.has_fine_grain() {
+                out.push_str(&format!(
+                    "par = {}\n",
+                    t.gpu_segments
+                        .iter()
+                        .map(|g| g.par.pct().to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
         }
         if t.mode == WaitMode::BusyWait {
             out.push_str("mode = busy\n");
@@ -504,6 +552,48 @@ mode = busy
         assert!(parse("[bogus]\n").is_err());
         assert!(parse("num_cpus = 2\n").is_err()); // key outside section
         assert!(parse("[task]\nname = a\ncpu_ms = 1\ngpu_ms = 5\n").is_err()); // no G^m:G^e
+    }
+
+    #[test]
+    fn par_roundtrips_and_defaults_serial() {
+        // Fractions survive a text round-trip; omitting `par` keeps the
+        // serial default (100%) on every segment.
+        let text = "[platform]\nnum_cpus = 1\n\
+                    [task]\nname=a\nprio=1\nperiod_ms=10\ncpu_ms=1,1,1\n\
+                    gpu_ms = 0.5:2, 0.5:1\npar = 40, 100\n";
+        let ts = parse(text).unwrap();
+        assert_eq!(ts.tasks[0].gpu_segments[0].par.pct(), 40);
+        assert!(ts.tasks[0].gpu_segments[1].par.is_full());
+        assert!(ts.has_fine_grain());
+        let rendered = to_text(&ts);
+        assert!(rendered.contains("par = 40, 100\n"), "missing par:\n{rendered}");
+        let back = parse(&rendered).unwrap();
+        assert_eq!(back.tasks, ts.tasks);
+        // No `par =` key → all segments serial → no `par =` on export
+        // (legacy byte-identity).
+        let serial = parse(
+            "[platform]\nnum_cpus = 1\n\
+             [task]\nname=a\nprio=1\nperiod_ms=10\ncpu_ms=1,1\ngpu_ms=0.5:2\n",
+        )
+        .unwrap();
+        assert!(!serial.has_fine_grain());
+        assert!(!to_text(&serial).contains("par"), "serial export grew a par key");
+    }
+
+    #[test]
+    fn rejects_bad_par() {
+        let base = "[platform]\nnum_cpus = 1\n[task]\nname=a\nprio=1\nperiod_ms=10\n";
+        // par before/without gpu_ms.
+        assert!(parse(&format!("{base}cpu_ms=1,1\npar = 50\ngpu_ms=0.5:2\n")).is_err());
+        assert!(parse(&format!("{base}cpu_ms=1\npar = 50\n")).is_err());
+        // Length mismatch with gpu_ms.
+        assert!(parse(&format!("{base}cpu_ms=1,1\ngpu_ms=0.5:2\npar = 50, 50\n")).is_err());
+        // Non-integer / negative values.
+        assert!(parse(&format!("{base}cpu_ms=1,1\ngpu_ms=0.5:2\npar = half\n")).is_err());
+        assert!(parse(&format!("{base}cpu_ms=1,1\ngpu_ms=0.5:2\npar = -5\n")).is_err());
+        // Out-of-range percents (validate's 1..=100 rule).
+        assert!(parse(&format!("{base}cpu_ms=1,1\ngpu_ms=0.5:2\npar = 0\n")).is_err());
+        assert!(parse(&format!("{base}cpu_ms=1,1\ngpu_ms=0.5:2\npar = 101\n")).is_err());
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod task;
 pub mod taskset;
 
 pub use fault::{AdaptivePolicy, DeadlineMissAction, Fault, FaultPlan};
-pub use task::{ms, to_ms, GpuSegment, Task, Time, WaitMode};
+pub use task::{ms, to_ms, GpuSegment, SmFraction, Task, Time, WaitMode};
 pub use taskset::{GpuContext, Platform, TaskSet};

@@ -31,18 +31,64 @@ pub enum WaitMode {
     SelfSuspend,
 }
 
-/// One GPU segment: (G^m, G^e).
+/// Fine-grain SM utilization of one GPU segment, as an integer percent
+/// of the engine's capacity (RTGPU-style fractional fine-grain
+/// utilization, arXiv 2101.10463). `FULL` (100%) is the serial
+/// whole-context model of the GCAPS paper; any smaller value declares
+/// that the segment's kernels occupy only that capacity fraction, so
+/// the driver may co-run it with other partial contexts while the
+/// resident fractions sum to ≤ 100%. Stored raw; [`Task::validate`]
+/// rejects 0 and values above 100.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SmFraction(u32);
+
+impl SmFraction {
+    /// 100%: the whole-context serial model (the default).
+    pub const FULL: SmFraction = SmFraction(100);
+
+    /// Wrap a raw percent. Not range-checked here — hostile values must
+    /// survive parsing so [`Task::validate`] can report them.
+    pub fn new(pct: u32) -> SmFraction {
+        SmFraction(pct)
+    }
+
+    /// The raw percent value.
+    pub fn pct(&self) -> u32 {
+        self.0
+    }
+
+    /// Whether this is the serial whole-context fraction.
+    pub fn is_full(&self) -> bool {
+        self.0 >= 100
+    }
+}
+
+impl Default for SmFraction {
+    fn default() -> SmFraction {
+        SmFraction::FULL
+    }
+}
+
+/// One GPU segment: (G^m, G^e) plus its fine-grain SM fraction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GpuSegment {
     /// G^m: misc CPU operations (launch, driver comms) within the segment.
     pub misc: Time,
     /// G^e: pure GPU execution (copies + kernels), no CPU intervention.
     pub exec: Time,
+    /// Declared SM fraction during G^e (100% = serial whole context).
+    pub par: SmFraction,
 }
 
 impl GpuSegment {
     pub fn new(misc: Time, exec: Time) -> GpuSegment {
-        GpuSegment { misc, exec }
+        GpuSegment { misc, exec, par: SmFraction::FULL }
+    }
+
+    /// Builder: the same segment with a declared SM fraction.
+    pub fn with_par(mut self, pct: u32) -> GpuSegment {
+        self.par = SmFraction::new(pct);
+        self
     }
 
     /// Total worst-case length of the segment (G ≤ G^m + G^e; we use the
@@ -128,6 +174,22 @@ impl Task {
         self.gpu_segments.iter().map(|g| g.total()).max().unwrap_or(0)
     }
 
+    /// Whether any GPU segment declares a fine-grain fraction below
+    /// 100% — the switch between the serial whole-context model and the
+    /// co-running fine-grain model. All-100% tasks must be
+    /// indistinguishable from tasks written before the field existed.
+    pub fn has_fine_grain(&self) -> bool {
+        self.gpu_segments.iter().any(|g| !g.par.is_full())
+    }
+
+    /// Worst-case (largest) declared SM fraction over the task's GPU
+    /// segments, as a percent; 100 for CPU-only tasks. The fine-grain
+    /// RTA charges co-runnability against this maximum, which is sound:
+    /// every actual segment fraction is ≤ it.
+    pub fn fmax_pct(&self) -> u32 {
+        self.gpu_segments.iter().map(|g| g.par.pct()).max().unwrap_or(100)
+    }
+
     /// Total utilization (C_i + G_i) / T_i.
     pub fn utilization(&self) -> f64 {
         (self.c() + self.g()) as f64 / self.period as f64
@@ -161,6 +223,15 @@ impl Task {
                 self.cpu_segments.len(),
                 self.gpu_segments.len()
             ));
+        }
+        for (j, g) in self.gpu_segments.iter().enumerate() {
+            let p = g.par.pct();
+            if p == 0 || p > 100 {
+                return Err(format!(
+                    "task {}: GPU segment {} declares par = {}% (need 1..=100)",
+                    self.id, j, p
+                ));
+            }
         }
         Ok(())
     }
@@ -267,5 +338,39 @@ mod tests {
     fn ms_roundtrip() {
         assert_eq!(ms(1.5), 1500);
         assert_eq!(to_ms(2500), 2.5);
+    }
+
+    #[test]
+    fn default_fraction_is_full_serial() {
+        let t = gpu_task();
+        assert!(!t.has_fine_grain());
+        assert_eq!(t.fmax_pct(), 100);
+        assert!(GpuSegment::new(1, 2).par.is_full());
+        assert_eq!(SmFraction::default(), SmFraction::FULL);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn fine_grain_fraction_detected_and_bounded() {
+        let mut t = gpu_task();
+        t.gpu_segments[1] = t.gpu_segments[1].with_par(40);
+        assert!(t.has_fine_grain());
+        assert_eq!(t.fmax_pct(), 100); // segment 0 is still serial
+        t.gpu_segments[0] = t.gpu_segments[0].with_par(70);
+        assert_eq!(t.fmax_pct(), 70);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_zero_and_oversized_fractions() {
+        for bad in [0u32, 101, u32::MAX] {
+            let mut t = gpu_task();
+            t.gpu_segments[0] = t.gpu_segments[0].with_par(bad);
+            assert!(t.validate().is_err(), "par = {bad} must be rejected");
+        }
+        let mut t = gpu_task();
+        t.gpu_segments[0] = t.gpu_segments[0].with_par(1);
+        t.gpu_segments[1] = t.gpu_segments[1].with_par(100);
+        t.validate().unwrap();
     }
 }

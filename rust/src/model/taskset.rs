@@ -156,6 +156,13 @@ impl TaskSet {
         self.tasks.iter().filter(|t| t.uses_gpu()).count()
     }
 
+    /// Whether any task declares a fine-grain SM fraction below 100%.
+    /// This is the master switch for the co-running DES paths: all-100%
+    /// tasksets must take the exact serial legacy code path.
+    pub fn has_fine_grain(&self) -> bool {
+        self.tasks.iter().any(|t| t.has_fine_grain())
+    }
+
     /// The GPU engine task `i` is assigned to.
     pub fn gpu_ctx(&self, i: usize) -> &GpuContext {
         &self.platform.gpus[self.tasks[i].gpu]

@@ -26,9 +26,11 @@
 //! Task spec fields: `name` (unique handle), `period_ms`, optional
 //! `deadline_ms` (default: period), `cpu_ms` (CPU segment WCETs, ms),
 //! optional `gpu_ms` (list of `[misc_ms, exec_ms]` pairs; alternation
-//! `η_c = η_g + 1` is required for GPU tasks), `core`, optional `gpu`
-//! engine (default 0), `prio` (unique RT priority; doubles as π^g),
-//! optional `best_effort` (default false).
+//! `η_c = η_g + 1` is required for GPU tasks), optional `par` (one
+//! integer SM-fraction percent in `[1, 100]` per `gpu_ms` segment;
+//! default all 100 = the serial whole-context model), `core`, optional
+//! `gpu` engine (default 0), `prio` (unique RT priority; doubles as
+//! π^g), optional `best_effort` (default false).
 //!
 //! Every response is a single JSON object line. Malformed lines,
 //! unknown ops and invalid specs produce `{"ok":false,"error":...}` —
@@ -82,6 +84,10 @@ pub struct TaskSpec {
     pub deadline_ms: f64,
     pub cpu_ms: Vec<f64>,
     pub gpu_ms: Vec<(f64, f64)>,
+    /// Per-segment SM fraction percents; empty = all segments serial
+    /// (100%). Non-empty lists are length-matched to `gpu_ms` at parse
+    /// time.
+    pub par: Vec<u32>,
     pub core: usize,
     pub gpu: usize,
     pub prio: u32,
@@ -101,7 +107,14 @@ impl TaskSpec {
             gpu_segments: self
                 .gpu_ms
                 .iter()
-                .map(|&(m, e)| GpuSegment::new(ms(m), ms(e)))
+                .enumerate()
+                .map(|(k, &(m, e))| {
+                    let seg = GpuSegment::new(ms(m), ms(e));
+                    match self.par.get(k) {
+                        Some(&p) => seg.with_par(p),
+                        None => seg,
+                    }
+                })
                 .collect(),
             core: self.core,
             gpu: self.gpu,
@@ -194,6 +207,26 @@ fn parse_task_spec(v: &Value) -> Result<TaskSpec, String> {
     if cpu_ms.len() > MAX_SEGMENTS || gpu_ms.len() > MAX_SEGMENTS {
         return Err(format!("at most {MAX_SEGMENTS} segments per task"));
     }
+    // Fine-grain SM fractions: strict here (not deferred to
+    // Task::validate) so a hostile value names the offending field in
+    // the error response instead of a generic taskset rejection.
+    let par: Vec<u32> = match v.get("par") {
+        None => Vec::new(),
+        Some(f) => f
+            .as_arr()
+            .ok_or("field \"par\" must be an array of integer percents")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .filter(|n| (1.0..=100.0).contains(n) && n.fract() == 0.0)
+                    .map(|n| n as u32)
+            })
+            .collect::<Option<_>>()
+            .ok_or("field \"par\" must hold integers in [1, 100]")?,
+    };
+    if !par.is_empty() && par.len() != gpu_ms.len() {
+        return Err("field \"par\" must have one entry per \"gpu_ms\" segment".into());
+    }
     let times_ok = period_ms <= MAX_TIME_MS
         && deadline_ms <= MAX_TIME_MS
         && cpu_ms.iter().all(|&c| c <= MAX_TIME_MS)
@@ -211,6 +244,7 @@ fn parse_task_spec(v: &Value) -> Result<TaskSpec, String> {
         deadline_ms,
         cpu_ms,
         gpu_ms,
+        par,
         core: field_usize(v, "core", 0)?,
         gpu: field_usize(v, "gpu", 0)?,
         prio: prio_f as u32,
@@ -358,6 +392,51 @@ mod tests {
             r#"{"op":"report_overload","misses":-1}"#,
             r#"{"op":"report_overload","misses":1.5}"#,
             r#"{"op":"report_overload","misses":"many"}"#,
+        ] {
+            assert!(req(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn par_field_round_trips_and_validates() {
+        let r = req(
+            r#"{"op":"admit","task":{"name":"cam","period_ms":100,"cpu_ms":[1,1],
+                "gpu_ms":[[0.5,5]],"par":[40],"prio":10}}"#,
+        )
+        .unwrap();
+        let Request::Admit(spec) = r else { panic!("not admit") };
+        assert_eq!(spec.par, vec![40]);
+        let t = spec.to_task(0, WaitMode::SelfSuspend);
+        assert_eq!(t.gpu_segments[0].par.pct(), 40);
+        assert!(t.has_fine_grain());
+        t.validate().unwrap();
+        // Omitted par = serial segments.
+        let r = req(
+            r#"{"op":"admit","task":{"name":"cam","period_ms":100,"cpu_ms":[1,1],
+                "gpu_ms":[[0.5,5]],"prio":10}}"#,
+        )
+        .unwrap();
+        let Request::Admit(spec) = r else { panic!("not admit") };
+        assert!(spec.par.is_empty());
+        assert!(!spec.to_task(0, WaitMode::SelfSuspend).has_fine_grain());
+    }
+
+    #[test]
+    fn hostile_par_values_error_not_panic() {
+        for bad in [
+            // wrong type / shape
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":40,"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":["x"],"prio":1}}"#,
+            // out of range
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":[0],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":[101],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":[-5],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":[50.5],"prio":1}}"#,
+            // length mismatch (both directions)
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1],"gpu_ms":[[1,2]],"par":[50,50],"prio":1}}"#,
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1,1,1],"gpu_ms":[[1,2],[1,2]],"par":[50],"prio":1}}"#,
+            // par without any gpu segment
+            r#"{"op":"admit","task":{"name":"t","period_ms":10,"cpu_ms":[1],"par":[50],"prio":1}}"#,
         ] {
             assert!(req(bad).is_err(), "{bad} should fail");
         }

@@ -218,6 +218,22 @@ struct TState {
     miss_handled: bool,
 }
 
+/// One fine-grain co-resident context on an engine's SMs (fine mode
+/// only: some task fraction < 100% and the policy can host partial
+/// contexts). Each resident progresses at FULL rate — the engine's SMs
+/// are capacity-partitioned between residents (the RTGPU fine-grain
+/// premise, arXiv 2101.10463) — and carries its own θ-switch and
+/// TSG-slice state, preserving per-context preemption-boundary and
+/// slice semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Resident {
+    task: usize,
+    /// Remaining θ of this resident's admission context switch.
+    switch_rem: Time,
+    /// Remaining time slice (RR rotation happens per resident).
+    slice_rem: Time,
+}
+
 /// GCAPS driver state (Alg. 1) + the device state of ONE GPU engine.
 /// Multi-GPU platforms hold one `GpuState` per engine: runlists, TSG
 /// rings and driver/lock queues are fully independent across engines
@@ -242,6 +258,13 @@ struct GpuState {
     /// Lock-policy: waiting (task, ticket).
     lock_queue: Vec<(usize, u64)>,
     ticket_counter: u64,
+    /// Fine mode: co-resident contexts, kept sorted by task id. Always
+    /// empty in serial mode (every fraction 100%), so every legacy code
+    /// path is untouched then.
+    residents: Vec<Resident>,
+    /// Server fine mode: requests granted alongside `lock_holder` while
+    /// the resident fractions (holder + co-holders) sum to ≤ 100%.
+    co_holders: Vec<usize>,
 }
 
 struct Engine<'a> {
@@ -282,6 +305,13 @@ struct Engine<'a> {
     /// Any non-Log deadline-miss action configured? (Gates the
     /// per-round miss scan so Log-only runs skip it entirely.)
     has_miss_actions: bool,
+    /// Fine-grain co-running engaged: some GPU segment declares an SM
+    /// fraction < 100% AND the policy can host partial contexts. The
+    /// mutex baselines (MPCP/FMLP+) serialize whole contexts by
+    /// construction — a fine taskset under them runs the serial engine
+    /// unchanged (documented pessimism). Constant per run: the adaptive
+    /// governor only flips TsgRr↔GcapsEdf, both fine-capable.
+    fine: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -329,6 +359,8 @@ impl<'a> Engine<'a> {
         mode_changes.sort_by_key(|m| m.0);
         let has_miss_actions =
             cfg.miss_actions.iter().any(|a| *a != DeadlineMissAction::Log);
+        let fine = ts.has_fine_grain()
+            && !matches!(cfg.policy, Policy::Mpcp | Policy::FmlpPlus);
         Engine {
             ts,
             cfg,
@@ -350,12 +382,24 @@ impl<'a> Engine<'a> {
             win_jobs: 0,
             win_misses: 0,
             has_miss_actions,
+            fine,
         }
     }
 
     /// The engine id task `i` is assigned to.
     fn gpu_of(&self, i: usize) -> usize {
         self.ts.tasks[i].gpu
+    }
+
+    /// SM fraction (percent) of task `i`'s CURRENT GPU segment
+    /// (`st[i].seg`): 100 = whole-context serial, and the fallback for
+    /// any state outside a GPU segment. Only meaningful in fine mode.
+    fn frac(&self, i: usize) -> Time {
+        self.ts.tasks[i]
+            .gpu_segments
+            .get(self.st[i].seg)
+            .map(|g| g.par.pct() as Time)
+            .unwrap_or(100)
     }
 
     /// α = ε − θ (Def. 2): the CPU-side driver-call cost on task `i`'s
@@ -465,8 +509,21 @@ impl<'a> Engine<'a> {
             }
             Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                 let g = self.gpu_of(i);
-                debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
-                self.gpus[g].lock_holder = None;
+                if self.fine && self.gpus[g].lock_holder != Some(i) {
+                    // Server fine mode: a co-holder finished its
+                    // service; the primary grant is untouched.
+                    self.gpus[g].co_holders.retain(|&k| k != i);
+                } else {
+                    debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
+                    self.gpus[g].lock_holder = None;
+                    // Server fine mode: the oldest co-holder becomes
+                    // the primary so a fresh (capacity-unchecked)
+                    // primary grant can never overcommit the SMs.
+                    if self.fine && !self.gpus[g].co_holders.is_empty() {
+                        let k = self.gpus[g].co_holders.remove(0);
+                        self.gpus[g].lock_holder = Some(k);
+                    }
+                }
                 self.next_cpu_segment(i);
             }
             Policy::TsgRr => self.next_cpu_segment(i),
@@ -519,8 +576,16 @@ impl<'a> Engine<'a> {
         self.gpus[g].pending.retain(|&k| k != i);
         self.gpus[g].ring.retain(|&k| k != i);
         self.gpus[g].lock_queue.retain(|&(k, _)| k != i);
+        self.gpus[g].residents.retain(|r| r.task != i);
+        self.gpus[g].co_holders.retain(|&k| k != i);
         if self.gpus[g].lock_holder == Some(i) {
             self.gpus[g].lock_holder = None;
+            // Server fine mode: promote the oldest co-holder (see
+            // finish_gpu_segment) so capacity accounting stays closed.
+            if !self.gpus[g].co_holders.is_empty() {
+                let k = self.gpus[g].co_holders.remove(0);
+                self.gpus[g].lock_holder = Some(k);
+            }
         }
         self.metrics[i].aborted += 1;
         self.run.last_tardy = self.now;
@@ -620,9 +685,19 @@ impl<'a> Engine<'a> {
 
     /// Returns whether a grant happened.
     fn try_grant_lock(&mut self, g: usize) -> bool {
-        if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
-            return false;
+        let mut granted = false;
+        if self.gpus[g].lock_holder.is_none() && !self.gpus[g].lock_queue.is_empty() {
+            granted = self.grant_primary_lock(g);
         }
+        // Server fine mode: admit further queued requests as co-holders
+        // while the engine's SM capacity holds.
+        if self.fine && self.pol == Policy::Server {
+            granted |= self.grant_server_co_holders(g);
+        }
+        granted
+    }
+
+    fn grant_primary_lock(&mut self, g: usize) -> bool {
         let idx = match self.pol {
             Policy::Mpcp => self.gpus[g]
                 .lock_queue
@@ -661,6 +736,46 @@ impl<'a> Engine<'a> {
         self.gpus[g].lock_holder = Some(task);
         self.begin_gpu_segment(task);
         true
+    }
+
+    /// Server fine mode: after the primary grant, the server dispatches
+    /// additional queued requests concurrently — co-holders — while the
+    /// resident fractions sum to ≤ 100%, in the same RT-first /
+    /// priority / FIFO order as the primary grant, skipping requests
+    /// that do not fit. Each co-running service progresses at full rate
+    /// on its SM partition. Returns whether any grant happened.
+    fn grant_server_co_holders(&mut self, g: usize) -> bool {
+        let Some(primary) = self.gpus[g].lock_holder else { return false };
+        let mut cap = self.frac(primary);
+        for idx in 0..self.gpus[g].co_holders.len() {
+            let h = self.gpus[g].co_holders[idx];
+            cap = cap.saturating_add(self.frac(h));
+        }
+        let mut granted = false;
+        loop {
+            let next = self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .filter(|(_, &(t, _))| {
+                    cap.saturating_add(self.frac(t)) <= 100
+                })
+                .max_by_key(|(_, &(t, tk))| {
+                    (
+                        !self.ts.tasks[t].best_effort,
+                        self.ts.tasks[t].cpu_prio,
+                        std::cmp::Reverse(tk),
+                    )
+                })
+                .map(|(j, _)| j);
+            let Some(j) = next else { break };
+            let (task, _) = self.gpus[g].lock_queue.swap_remove(j);
+            cap = cap.saturating_add(self.frac(task));
+            self.gpus[g].co_holders.push(task);
+            self.begin_gpu_segment(task);
+            granted = true;
+        }
+        granted
     }
 
     // -- allocation ----------------------------------------------------------
@@ -839,6 +954,225 @@ impl<'a> Engine<'a> {
         true
     }
 
+    // -- fine-grain co-running (fine mode only) ---------------------------
+    //
+    // RTGPU-style fractional SM utilization: an engine hosts several
+    // resident contexts at once while their declared fractions sum to
+    // ≤ 100%, and every resident progresses at FULL rate on its SM
+    // partition. Admission is a greedy pack in policy order (GCAPS
+    // rank / ring FIFO / server queue order) that SKIPS entries that do
+    // not fit. The skip (bypass) is what keeps the RTA's fine-grain
+    // charge sound in both directions:
+    //
+    //  - While τ_i is pending, the residents that outrank it alone
+    //    occupy more than 100 − frac_i (τ_i was rejected against
+    //    exactly their sum), each draining its job's G^e at full rate —
+    //    the capacity-work argument behind `analysis::gcaps`'s deflated
+    //    charge.
+    //  - Lower-ranked tasks pack only into capacity τ_i cannot use, and
+    //    the per-round repack considers τ_i before them — they are
+    //    demoted the instant τ_i fits, so they never extend its wait
+    //    (no-bypass packing would: a small-fraction task could stall
+    //    behind a large-fraction one for a whole residency).
+
+    /// Which tasks should engine `g`'s SMs host now (pre-θ)?
+    /// Capacity-packed in policy order; empty in serial mode.
+    fn desired_residents(&self, g: usize) -> Vec<usize> {
+        let execing = |i: usize| {
+            matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+        };
+        let mut out = Vec::new();
+        let mut cap: Time = 0;
+        match self.pol {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                // RT members of the runlist pack by GPU rank; the BE
+                // ring packs only when no RT wants the engine (GCAPS
+                // shielding, as in the serial `desired_gpu_context`).
+                let mut rts: Vec<usize> = self.gpus[g]
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&i| !self.ts.tasks[i].best_effort && execing(i))
+                    .collect();
+                rts.sort_by(|&a, &b| {
+                    self.gpu_rank(b).cmp(&self.gpu_rank(a)).then(a.cmp(&b))
+                });
+                for i in rts {
+                    let f = self.frac(i);
+                    if cap.saturating_add(f) <= 100 {
+                        cap += f;
+                        out.push(i);
+                    }
+                }
+                if out.is_empty() {
+                    for &i in &self.gpus[g].ring {
+                        if !execing(i) {
+                            continue;
+                        }
+                        let f = self.frac(i);
+                        if cap.saturating_add(f) <= 100 {
+                            cap += f;
+                            out.push(i);
+                        }
+                    }
+                }
+            }
+            Policy::TsgRr => {
+                for &i in &self.gpus[g].ring {
+                    if !execing(i) {
+                        continue;
+                    }
+                    let f = self.frac(i);
+                    if cap.saturating_add(f) <= 100 {
+                        cap += f;
+                        out.push(i);
+                    }
+                }
+            }
+            // Unreachable in fine mode (gated off in `new`), kept
+            // equivalent to the serial selection for robustness.
+            Policy::Mpcp | Policy::FmlpPlus => {
+                if let Some(h) = self.gpus[g].lock_holder {
+                    if execing(h) {
+                        out.push(h);
+                    }
+                }
+            }
+            // Server: the primary grant plus co-holders, each occupying
+            // the engine row through its whole service (G^m included).
+            Policy::Server => {
+                let serving = |i: usize| {
+                    matches!(self.st[i].phase, Phase::GpuActive)
+                        && (self.st[i].cpu_rem > 0 || self.st[i].gpu_rem > 0)
+                };
+                if let Some(h) = self.gpus[g].lock_holder {
+                    if serving(h) {
+                        out.push(h);
+                    }
+                }
+                for &h in &self.gpus[g].co_holders {
+                    if serving(h) {
+                        out.push(h);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply engine `g`'s desired resident set: kept residents carry
+    /// their θ/slice state over, entrants pay θ (driver policies) and
+    /// start a fresh slice. Residents are stored sorted by task id so
+    /// advancement and tracing are deterministic. Returns whether the
+    /// membership changed.
+    fn update_gpu_residents(&mut self, g: usize) -> bool {
+        let mut want = self.desired_residents(g);
+        want.sort_unstable();
+        let same = self.gpus[g].residents.len() == want.len()
+            && self.gpus[g].residents.iter().zip(&want).all(|(r, &t)| r.task == t);
+        if same {
+            return false;
+        }
+        let charge = match self.pol {
+            Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
+            Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
+                self.ts.platform.gpus[g].theta
+            }
+        };
+        let slice = self.ts.platform.gpus[g].tsg_slice;
+        let old = std::mem::take(&mut self.gpus[g].residents);
+        let mut new = Vec::with_capacity(want.len());
+        for &t in &want {
+            if let Some(r) = old.iter().find(|r| r.task == t) {
+                new.push(*r);
+            } else {
+                if charge > 0 {
+                    self.run.gpu_context_switches += 1;
+                }
+                new.push(Resident { task: t, switch_rem: charge, slice_rem: slice });
+            }
+        }
+        self.gpus[g].residents = new;
+        true
+    }
+
+    /// Fine-mode replacement for the GCAPS completion-aware promotion:
+    /// repack the execing RT segments of running ∪ pending onto the SMs
+    /// greedily in rank order (with bypass — see the module comment
+    /// above `desired_residents`), moving tasks between the two Alg. 1
+    /// lists to match. Work-conserving: the engine never idles capacity
+    /// behind a stalled or oversized task. Returns whether any task
+    /// moved.
+    fn rebalance_fine(&mut self, g: usize) -> bool {
+        let execing = |st: &TState| {
+            matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
+        };
+        let mut pool: Vec<usize> = self.gpus[g]
+            .running
+            .iter()
+            .chain(self.gpus[g].pending.iter())
+            .copied()
+            .filter(|&k| !self.ts.tasks[k].best_effort && execing(&self.st[k]))
+            .collect();
+        pool.sort_by(|&a, &b| {
+            self.gpu_rank(b).cmp(&self.gpu_rank(a)).then(a.cmp(&b))
+        });
+        let mut cap: Time = 0;
+        let mut promote = Vec::new();
+        let mut demote = Vec::new();
+        for &k in &pool {
+            let f = self.frac(k);
+            if cap.saturating_add(f) <= 100 {
+                cap += f;
+                if !self.gpus[g].running.contains(&k) {
+                    promote.push(k);
+                }
+            } else if self.gpus[g].running.contains(&k) {
+                demote.push(k);
+            }
+        }
+        let changed = !promote.is_empty() || !demote.is_empty();
+        for k in demote {
+            self.gpus[g].running.retain(|&x| x != k);
+            self.gpus[g].pending.push(k);
+        }
+        for k in promote {
+            self.gpus[g].pending.retain(|&x| x != k);
+            self.gpus[g].running.push(k);
+        }
+        changed
+    }
+
+    /// Fine-mode slice handling: a resident whose slice expired yields
+    /// its ring position to a waiting non-resident (its entry moves to
+    /// the ring's back; the next repack admits the waiter). Without a
+    /// waiter — or for RT residents, which are not ring-scheduled — the
+    /// slice refills quietly (not scheduler-visible, like the serial
+    /// lone-TSG refill). Returns whether the ring changed.
+    fn rotate_expired_residents(&mut self, g: usize) -> bool {
+        let mut changed = false;
+        for idx in 0..self.gpus[g].residents.len() {
+            let r = self.gpus[g].residents[idx];
+            if r.switch_rem != 0 || r.slice_rem != 0 {
+                continue;
+            }
+            let in_ring = self.gpus[g].ring.contains(&r.task);
+            let waiter = self.gpus[g].ring.iter().any(|&k| {
+                !self.gpus[g].residents.iter().any(|x| x.task == k)
+            });
+            let at_back = self.gpus[g].ring.back() == Some(&r.task);
+            if in_ring && waiter && !at_back {
+                self.gpus[g].ring.retain(|&k| k != r.task);
+                self.gpus[g].ring.push_back(r.task);
+                changed = true;
+            } else {
+                self.gpus[g].residents[idx].slice_rem =
+                    self.ts.platform.gpus[g].tsg_slice;
+            }
+        }
+        changed
+    }
+
     // -- main loop -------------------------------------------------------------
 
     /// Pop and handle every due release from the calendar. Ties pop in
@@ -975,6 +1309,33 @@ impl<'a> Engine<'a> {
             }
         }
         for gs in &self.gpus {
+            if self.fine {
+                // Fine mode: every resident contributes its own θ /
+                // service / kernel horizon, plus a slice boundary when a
+                // non-resident TSG is waiting on the ring.
+                let contested = gs.ring.iter().any(|&k| {
+                    !gs.residents.iter().any(|x| x.task == k)
+                });
+                for r in &gs.residents {
+                    let i = r.task;
+                    if r.switch_rem > 0 {
+                        h = h.min(self.now.saturating_add(r.switch_rem));
+                    } else if self.pol == Policy::Server
+                        && matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].cpu_rem > 0
+                    {
+                        h = h.min(self.now.saturating_add(self.st[i].cpu_rem));
+                    } else if matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].gpu_rem > 0
+                    {
+                        h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
+                        if contested && gs.ring.contains(&i) {
+                            h = h.min(self.now.saturating_add(r.slice_rem));
+                        }
+                    }
+                }
+                continue;
+            }
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
@@ -1067,6 +1428,10 @@ impl<'a> Engine<'a> {
             }
         }
         for g in 0..self.gpus.len() {
+            if self.fine {
+                self.advance_residents(g, dt);
+                continue;
+            }
             let Some(i) = self.gpus[g].context else { continue };
             if self.gpus[g].switch_rem > 0 {
                 let d = dt.min(self.gpus[g].switch_rem);
@@ -1129,6 +1494,75 @@ impl<'a> Engine<'a> {
             }
         }
         self.now = self.now.saturating_add(dt);
+    }
+
+    /// Fine-mode engine advancement: every resident progresses at FULL
+    /// rate on its SM partition (capacity-partitioned SMs), in task-id
+    /// order (residents are kept sorted) for deterministic traces.
+    fn advance_residents(&mut self, g: usize, dt: Time) {
+        for idx in 0..self.gpus[g].residents.len() {
+            let r = self.gpus[g].residents[idx];
+            let i = r.task;
+            if r.switch_rem > 0 {
+                let d = dt.min(r.switch_rem);
+                self.gpus[g].residents[idx].switch_rem =
+                    r.switch_rem.saturating_sub(d);
+                self.run.gpu_switch_time += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            } else if self.pol == Policy::Server
+                && matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].cpu_rem > 0
+            {
+                // Server service, part 1 (see the serial branch): G^m
+                // executed by the server on the requester's behalf.
+                let d = dt.min(self.st[i].cpu_rem);
+                self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(d);
+                if self.st[i].cpu_rem == 0 && self.st[i].gpu_rem == 0 {
+                    self.gpu_done.push(i);
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::ServerMisc,
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            } else if matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].gpu_rem > 0
+            {
+                let d = dt.min(self.st[i].gpu_rem);
+                self.st[i].gpu_rem = self.st[i].gpu_rem.saturating_sub(d);
+                self.gpus[g].residents[idx].slice_rem =
+                    r.slice_rem.saturating_sub(dt);
+                self.run.gpu_busy += d;
+                if self.st[i].gpu_rem == 0 && self.st[i].cpu_rem == 0 {
+                    self.gpu_done.push(i);
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: if self.st[i].hanging {
+                            Activity::GpuHang
+                        } else {
+                            Activity::GpuExec
+                        },
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            }
+        }
     }
 
     /// Handle all zero-time transitions at `now` until quiescent.
@@ -1247,7 +1681,14 @@ impl<'a> Engine<'a> {
             // is required for Lemma 10/13's G^e*-only preemption charge
             // to hold (see DESIGN.md §1: the printed Alg. 1 would let a
             // CPU-starved holder idle the GPU unboundedly).
-            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
+            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) && self.fine {
+                // Fine mode: the capacity repack subsumes the serial
+                // completion-aware promotion below (a stalled holder
+                // frees its fraction; pending RTs pack into it by rank).
+                for g in 0..self.gpus.len() {
+                    changed |= self.rebalance_fine(g);
+                }
+            } else if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
                 let execing = |st: &TState| {
                     matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
                 };
@@ -1275,6 +1716,11 @@ impl<'a> Engine<'a> {
             // Ring upkeep + slice rotation, per engine.
             for g in 0..self.gpus.len() {
                 changed |= self.refresh_ring(g);
+                if self.fine {
+                    changed |= self.rotate_expired_residents(g);
+                    changed |= self.update_gpu_residents(g);
+                    continue;
+                }
                 if let Some(i) = self.gpus[g].context {
                     if self.gpus[g].switch_rem == 0
                         && self.gpus[g].slice_rem == 0
@@ -2004,6 +2450,174 @@ mod tests {
         // horizon by a healthy margin (the system settled again).
         assert!(res.run.last_tardy > 0);
         assert!(res.run.last_tardy < ms(2500.0), "never recovered: {}", res.run.last_tardy);
+    }
+
+    // -- fine-grain co-running ------------------------------------------
+
+    /// Every GPU segment of `t` declared at `pct`% of the SMs.
+    fn with_par(mut t: Task, pct: u32) -> Task {
+        t.gpu_segments = t.gpu_segments.into_iter().map(|g| g.with_par(pct)).collect();
+        t
+    }
+
+    #[test]
+    fn fine_grain_all_full_fractions_bit_identical_to_serial() {
+        // par = 100 everywhere is the serial model: `has_fine_grain` is
+        // false, so the fine code paths never engage and every policy
+        // reproduces the serial run bit for bit.
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 8.0, 40.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 60.0);
+        let plain = TaskSet::new(vec![a.clone(), b.clone()], platform());
+        let full =
+            TaskSet::new(vec![with_par(a, 100), with_par(b, 100)], platform());
+        assert!(!full.has_fine_grain());
+        for policy in ALL_POLICIES {
+            let cfg = SimConfig::new(policy, ms(500.0)).with_trace();
+            let x = simulate(&plain, &cfg);
+            let y = simulate(&full, &cfg);
+            assert_eq!(x.per_task, y.per_task, "{policy:?}");
+            assert_eq!(x.run, y.run, "{policy:?}");
+            assert_eq!(x.trace, y.trace, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn fine_grain_gcaps_co_runs_half_fraction_kernels() {
+        // Two 50% kernels fit the engine together: under fine-grain
+        // GCAPS the lp task no longer serializes behind the hp 8 ms
+        // kernel, while the serial run makes it wait.
+        let hp = gpu_task(0, 0, 2, 1.0, 0.5, 8.0, 100.0);
+        let lp = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 100.0);
+        let serial = TaskSet::new(vec![hp.clone(), lp.clone()], platform());
+        let fine =
+            TaskSet::new(vec![with_par(hp, 50), with_par(lp, 50)], platform());
+        assert!(fine.has_fine_grain());
+        let cfg = SimConfig::new(Policy::Gcaps, ms(1000.0));
+        let rs = simulate(&serial, &cfg);
+        let rf = simulate(&fine, &cfg);
+        // hp is unharmed by co-running (full-rate partition).
+        assert!(
+            rf.per_task[0].mort().unwrap() <= rs.per_task[0].mort().unwrap() + 200,
+            "hp fine {} vs serial {}",
+            rf.per_task[0].mort().unwrap(),
+            rs.per_task[0].mort().unwrap()
+        );
+        // lp gains: no longer waits out hp's whole kernel.
+        assert!(
+            rf.per_task[1].mort().unwrap() + ms(4.0) <= rs.per_task[1].mort().unwrap(),
+            "lp fine {} vs serial {}",
+            rf.per_task[1].mort().unwrap(),
+            rs.per_task[1].mort().unwrap()
+        );
+        // Same total kernel work either way.
+        assert_eq!(rf.run.gpu_busy, rs.run.gpu_busy);
+        for i in [0, 1] {
+            assert_eq!(rf.per_task[i].deadline_misses, 0, "tau{i}");
+        }
+    }
+
+    #[test]
+    fn fine_grain_oversized_fractions_still_serialize() {
+        // 60% + 60% > 100%: the pair can never co-run, so the lp task
+        // still waits out the hp kernel — fine mode must not leak
+        // optimism past the declared capacity.
+        let hp = gpu_task(0, 0, 2, 1.0, 0.5, 8.0, 100.0);
+        let lp = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 100.0);
+        let fine =
+            TaskSet::new(vec![with_par(hp, 60), with_par(lp, 60)], platform());
+        let res = simulate(&fine, &SimConfig::new(Policy::Gcaps, ms(1000.0)));
+        // lp's segment sits behind hp's 8 ms kernel.
+        assert!(
+            res.per_task[1].mort().unwrap() >= ms(8.0),
+            "lp MORT = {} µs",
+            res.per_task[1].mort().unwrap()
+        );
+        assert_eq!(res.per_task[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn fine_grain_bypass_packs_small_fraction_past_oversized_waiter() {
+        // Engine busy with a 50% resident; a 60% task cannot fit, but a
+        // lower-ranked 10% task must still pack (bypass) instead of
+        // queueing behind the 60% request for the whole residency.
+        let top = gpu_task(0, 0, 3, 1.0, 0.5, 20.0, 100.0);
+        let mid = gpu_task(1, 1, 2, 1.0, 0.5, 4.0, 100.0);
+        let tiny = gpu_task(2, 1, 1, 1.0, 0.5, 4.0, 100.0);
+        let ts = TaskSet::new(
+            vec![with_par(top, 50), with_par(mid, 60), with_par(tiny, 10)],
+            platform(),
+        );
+        let cfg = SimConfig::new(Policy::Gcaps, ms(1000.0))
+            .with_offsets(vec![0, ms(2.0), ms(2.0)]);
+        let res = simulate(&ts, &cfg);
+        // tiny finishes its 4 ms kernel long before top's 20 ms kernel
+        // drains — it did not wait for mid's turn.
+        assert!(
+            res.per_task[2].mort().unwrap() <= ms(12.0),
+            "tiny MORT = {} µs (stuck behind the oversized waiter?)",
+            res.per_task[2].mort().unwrap()
+        );
+        // mid genuinely has to wait for capacity.
+        assert!(
+            res.per_task[1].mort().unwrap() >= ms(15.0),
+            "mid MORT = {} µs",
+            res.per_task[1].mort().unwrap()
+        );
+    }
+
+    #[test]
+    fn fine_grain_tsg_rr_co_residents_skip_interleaving() {
+        // The serial RR pair (10 ms kernels) interleaves to ~2× MORT;
+        // at 50% each they co-reside and finish near the alone time.
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 100.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 100.0);
+        let ts = TaskSet::new(vec![with_par(a, 50), with_par(b, 50)], platform());
+        let res = simulate(&ts, &SimConfig::new(Policy::TsgRr, ms(2000.0)));
+        for i in [0, 1] {
+            let mort = res.per_task[i].mort().unwrap();
+            assert!(mort <= ms(12.0), "tau{i} MORT = {mort} µs");
+            assert_eq!(res.per_task[i].deadline_misses, 0, "tau{i}");
+        }
+    }
+
+    #[test]
+    fn fine_grain_server_co_grants_requests() {
+        // Server fine mode dispatches both 50% requests concurrently:
+        // each sees its alone service time C + G^m + G^e = 8 ms.
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 10.0, 100.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 10.0, 100.0);
+        let serial = TaskSet::new(vec![a.clone(), b.clone()], platform());
+        let fine = TaskSet::new(vec![with_par(a, 50), with_par(b, 50)], platform());
+        let cfg = SimConfig::new(Policy::Server, ms(1000.0));
+        let rs = simulate(&serial, &cfg);
+        let rf = simulate(&fine, &cfg);
+        let worst_serial =
+            rs.per_task[0].mort().unwrap().max(rs.per_task[1].mort().unwrap());
+        let worst_fine =
+            rf.per_task[0].mort().unwrap().max(rf.per_task[1].mort().unwrap());
+        // Serial: one request waits out the other's 10.5 ms service.
+        assert!(worst_serial >= ms(20.0), "serial worst {worst_serial} µs");
+        assert!(worst_fine <= ms(12.0), "fine worst {worst_fine} µs");
+        assert_eq!(rf.run.gpu_busy, rs.run.gpu_busy);
+    }
+
+    #[test]
+    fn fine_grain_mutex_policies_keep_the_serial_engine() {
+        // MPCP/FMLP+ serialize whole contexts: declared fractions are
+        // deliberately inert there (documented pessimism) — the run is
+        // bit-identical to the serial taskset's.
+        let a = gpu_task(0, 0, 2, 1.0, 0.5, 8.0, 50.0);
+        let b = gpu_task(1, 1, 1, 1.0, 0.5, 8.0, 80.0);
+        let serial = TaskSet::new(vec![a.clone(), b.clone()], platform());
+        let fine = TaskSet::new(vec![with_par(a, 40), with_par(b, 40)], platform());
+        for policy in [Policy::Mpcp, Policy::FmlpPlus] {
+            let cfg = SimConfig::new(policy, ms(500.0)).with_trace();
+            let x = simulate(&serial, &cfg);
+            let y = simulate(&fine, &cfg);
+            assert_eq!(x.per_task, y.per_task, "{policy:?}");
+            assert_eq!(x.run, y.run, "{policy:?}");
+            assert_eq!(x.trace, y.trace, "{policy:?}");
+        }
     }
 
     #[test]

@@ -8,6 +8,43 @@
 
 use crate::sim::trace::{Activity, Resource, Trace};
 
+/// Per-event co-residency flags: `flags[i]` is true iff GPU event `i`
+/// overlaps in time with another task's event on the same engine —
+/// i.e. the fine-grain model had both contexts resident at once. A
+/// serial trace keeps one context per engine at any instant, so no
+/// flag is ever set there and everything gated on the flags leaves
+/// legacy output byte-identical.
+fn co_resident_flags(trace: &Trace) -> Vec<bool> {
+    let mut flags = vec![false; trace.events.len()];
+    // Per-engine index lists sorted by start for a near-linear sweep.
+    let mut by_engine: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, ev) in trace.events.iter().enumerate() {
+        if let Resource::Gpu(g) = ev.resource {
+            match by_engine.iter_mut().find(|(e, _)| *e == g) {
+                Some((_, v)) => v.push(i),
+                None => by_engine.push((g, vec![i])),
+            }
+        }
+    }
+    for (_, mut idx) in by_engine {
+        idx.sort_by_key(|&i| trace.events[i].start);
+        for (k, &i) in idx.iter().enumerate() {
+            let a = &trace.events[i];
+            for &j in &idx[k + 1..] {
+                let b = &trace.events[j];
+                if b.start >= a.end {
+                    break;
+                }
+                if b.task != a.task {
+                    flags[i] = true;
+                    flags[j] = true;
+                }
+            }
+        }
+    }
+    flags
+}
+
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -46,6 +83,8 @@ pub fn to_chrome_json(trace: &Trace, task_names: &[String]) -> String {
         *first = false;
     };
 
+    let co = co_resident_flags(trace);
+
     // Process metadata: names for the resource rows. A single-GPU
     // trace keeps the legacy bare "GPU" process name; multi-GPU traces
     // number every engine, including engine 0.
@@ -72,6 +111,24 @@ pub fn to_chrome_json(trace: &Trace, task_names: &[String]) -> String {
             );
         }
     }
+    // Engines that ever co-ran two contexts get a "fine-grain" label
+    // on their process row; each resident already renders on its own
+    // per-task sub-track (thread) inside the engine process.
+    let mut labeled: Vec<u64> = Vec::new();
+    for (i, ev) in trace.events.iter().enumerate() {
+        if co[i] {
+            let (pid, _) = resource_ids(ev.resource);
+            if !labeled.contains(&pid) {
+                labeled.push(pid);
+                push(
+                    format!(
+                        "{{\"ph\":\"M\",\"name\":\"process_labels\",\"pid\":{pid},\"args\":{{\"labels\":\"fine-grain co-running\"}}}}"
+                    ),
+                    &mut first,
+                );
+            }
+        }
+    }
     // Thread metadata: task names within each resource.
     for &pid in &seen {
         for (tid, name) in task_names.iter().enumerate() {
@@ -85,11 +142,15 @@ pub fn to_chrome_json(trace: &Trace, task_names: &[String]) -> String {
         }
     }
     // Interval events (timestamps already in µs — Chrome's unit).
-    for ev in &trace.events {
+    // Co-resident stretches carry an args marker so they can be
+    // queried/highlighted in the Perfetto UI; serial traces never set
+    // the flag and keep the legacy event bytes.
+    for (i, ev) in trace.events.iter().enumerate() {
         let (pid, _) = resource_ids(ev.resource);
+        let args = if co[i] { ",\"args\":{\"co_resident\":true}" } else { "" };
         push(
             format!(
-                "{{\"ph\":\"X\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"dur\":{}}}",
+                "{{\"ph\":\"X\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"dur\":{}{args}}}",
                 activity_name(ev.activity),
                 ev.task,
                 ev.start,
@@ -173,5 +234,51 @@ mod tests {
         let (tr, names) = sample_trace();
         let json = to_chrome_json(&tr, &names);
         assert!(!json.contains("\"dur\":-"));
+    }
+
+    #[test]
+    fn serial_traces_carry_no_co_resident_markers() {
+        let (tr, names) = sample_trace();
+        let json = to_chrome_json(&tr, &names);
+        assert!(!json.contains("co_resident"));
+        assert!(!json.contains("process_labels"));
+    }
+
+    #[test]
+    fn fine_grain_co_residents_render_as_marked_sub_tracks() {
+        let mk = |id: usize, core: usize, prio: u32| Task {
+            id,
+            name: format!("t{id}"),
+            period: ms(100.0),
+            deadline: ms(100.0),
+            cpu_segments: vec![ms(0.5), ms(0.5)],
+            gpu_segments: vec![GpuSegment::new(ms(0.5), ms(8.0)).with_par(50)],
+            core,
+            gpu: 0,
+            cpu_prio: prio,
+            gpu_prio: prio,
+            best_effort: false,
+            mode: WaitMode::SelfSuspend,
+        };
+        let ts = TaskSet::new(vec![mk(0, 0, 2), mk(1, 1, 1)], Platform::default());
+        let sim = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(100.0)).with_trace());
+        let tr = sim.trace.unwrap();
+        let json = to_chrome_json(&tr, &["t0".into(), "t1".into()]);
+        // Both residents overlap on the engine → marked events on two
+        // distinct tids within the GPU process, plus the engine label.
+        assert!(json.contains("\"co_resident\":true"));
+        assert!(json.contains("fine-grain co-running"));
+        let gpu_exec_tids: Vec<usize> = tr
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(e.resource, Resource::Gpu(_))
+                    && matches!(e.activity, Activity::GpuExec)
+            })
+            .map(|e| e.task)
+            .collect();
+        assert!(gpu_exec_tids.contains(&0) && gpu_exec_tids.contains(&1));
+        let open = json.matches('{').count();
+        assert_eq!(open, json.matches('}').count());
     }
 }

@@ -62,6 +62,14 @@ struct TState {
     miss_handled: bool,
 }
 
+/// Fine-grain co-resident context (mirrors `sim::engine::Resident`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Resident {
+    task: usize,
+    switch_rem: Time,
+    slice_rem: Time,
+}
+
 #[derive(Debug, Clone, Default)]
 struct GpuState {
     running: Vec<usize>,
@@ -73,6 +81,10 @@ struct GpuState {
     lock_holder: Option<usize>,
     lock_queue: Vec<(usize, u64)>,
     ticket_counter: u64,
+    /// Fine mode only (see `sim::engine::GpuState`): empty in serial
+    /// mode, so the serial hash stream and code paths are untouched.
+    residents: Vec<Resident>,
+    co_holders: Vec<usize>,
 }
 
 struct Engine<'a> {
@@ -93,6 +105,8 @@ struct Engine<'a> {
     win_jobs: u64,
     win_misses: u64,
     has_miss_actions: bool,
+    /// Fine-grain co-running engaged (mirrors `sim::engine::Engine`).
+    fine: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -133,6 +147,8 @@ impl<'a> Engine<'a> {
         mode_changes.sort_by_key(|m| m.0);
         let has_miss_actions =
             cfg.miss_actions.iter().any(|a| *a != DeadlineMissAction::Log);
+        let fine = ts.has_fine_grain()
+            && !matches!(cfg.policy, Policy::Mpcp | Policy::FmlpPlus);
         Engine {
             ts,
             cfg,
@@ -151,11 +167,21 @@ impl<'a> Engine<'a> {
             win_jobs: 0,
             win_misses: 0,
             has_miss_actions,
+            fine,
         }
     }
 
     fn gpu_of(&self, i: usize) -> usize {
         self.ts.tasks[i].gpu
+    }
+
+    /// SM fraction (percent) of task `i`'s current GPU segment.
+    fn frac(&self, i: usize) -> Time {
+        self.ts.tasks[i]
+            .gpu_segments
+            .get(self.st[i].seg)
+            .map(|g| g.par.pct() as Time)
+            .unwrap_or(100)
     }
 
     fn alpha_of(&self, i: usize) -> Time {
@@ -245,8 +271,16 @@ impl<'a> Engine<'a> {
             }
             Policy::Mpcp | Policy::FmlpPlus | Policy::Server => {
                 let g = self.gpu_of(i);
-                debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
-                self.gpus[g].lock_holder = None;
+                if self.fine && self.gpus[g].lock_holder != Some(i) {
+                    self.gpus[g].co_holders.retain(|&k| k != i);
+                } else {
+                    debug_assert_eq!(self.gpus[g].lock_holder, Some(i));
+                    self.gpus[g].lock_holder = None;
+                    if self.fine && !self.gpus[g].co_holders.is_empty() {
+                        let k = self.gpus[g].co_holders.remove(0);
+                        self.gpus[g].lock_holder = Some(k);
+                    }
+                }
                 self.next_cpu_segment(i);
             }
             Policy::TsgRr => self.next_cpu_segment(i),
@@ -294,8 +328,14 @@ impl<'a> Engine<'a> {
         self.gpus[g].pending.retain(|&k| k != i);
         self.gpus[g].ring.retain(|&k| k != i);
         self.gpus[g].lock_queue.retain(|&(k, _)| k != i);
+        self.gpus[g].residents.retain(|r| r.task != i);
+        self.gpus[g].co_holders.retain(|&k| k != i);
         if self.gpus[g].lock_holder == Some(i) {
             self.gpus[g].lock_holder = None;
+            if !self.gpus[g].co_holders.is_empty() {
+                let k = self.gpus[g].co_holders.remove(0);
+                self.gpus[g].lock_holder = Some(k);
+            }
         }
         self.metrics[i].aborted += 1;
         self.run.last_tardy = self.now;
@@ -373,9 +413,15 @@ impl<'a> Engine<'a> {
     }
 
     fn try_grant_lock(&mut self, g: usize) {
-        if self.gpus[g].lock_holder.is_some() || self.gpus[g].lock_queue.is_empty() {
-            return;
+        if self.gpus[g].lock_holder.is_none() && !self.gpus[g].lock_queue.is_empty() {
+            self.grant_primary_lock(g);
         }
+        if self.fine && self.pol == Policy::Server {
+            self.grant_server_co_holders(g);
+        }
+    }
+
+    fn grant_primary_lock(&mut self, g: usize) {
         let idx = match self.pol {
             Policy::Mpcp => self.gpus[g]
                 .lock_queue
@@ -411,6 +457,39 @@ impl<'a> Engine<'a> {
         let (task, _) = self.gpus[g].lock_queue.swap_remove(idx);
         self.gpus[g].lock_holder = Some(task);
         self.begin_gpu_segment(task);
+    }
+
+    /// Server fine mode (mirrors `sim::engine`): co-grant queued
+    /// requests while the resident fractions sum to ≤ 100%.
+    fn grant_server_co_holders(&mut self, g: usize) {
+        let Some(primary) = self.gpus[g].lock_holder else { return };
+        let mut cap = self.frac(primary);
+        for idx in 0..self.gpus[g].co_holders.len() {
+            let h = self.gpus[g].co_holders[idx];
+            cap = cap.saturating_add(self.frac(h));
+        }
+        loop {
+            let next = self.gpus[g]
+                .lock_queue
+                .iter()
+                .enumerate()
+                .filter(|(_, &(t, _))| {
+                    cap.saturating_add(self.frac(t)) <= 100
+                })
+                .max_by_key(|(_, &(t, tk))| {
+                    (
+                        !self.ts.tasks[t].best_effort,
+                        self.ts.tasks[t].cpu_prio,
+                        std::cmp::Reverse(tk),
+                    )
+                })
+                .map(|(j, _)| j);
+            let Some(j) = next else { break };
+            let (task, _) = self.gpus[g].lock_queue.swap_remove(j);
+            cap = cap.saturating_add(self.frac(task));
+            self.gpus[g].co_holders.push(task);
+            self.begin_gpu_segment(task);
+        }
     }
 
     fn wants_cpu(&self, i: usize) -> bool {
@@ -546,6 +625,174 @@ impl<'a> Engine<'a> {
         }
     }
 
+    // -- fine-grain co-running, mirroring `sim::engine` exactly (see
+    //    the soundness discussion there) ---------------------------------
+
+    fn desired_residents(&self, g: usize) -> Vec<usize> {
+        let execing = |i: usize| {
+            matches!(self.st[i].phase, Phase::GpuActive) && self.st[i].gpu_rem > 0
+        };
+        let mut out = Vec::new();
+        let mut cap: Time = 0;
+        match self.pol {
+            Policy::Gcaps | Policy::GcapsEdf => {
+                let mut rts: Vec<usize> = self.gpus[g]
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&i| !self.ts.tasks[i].best_effort && execing(i))
+                    .collect();
+                rts.sort_by(|&a, &b| {
+                    self.gpu_rank(b).cmp(&self.gpu_rank(a)).then(a.cmp(&b))
+                });
+                for i in rts {
+                    let f = self.frac(i);
+                    if cap.saturating_add(f) <= 100 {
+                        cap += f;
+                        out.push(i);
+                    }
+                }
+                if out.is_empty() {
+                    for &i in &self.gpus[g].ring {
+                        if !execing(i) {
+                            continue;
+                        }
+                        let f = self.frac(i);
+                        if cap.saturating_add(f) <= 100 {
+                            cap += f;
+                            out.push(i);
+                        }
+                    }
+                }
+            }
+            Policy::TsgRr => {
+                for &i in &self.gpus[g].ring {
+                    if !execing(i) {
+                        continue;
+                    }
+                    let f = self.frac(i);
+                    if cap.saturating_add(f) <= 100 {
+                        cap += f;
+                        out.push(i);
+                    }
+                }
+            }
+            Policy::Mpcp | Policy::FmlpPlus => {
+                if let Some(h) = self.gpus[g].lock_holder {
+                    if execing(h) {
+                        out.push(h);
+                    }
+                }
+            }
+            Policy::Server => {
+                let serving = |i: usize| {
+                    matches!(self.st[i].phase, Phase::GpuActive)
+                        && (self.st[i].cpu_rem > 0 || self.st[i].gpu_rem > 0)
+                };
+                if let Some(h) = self.gpus[g].lock_holder {
+                    if serving(h) {
+                        out.push(h);
+                    }
+                }
+                for &h in &self.gpus[g].co_holders {
+                    if serving(h) {
+                        out.push(h);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn update_gpu_residents(&mut self, g: usize) {
+        let mut want = self.desired_residents(g);
+        want.sort_unstable();
+        let same = self.gpus[g].residents.len() == want.len()
+            && self.gpus[g].residents.iter().zip(&want).all(|(r, &t)| r.task == t);
+        if same {
+            return;
+        }
+        let charge = match self.pol {
+            Policy::Mpcp | Policy::FmlpPlus | Policy::Server => 0,
+            Policy::Gcaps | Policy::GcapsEdf | Policy::TsgRr => {
+                self.ts.platform.gpus[g].theta
+            }
+        };
+        let slice = self.ts.platform.gpus[g].tsg_slice;
+        let old = std::mem::take(&mut self.gpus[g].residents);
+        let mut new = Vec::with_capacity(want.len());
+        for &t in &want {
+            if let Some(r) = old.iter().find(|r| r.task == t) {
+                new.push(*r);
+            } else {
+                if charge > 0 {
+                    self.run.gpu_context_switches += 1;
+                }
+                new.push(Resident { task: t, switch_rem: charge, slice_rem: slice });
+            }
+        }
+        self.gpus[g].residents = new;
+    }
+
+    fn rebalance_fine(&mut self, g: usize) {
+        let execing = |st: &TState| {
+            matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
+        };
+        let mut pool: Vec<usize> = self.gpus[g]
+            .running
+            .iter()
+            .chain(self.gpus[g].pending.iter())
+            .copied()
+            .filter(|&k| !self.ts.tasks[k].best_effort && execing(&self.st[k]))
+            .collect();
+        pool.sort_by(|&a, &b| {
+            self.gpu_rank(b).cmp(&self.gpu_rank(a)).then(a.cmp(&b))
+        });
+        let mut cap: Time = 0;
+        let mut promote = Vec::new();
+        let mut demote = Vec::new();
+        for &k in &pool {
+            let f = self.frac(k);
+            if cap.saturating_add(f) <= 100 {
+                cap += f;
+                if !self.gpus[g].running.contains(&k) {
+                    promote.push(k);
+                }
+            } else if self.gpus[g].running.contains(&k) {
+                demote.push(k);
+            }
+        }
+        for k in demote {
+            self.gpus[g].running.retain(|&x| x != k);
+            self.gpus[g].pending.push(k);
+        }
+        for k in promote {
+            self.gpus[g].pending.retain(|&x| x != k);
+            self.gpus[g].running.push(k);
+        }
+    }
+
+    fn rotate_expired_residents(&mut self, g: usize) {
+        for idx in 0..self.gpus[g].residents.len() {
+            let r = self.gpus[g].residents[idx];
+            if r.switch_rem != 0 || r.slice_rem != 0 {
+                continue;
+            }
+            let in_ring = self.gpus[g].ring.contains(&r.task);
+            let waiter = self.gpus[g].ring.iter().any(|&k| {
+                !self.gpus[g].residents.iter().any(|x| x.task == k)
+            });
+            let at_back = self.gpus[g].ring.back() == Some(&r.task);
+            if in_ring && waiter && !at_back {
+                self.gpus[g].ring.retain(|&k| k != r.task);
+                self.gpus[g].ring.push_back(r.task);
+            } else {
+                self.gpus[g].residents[idx].slice_rem =
+                    self.ts.platform.gpus[g].tsg_slice;
+            }
+        }
+    }
+
     fn release_due(&mut self) {
         for i in 0..self.st.len() {
             while self.st[i].next_release <= self.now {
@@ -656,6 +903,30 @@ impl<'a> Engine<'a> {
             }
         }
         for gs in &self.gpus {
+            if self.fine {
+                let contested = gs.ring.iter().any(|&k| {
+                    !gs.residents.iter().any(|x| x.task == k)
+                });
+                for r in &gs.residents {
+                    let i = r.task;
+                    if r.switch_rem > 0 {
+                        h = h.min(self.now.saturating_add(r.switch_rem));
+                    } else if self.pol == Policy::Server
+                        && matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].cpu_rem > 0
+                    {
+                        h = h.min(self.now.saturating_add(self.st[i].cpu_rem));
+                    } else if matches!(self.st[i].phase, Phase::GpuActive)
+                        && self.st[i].gpu_rem > 0
+                    {
+                        h = h.min(self.now.saturating_add(self.st[i].gpu_rem));
+                        if contested && gs.ring.contains(&i) {
+                            h = h.min(self.now.saturating_add(r.slice_rem));
+                        }
+                    }
+                }
+                continue;
+            }
             if let Some(i) = gs.context {
                 if gs.switch_rem > 0 {
                     h = h.min(self.now.saturating_add(gs.switch_rem));
@@ -730,6 +1001,10 @@ impl<'a> Engine<'a> {
             }
         }
         for g in 0..self.gpus.len() {
+            if self.fine {
+                self.advance_residents(g, dt);
+                continue;
+            }
             let Some(i) = self.gpus[g].context else { continue };
             if self.gpus[g].switch_rem > 0 {
                 let d = dt.min(self.gpus[g].switch_rem);
@@ -782,6 +1057,64 @@ impl<'a> Engine<'a> {
         self.now = self.now.saturating_add(dt);
     }
 
+    fn advance_residents(&mut self, g: usize, dt: Time) {
+        for idx in 0..self.gpus[g].residents.len() {
+            let r = self.gpus[g].residents[idx];
+            let i = r.task;
+            if r.switch_rem > 0 {
+                let d = dt.min(r.switch_rem);
+                self.gpus[g].residents[idx].switch_rem =
+                    r.switch_rem.saturating_sub(d);
+                self.run.gpu_switch_time += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::CtxSwitch,
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            } else if self.pol == Policy::Server
+                && matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].cpu_rem > 0
+            {
+                let d = dt.min(self.st[i].cpu_rem);
+                self.st[i].cpu_rem = self.st[i].cpu_rem.saturating_sub(d);
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: Activity::ServerMisc,
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            } else if matches!(self.st[i].phase, Phase::GpuActive)
+                && self.st[i].gpu_rem > 0
+            {
+                let d = dt.min(self.st[i].gpu_rem);
+                self.st[i].gpu_rem = self.st[i].gpu_rem.saturating_sub(d);
+                self.gpus[g].residents[idx].slice_rem =
+                    r.slice_rem.saturating_sub(dt);
+                self.run.gpu_busy += d;
+                if let Some(tr) = &mut self.trace {
+                    tr.push(TraceEvent {
+                        resource: Resource::Gpu(g),
+                        task: i,
+                        activity: if self.st[i].hanging {
+                            Activity::GpuHang
+                        } else {
+                            Activity::GpuExec
+                        },
+                        start: self.now,
+                        end: self.now.saturating_add(d),
+                    });
+                }
+            }
+        }
+    }
+
     fn fingerprint(&self) -> u64 {
         const FNV_PRIME: u64 = 0x100000001b3;
         let mut h = 0xcbf29ce484222325u64;
@@ -817,6 +1150,31 @@ impl<'a> Engine<'a> {
             }
             mix(gs.running.len() as u64);
             mix(gs.pending.len() as u64);
+            // Fine-mode extension: resident membership and their θ
+            // state, plus server co-holders. Empty vectors in serial
+            // mode, so the loops mix nothing and the serial hash stream
+            // is byte-identical to the seed's. `slice_rem` is excluded
+            // like the serial `slice_rem` — slice expiry only becomes
+            // scheduler-visible through the (hashed) ring order.
+            for r in &gs.residents {
+                mix(r.task as u64);
+                mix(r.switch_rem);
+            }
+            for &c in &gs.co_holders {
+                mix(c as u64);
+            }
+            // Fine mode also hashes runlist MEMBERSHIP (not just the
+            // lengths): `rebalance_fine` can swap a task between
+            // running and pending without changing either length,
+            // which the serial len-only hash would miss.
+            if self.fine {
+                for &k in &gs.running {
+                    mix(k as u64);
+                }
+                for &k in &gs.pending {
+                    mix(k as u64);
+                }
+            }
         }
         h
     }
@@ -887,7 +1245,11 @@ impl<'a> Engine<'a> {
                 }
             }
 
-            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
+            if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) && self.fine {
+                for g in 0..self.gpus.len() {
+                    self.rebalance_fine(g);
+                }
+            } else if matches!(self.pol, Policy::Gcaps | Policy::GcapsEdf) {
                 let execing = |st: &TState| {
                     matches!(st.phase, Phase::GpuActive) && st.gpu_rem > 0
                 };
@@ -913,6 +1275,11 @@ impl<'a> Engine<'a> {
 
             for g in 0..self.gpus.len() {
                 self.refresh_ring(g);
+                if self.fine {
+                    self.rotate_expired_residents(g);
+                    self.update_gpu_residents(g);
+                    continue;
+                }
                 if let Some(i) = self.gpus[g].context {
                     if self.gpus[g].switch_rem == 0
                         && self.gpus[g].slice_rem == 0

@@ -104,6 +104,15 @@ pub fn params_hash(p: &GenParams) -> u64 {
     if p.platform.num_gpus() > 1 {
         parts.push(p.platform.num_gpus() as u64);
     }
+    // Fine-grain fraction band: folded only when it actually shapes
+    // generation, so the serial default keeps the pinned legacy key
+    // (`single_gpu_hash_is_pinned`) and every existing CSV byte. The
+    // tag disambiguates from the hetero-platform suffix below.
+    if p.par_range != (100, 100) {
+        parts.push(0x6669_6e65); // "fine"
+        parts.push(p.par_range.0 as u64);
+        parts.push(p.par_range.1 as u64);
+    }
     if !p.platform.is_uniform() {
         for g in &p.platform.gpus {
             parts.push(g.epsilon);
@@ -387,6 +396,22 @@ mod tests {
         // is what keeps pre-redesign CSV bytes reproducible. Recompute
         // it only if the key schema deliberately changes.
         assert_eq!(params_hash(&GenParams::default()), 0x35a4b0478165014b);
+    }
+
+    #[test]
+    fn par_range_is_part_of_the_key_only_when_fine() {
+        let serial = GenParams { par_range: (100, 100), ..GenParams::default() };
+        assert_eq!(params_hash(&GenParams::default()), params_hash(&serial));
+        let fine = GenParams { par_range: (30, 70), ..GenParams::default() };
+        let finer = GenParams { par_range: (30, 60), ..GenParams::default() };
+        assert_ne!(params_hash(&GenParams::default()), params_hash(&fine));
+        assert_ne!(params_hash(&fine), params_hash(&finer));
+        // The memoized fine taskset really carries fractions, and the
+        // serial one stays clean (distinct keys → distinct cache rows).
+        let a = taskset(17, &fine, 0);
+        let b = taskset(17, &serial, 0);
+        assert!(a.has_fine_grain());
+        assert!(!b.has_fine_grain());
     }
 
     #[test]

@@ -31,6 +31,12 @@ pub struct GenParams {
     pub gm_in_g_ratio: (f64, f64),
     /// Fraction of tasks designated best-effort (Fig. 8f); 0 by default.
     pub best_effort_ratio: f64,
+    /// Per-segment fine-grain SM fraction band, in integer percent.
+    /// The default `(100, 100)` is the serial whole-context model and
+    /// draws nothing from the RNG, so every legacy stream (and the
+    /// memoized params hash) is untouched; any other band draws one
+    /// uniform fraction per GPU segment from `[lo, hi]`.
+    pub par_range: (u32, u32),
     /// Wait mode applied to every task (each analysis mode is evaluated
     /// on a matching taskset, as in the paper).
     pub mode: WaitMode,
@@ -49,6 +55,7 @@ impl Default for GenParams {
             g_to_c_ratio: (0.2, 2.0),
             gm_in_g_ratio: (0.1, 0.3),
             best_effort_ratio: 0.0,
+            par_range: (100, 100),
             mode: WaitMode::SelfSuspend,
             platform: Platform::default(),
         }
@@ -106,7 +113,17 @@ pub fn generate(rng: &mut Pcg32, p: &GenParams) -> TaskSet {
                     .map(|g| {
                         let gm_ratio = rng.range_f64(p.gm_in_g_ratio.0, p.gm_in_g_ratio.1);
                         let gm = ((g as f64 * gm_ratio).round() as Time).min(g);
-                        GpuSegment::new(gm, g - gm)
+                        let seg = GpuSegment::new(gm, g - gm);
+                        // Serial band draws nothing — stream-identical
+                        // to the pre-fine-grain generator.
+                        if p.par_range == (100, 100) {
+                            seg
+                        } else {
+                            let par = rng
+                                .range_u64(p.par_range.0 as u64, p.par_range.1 as u64)
+                                as u32;
+                            seg.with_par(par)
+                        }
                     })
                     .collect();
                 let cpu_segments = split_random(rng, c_total.max(eta_g as Time + 1), eta_g + 1);
@@ -386,6 +403,42 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn par_range_draws_fractions_within_band() {
+        forall("par band", 60, |rng| {
+            let p = GenParams { par_range: (30, 70), ..Default::default() };
+            let ts = generate(rng, &p);
+            ts.validate()?;
+            if !ts.has_fine_grain() {
+                return Err("no fine-grain fraction drawn".into());
+            }
+            for t in &ts.tasks {
+                for g in &t.gpu_segments {
+                    if !(30..=70).contains(&g.par.pct()) {
+                        return Err(format!("par {} outside [30, 70]", g.par.pct()));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serial_par_range_is_stream_identical_to_legacy() {
+        // (100, 100) must draw nothing: the generated taskset AND the
+        // RNG stream match the default generator exactly.
+        let mut r1 = Pcg32::seeded(99);
+        let mut r2 = Pcg32::seeded(99);
+        let a = generate(&mut r1, &GenParams::default());
+        let b = generate(
+            &mut r2,
+            &GenParams { par_range: (100, 100), ..Default::default() },
+        );
+        assert_eq!(r1.next_u64(), r2.next_u64(), "rng streams diverged");
+        assert_eq!(a.tasks, b.tasks);
+        assert!(!b.has_fine_grain());
     }
 
     #[test]

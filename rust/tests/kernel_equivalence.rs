@@ -393,6 +393,152 @@ fn incremental_kernel_matches_cold_rebuild_over_random_admit_remove_sequences() 
 }
 
 #[test]
+fn fine_grain_kernel_matches_naive_reference() {
+    // The fine-grain inflation charge through the Prepared kernel vs the
+    // naive task-level spec: ≥ 200 random fine-grain tasksets (204 cases
+    // × both wait modes), cycling 1/2/4 GPU engines.
+    use gcaps::analysis::gcaps::{analyze_fine, Options};
+    let mut case = 0usize;
+    forall("fine-grain RTA kernel = naive reference", 204, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        for mode in [WaitMode::SelfSuspend, WaitMode::BusyWait] {
+            let p = GenParams { par_range: (20, 80), ..params(g, mode) };
+            let ts = generate(rng, &p);
+            let busy = mode == WaitMode::BusyWait;
+            let kernel = analyze_fine(&ts, busy);
+            let naive = reference::gcaps_analyze(
+                &ts,
+                busy,
+                &Options { fine_grain: true, ..Options::default() },
+            );
+            if kernel.response != naive.response {
+                return Err(format!(
+                    "fine (g = {g}, mode = {mode:?}): kernel {:?} != naive {:?}",
+                    kernel.response, naive.response
+                ));
+            }
+            if kernel.schedulable != naive.schedulable {
+                return Err(format!(
+                    "fine (g = {g}, mode = {mode:?}): schedulable bit diverged"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_full_fractions_are_bit_equal_to_serial_everywhere() {
+    // The degenerate fine-grain case: a taskset whose every GPU segment
+    // explicitly declares par = 100% must be indistinguishable from the
+    // plain serial taskset — across all 9 analysis approaches, the fine
+    // analysis itself, and all 6 DES policies (traces included).
+    use gcaps::analysis::gcaps::{self, analyze_fine};
+    const POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
+    let full_par = |ts: &TaskSet| -> TaskSet {
+        let mut out = ts.clone();
+        for t in &mut out.tasks {
+            t.gpu_segments =
+                t.gpu_segments.iter().map(|g| g.with_par(100)).collect();
+        }
+        out
+    };
+    let mut case = 0usize;
+    forall("par = 100 everywhere = serial model", 24, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        let suspend = generate(rng, &params(g, WaitMode::SelfSuspend));
+        let busy = generate(rng, &params(g, WaitMode::BusyWait));
+        for a in Approach::ALL {
+            let ts = if a.is_busy() { &busy } else { &suspend };
+            let full = full_par(ts);
+            let x = analyze(ts, a);
+            let y = analyze(&full, a);
+            if x.response != y.response || x.schedulable != y.schedulable {
+                return Err(format!("{} (g = {g}): par=100 shifted the analysis", a.label()));
+            }
+        }
+        // The fine analysis collapses to the serial one on par = 100.
+        for (ts, busy_flag) in [(&suspend, false), (&busy, true)] {
+            let full = full_par(ts);
+            let fine = analyze_fine(&full, busy_flag);
+            let serial = gcaps::analyze(ts, busy_flag, &gcaps::Options::default());
+            if fine.response != serial.response {
+                return Err(format!(
+                    "g = {g}, busy = {busy_flag}: fine(par=100) != serial analysis"
+                ));
+            }
+        }
+        let full = full_par(&suspend);
+        let horizon = suspend.tasks.iter().map(|t| t.period).max().unwrap() * 3;
+        for policy in POLICIES {
+            let cfg = SimConfig::new(policy, horizon).with_trace();
+            let x = simulate(&suspend, &cfg);
+            let y = simulate(&full, &cfg);
+            if x.per_task != y.per_task || x.run != y.run || x.trace != y.trace {
+                return Err(format!("{policy:?} (g = {g}): par=100 shifted the DES"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn calendar_engine_matches_seed_engine_under_co_running() {
+    // Tentpole acceptance: the two DES engines stay bit-equal when
+    // fractional segments actually co-run — all 6 policies, random
+    // fraction bands, synchronous plus random offsets, traces included.
+    const POLICIES: [Policy; 6] = [
+        Policy::Gcaps,
+        Policy::GcapsEdf,
+        Policy::TsgRr,
+        Policy::Mpcp,
+        Policy::FmlpPlus,
+        Policy::Server,
+    ];
+    let mut case = 0usize;
+    forall("co-running DES = seed DES", 30, |rng| {
+        let g = GPU_COUNTS[case % GPU_COUNTS.len()];
+        case += 1;
+        let p = GenParams {
+            par_range: (20, 80),
+            ..params(g, WaitMode::SelfSuspend)
+        };
+        let ts = generate(rng, &p);
+        let horizon = ts.tasks.iter().map(|t| t.period).max().unwrap() * 4;
+        let mut patterns: Vec<Vec<Time>> = vec![vec![0; ts.len()]];
+        patterns.push(ts.tasks.iter().map(|t| rng.range_u64(0, t.period)).collect());
+        for policy in POLICIES {
+            for offsets in &patterns {
+                let cfg = SimConfig::new(policy, horizon)
+                    .with_offsets(offsets.clone())
+                    .with_trace();
+                let new = simulate(&ts, &cfg);
+                let old = simulate_reference(&ts, &cfg);
+                if new.per_task != old.per_task {
+                    return Err(format!("{policy:?}: fine per-task metrics diverged"));
+                }
+                if new.run != old.run {
+                    return Err(format!("{policy:?}: fine run aggregates diverged"));
+                }
+                if new.trace != old.trace {
+                    return Err(format!("{policy:?}: fine traces diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn kernel_survives_deterministic_reruns() {
     // Same taskset, two kernel runs: identical (guards against hidden
     // state in the Prepared/Scratch reuse path).

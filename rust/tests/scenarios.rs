@@ -10,14 +10,19 @@
 //!    simulation calls, the heterogeneous platform against a
 //!    handcrafted taskset with *exact* per-engine response times
 //!    (distinct ε/θ/L end-to-end, optimised engine bit-equal to the
-//!    seed reference), and the overload (300 %, abort) cell against a
-//!    serial pass with a hand-built `FaultPlan` ramp.
+//!    seed reference), the overload (300 %, abort) cell against a
+//!    serial pass with a hand-built `FaultPlan` ramp, and the
+//!    fine-grain family against both a direct serial recomputation of
+//!    one grid point and a handcrafted co-runnable pair with *exact*
+//!    hand-computed serial/fine response times (32 ms vs 28 ms).
 
+use gcaps::analysis::gcaps as gcaps_rta;
 use gcaps::analysis::{analyze, approach_schedulable, Approach};
 use gcaps::experiments::scenarios::{
     adaptive_csv, adaptive_sweep, edfvfp_csv, edfvfp_params, edfvfp_sweep, epstheta_csv,
-    epstheta_sweep, hetero_csv, hetero_params, hetero_platforms, hetero_sweep, overload_csv,
-    overload_params, overload_sweep, ramp_window,
+    epstheta_sweep, finegrain_csv, finegrain_params, finegrain_sweep, hetero_csv,
+    hetero_params, hetero_platforms, hetero_sweep, overload_csv, overload_params,
+    overload_sweep, ramp_window,
 };
 use gcaps::experiments::ExpConfig;
 use gcaps::model::{
@@ -95,6 +100,17 @@ fn adaptive_csv_identical_across_worker_counts() {
     assert_eq!(b1.as_bytes(), b2.as_bytes(), "adaptive CSV diverged at jobs = 2");
     assert_eq!(b1.as_bytes(), b8.as_bytes(), "adaptive CSV diverged at jobs = 8");
     assert!(b1.lines().count() == 10, "adaptive CSV wrong shape:\n{b1}");
+}
+
+#[test]
+fn finegrain_csv_identical_across_worker_counts() {
+    let b1 = finegrain_csv(&finegrain_sweep(&cfg(4, 1))).to_string();
+    let b2 = finegrain_csv(&finegrain_sweep(&cfg(4, 2))).to_string();
+    let b8 = finegrain_csv(&finegrain_sweep(&cfg(4, 8))).to_string();
+    assert_eq!(b1.as_bytes(), b2.as_bytes(), "finegrain CSV diverged at jobs = 2");
+    assert_eq!(b1.as_bytes(), b8.as_bytes(), "finegrain CSV diverged at jobs = 8");
+    // 3 bands × 3 utilizations × 2 GPU ratios + header.
+    assert!(b1.lines().count() == 19, "finegrain CSV wrong shape:\n{b1}");
 }
 
 // ---------------------------------------------------------------------
@@ -274,4 +290,83 @@ fn hetero_sweep_point_exercises_generated_hetero_tasksets() {
         let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(500.0)));
         assert!(res.run.horizon >= ms(500.0));
     }
+}
+
+#[test]
+fn finegrain_anchor_point_matches_direct_recomputation() {
+    // The (wide, 0.5, 0.4) cell against a from-scratch serial pass: the
+    // same memoized tasksets, direct serial/fine analysis calls, and
+    // direct gcaps DES runs — no cache path, no worker pool.
+    let c = cfg(4, 2);
+    let rows = finegrain_sweep(&c);
+    let row = rows
+        .iter()
+        .find(|r| r.band == "wide" && r.util == 0.5 && r.gpu_ratio == 0.4)
+        .expect("the (wide, 0.5, 0.4) cell exists");
+    let p = finegrain_params(0.5, 0.4, (25, 75));
+    let (mut ss, mut sf, mut m, mut j) = (0usize, 0usize, 0u64, 0u64);
+    for i in 0..c.tasksets {
+        let ts = memo::taskset(c.seed, &p, i);
+        assert!(ts.has_fine_grain(), "taskset {i}: wide band drew no fraction < 100%");
+        if gcaps_rta::analyze(&ts, false, &gcaps_rta::Options::default()).schedulable {
+            ss += 1;
+        }
+        if gcaps_rta::analyze_fine(&ts, false).schedulable {
+            sf += 1;
+        }
+        let res = simulate(&ts, &SimConfig::new(Policy::Gcaps, ms(3_000.0)));
+        for t in ts.rt_tasks() {
+            m += res.per_task[t.id].deadline_misses;
+            j += res.per_task[t.id].jobs;
+        }
+    }
+    assert_eq!(row.sched_serial, ss as f64 / c.tasksets as f64);
+    assert_eq!(row.sched_fine, sf as f64 / c.tasksets as f64);
+    assert_eq!(row.miss_des, m as f64 / j.max(1) as f64);
+    // Paired on the same tasksets, the fine charge is pointwise ≤ the
+    // serial one, so acceptance can only move one way.
+    assert!(row.sched_fine >= row.sched_serial);
+}
+
+#[test]
+fn finegrain_anchor_handcrafted_pair_has_exact_responses() {
+    // Hand-computed golden cell for the serial-vs-fine columns. Platform
+    // ε = 1 ms; hp task (core 0, prio 2): C = 2, G^m = 1, G^e = 20 at
+    // 40 %; victim (core 1, prio 1): C = 2, G^m = 1, G^e = 5 at 50 %,
+    // deadline 30 ms. Both on engine 0, self-suspending.
+    //
+    //   hp:     own C + G + 2ε·η = 2 + 21 + 2 = 25; Lemma 8 blocking
+    //           (η+1)·ε = 2 → R = 27 ms (either model: nothing below it
+    //           on the engine co-runs into its window).
+    //   victim: own 2 + 6 + 2 = 10, no blocking. Serial charge per hp
+    //           job: G^e* = 22 → R = 32 ms > D = 30 → REJECTED.
+    //           Fine charge: 40 ≤ 100 − 50, so
+    //           ceil(40·20/50) + (G^e* − G^e) = 16 + 2 = 18 → R = 28 ms
+    //           ≤ 30 → ACCEPTED. One hp job in either window (R + J < T).
+    let mk = |id: usize, core: usize, prio: u32, ge: f64, par: u32, dl: f64| Task {
+        id,
+        name: format!("t{id}"),
+        period: ms(100.0),
+        deadline: ms(dl),
+        cpu_segments: vec![ms(1.0), ms(1.0)],
+        gpu_segments: vec![GpuSegment::new(ms(1.0), ms(ge)).with_par(par)],
+        core,
+        gpu: 0,
+        cpu_prio: prio,
+        gpu_prio: prio,
+        best_effort: false,
+        mode: WaitMode::SelfSuspend,
+    };
+    let ts = TaskSet::new(
+        vec![mk(0, 0, 2, 20.0, 40, 100.0), mk(1, 1, 1, 5.0, 50, 30.0)],
+        Platform::single(2, 1024, 200, 1000),
+    );
+    ts.validate().unwrap();
+    let serial = gcaps_rta::analyze(&ts, false, &gcaps_rta::Options::default());
+    let fine = gcaps_rta::analyze_fine(&ts, false);
+    assert_eq!(serial.response[0], Some(ms(27.0)));
+    assert_eq!(fine.response[0], Some(ms(27.0)));
+    assert!(!serial.schedulable, "serial must reject: R = 32 ms > 30 ms");
+    assert!(fine.schedulable, "fine must accept: R = 28 ms");
+    assert_eq!(fine.response[1], Some(ms(28.0)));
 }

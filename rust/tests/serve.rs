@@ -255,6 +255,67 @@ fn pipelined_read_queries_answer_in_submission_order() {
 }
 
 #[test]
+fn fine_grain_admit_flows_through_the_session() {
+    let mut session = default_config().session();
+    let (v, _) = session.handle_line(
+        r#"{"op":"admit","task":{"name":"cam","period_ms":100,"cpu_ms":[1,1],"gpu_ms":[[0.5,5]],"par":[40],"prio":10}}"#,
+    );
+    assert!(v.to_json().contains(r#""admitted":true"#), "{}", v.to_json());
+    let (v, _) = session.handle_line(r#"{"op":"check"}"#);
+    assert!(v.to_json().contains(r#""schedulable":true"#), "{}", v.to_json());
+    let (v, _) = session.handle_line(r#"{"op":"headroom","task":"cam","param":"ge"}"#);
+    assert!(v.to_json().contains(r#""ok":true"#), "{}", v.to_json());
+    // A hostile fraction on a later admit answers on-stream and leaves
+    // the session serving.
+    let (v, _) = session.handle_line(
+        r#"{"op":"admit","task":{"name":"bad","period_ms":100,"cpu_ms":[1,1],"gpu_ms":[[0.5,5]],"par":[0],"prio":11}}"#,
+    );
+    assert!(v.to_json().starts_with(r#"{"ok":false"#), "{}", v.to_json());
+    let (v, _) = session.handle_line(r#"{"op":"stats"}"#);
+    assert!(v.to_json().contains(r#""ok":true"#), "{}", v.to_json());
+}
+
+#[test]
+fn fuzzed_par_arrays_never_panic_the_session() {
+    // Hostile fine-grain fractions: random lengths and value shapes
+    // (in-range, out-of-range, fractional, negative, non-numeric).
+    // Every admit must answer one JSON line — accepted or refused.
+    forall("session total on fuzzed par", 300, |rng| {
+        let mut session = default_config().session();
+        let n_seg = rng.range_usize(1, 3);
+        let gpu_ms: Vec<String> = (0..n_seg).map(|_| "[0.5,2]".to_string()).collect();
+        let n_par = rng.range_usize(0, 5);
+        let par: Vec<String> = (0..n_par)
+            .map(|_| match rng.range_u64(0, 5) {
+                0 => rng.range_u64(1, 100).to_string(),
+                1 => "0".to_string(),
+                2 => rng.range_u64(101, 1_000_000).to_string(),
+                3 => format!("{:.2}", rng.range_f64(-50.0, 150.0)),
+                4 => format!("-{}", rng.range_u64(1, 100)),
+                _ => "\"full\"".to_string(),
+            })
+            .collect();
+        let line = format!(
+            r#"{{"op":"admit","task":{{"name":"t","period_ms":100,"cpu_ms":[{}],"gpu_ms":[{}],"par":[{}],"prio":1}}}}"#,
+            vec!["1"; n_seg + 1].join(","),
+            gpu_ms.join(","),
+            par.join(",")
+        );
+        let (resp, _) = session.handle_line(&line);
+        let out = resp.to_json();
+        if parse(&out).is_err() || out.contains('\n') {
+            return Err(format!("bad response {out:?} for input {line:?}"));
+        }
+        // The session must keep serving afterwards.
+        let (v, _) = session.handle_line(r#"{"op":"check"}"#);
+        if parse(&v.to_json()).is_err() {
+            return Err(format!("check broke after {line:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn session_survives_a_panicking_sibling_thread() {
     // The server is long-running: a panic on another thread (e.g. a
     // background sweep poisoning the memo cache) must not take future
